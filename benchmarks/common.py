@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: timing, CSV emission, problem generators."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+RNG = np.random.default_rng(2018)  # paper year
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds over `iters` runs (after warmup/compile)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+# The paper's 8 Netlib problems at their converted (standard-form) sizes
+# (Table 5). MPS sources aren't redistributable offline, so we generate
+# sparse LPs at identical dimensions ('-like' suffix everywhere).
+NETLIB_LIKE = (
+    ("ADLITTLE-like", 71, 97),
+    ("AFIRO-like", 35, 32),
+    ("BLEND-like", 117, 83),
+    ("ISRAEL-like", 174, 142),
+    ("SC105-like", 150, 103),
+    ("SC205-like", 296, 203),
+    ("SC50A-like", 70, 48),
+    ("SC50B-like", 70, 48),
+)

@@ -1,0 +1,38 @@
+"""Paper Fig. 7: batched device solve vs sequential CPU solve, sweeping
+batch size x LP dimension, feasible-start LPs. GLPK/CPLEX are not available
+offline; the float64 NumPy simplex (core/reference.py) is the sequential
+baseline (same pivot rule — so the comparison isolates batching, exactly the
+paper's variable)."""
+import numpy as np
+
+from repro.core import random_lp_batch, solve_batched_jax, solve_batched_reference
+from repro.kernels import solve_batched_pallas
+
+from .common import RNG, emit, timeit
+
+
+def run(dims=(5, 28, 50), batches=(1, 50, 100, 500, 1000, 2000),
+        seq_cap: int = 200, pallas: bool = False):
+    rows = []
+    for n in dims:
+        m = n
+        for B in batches:
+            batch = random_lp_batch(RNG, B=B, m=m, n=n)
+            t_jax = timeit(lambda: solve_batched_jax(batch), iters=3)
+            # sequential baseline cost extrapolated above seq_cap LPs
+            Bs = min(B, seq_cap)
+            sub = random_lp_batch(RNG, B=Bs, m=m, n=n)
+            t_seq_sub = timeit(lambda: solve_batched_reference(sub),
+                               warmup=0, iters=1)
+            t_seq = t_seq_sub * (B / Bs)
+            row = {"dim": n, "batch": B, "t_seq": t_seq, "t_jax": t_jax,
+                   "speedup": t_seq / t_jax}
+            if pallas:
+                t_pal = timeit(lambda: solve_batched_pallas(sub if B > Bs
+                                                            else batch),
+                               iters=1)
+                row["t_pallas_interp"] = t_pal
+            emit(f"fig7/dim{n}_batch{B}", t_jax,
+                 f"seq={t_seq:.4f}s;speedup={row['speedup']:.2f}x")
+            rows.append(row)
+    return rows

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV. `--full` widens sweeps toward the paper's
+original sizes (1e5-size batches; slow on 1 CPU core)."""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma list: table2,fig7,table4,table5,table6,table7")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (fig7_batch_sweep, table2_layout, table4_infeasible,
+                   table5_gflops, table6_netlib, table7_reachability)
+
+    print("name,us_per_call,derived")
+    if only is None or "table2" in only:
+        table2_layout.run(dims=(10, 50, 100, 200) if not args.full
+                          else (10, 50, 100, 200, 300, 500))
+    if only is None or "fig7" in only:
+        fig7_batch_sweep.run(batches=(1, 50, 100, 500, 1000, 2000) if not
+                             args.full else (1, 50, 100, 500, 1000, 2000,
+                                             5000, 20000, 50000))
+    if only is None or "table4" in only:
+        table4_infeasible.run()
+    if only is None or "table5" in only:
+        table5_gflops.run(batch=512 if not args.full else 4096)
+    if only is None or "table6" in only:
+        table6_netlib.run(batches=(1, 10, 100, 1000) if not args.full
+                          else (1, 10, 100, 1000, 10000, 100000))
+    if only is None or "table7" in only:
+        table7_reachability.run(T=500 if not args.full else 2000)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Table 2 analogue: memory-layout ablation of Step 3 (pivot update).
+
+The paper's experiment: column-major (coalesced) vs row-major tableau and
+the loop-interchange non-coalesced variant — 8.7-15.7x on a K40c. The TPU
+question is *which axis rides the vector lanes*; on this CPU host the same
+contiguity argument applies to SIMD. We time the full pivot step (reduction
++ rank-1 update) under two layouts:
+
+  batch-major (B, R, C): tableau columns contiguous (our production layout —
+      C on the 128-lane axis of the Pallas kernel)
+  batch-minor (R, C, B): LPs contiguous (one-thread-per-LP layout the paper
+      argues AGAINST for tableau manipulation)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import RNG, emit, timeit
+
+
+def _pivot_step_batch_major(T, e_onehot, l_onehot):
+    col = jnp.einsum("brc,bc->br", T, e_onehot)
+    pe = jnp.einsum("br,br->b", col, l_onehot)
+    pivrow = jnp.einsum("br,brc->bc", l_onehot, T) / pe[:, None]
+    return T - col[:, :, None] * pivrow[:, None, :] \
+        + l_onehot[:, :, None] * pivrow[:, None, :]
+
+
+def _pivot_step_batch_minor(T, e_onehot, l_onehot):
+    # T: (R, C, B)
+    col = jnp.einsum("rcb,cb->rb", T, e_onehot)
+    pe = jnp.einsum("rb,rb->b", col, l_onehot)
+    pivrow = jnp.einsum("rb,rcb->cb", l_onehot, T) / pe[None, :]
+    return T - col[:, None, :] * pivrow[None, :, :] \
+        + l_onehot[:, None, :] * pivrow[None, :, :]
+
+
+def run(dims=(10, 50, 100, 200), batch: int = 1000, iters: int = 20):
+    rows = []
+    for n in dims:
+        m = n
+        R, C = m + 2, n + 2 * m + 1
+        T = jnp.asarray(RNG.normal(size=(batch, R, C)), jnp.float32)
+        e = jax.nn.one_hot(RNG.integers(0, C, batch), C, dtype=jnp.float32)
+        l = jax.nn.one_hot(RNG.integers(0, R, batch), R, dtype=jnp.float32)
+
+        f_maj = jax.jit(lambda T, e, l: _pivot_step_batch_major(T, e, l))
+        f_min = jax.jit(lambda T, e, l: _pivot_step_batch_minor(T, e, l))
+        Tt = jnp.transpose(T, (1, 2, 0))
+        et = e.T
+        lt = l.T
+
+        t_maj = timeit(lambda: jax.block_until_ready(f_maj(T, e, l)),
+                       iters=iters) 
+        t_min = timeit(lambda: jax.block_until_ready(f_min(Tt, et, lt)),
+                       iters=iters)
+        emit(f"table2/layout_batch_major_dim{n}", t_maj,
+             f"batch={batch}")
+        emit(f"table2/layout_batch_minor_dim{n}", t_min,
+             f"batch={batch};ratio={t_min / t_maj:.2f}x")
+        rows.append((n, t_maj, t_min))
+    return rows

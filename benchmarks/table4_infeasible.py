@@ -1,0 +1,21 @@
+"""Paper Table 4: LPs whose initial basic solution is infeasible (two-phase
+simplex, kernel effectively runs twice)."""
+from repro.core import random_lp_batch, solve_batched_jax, solve_batched_reference
+
+from .common import RNG, emit, timeit
+
+
+def run(dims=(5, 28, 50), batches=(50, 500, 2000), seq_cap: int = 100):
+    rows = []
+    for n in dims:
+        for B in batches:
+            batch = random_lp_batch(RNG, B=B, m=n, n=n, feasible_start=False)
+            t_jax = timeit(lambda: solve_batched_jax(batch), iters=3)
+            Bs = min(B, seq_cap)
+            sub = random_lp_batch(RNG, B=Bs, m=n, n=n, feasible_start=False)
+            t_seq = timeit(lambda: solve_batched_reference(sub), warmup=0,
+                           iters=1) * (B / Bs)
+            emit(f"table4/dim{n}_batch{B}", t_jax,
+                 f"seq={t_seq:.4f}s;speedup={t_seq / t_jax:.2f}x")
+            rows.append((n, B, t_seq, t_jax))
+    return rows

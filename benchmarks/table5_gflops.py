@@ -1,0 +1,25 @@
+"""Paper Table 5: solver throughput in Gflop/s on the Netlib-like set.
+
+FLOPs are counted analytically per pivot (core.simplex.flops_per_pivot) x
+measured per-LP pivot counts — the same accounting the paper's nvvp numbers
+approximate. Reported against this host CPU; the roofline table in
+EXPERIMENTS.md §Roofline carries the TPU projection."""
+import numpy as np
+
+from repro.core import (flops_per_pivot, random_sparse_lp_batch,
+                        solve_batched_jax)
+
+from .common import NETLIB_LIKE, RNG, emit, timeit
+
+
+def run(batch: int = 512, problems=NETLIB_LIKE[:6]):
+    rows = []
+    for name, m, n in problems:
+        lps = random_sparse_lp_batch(RNG, B=batch, m=m, n=n, density=0.1)
+        res = solve_batched_jax(lps)
+        t = timeit(lambda: solve_batched_jax(lps), iters=3)
+        flops = float(flops_per_pivot(m, n)) * float(np.sum(res.iterations))
+        gflops = flops / t / 1e9
+        emit(f"table5/{name}", t, f"batch={batch};gflops={gflops:.2f}")
+        rows.append((name, batch, gflops))
+    return rows

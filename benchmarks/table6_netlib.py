@@ -1,0 +1,22 @@
+"""Paper Table 6: Netlib-like problems, batched device solve vs sequential
+CPU (GLPK/CPLEX stand-in = float64 NumPy simplex)."""
+from repro.core import random_sparse_lp_batch, solve_batched_jax, \
+    solve_batched_reference
+
+from .common import NETLIB_LIKE, RNG, emit, timeit
+
+
+def run(batches=(1, 10, 100, 1000), problems=NETLIB_LIKE, seq_cap: int = 50):
+    rows = []
+    for name, m, n in problems:
+        for B in batches:
+            lps = random_sparse_lp_batch(RNG, B=B, m=m, n=n, density=0.1)
+            t_jax = timeit(lambda: solve_batched_jax(lps), iters=2)
+            Bs = min(B, seq_cap)
+            sub = random_sparse_lp_batch(RNG, B=Bs, m=m, n=n, density=0.1)
+            t_seq = timeit(lambda: solve_batched_reference(sub), warmup=0,
+                           iters=1) * (B / Bs)
+            emit(f"table6/{name}_batch{B}", t_jax,
+                 f"seq={t_seq:.4f}s;speedup={t_seq / t_jax:.2f}x")
+            rows.append((name, B, t_seq, t_jax))
+    return rows

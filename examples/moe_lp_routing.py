@@ -1,0 +1,45 @@
+"""The paper's technique inside the training framework: LP-allocated MoE
+expert capacity (repro.core.lp_router) vs uniform capacity under skewed
+routing.
+
+    PYTHONPATH=src python examples/moe_lp_routing.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.lp_router import expert_capacity_lp
+from repro.models import build_model
+
+# skewed demand: two hot experts
+rng = np.random.default_rng(0)
+E, G = 16, 4
+demand = np.maximum(rng.normal(1.0, 0.3, (G, E)), 0.05)
+demand[:, 0] *= 12.0
+demand[:, 1] *= 6.0
+slots = 48.0
+c_uniform = slots / E
+
+caps = np.asarray(expert_capacity_lp(jnp.asarray(demand, jnp.float32),
+                                     total_slots=slots, c_max=24.0))
+served_lp = np.minimum(caps, demand).sum(-1)
+served_uni = np.minimum(c_uniform, demand).sum(-1)
+print("per-group demand served (higher is better):")
+for g in range(G):
+    print(f"  group {g}: uniform={served_uni[g]:7.2f}  "
+          f"lp={served_lp[g]:7.2f}  (+{100*(served_lp[g]/served_uni[g]-1):.0f}%)")
+print(f"hot-expert capacity: uniform={c_uniform:.1f} "
+      f"-> lp={caps[0, 0]:.1f}")
+
+# end-to-end: a reduced llama4-style MoE with the LP router enabled
+cfg = dataclasses.replace(get_config("llama4-scout-17b-a16e").reduced(),
+                          lp_capacity=True)
+model = build_model(cfg)
+params, _ = model.init(jax.random.PRNGKey(0))
+toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)), jnp.int32)
+loss = model.loss_fn(params, {"tokens": toks, "labels": toks})
+print(f"\nreduced llama4-MoE with lp_capacity=True: loss={float(loss):.4f} "
+      "(forward+routing LPs solved on-device)")

@@ -1,0 +1,12 @@
+"""Batched serving example (prefill + decode waves with KV-cache reuse).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import subprocess
+import sys
+
+subprocess.run([
+    sys.executable, "-m", "repro.launch.serve",
+    "--arch", "hymba-1.5b", "--reduced",
+    "--batch", "4", "--prompt-len", "32", "--gen", "16", "--requests", "2",
+], check=True)

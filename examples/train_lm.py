@@ -1,0 +1,20 @@
+"""End-to-end training example: a ~9M-param qwen3-family model on synthetic
+Markov data, with checkpoints, watchdog and loss curve. For the ~100M-param
+run documented in EXPERIMENTS.md use --d-model 512 --n-layers 12
+--d-ff 2048 --vocab 32000 (slower on CPU).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+
+subprocess.run([
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "qwen3-32b", "--reduced",
+    "--d-model", "256", "--n-layers", "8", "--d-ff", "1024",
+    "--vocab", "2048",
+    "--steps", "300", "--batch", "4", "--seq", "128",
+    "--checkpoint-dir", "artifacts/train_lm_ckpt",
+    "--curve-out", "artifacts/train_lm_loss.csv",
+    "--log-every", "20",
+], check=True)

@@ -1,0 +1,79 @@
+"""HLO-text analysis: collective-bytes extraction for the roofline.
+
+`cost_analysis()` reports FLOPs and memory traffic but not collective
+traffic, so we parse the SPMD-partitioned module text and sum the bytes of
+every cross-device collective. Async pairs (`all-gather-start` /
+`all-gather-done`) are counted once (on the start). Bytes per op =
+max(operand bytes, output bytes) — a consistent proxy for on-wire traffic
+across all-reduce (out==in), all-gather (out = in x shards) and
+reduce-scatter (in = out x shards).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Returns {op_kind: {'count': int, 'bytes': int}} plus '_total'."""
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition(" = ")
+        for kind in COLLECTIVES:
+            # match `kind(`, `kind-start(`; skip `-done` (second half of async)
+            m = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if not m:
+                continue
+            if re.search(rf"\b{kind}-done\(", rhs):
+                continue
+            out_b = _shape_bytes(rhs[: m.start()]) + _shape_bytes(lhs)
+            operand_text = rhs[m.end():]
+            op_b = _shape_bytes(operand_text.split(", replica_groups")[0]
+                                .split(", channel_id")[0])
+            stats[kind]["count"] += 1
+            stats[kind]["bytes"] += max(out_b, op_b)
+            break
+    total = {"count": sum(v["count"] for v in stats.values()),
+             "bytes": sum(v["bytes"] for v in stats.values())}
+    out = dict(stats)
+    out["_total"] = total
+    return out
+
+
+def op_histogram(hlo_text: str, top: int = 20):
+    """Crude op-kind histogram of a partitioned module (perf debugging)."""
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"= (?:[a-z0-9_]+\[.*?\]\{?[0-9,]*\}?\s+)?([a-z][a-z0-9-]*)\(",
+                      line)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,101 @@
+"""§Perf analysis for the paper-representative workload: batched LP solving.
+
+Quantifies the three-level termination story (DESIGN.md §2) with measured
+pivot-count distributions, and the VMEM-residency argument for the Pallas
+kernel, producing the numbers cited in EXPERIMENTS.md §Perf:
+
+1. lockstep waste        — a global while-loop executes max(pivots) for every
+                           LP; waste = 1 - mean/max.
+2. per-shard termination — shard_map's per-chip loops each stop at their own
+                           max; expected executed pivots = mean over shards
+                           of shard-max.
+3. per-tile early exit   — the Pallas kernel's grid tiles stop independently.
+4. sorted batching       — difficulty-sorted chunks tighten each chunk's max
+                           (beyond-paper optimization in core/batching.py).
+5. HBM-traffic model     — pure-XLA lockstep re-reads the tableau from HBM
+                           every pivot (while-loop carry); the VMEM-resident
+                           kernel touches HBM once per solve: traffic ratio
+                           ~= pivots executed.
+
+  PYTHONPATH=src python -m repro.analysis.lp_perf
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LPBatch, random_lp_batch, solve_batched_reference
+from repro.core.simplex import flops_per_pivot
+
+
+def executed_pivots(iters: np.ndarray, group: int) -> float:
+    """Total device pivots when termination granularity = `group` LPs."""
+    n = len(iters)
+    pad = (-n) % group
+    arr = np.concatenate([iters, np.zeros(pad, iters.dtype)])
+    return float(arr.reshape(-1, group).max(axis=1).sum() * group)
+
+
+def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
+            chips: int = 256, tile_b: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    half = B // 2
+    if mixed:
+        b1 = random_lp_batch(rng, half, m, n, feasible_start=True)
+        b2 = random_lp_batch(rng, B - half, m, n, feasible_start=False)
+        batch = LPBatch(A=np.concatenate([b1.A, b2.A]),
+                        b=np.concatenate([b1.b, b2.b]),
+                        c=np.concatenate([b1.c, b2.c]))
+        order = rng.permutation(B)
+        batch = LPBatch(A=batch.A[order], b=batch.b[order], c=batch.c[order])
+    else:
+        batch = random_lp_batch(rng, B, m, n)
+    ref = solve_batched_reference(batch)
+    iters = ref.iterations.astype(np.int64)
+
+    useful = float(iters.sum())
+    lockstep = executed_pivots(iters, B)
+    per_shard = executed_pivots(iters, max(1, B // chips))
+    per_tile = executed_pivots(iters, tile_b)
+    # sorted batching: difficulty-sorted then per-shard groups
+    srt = np.sort(iters)
+    per_shard_sorted = executed_pivots(srt, max(1, B // chips))
+    per_tile_sorted = executed_pivots(srt, tile_b)
+
+    fpp = flops_per_pivot(m, n)
+    rows = m + 2
+    cols = n + 2 * m + 1
+    tableau_bytes = rows * cols * 4
+    # HBM traffic per LP: lockstep XLA re-reads+writes the tableau per
+    # executed pivot; the Pallas tile kernel reads it once and writes results
+    xla_traffic = 2 * tableau_bytes * lockstep / B
+    kernel_traffic = tableau_bytes + (n + 16) * 4
+
+    return {
+        "m": m, "n": n, "B": B, "mixed": mixed,
+        "pivots_mean": float(iters.mean()), "pivots_max": int(iters.max()),
+        "eff_lockstep": useful / lockstep,
+        "eff_per_shard": useful / per_shard,
+        "eff_per_tile": useful / per_tile,
+        "eff_per_shard_sorted": useful / per_shard_sorted,
+        "eff_per_tile_sorted": useful / per_tile_sorted,
+        "flops_per_pivot": fpp,
+        "hbm_bytes_per_lp_xla": xla_traffic,
+        "hbm_bytes_per_lp_kernel": float(kernel_traffic),
+        "traffic_ratio": xla_traffic / kernel_traffic,
+    }
+
+
+def main():
+    print("workload,eff_lockstep,eff_shard,eff_tile,eff_shard_sorted,"
+          "eff_tile_sorted,traffic_ratio_xla_vs_kernel")
+    for (m, n, mixed) in [(5, 5, True), (28, 28, True), (50, 50, True),
+                          (100, 100, True), (28, 28, False)]:
+        r = analyze(m, n, mixed=mixed)
+        print(f"lp_{n}d{'_mixed' if mixed else ''},"
+              f"{r['eff_lockstep']:.3f},{r['eff_per_shard']:.3f},"
+              f"{r['eff_per_tile']:.3f},{r['eff_per_shard_sorted']:.3f},"
+              f"{r['eff_per_tile_sorted']:.3f},{r['traffic_ratio']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

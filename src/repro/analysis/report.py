@@ -1,0 +1,117 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def load(dirpath: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs, mesh="16x16"):
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck | "
+        "MODEL_FLOPS | useful ratio | fits HBM (GiB/chip) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("tag"):
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — | — |")
+            continue
+        if "roofline" not in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR: "
+                         f"{r.get('error', '?')} | | | | | | |")
+            continue
+        rl = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        per_dev = (ma.get("argument_size_in_bytes", 0)
+                   + ma.get("temp_size_in_bytes", 0)) / 2**30
+        fits = "yes" if per_dev <= 16 else f"NO ({per_dev:.0f})"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"{rl['bottleneck']} | {rl['model_flops']:.2e} | "
+            f"{rl['useful_ratio']:.2f} | {fits} ({per_dev:.1f}) |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | status | compile_s | flops/dev | mem GiB/dev "
+        "(traffic) | coll GiB/dev | args+temp GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("tag"):
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip "
+                         f"| — | — | — | — | — |")
+            continue
+        if "roofline" not in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"**FAIL** {r.get('error','')} | | | | | |")
+            continue
+        hc = r["hlo_cost"]
+        coll = r["collectives"]["_total"]["bytes"]
+        ma = r.get("memory_analysis", {})
+        per_dev = (ma.get("argument_size_in_bytes", 0)
+                   + ma.get("temp_size_in_bytes", 0)) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r.get('compile_s', 0):.0f} | {hc['flops']:.2e} | "
+            f"{fmt_bytes(hc['mem_bytes'])} | {fmt_bytes(coll)} | "
+            f"{per_dev:.1f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs):
+    """Worst roofline fraction / most collective-bound / paper-representative."""
+    cands = []
+    for r in recs:
+        if r.get("mesh") != "16x16" or "roofline" not in r or r.get("tag"):
+            continue
+        rl = r["roofline"]
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom if dom else 0
+        cands.append((frac, rl["collective_s"] / max(rl["compute_s"], 1e-9),
+                      r["arch"], r["shape"], rl["bottleneck"]))
+    cands.sort()
+    return cands
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Dry-run (all cells x both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs))
+    print("\n## Hillclimb candidates (sorted by compute fraction)\n")
+    for frac, collr, arch, shape, b in pick_hillclimb(recs)[:12]:
+        print(f"- {arch} {shape}: compute-fraction={frac:.2f} "
+              f"coll/compute={collr:.1f} bottleneck={b}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Three-term roofline from the compiled dry-run artifacts.
+
+Terms (per §Roofline of the experiment plan), computed from *per-device*
+numerators (cost_analysis of the SPMD-partitioned executable is per-device),
+so the denominators use a single chip's peaks:
+
+    compute_s    = HLO_FLOPs_per_device   / 197e12   (bf16 peak, v5e)
+    memory_s     = HLO_bytes_per_device   / 819e9    (HBM bandwidth)
+    collective_s = coll_bytes_per_device  / 50e9     (ICI per-link)
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (+attention
+term for decode): the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes remat
+recompute and padding/dispatch waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig, ShapeCell
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e)
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    bottleneck: str
+
+    def as_dict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "model_flops": self.model_flops,
+            "hlo_flops_total": self.hlo_flops_total,
+            "useful_ratio": self.useful_ratio,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def active_params(cfg: ModelConfig, total_params: float) -> float:
+    """Active (per-token) parameter count: total minus unrouted experts."""
+    if cfg.mlp_kind != "moe":
+        return total_params
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * 3 \
+        * cfg.d_model * cfg.d_ff_expert
+    return total_params - inactive
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell, total_params: float) -> float:
+    n_act = active_params(cfg, total_params)
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        base = 6.0 * n_act * tokens
+    elif cell.kind == "prefill":
+        base = 2.0 * n_act * tokens
+    else:  # decode: one token per sequence + cache-attention reads
+        base = 2.0 * n_act * cell.global_batch
+        if cfg.n_heads and cfg.attn_kind != "none":
+            S_eff = min(cell.seq_len, cfg.sliding_window or cell.seq_len)
+            base += (4.0 * cell.global_batch * cfg.n_layers * S_eff
+                     * cfg.n_heads * (cfg.d_head or 0))
+    # causal attention FLOPs for train/prefill (not in 6ND)
+    if cell.kind in ("train", "prefill") and cfg.n_heads and cfg.attn_kind != "none":
+        S_eff = min(cell.seq_len, cfg.sliding_window or cell.seq_len)
+        mult = 3.0 if cell.kind == "train" else 1.0  # fwd+bwd
+        base += mult * 2.0 * 2.0 * tokens * S_eff / 2 * cfg.n_heads \
+            * (cfg.d_head or 0) / 1.0
+    return base
+
+
+def compute_roofline(cfg: ModelConfig, cell: ShapeCell, *,
+                     per_device_flops: float, per_device_bytes: float,
+                     per_device_coll_bytes: float, chips: int,
+                     total_params: float) -> Roofline:
+    compute_s = per_device_flops / PEAK_FLOPS
+    memory_s = per_device_bytes / HBM_BW
+    collective_s = per_device_coll_bytes / ICI_BW
+    mf = model_flops(cfg, cell, total_params)
+    hlo_total = per_device_flops * chips
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=mf, hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        bottleneck=bottleneck,
+    )

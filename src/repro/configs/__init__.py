@@ -1,0 +1,40 @@
+"""Architecture registry: one module per assigned arch (exact published
+configs) + the paper's own LP-batch workload config."""
+from importlib import import_module
+
+ARCH_IDS = (
+    "deepseek_v2_236b",
+    "llama4_scout_17b_a16e",
+    "falcon_mamba_7b",
+    "whisper_small",
+    "qwen3_32b",
+    "granite_20b",
+    "nemotron_4_340b",
+    "llama3_405b",
+    "hymba_1_5b",
+    "phi_3_vision_4_2b",
+)
+
+# canonical dashed ids from the assignment table
+CANONICAL = {
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "whisper-small": "whisper_small",
+    "qwen3-32b": "qwen3_32b",
+    "granite-20b": "granite_20b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "llama3-405b": "llama3_405b",
+    "hymba-1.5b": "hymba_1_5b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+}
+
+
+def get_config(arch: str):
+    key = CANONICAL.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = import_module(f"repro.configs.{key}")
+    return mod.config()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,22 @@
+"""The paper's own workload as a dry-run config: batches of small/medium LPs
+solved by the batched simplex across the production mesh (pure batch
+parallelism — the paper's Sec. 5.1 load-balancing story at pod scale)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LPWorkload:
+    name: str
+    batch: int
+    m: int
+    n: int
+    feasible_start: bool = True
+
+
+WORKLOADS = (
+    LPWorkload("lp_5d_100k", batch=100_000, m=5, n=5),
+    LPWorkload("lp_28d_100k", batch=100_000, m=28, n=28),
+    LPWorkload("lp_100d_50k", batch=50_000, m=100, n=100),
+    LPWorkload("lp_300d_2k", batch=2048, m=300, n=300),
+    LPWorkload("lp_netlib_adlittle", batch=100_000, m=71, n=97),
+)

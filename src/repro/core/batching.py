@@ -1,0 +1,103 @@
+"""Batching routine — Algorithm 1 of the paper, adapted to HBM + async dispatch.
+
+The paper sizes batches against GPU global memory (``N = floor(S / Y)``,
+Eq. 5) and overlaps H2D/D2H copies with kernel execution via CUDA streams
+(Sec. 5.4). Here:
+
+* the memory budget is HBM bytes per device x device count,
+* chunk *k+1* is `jax.device_put` (H2D DMA) while chunk *k*'s solve is still
+  in flight — JAX's async dispatch gives the CUDA-streams pipeline for free:
+  we enqueue transfer->solve per chunk and only block when gathering results
+  (the paper's "all H2D, all kernels, all D2H per stream" schedule),
+* results are fetched with one blocking gather at the end (D2H-res).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lp import LPBatch, LPResult
+from .simplex import solve_batched_jax
+
+# Conservative default budget for planning on real devices; on CPU hosts this
+# is only used for chunk-size arithmetic, mirroring Eq. (5).
+DEFAULT_DEVICE_BYTES = 16 * 2 ** 30  # one v5e chip's HBM
+# Fraction of the budget the tableaux may claim (leave room for XLA scratch).
+BUDGET_FRACTION = 0.6
+
+
+def max_chunk_size(batch: LPBatch, device_bytes: int = DEFAULT_DEVICE_BYTES,
+                   n_devices: int = 1, dtype_size: int = 4) -> int:
+    """Paper Eq. (5): N = floor(S / Y), with S = usable device bytes."""
+    usable = int(device_bytes * BUDGET_FRACTION) * n_devices
+    per_lp = batch.bytes_per_lp(dtype_size)
+    return max(1, usable // per_lp)
+
+
+def difficulty_proxy(batch: LPBatch) -> np.ndarray:
+    """Cheap per-LP difficulty estimate for sorted batching: LPs needing
+    phase 1 (any b_i < 0) pivot roughly 2x as long as feasible-start ones, so
+    grouping them keeps each lockstep chunk's max-iteration bound tight."""
+    b = np.asarray(batch.b)
+    neg = (b < 0).sum(axis=1)
+    return neg.astype(np.float64)
+
+
+def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
+                  chunk_size: Optional[int] = None,
+                  device_bytes: int = DEFAULT_DEVICE_BYTES,
+                  n_devices: int = 1, sort_by_difficulty: bool = False,
+                  **solver_kwargs) -> LPResult:
+    """Chunked batched solve (Algorithm 1). ``solver`` defaults to the pure
+    JAX lockstep solver; kernels.ops.solve_batched_pallas and
+    core.distributed solvers are drop-in.
+
+    ``sort_by_difficulty`` (beyond-paper optimization): lockstep SIMD chunks
+    pay max-pivots-over-chunk; reordering LPs so similar-difficulty problems
+    share a chunk cuts total executed pivots (measured in
+    analysis/lp_perf.py), then results are unpermuted."""
+    if solver is None:
+        solver = solve_batched_jax
+    B = batch.batch
+    perm = None
+    if sort_by_difficulty and B > 1:
+        perm = np.argsort(difficulty_proxy(batch), kind="stable")
+        batch = LPBatch(A=np.asarray(batch.A)[perm],
+                        b=np.asarray(batch.b)[perm],
+                        c=np.asarray(batch.c)[perm])
+    if chunk_size is None:
+        chunk_size = max_chunk_size(batch, device_bytes, n_devices)
+    if chunk_size >= B:
+        res = solver(batch, **solver_kwargs)
+        return _unpermute(res, perm)
+
+    n_chunks = math.ceil(B / chunk_size)
+    pending = []
+    for i in range(n_chunks):
+        s, e = i * chunk_size, min((i + 1) * chunk_size, B)
+        sub = LPBatch(A=batch.A[s:e], b=batch.b[s:e], c=batch.c[s:e])
+        # async dispatch: this returns before the device finishes; the next
+        # chunk's H2D overlaps this chunk's compute (CUDA-streams analogue)
+        pending.append(solver(sub, **solver_kwargs))
+    res = LPResult(
+        x=np.concatenate([np.asarray(r.x) for r in pending]),
+        objective=np.concatenate([np.asarray(r.objective) for r in pending]),
+        status=np.concatenate([np.asarray(r.status) for r in pending]),
+        iterations=np.concatenate([np.asarray(r.iterations) for r in pending]),
+    )
+    return _unpermute(res, perm)
+
+
+def _unpermute(res: LPResult, perm) -> LPResult:
+    if perm is None:
+        return res
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    return LPResult(x=np.asarray(res.x)[inv],
+                    objective=np.asarray(res.objective)[inv],
+                    status=np.asarray(res.status)[inv],
+                    iterations=np.asarray(res.iterations)[inv])

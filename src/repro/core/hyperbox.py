@@ -1,0 +1,60 @@
+"""Special-case LP over a hyper-rectangle (paper Sec. 5.6).
+
+When the feasible region is a box  B = [a_1,b_1] x ... x [a_n,b_n]  the LP
+``max l.x  s.t. x in B`` has the closed form
+
+    sum_i l_i * (a_i if l_i < 0 else b_i)
+
+i.e. a branch-free select + dot product. The paper dedicates one GPU thread
+per LP for this; on TPU the whole batch is a single fused select+multiply+
+reduce across the lane axis (see kernels/hyperbox_kernel.py for the Pallas
+version). Used by the reachability example (paper Sec. 7 / Table 7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def solve_hyperbox_ref(lo: np.ndarray, hi: np.ndarray, directions: np.ndarray):
+    """NumPy oracle. lo/hi: (B, n) box bounds; directions: (B, n) or (K, n)
+    broadcast against the batch. Returns (B,) or (B, K) support values."""
+    lo = np.asarray(lo, np.float64)
+    hi = np.asarray(hi, np.float64)
+    d = np.asarray(directions, np.float64)
+    if d.ndim == 2 and d.shape[0] != lo.shape[0]:
+        # (K, n) directions applied to every box -> (B, K)
+        pick = np.where(d[None, :, :] < 0, lo[:, None, :], hi[:, None, :])
+        return (d[None, :, :] * pick).sum(-1)
+    pick = np.where(d < 0, lo, hi)
+    return (d * pick).sum(-1)
+
+
+@jax.jit
+def solve_hyperbox(lo: jax.Array, hi: jax.Array, directions: jax.Array) -> jax.Array:
+    """Batched box-LP: supports (B,n)x(B,n) -> (B,) and (B,n)x(K,n) -> (B,K)."""
+    if directions.ndim == 2 and directions.shape[0] != lo.shape[0]:
+        pick = jnp.where(directions[None] < 0, lo[:, None, :], hi[:, None, :])
+        return (directions[None] * pick).sum(-1)
+    pick = jnp.where(directions < 0, lo, hi)
+    return (directions * pick).sum(-1)
+
+
+def hyperbox_as_general_lp(lo: np.ndarray, hi: np.ndarray, directions: np.ndarray):
+    """Encode box LPs as general-form LPs (for cross-validation against the
+    simplex path).  max d.x  s.t. x <= hi, -x <= -lo.  To respect x >= 0 of
+    the standard form we substitute y = x - lo (y >= 0 when lo is the lower
+    bound):  max d.y + d.lo  s.t.  y <= hi - lo.
+    Returns (LPBatch, offset) where true objective = lp objective + offset.
+    """
+    from .lp import LPBatch
+
+    lo = np.asarray(lo, np.float64)
+    hi = np.asarray(hi, np.float64)
+    d = np.asarray(directions, np.float64)
+    B, n = lo.shape
+    A = np.tile(np.eye(n)[None], (B, 1, 1))
+    b = hi - lo
+    offset = (d * lo).sum(-1)
+    return LPBatch.from_arrays(A, b, d), offset

@@ -1,0 +1,188 @@
+"""LP problem containers and standard-form conversion.
+
+The paper (Gurung & Ray 2018) solves LPs in *standard form*:
+
+    maximize    c . x
+    subject to  A x <= b,   x >= 0
+
+with ``m`` constraints over ``n`` variables ("LP dimension" in the paper is
+``n``). A batch holds ``B`` independent LPs of identical (m, n) — the paper's
+solver makes the same same-size assumption (Sec. 5).
+
+The simplex tableau layout follows Sec. 4.1/5.5 of the paper:
+
+    rows    0..m-1 : constraint rows
+    row     m      : phase-2 objective row (reduced costs; value = -T[m, -1])
+    row     m+1    : phase-1 objective row (for the two-phase method)
+    columns 0..n-1          : structural variables
+    columns n..n+m-1        : slack variables
+    columns n+m..n+2m-1     : artificial variables (zero columns when b_i >= 0)
+    column  n+2m            : right-hand side
+
+Keeping the artificial block allocated for *every* row (not only rows with
+b_i < 0) is what gives every LP in the batch an identical static shape — the
+JAX/TPU analogue of the paper's same-size batching requirement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+# Status codes shared by every solver backend (NumPy oracle, JAX, Pallas).
+OPTIMAL = 0
+UNBOUNDED = 1
+INFEASIBLE = 2
+ITERATION_LIMIT = 3
+
+STATUS_NAMES = {
+    OPTIMAL: "optimal",
+    UNBOUNDED: "unbounded",
+    INFEASIBLE: "infeasible",
+    ITERATION_LIMIT: "iteration_limit",
+}
+
+# The paper's branch-elimination sentinel (Sec. 5.2): invalid min-ratio
+# entries are replaced by a large positive value instead of being masked
+# with a conditional.
+BIG = 1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class LPBatch:
+    """A batch of B independent LPs of identical shape (m constraints, n vars).
+
+    Arrays may be NumPy or JAX; shapes are (B, m, n), (B, m), (B, n).
+    """
+
+    A: np.ndarray
+    b: np.ndarray
+    c: np.ndarray
+
+    @property
+    def batch(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.A.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[2]
+
+    @staticmethod
+    def from_arrays(A, b, c) -> "LPBatch":
+        A = np.asarray(A)
+        b = np.asarray(b)
+        c = np.asarray(c)
+        if A.ndim == 2:  # single LP convenience
+            A, b, c = A[None], b[None], c[None]
+        B, m, n = A.shape
+        if b.shape != (B, m) or c.shape != (B, n):
+            raise ValueError(
+                f"inconsistent LP batch shapes: A={A.shape} b={b.shape} c={c.shape}"
+            )
+        return LPBatch(A=A, b=b, c=c)
+
+    def tableau_shape(self) -> Tuple[int, int]:
+        """(rows, cols) of the per-LP simplex tableau (incl. both obj rows)."""
+        return (self.m + 2, self.n + 2 * self.m + 1)
+
+    def bytes_per_lp(self, dtype_size: int = 4) -> int:
+        """Device bytes needed per LP — Eq. (5) of the paper, adapted.
+
+        Tableau + basis + the two reduction scratch vectors (Data/Indices in
+        the paper's Fig. 4/5 become the ratio/cost vectors here).
+        """
+        rows, cols = self.tableau_shape()
+        tableau = rows * cols * dtype_size
+        basis = self.m * 4
+        scratch = 2 * cols * dtype_size  # the paper's two auxiliary arrays
+        return tableau + basis + scratch
+
+
+@dataclasses.dataclass(frozen=True)
+class LPResult:
+    """Solver output for a batch: per-LP solution, objective, status, iters."""
+
+    x: np.ndarray          # (B, n)
+    objective: np.ndarray  # (B,)
+    status: np.ndarray     # (B,) int8  — see status codes above
+    iterations: np.ndarray  # (B,) int32
+
+    def summary(self) -> str:
+        status = np.asarray(self.status)
+        parts = [
+            f"{STATUS_NAMES[code]}={int((status == code).sum())}"
+            for code in sorted(STATUS_NAMES)
+            if (status == code).any()
+        ]
+        return ", ".join(parts)
+
+
+def build_tableau(A: np.ndarray, b: np.ndarray, c: np.ndarray):
+    """Build the batched two-phase tableau (float64 NumPy; init path).
+
+    Returns (T, basis, needs_phase1):
+      T:      (B, m+2, n+2m+1)
+      basis:  (B, m) int32   — basis[i] = column index basic in row i
+      needs_phase1: (B,) bool
+    Rows with b_i < 0 are negated (making rhs >= 0) and given an artificial
+    variable; other rows start with their slack basic — exactly the paper's
+    Sec. 4 construction, except artificial columns exist (as zeros) for all
+    rows so the batch keeps one static shape.
+    """
+    A = np.asarray(A, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    B, m, n = A.shape
+    cols = n + 2 * m + 1
+    T = np.zeros((B, m + 2, cols), dtype=np.float64)
+
+    neg = b < 0  # (B, m)
+    sign = np.where(neg, -1.0, 1.0)
+    T[:, :m, :n] = A * sign[:, :, None]
+    # slack block: identity scaled by the row sign
+    idx = np.arange(m)
+    T[:, idx, n + idx] = sign
+    # artificial block: +1 only where the row was negated
+    T[:, idx, n + m + idx] = np.where(neg, 1.0, 0.0)
+    T[:, :m, -1] = b * sign
+
+    # phase-2 objective row: reduced costs start at c
+    T[:, m, :n] = c
+    # phase-1 objective row: sum of rows that carry an artificial
+    T[:, m + 1, :] = (T[:, :m, :] * neg[:, :, None]).sum(axis=1)
+    # basic columns must have zero reduced cost: zero out the artificial
+    # columns of the phase-1 row (they are basic where they exist)
+    T[:, m + 1, n + m:n + 2 * m] = 0.0
+
+    basis = np.where(neg, n + m + idx[None, :], n + idx[None, :]).astype(np.int32)
+    return T, basis, neg.any(axis=1)
+
+
+def extract_solution(T: np.ndarray, basis: np.ndarray, n: int):
+    """Read (x, objective) off a final tableau batch."""
+    B, rows, cols = T.shape
+    m = rows - 2
+    rhs = T[:, :m, -1]
+    x = np.zeros((B, n), dtype=T.dtype)
+    for i in range(m):
+        sel = basis[:, i] < n
+        bs = np.where(sel, basis[:, i], 0)
+        np.put_along_axis(
+            x, bs[:, None],
+            np.where(sel, rhs[:, i], np.take_along_axis(x, bs[:, None], 1)[:, 0])[:, None],
+            axis=1,
+        )
+    objective = -T[:, m, -1]
+    return x, objective
+
+
+def default_max_iters(m: int, n: int) -> int:
+    """Iteration cap. Dantzig's rule typically terminates in O(m+n) pivots on
+    the paper's problem classes; the cap only exists to bound the lockstep
+    while-loop."""
+    return 10 * (m + n) + 50

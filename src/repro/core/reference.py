@@ -1,0 +1,151 @@
+"""Float64 NumPy two-phase simplex — the correctness oracle & CPU baseline.
+
+Plays the role GLPK/CPLEX play in the paper's evaluation: a trusted
+*sequential* CPU solver that batched device solvers are compared against,
+both for correctness (tests) and for speedup curves (benchmarks). It
+implements the exact same Dantzig-rule/two-phase/sentinel algorithm as the
+JAX and Pallas backends so that iteration counts and pivot sequences match
+bit-for-bit modulo dtype.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .lp import (
+    BIG,
+    INFEASIBLE,
+    ITERATION_LIMIT,
+    OPTIMAL,
+    UNBOUNDED,
+    LPBatch,
+    LPResult,
+    build_tableau,
+    default_max_iters,
+    extract_solution,
+)
+
+
+def _solve_single(T, basis, n, m, tol, max_iters):
+    """Solve one LP in-place on its (m+2, cols) float64 tableau."""
+    cols = T.shape[1]
+    allowed = np.zeros(cols, dtype=bool)
+    allowed[: n + m] = True  # artificials and rhs never enter
+    feas_thr = 1e-8 * max(1.0, T[m + 1, -1])  # relative, matches JAX backend
+    phase = 1
+    iters = 0
+    status = None
+    while iters < max_iters:
+        obj_row = T[m + 1] if phase == 1 else T[m]
+        reduced = np.where(allowed, obj_row, -BIG)
+        e = int(np.argmax(reduced))
+        if reduced[e] <= tol:
+            if phase == 1:
+                w = T[m + 1, -1]
+                if w > feas_thr:
+                    status = INFEASIBLE
+                    break
+                phase = 2
+                iters += 1
+                continue
+            status = OPTIMAL
+            break
+        col = T[:m, e]
+        rhs = T[:m, -1]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ratios = np.where(col > tol, rhs / np.where(col > tol, col, 1.0), BIG)
+        l = int(np.argmin(ratios))
+        if ratios[l] >= BIG / 2:
+            status = UNBOUNDED if phase == 2 else ITERATION_LIMIT
+            break
+        pe = T[l, e]
+        pivrow = T[l] / pe
+        factor = T[:, e].copy()
+        T -= factor[:, None] * pivrow[None, :]
+        T[l] = pivrow
+        basis[l] = e
+        iters += 1
+    if status is None:
+        status = ITERATION_LIMIT
+    return status, iters
+
+
+def solve_batched_reference(batch: LPBatch, tol: float = 1e-9,
+                            max_iters: int | None = None) -> LPResult:
+    """Sequentially solve every LP in the batch (float64). O(B) loop — this is
+    the 'CPU sequential' side of every speedup table."""
+    B, m, n = batch.batch, batch.m, batch.n
+    if max_iters is None:
+        max_iters = default_max_iters(m, n)
+    T, basis, _ = build_tableau(batch.A, batch.b, batch.c)
+    status = np.zeros(B, dtype=np.int8)
+    iters = np.zeros(B, dtype=np.int32)
+    for k in range(B):
+        status[k], iters[k] = _solve_single(T[k], basis[k], n, m, tol, max_iters)
+    x, obj = extract_solution(T, basis, n)
+    # non-optimal LPs report NaN objective to make misuse loud
+    bad = status != OPTIMAL
+    obj = np.where(bad, np.nan, obj)
+    return LPResult(x=x, objective=obj, status=status, iterations=iters)
+
+
+def solve_dual_reference(batch: LPBatch, tol: float = 1e-9) -> LPResult:
+    """Solve the dual of each LP:  min b.y  s.t.  A^T y >= c, y >= 0.
+
+    Rewritten as the standard-form max problem  max (-b).y  s.t. (-A^T) y <= -c.
+    Used by the strong-duality property tests: for feasible+bounded primal,
+    primal optimum == dual optimum (dual objective here is -reported).
+    """
+    A = np.asarray(batch.A, dtype=np.float64)
+    dual = LPBatch.from_arrays(
+        -np.swapaxes(A, 1, 2), -np.asarray(batch.c, np.float64),
+        -np.asarray(batch.b, np.float64),
+    )
+    res = solve_batched_reference(dual, tol=tol)
+    return LPResult(x=res.x, objective=-res.objective, status=res.status,
+                    iterations=res.iterations)
+
+
+def random_lp_batch(rng: np.random.Generator, B: int, m: int, n: int,
+                    feasible_start: bool = True) -> LPBatch:
+    """Random dense LPs following the paper's Sec. 6 recipe: A in [1,1000],
+    b in [1,1000], c in [1,500]. With positive A and b the origin is feasible
+    and the optimum is finite (every variable is bounded by some row).
+
+    feasible_start=False mirrors the paper's Table-4 class: ~m/4 rows are
+    flipped into ">=" rows (negative b), so the initial basic solution is
+    infeasible and the two-phase method runs — but the LP itself is kept
+    feasible by construction around a known interior point x0, and bounded
+    because the remaining rows have all-positive coefficients.
+    """
+    A = rng.uniform(1.0, 1000.0, size=(B, m, n))
+    c = rng.uniform(1.0, 500.0, size=(B, n))
+    if feasible_start:
+        b = rng.uniform(1.0, 1000.0, size=(B, m))
+    else:
+        x0 = rng.uniform(0.05, 0.5, size=(B, n))          # known feasible point
+        ax0 = np.einsum("bmn,bn->bm", A, x0)
+        b = ax0 * rng.uniform(1.05, 2.0, size=(B, m))      # x0 strictly feasible
+        k = max(1, m // 4)
+        rows = rng.permuted(np.tile(np.arange(m), (B, 1)), axis=1)[:, :k]
+        theta = rng.uniform(0.3, 0.9, size=(B, k))
+        for bi in range(B):
+            for j, r in enumerate(rows[bi]):
+                A[bi, r] = -A[bi, r]
+                b[bi, r] = -theta[bi, j] * ax0[bi, r]      # -A_r x <= -theta*(A_r x0)
+    return LPBatch.from_arrays(A, b, c)
+
+
+def random_sparse_lp_batch(rng: np.random.Generator, B: int, m: int, n: int,
+                           density: float = 0.1) -> LPBatch:
+    """Sparse feasible LPs at given density — stand-ins for the Netlib set
+    (the paper's Table 5/6 problems are highly sparse). Every column keeps at
+    least one nonzero so the LP stays bounded."""
+    A = rng.uniform(1.0, 1000.0, size=(B, m, n))
+    mask = rng.uniform(size=(B, m, n)) < density
+    # guarantee a bounding nonzero per column
+    rows = rng.integers(0, m, size=(B, n))
+    mask[np.arange(B)[:, None], rows, np.arange(n)[None, :]] = True
+    A = A * mask
+    b = rng.uniform(1.0, 1000.0, size=(B, m))
+    c = rng.uniform(1.0, 500.0, size=(B, n)) * (rng.uniform(size=(B, n)) < 0.5)
+    return LPBatch.from_arrays(A, b, c)

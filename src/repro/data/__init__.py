@@ -1,0 +1,2 @@
+from .pipeline import DataPipeline, SyntheticLM  # noqa: F401
+from .mixture import optimal_mixture  # noqa: F401

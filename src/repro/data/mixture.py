@@ -1,0 +1,35 @@
+"""Data-source mixture weights as an LP — paper technique in the data layer.
+
+Choose source weights w to maximize estimated utility sum_i u_i w_i subject
+to token-budget rows (per-source availability caps, a minimum-diversity
+floor per source, total = 1). Solved with the repo's batched simplex — many
+such LPs solve at once when sweeping utility estimates (e.g. one per
+validation slice), which is exactly the paper's many-small-LPs regime.
+
+    max  u.w
+    s.t. w_i <= cap_i            (availability)
+         -w_i <= -floor_i        (diversity floor; makes start infeasible ->
+                                  exercises the two-phase path)
+         sum w <= 1
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LPBatch, OPTIMAL, solve_batched_jax
+
+
+def optimal_mixture(utilities: np.ndarray, caps: np.ndarray,
+                    floors: np.ndarray) -> np.ndarray:
+    """utilities: (B, S) batch of utility estimates; caps/floors: (S,).
+    Returns (B, S) normalized mixture weights."""
+    utilities = np.atleast_2d(np.asarray(utilities, np.float64))
+    B, S = utilities.shape
+    caps = np.broadcast_to(caps, (B, S)).astype(np.float64)
+    floors = np.broadcast_to(floors, (B, S)).astype(np.float64)
+    eye = np.tile(np.eye(S)[None], (B, 1, 1))
+    A = np.concatenate([eye, -eye, np.ones((B, 1, S))], axis=1)
+    b = np.concatenate([caps, -floors, np.ones((B, 1))], axis=1)
+    res = solve_batched_jax(LPBatch.from_arrays(A, b, utilities))
+    w = np.where((res.status == OPTIMAL)[:, None], res.x, 1.0 / S)
+    return w / np.maximum(w.sum(-1, keepdims=True), 1e-9)

@@ -1,0 +1,81 @@
+"""Int8 gradient compression with error feedback (opt-in).
+
+Large-scale posture: cross-pod gradient reduction rides the slow DCN links;
+quantizing gradients to int8 (per-tensor symmetric scale) cuts that traffic
+4x vs f32 / 2x vs bf16. Naive quantization biases updates; error feedback
+(EF / EF21-style) carries the quantization residual into the next step,
+restoring convergence (residual is a fixed point of the compressor).
+
+`compress_decompress` reproduces exactly the numerics the weights see when
+the all-reduce transports int8: quantize -> (sum is linear, so reduce of
+quantized values == quantized values here where grads are already reduced by
+autodiff) -> dequantize. The wire-level placement (quantize before the
+cross-pod reduce) changes *where* rounding happens, not its magnitude class;
+on this CPU rig the transport itself is XLA-internal, so we integrate at the
+optimizer boundary and carry EF state in the train step — the measurable
+object is the training trajectory, tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array):
+    """Per-tensor symmetric int8: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return q.astype(dtype) * scale
+
+
+def compress_decompress(g: jax.Array):
+    q, s = quantize_int8(g.astype(jnp.float32))
+    return dequantize_int8(q, s)
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_tree(grads, ef_state):
+    """Error-feedback compression over a gradient pytree.
+
+    c = C(g + e);  e' = g + e - c.  Returns (compressed grads, new EF state).
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        c = compress_decompress(corrected)
+        return c, corrected - c
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def make_compressed_train_step(model, optimizer, *, microbatches: int = 1,
+                               clip_norm: Optional[float] = 1.0):
+    """train_step variant whose gradient pathway is int8+EF compressed.
+    State pytree gains an 'ef' member alongside the optimizer state."""
+    from .steps import global_norm
+
+    def train_step(params, opt_state, ef_state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        gnorm = global_norm(grads)
+        if clip_norm is not None:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        grads, ef_state = ef_compress_tree(grads, ef_state)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, ef_state, metrics
+
+    return train_step

@@ -1,0 +1,71 @@
+"""train_step / serve_step builders (pjit-ready pure functions).
+
+`make_train_step` supports gradient-accumulation microbatching: the batch is
+split along its leading axis and scanned, accumulating f32 grads; XLA
+overlaps each microbatch's backward collectives with the next microbatch's
+compute. The optimizer update runs once per step on the accumulated grads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def make_train_step(model, optimizer, microbatches: int = 1,
+                    clip_norm: Optional[float] = 1.0):
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mbatch):
+                l, g = jax.value_and_grad(model.loss_fn)(params, mbatch)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32),
+                                   acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(body, zero, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+
+        gnorm = global_norm(grads)
+        if clip_norm is not None:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, tokens, extra=None):
+        kw = {}
+        if extra is not None:
+            if "patches" in extra:
+                kw["patches"] = extra["patches"]
+            if "frames" in extra:
+                kw["frames"] = extra["frames"]
+        return model.prefill(params, tokens, **kw)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, caches, token, pos):
+        return model.decode_step(params, caches, token, pos)
+    return decode_step

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spots: the batched simplex
+pivot loop (simplex_tile.py) and the hyperbox special case
+(hyperbox_kernel.py). Validated on CPU with interpret=True against ref.py."""
+from .ops import solve_batched_pallas, solve_hyperbox_pallas  # noqa: F401
+from .simplex_tile import pick_tile_b, simplex_pallas  # noqa: F401
+from .hyperbox_kernel import hyperbox_pallas  # noqa: F401

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``solve_batched_pallas`` is a drop-in for core.simplex.solve_batched_jax
+(same LPBatch -> LPResult contract) and is what core.batching dispatches to
+when ``solver=`` is pointed here. ``interpret=True`` executes the kernel body
+on CPU for validation; on a real TPU pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lp import LPBatch, LPResult, default_max_iters
+from .simplex_tile import pick_tile_b, simplex_pallas
+from .hyperbox_kernel import hyperbox_pallas
+
+
+def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
+                         tile_b: Optional[int] = None,
+                         max_iters: Optional[int] = None,
+                         tol: float = 1e-6,
+                         vmem_budget: int = 8 * 2 ** 20,
+                         interpret: bool = True) -> LPResult:
+    m, n = batch.m, batch.n
+    if tile_b is None:
+        tile_b = pick_tile_b(m, n, vmem_budget)
+    if max_iters is None:
+        max_iters = default_max_iters(m, n)
+    A = jnp.asarray(batch.A, dtype)
+    b = jnp.asarray(batch.b, dtype)
+    c = jnp.asarray(batch.c, dtype)
+    x, obj, status, iters = simplex_pallas(
+        A, b, c, m=m, n=n, tile_b=int(tile_b), max_iters=int(max_iters),
+        tol=float(tol), interpret=interpret)
+    return LPResult(x=np.asarray(x), objective=np.asarray(obj),
+                    status=np.asarray(status), iterations=np.asarray(iters))
+
+
+def solve_hyperbox_pallas(lo, hi, d, *, tile_b: int = 256,
+                          interpret: bool = True) -> np.ndarray:
+    out = hyperbox_pallas(jnp.asarray(lo, jnp.float32),
+                          jnp.asarray(hi, jnp.float32),
+                          jnp.asarray(d, jnp.float32),
+                          tile_b=tile_b, interpret=interpret)
+    return np.asarray(out)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The simplex oracle is the core lockstep JAX solver (core/simplex.py) — the
+kernels must agree with it exactly (same pivot rule, same sentinel, same
+tolerances), modulo tile padding. The hyperbox oracle is the closed form.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lp import LPBatch
+from repro.core.simplex import solve_batched_jax
+from repro.core.hyperbox import solve_hyperbox
+
+
+def simplex_ref(A, b, c, *, max_iters: int, tol: float = 1e-6):
+    """Returns (x, obj, status, iters) matching kernels.simplex_tile output."""
+    import numpy as np
+    batch = LPBatch(A=np.asarray(A), b=np.asarray(b), c=np.asarray(c))
+    res = solve_batched_jax(batch, max_iters=max_iters, tol=tol)
+    return res.x, res.objective, res.status, res.iterations
+
+
+def hyperbox_ref(lo, hi, d):
+    return solve_hyperbox(jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(d))

@@ -1,0 +1,189 @@
+"""(architecture x input-shape x mesh) cell construction for the dry-run.
+
+For every cell this builds: the step function (train_step / prefill / decode),
+ShapeDtypeStruct arguments (no allocation — the full configs only ever exist
+as abstract shapes on this host), and in/out NamedShardings resolved through
+the per-arch Sharder (so non-divisible dims degrade to replication instead of
+failing to partition).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model, shape_by_name
+from repro.models.config import ModelConfig, ShapeCell
+from repro.distributed.sharding import Sharder
+from repro.distributed.steps import (make_decode_step, make_prefill_step,
+                                     make_train_step)
+from repro.optim import get_optimizer
+
+FULL_ATTENTION_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
+def cell_is_skipped(cfg: ModelConfig, cell: ShapeCell) -> Optional[str]:
+    if cell.name == "long_500k" and cfg.family in FULL_ATTENTION_FAMILIES:
+        return ("skipped: 524k-token dense-KV decode is quadratic-cost for "
+                "pure full-attention archs (per assignment, run only for "
+                "SSM/hybrid)")
+    return None
+
+
+def _abstract_params(model):
+    captured = {}
+
+    def initfn(k):
+        p, s = model.init(k)
+        captured["specs"] = s
+        return p
+
+    sds = jax.eval_shape(initfn, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sds, captured["specs"]
+
+
+def _guarded_sharding(shd: Sharder, sds_tree, logical_tree):
+    """logical spec -> NamedSharding, dropping any dim whose size doesn't
+    divide its mesh-axis extent."""
+    if shd.mesh is None:
+        return None
+
+    def one(sds, logical):
+        entries = []
+        for dim, ax in enumerate(tuple(logical)):
+            r = shd.rules.get(ax) if ax is not None else None
+            if r is not None and sds.shape[dim] % shd._axis_size(r) != 0:
+                r = None
+            entries.append(r)
+        return NamedSharding(shd.mesh, P(*entries))
+
+    return jax.tree.map(one, sds_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def _batch_axes(shd: Sharder, n: int):
+    if shd.mesh is None:
+        return None
+    dp = shd.dp_axes or None
+    if dp is not None and n % shd._axis_size(dp) != 0:
+        dp = None
+    return dp
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               cfg: Optional[ModelConfig] = None,
+               microbatches: Optional[int] = None):
+    """Returns a dict {kind, fn, args, in_shardings, out_shardings, cfg,
+    note} or {'skipped': reason}."""
+    cfg = cfg or get_config(arch)
+    cell = shape_by_name(shape_name)
+    skip = cell_is_skipped(cfg, cell)
+    if skip:
+        return {"skipped": skip, "cfg": cfg}
+
+    shd = Sharder(cfg, mesh)
+    model = build_model(cfg, shd)
+    params_sds, specs = _abstract_params(model)
+    param_sh = shd.param_shardings(specs)
+
+    B, S = cell.global_batch, cell.seq_len
+    bt = _batch_axes(shd, B)
+    i32 = jnp.int32
+
+    def nsh(spec):
+        return NamedSharding(mesh, spec) if mesh is not None else None
+
+    if cell.kind == "train":
+        opt = get_optimizer(cfg.optimizer)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_logical = opt.state_logical(specs)
+        opt_sh = _guarded_sharding_opt(shd, opt_sds, opt_logical)
+
+        batch_sds = {"tokens": jax.ShapeDtypeStruct((B, _text_len(cfg, S)), i32),
+                     "labels": jax.ShapeDtypeStruct((B, _text_len(cfg, S)), i32)}
+        batch_sh = {"tokens": nsh(P(bt, None)), "labels": nsh(P(bt, None))}
+        if cfg.family == "vlm":
+            batch_sds["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+            batch_sh["patches"] = nsh(P(bt, None, None))
+        if cfg.family == "encdec":
+            batch_sds["frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+            batch_sh["frames"] = nsh(P(bt, None, None))
+
+        mb = microbatches if microbatches is not None \
+            else cfg.train_microbatches
+        fn = make_train_step(model, opt, microbatches=mb)
+        return {
+            "kind": "train", "fn": fn, "cfg": cfg, "model": model,
+            "args": (params_sds, opt_sds, batch_sds),
+            "in_shardings": (param_sh, opt_sh, batch_sh),
+            "out_shardings": (param_sh, opt_sh, None),
+        }
+
+    if cell.kind == "prefill":
+        tokens_sds = jax.ShapeDtypeStruct((B, _text_len(cfg, S)), i32)
+        extra_sds, extra_sh = _extra_inputs(cfg, B, S, bt, nsh)
+        cache_sh = _guarded_sharding(shd, model.cache_shape(B, S),
+                                     model.cache_logical_spec())
+        fn = make_prefill_step(model)
+        return {
+            "kind": "prefill", "fn": fn, "cfg": cfg, "model": model,
+            "args": (params_sds, tokens_sds, extra_sds),
+            "in_shardings": (param_sh, nsh(P(bt, None)), extra_sh),
+            "out_shardings": (nsh(P(bt, None)) if mesh else None, cache_sh),
+        }
+
+    # decode: one token against a full cache of S
+    cache_sds = model.cache_shape(B, S)
+    cache_sh = _guarded_sharding(shd, cache_sds, model.cache_logical_spec())
+    token_sds = jax.ShapeDtypeStruct((B,), i32)
+    pos_sds = jax.ShapeDtypeStruct((B,), i32)
+    fn = make_decode_step(model)
+    return {
+        "kind": "decode", "fn": fn, "cfg": cfg, "model": model,
+        "args": (params_sds, cache_sds, token_sds, pos_sds),
+        "in_shardings": (param_sh, cache_sh, nsh(P(bt)), nsh(P(bt))),
+        "out_shardings": (nsh(P(bt, None)) if mesh else None, cache_sh),
+    }
+
+
+def _text_len(cfg: ModelConfig, S: int) -> int:
+    return S - cfg.n_patches if cfg.family == "vlm" else S
+
+
+def _extra_inputs(cfg: ModelConfig, B: int, S: int, bt, nsh):
+    if cfg.family == "vlm":
+        return ({"patches": jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))},
+            {"patches": nsh(P(bt, None, None))})
+    if cfg.family == "encdec":
+        return ({"frames": jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.dtype(cfg.dtype))},
+            {"frames": nsh(P(bt, None, None))})
+    return None, None
+
+
+def _guarded_sharding_opt(shd: Sharder, sds_tree, logical_tree):
+    """Optimizer-state shardings: ZeRO-1 via opt_state_spec + divisibility
+    guard."""
+    if shd.mesh is None:
+        return None
+
+    def one(sds, logical):
+        spec = shd.opt_state_spec(tuple(logical))
+        entries = []
+        for dim, r in enumerate(spec):
+            if r is not None and sds.shape[dim] % shd._axis_size(r) != 0:
+                r = None
+            entries.append(r)
+        return NamedSharding(shd.mesh, P(*entries))
+
+    return jax.tree.map(one, sds_tree, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init, and the production meshes need 512 host placeholder
+devices. Everything else (smoke tests, benches) sees 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 16x16 pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod  # 2x16x16
+
+Per cell it records: memory_analysis (fits-in-HBM evidence), cost_analysis
+(FLOPs/bytes for the roofline), and the collective-bytes histogram parsed
+from the partitioned HLO. Artifacts land in artifacts/dryrun/*.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             cfg_override=None, tag: str = "") -> dict:
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.cells import build_cell
+    from repro.analysis.hlo_cost import module_cost
+    from repro.analysis.roofline import compute_roofline
+    from repro.models import shape_by_name
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "chips": chips, "tag": tag}
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, cfg=cfg_override)
+    if "skipped" in cell:
+        record["skipped"] = cell["skipped"]
+        _save(record, out_dir)
+        print(f"[dryrun] {arch} {shape_name} {mesh_name}: SKIP ({cell['skipped']})")
+        return record
+
+    cfg = cell["cfg"]
+    total_params = sum(int(x.size) for x in jax.tree.leaves(cell["args"][0]))
+    record["total_params"] = total_params
+    try:
+        with mesh:
+            jitted = jax.jit(cell["fn"],
+                             in_shardings=cell["in_shardings"],
+                             out_shardings=cell["out_shardings"])
+            lowered = jitted.lower(*cell["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = _mem_dict(mem)
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        record["cost_analysis_raw"] = {
+            k: float(v) for k, v in dict(cost).items()
+            if np.isscalar(v) and k in ("flops", "bytes accessed",
+                                        "transcendentals", "optimal_seconds")}
+        txt = compiled.as_text()
+        # trip-count-aware HLO cost model (cost_analysis counts while bodies
+        # once — useless for scan-over-layers; see analysis/hlo_cost.py)
+        hcost = module_cost(txt)
+        record["hlo_cost"] = {"flops": hcost["flops"],
+                              "mem_bytes": hcost["mem_bytes"]}
+        record["collectives"] = hcost["collectives"]
+        record["lower_s"] = round(t_lower, 1)
+        record["compile_s"] = round(t_compile, 1)
+
+        flops = hcost["flops"]
+        bytes_acc = hcost["mem_bytes"]
+        coll_b = hcost["collectives"]["_total"]["bytes"]
+        rl = compute_roofline(
+            cfg, shape_by_name(shape_name),
+            per_device_flops=flops, per_device_bytes=bytes_acc,
+            per_device_coll_bytes=coll_b, chips=chips,
+            total_params=total_params)
+        record["roofline"] = rl.as_dict()
+        print(f"[dryrun] {arch} {shape_name} {mesh_name}: OK "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"flops/dev={flops:.3e} collB/dev={coll_b:.3e} "
+              f"bottleneck={rl.bottleneck}")
+    except Exception as e:  # a failed cell is a bug — record it loudly
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} {shape_name} {mesh_name}: FAIL {record['error']}")
+    _save(record, out_dir)
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _save(record: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = record.get("tag", "")
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}" + \
+        (f"__{tag}" if tag else "")
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main():
+    from repro.configs import ARCH_IDS, CANONICAL
+    from repro.models.config import SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = list(CANONICAL) if (args.all or args.arch is None) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, mp, args.out))
+    n_ok = sum("roofline" in r for r in results)
+    n_skip = sum("skipped" in r for r in results)
+    n_fail = sum("error" in r for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

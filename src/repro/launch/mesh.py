@@ -1,0 +1,23 @@
+"""Production mesh definitions.
+
+A v5e pod is a 16x16 chip torus: single-pod mesh (data=16, model=16).
+Multi-pod adds a leading pure-DP 'pod' axis: (pod=2, data=16, model=16) —
+512 chips. Defined as functions so importing this module never touches jax
+device state (the dry-run re-initializes jax with 512 host devices first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU host-device tests."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,79 @@
+"""Batched serving driver: continuous prefill + decode with a step-level
+scheduler (static batch; decode slot reuse), reporting tokens/s.
+
+CPU demo:
+  PYTHONPATH=src python -m repro.launch.serve --arch hymba-1.5b --reduced \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=3,
+                    help="number of batched request waves")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    B, P, G = args.batch, args.prompt_len, args.gen
+    total = P + G
+
+    prefill = jax.jit(lambda p, t: model.prefill(p, t))
+    decode = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+
+    def pad_caches(caches, old, new):
+        def pad(x):
+            if x.ndim >= 3 and x.shape[2] == old:
+                padw = [(0, 0)] * x.ndim
+                padw[2] = (0, new - old)
+                return jnp.pad(x, padw)
+            return x
+        return jax.tree.map(pad, caches)
+
+    t_first = None
+    n_tokens = 0
+    t0 = time.perf_counter()
+    for wave in range(args.requests):
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+        logits, caches = prefill(params, prompts)
+        caches = pad_caches(caches, P, total)
+        tok = jnp.argmax(logits[:, : cfg.vocab], -1).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        for g in range(G - 1):
+            pos = jnp.full((B,), P + g, jnp.int32)
+            logits, caches = decode(params, caches, tok, pos)
+            tok = jnp.argmax(logits[:, : cfg.vocab], -1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+            if t_first is None:
+                t_first = time.perf_counter() - t0
+        n_tokens += B * G
+        print(f"[serve] wave {wave}: generated {B}x{G} tokens; "
+              f"sample={np.stack(out, 1)[0][:8].tolist()}")
+    dt = time.perf_counter() - t0
+    print(f"[serve] {n_tokens} tokens in {dt:.2f}s "
+          f"({n_tokens / dt:.1f} tok/s, ttft~{t_first:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""End-to-end training driver.
+
+Production behaviors wired in:
+  * auto-resume from the latest atomic checkpoint (--checkpoint-dir),
+  * async checkpointing off the training thread (--save-every),
+  * deterministic data skip-to-step on restart (pipeline state = step),
+  * straggler watchdog: wall-time per step vs running median; slow steps
+    (> --straggler-factor x median) are logged as incidents,
+  * optional mesh: --mesh 2x2 shards over (data, model) host devices,
+  * gradient-accumulation microbatching (--microbatches).
+
+CPU demo (reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --reduced \
+      --steps 50 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", default=None, help="e.g. 2x2 (data x model)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--curve-out", default=None,
+                    help="CSV path for the loss curve")
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override width (custom model size)")
+    ap.add_argument("--n-layers", type=int, default=None)
+    ap.add_argument("--d-ff", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={int(np.prod(shape))}")
+
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config
+    from repro.data import DataPipeline
+    from repro.distributed.sharding import Sharder, make_mesh
+    from repro.distributed.steps import make_train_step
+    from repro.models import build_model
+    from repro.optim import get_optimizer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    overrides = {k: getattr(args, a) for k, a in
+                 [("d_model", "d_model"), ("n_layers", "n_layers"),
+                  ("d_ff", "d_ff"), ("vocab", "vocab")]
+                 if getattr(args, a) is not None}
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
+    mesh = None
+    shd = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh(shape, ("data", "model")[: len(shape)])
+        shd = Sharder(cfg, mesh)
+
+    model = build_model(cfg, shd)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M mesh={args.mesh}")
+
+    opt = get_optimizer(cfg.optimizer if not args.reduced else "adamw",
+                        lr=args.lr)
+    opt_state = jax.jit(opt.init)(params)
+    if shd is not None:
+        params = jax.device_put(params, shd.param_shardings(specs))
+
+    step_fn = jax.jit(make_train_step(model, opt,
+                                      microbatches=args.microbatches))
+    data = DataPipeline(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
+                        seed=0)
+
+    start = 0
+    mgr = None
+    if args.checkpoint_dir:
+        mgr = CheckpointManager(args.checkpoint_dir)
+        latest = mgr.latest_step()
+        if latest is not None:
+            state = mgr.restore(latest, {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = mgr.extra(latest).get("data_step", latest)
+            print(f"[train] resumed from step {latest}")
+
+    durations = []
+    curve = []
+    ctx = mesh if mesh is not None else _null_ctx()
+    with ctx:
+        for s in range(start, args.steps):
+            t0 = time.perf_counter()
+            batch = jax.tree.map(jnp.asarray, data.batch_at(s))
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            durations.append(dt)
+            med = float(np.median(durations[-50:]))
+            if len(durations) > 5 and dt > args.straggler_factor * med:
+                print(f"[watchdog] straggler step {s}: {dt:.2f}s "
+                      f"(median {med:.2f}s)")
+            if s % args.log_every == 0 or s == args.steps - 1:
+                tok_s = args.batch * args.seq / dt
+                print(f"[train] step={s} loss={loss:.4f} {dt:.2f}s "
+                      f"({tok_s:.0f} tok/s)")
+            curve.append((s, loss))
+            if mgr and s > start and s % args.save_every == 0:
+                mgr.save(s, {"params": params, "opt": opt_state},
+                         blocking=False, extra={"data_step": s})
+    if mgr:
+        mgr.wait()
+        mgr.save(args.steps, {"params": params, "opt": opt_state},
+                 extra={"data_step": args.steps})
+    if args.curve_out:
+        os.makedirs(os.path.dirname(args.curve_out) or ".", exist_ok=True)
+        with open(args.curve_out, "w") as f:
+            f.write("step,loss\n")
+            for s, l in curve:
+                f.write(f"{s},{l:.5f}\n")
+        print(f"[train] wrote {args.curve_out}")
+    print(f"[train] final loss {curve[-1][1]:.4f} "
+          f"(first {curve[0][1]:.4f})")
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

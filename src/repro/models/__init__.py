@@ -1,0 +1,10 @@
+"""10-architecture model zoo (pure JAX, scan-over-layers, shardable)."""
+from .config import ModelConfig, SHAPES, ShapeCell, shape_by_name  # noqa: F401
+from .transformer import LM  # noqa: F401
+from .encdec import EncDecLM  # noqa: F401
+
+
+def build_model(cfg: ModelConfig, shd=None):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, shd)
+    return LM(cfg, shd)

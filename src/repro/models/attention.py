@@ -1,0 +1,276 @@
+"""Attention: blockwise-causal GQA (flash-style, pure JAX), KV-cache decode,
+sliding-window, qk-norm, and cross-attention.
+
+Memory/FLOP design (this matters for the roofline):
+
+* Train/prefill attention is *blockwise*: an outer Python loop over query
+  chunks and an inner `lax.scan` over only the kv chunks each query chunk can
+  see (triangular schedule). FLOPs are exact-causal (no masked-out waste) and
+  the live score buffer is (B, H, q_chunk, kv_chunk) — never (S, S).
+* GQA is computed with K/V *repeated* to the query-head count so the head
+  axis shards cleanly over 'model' whenever H % tp == 0 (the repeat is a
+  broadcast the compiler keeps fused; K/V themselves are tiny).
+* Decode attends one token against the full cache. For archs whose kv-head
+  count doesn't divide the tensor-parallel axis, the cache is *sequence*-
+  sharded and the softmax/contraction reductions over the sharded axis lower
+  to two small all-reduces (flash-decoding style); otherwise the cache is
+  head-sharded and decode is collective-free.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_norm, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def _fit_chunk(S: int, c: int) -> int:
+    """Largest chunk <= c that divides S (static python arithmetic)."""
+    c = max(1, min(c, S))
+    while S % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# core blockwise attention (shared by GQA / MLA / cross)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, q_chunk: int, kv_chunk: int,
+                        window: Optional[int] = None,
+                        q_offset: int = 0) -> jax.Array:
+    """q: (B, Sq, H, dh); k/v: (B, Sk, H, dh) (already head-repeated).
+    Returns (B, Sq, H, dh). Triangular chunk schedule, online softmax."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    qc = _fit_chunk(Sq, q_chunk)
+    kc = _fit_chunk(Sk, kv_chunk)
+    nq = Sq // qc
+    nk = Sk // kc
+
+    outs = []
+    for i in range(nq):
+        qi = q[:, i * qc:(i + 1) * qc]                       # (B, qc, H, dh)
+        q_pos = q_offset + i * qc + jnp.arange(qc)
+        if causal:
+            j_hi = min(nk, (q_offset + (i + 1) * qc + kc - 1) // kc)
+        else:
+            j_hi = nk
+        j_lo = 0
+        if window is not None:
+            j_lo = max(0, (q_offset + i * qc - window) // kc)
+        njs = j_hi - j_lo
+        ks = k[:, j_lo * kc:j_hi * kc].reshape(B, njs, kc, H, dh)
+        vs = v[:, j_lo * kc:j_hi * kc].reshape(B, njs, kc, H, dh)
+        ks = jnp.moveaxis(ks, 1, 0)                          # (nj, B, kc, H, dh)
+        vs = jnp.moveaxis(vs, 1, 0)
+
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        acc0 = jnp.zeros((B, H, qc, dh), jnp.float32)
+
+        def body_fixed(carry, inp):
+            m, l, acc = carry
+            kj, vj, j = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = (j_lo + j) * kc + jnp.arange(kc)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & (k_pos[None, :] > (q_pos[:, None] - window))
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body_fixed, (m0, l0, acc0), (ks, vs, jnp.arange(njs)))
+        out_i = acc / jnp.maximum(l[..., None], 1e-20)
+        outs.append(jnp.moveaxis(out_i, 1, 2).astype(q.dtype))  # (B, qc, H, dh)
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: Optional[int] = None) -> jax.Array:
+    """q: (B, 1, H, dh); caches: (B, S, H, dh) (head-repeated). Attends to
+    cache positions <= pos (and > pos - window if sliding)."""
+    B, S, H, dh = k_cache.shape
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(S)
+    mask = k_pos[None, :] <= pos[:, None]                    # (B, S)
+    if window is not None:
+        mask = mask & (k_pos[None, :] > (pos[:, None] - window))
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(p.sum(-1)[..., None], 1e-20)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)           # (B, 1, H, dh)
+
+
+def repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KV, dh) -> (B, S, KV*groups, dh); heads ordered kv-major so
+    query head h uses kv head h // groups."""
+    if groups == 1:
+        return k
+    B, S, KV, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, groups, dh)) \
+              .reshape(B, S, KV * groups, dh)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (standard decoder attention used by 8/10 archs)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig):
+    D, dh = cfg.d_model, cfg.d_head
+    H = cfg.n_heads_padded or cfg.n_heads
+    KV = cfg.n_kv_heads_padded or cfg.n_kv_heads
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], D, H * dh, dtype, ("residual", "heads"))
+    p["wk"], s["wk"] = dense_init(ks[1], D, KV * dh, dtype, ("residual", "kv_heads"))
+    p["wv"], s["wv"] = dense_init(ks[2], D, KV * dh, dtype, ("residual", "kv_heads"))
+    p["wo"], s["wo"] = dense_init(ks[3], H * dh, D, dtype, ("heads", "residual"))
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((dh,), dtype)
+        p["k_scale"] = jnp.ones((dh,), dtype)
+        s["q_scale"] = (None,)
+        s["k_scale"] = (None,)
+    return p, s
+
+
+def _qk_normalize(x, scale):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S, KV, dh)
+    v: jax.Array
+
+
+def gqa_apply(p, x: jax.Array, cfg: ModelConfig, *, positions: jax.Array,
+              mode: str, cache: Optional[KVCache] = None,
+              pos: Optional[jax.Array] = None, shd=None
+              ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """mode: 'train' | 'prefill' | 'decode'. prefill returns the filled
+    cache; decode takes+returns the cache updated at `pos`."""
+    B, S, D = x.shape
+    dh = cfg.d_head
+    H = cfg.n_heads_padded or cfg.n_heads
+    KV = cfg.n_kv_heads_padded or cfg.n_kv_heads
+    groups = H // KV
+
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, KV, dh)
+    v = (x @ p["wv"]).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = _qk_normalize(q, p["q_scale"])
+        k = _qk_normalize(k, p["k_scale"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if shd is not None:
+        q = shd.act(q, "batch", "seq", "heads", None)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and pos is not None
+        k_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache.k, k, pos)
+        v_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache.v, v, pos)
+        new_cache = KVCache(k_cache, v_cache)
+        out = decode_attention(
+            q, repeat_kv(k_cache, groups), repeat_kv(v_cache, groups), pos,
+            window=cfg.sliding_window)
+    else:
+        out = blockwise_attention(
+            q, repeat_kv(k, groups), repeat_kv(v, groups),
+            causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            window=cfg.sliding_window)
+        if mode == "prefill":
+            new_cache = KVCache(k, v)
+    if H != cfg.n_heads:  # zero the TP-padding heads (function-preserving)
+        out = out * (jnp.arange(H) < cfg.n_heads)[None, None, :, None] \
+            .astype(out.dtype)
+    out = out.reshape(B, S, H * dh)
+    return out @ p["wo"], new_cache
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    """Per-layer cache ShapeDtypeStructs (stacked over layers by the model).
+    Sliding-window archs only need a window-sized cache."""
+    S = seq if cfg.sliding_window is None else min(seq, cfg.sliding_window)
+    dt = jnp.dtype(cfg.dtype)
+    KV = cfg.n_kv_heads_padded or cfg.n_kv_heads
+    return KVCache(
+        k=jax.ShapeDtypeStruct((batch, S, KV, cfg.d_head), dt),
+        v=jax.ShapeDtypeStruct((batch, S, KV, cfg.d_head), dt),
+    )
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig):
+    D, dh = cfg.d_model, cfg.d_head
+    H = cfg.n_heads_padded or cfg.n_heads
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], D, H * dh, dtype, ("residual", "heads"))
+    p["wk"], s["wk"] = dense_init(ks[1], D, H * dh, dtype, ("residual", "heads"))
+    p["wv"], s["wv"] = dense_init(ks[2], D, H * dh, dtype, ("residual", "heads"))
+    p["wo"], s["wo"] = dense_init(ks[3], H * dh, D, dtype, ("heads", "residual"))
+    return p, s
+
+
+def cross_attn_apply(p, x, enc_kv, cfg: ModelConfig):
+    """x: (B, S, D) decoder stream; enc_kv: (k, v) each (B, Senc, H, dh)."""
+    B, S, D = x.shape
+    dh = cfg.d_head
+    H = cfg.n_heads_padded or cfg.n_heads
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k, v = enc_kv
+    if S == 1:  # decode step: dense single-query path
+        pos = jnp.full((B,), k.shape[1] - 1, jnp.int32)
+        out = decode_attention(q, k, v, pos)  # full visibility via pos=Senc-1
+    else:
+        out = blockwise_attention(q, k, v, causal=False,
+                                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    if H != cfg.n_heads:  # zero TP-padding heads
+        out = out * (jnp.arange(H) < cfg.n_heads)[None, None, :, None] \
+            .astype(out.dtype)
+    return out.reshape(B, S, H * dh) @ p["wo"]
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    B, Senc, D = enc_out.shape
+    dh = cfg.d_head
+    H = cfg.n_heads_padded or cfg.n_heads
+    k = (enc_out @ p["wk"]).reshape(B, Senc, H, dh)
+    v = (enc_out @ p["wv"]).reshape(B, Senc, H, dh)
+    return k, v

@@ -1,0 +1,180 @@
+"""Shared layers + the lightweight functional param/spec system.
+
+Params are pytrees of arrays; every init function returns ``(params, specs)``
+where ``specs`` mirrors the params tree with tuples of *logical axis names*
+(resolved to mesh PartitionSpecs by distributed/sharding.py). Layer stacks
+are built by vmapping init over a leading 'layers' axis so the forward pass
+can `lax.scan` over layers (keeps HLO size O(1) in depth — essential for
+compiling 96-126-layer models).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# param init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, spec) -> Tuple[jax.Array, Tuple]:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+    return w.astype(dtype), spec
+
+
+def stack_init(init_fn: Callable, n: int, key) -> Tuple[Params, Specs]:
+    """vmap an init over a leading layer axis; specs gain a 'layers' dim."""
+    keys = jax.random.split(key, n)
+    p0, s0 = init_fn(keys[0])
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    specs = jax.tree.map(lambda s: ("layers",) + tuple(s), s0,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}, {"scale": (None,)}
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": (None,), "bias": (None,)})
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32) \
+            + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (SwiGLU / squared-ReLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "swiglu":
+        p = {}
+        s = {}
+        p["w_gate"], s["w_gate"] = dense_init(ks[0], D, F, dtype, ("residual", "ff"))
+        p["w_up"], s["w_up"] = dense_init(ks[1], D, F, dtype, ("residual", "ff"))
+        p["w_down"], s["w_down"] = dense_init(ks[2], F, D, dtype, ("ff", "residual"))
+        return p, s
+    p = {}
+    s = {}
+    p["w_in"], s["w_in"] = dense_init(ks[0], D, F, dtype, ("residual", "ff"))
+    p["w_down"], s["w_down"] = dense_init(ks[2], F, D, dtype, ("ff", "residual"))
+    return p, s
+
+
+def mlp_apply(p, x, cfg: ModelConfig, shd=None):
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.mlp_kind == "relu2":  # nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(x @ p["w_in"]))
+    else:  # gelu (whisper)
+        h = jax.nn.gelu(x @ p["w_in"], approximate=True)
+    if shd is not None:
+        h = shd.act(h, "batch", "seq", "ff")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float):
+    """x: (..., S, H, d_head) or (..., S, d); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                   # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    if x.ndim == angles.ndim + 1:                        # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings & logits
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig):
+    V, D = cfg.vocab_padded, cfg.d_model
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {"table": (jax.random.normal(key, (V, D), jnp.float32) * 0.01).astype(dtype)}
+    return p, {"table": ("vocab", "residual")}
+
+
+def embed_lookup(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def logits_apply(p_head, x, cfg: ModelConfig):
+    """x: (..., D) -> (..., vocab_padded) f32 with padded entries masked."""
+    logits = (x @ p_head["table"].T if "table" in p_head else x @ p_head["w"])
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return logits
+
+
+def head_init(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}, {}
+    D, V = cfg.d_model, cfg.vocab_padded
+    dtype = jnp.dtype(cfg.param_dtype)
+    w, spec = dense_init(key, D, V, dtype, ("residual", "vocab"))
+    return {"w": w}, {"w": spec}
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask=None):
+    """logits (..., V) f32, labels (...) int32. Mean NLL over mask."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# sharding shim (real rules live in distributed/sharding.py)
+# ---------------------------------------------------------------------------
+
+class NullSharder:
+    """No-op activation sharder for single-device tests."""
+
+    def act(self, x, *logical):
+        return x
+
+
+NULL_SHARDER = NullSharder()

@@ -1,0 +1,161 @@
+"""Mamba-1 selective SSM (falcon-mamba-7b; also the SSM half of hymba).
+
+Training/prefill uses a *chunked associative scan*: an outer `lax.scan` over
+sequence chunks carries (h, conv_tail) so the materialized (B, chunk, d_inner,
+state) discretization tensors stay VMEM/HBM-friendly, while within a chunk
+`associative_scan` exposes log-depth parallelism to the VPU. Decode is the
+exact O(1) recurrence. d_inner shards over 'model' (every per-channel tensor
+is embarrassingly parallel across channels); state/dt_rank stay local.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+class MambaCache(NamedTuple):
+    h: jax.Array     # (B, d_inner, state) f32 SSM state
+    conv: jax.Array  # (B, conv_dim - 1, d_inner) rolling conv window
+
+
+def mamba_init(key, cfg: ModelConfig):
+    D, di, st, dr, cv = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                         cfg.dt_rank, cfg.conv_dim)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = dense_init(ks[0], D, 2 * di, dtype, ("residual", "d_inner"))
+    p["conv_w"] = (jax.random.normal(ks[1], (cv, di), jnp.float32) * 0.2).astype(dtype)
+    s["conv_w"] = (None, "d_inner")
+    p["conv_b"] = jnp.zeros((di,), dtype)
+    s["conv_b"] = ("d_inner",)
+    p["w_x"], s["w_x"] = dense_init(ks[2], di, dr + 2 * st, dtype, ("d_inner", None))
+    p["w_dt"], s["w_dt"] = dense_init(ks[3], dr, di, dtype, (None, "d_inner"))
+    p["dt_bias"] = jnp.full((di,), -4.6, dtype)  # softplus^-1(0.01)
+    s["dt_bias"] = ("d_inner",)
+    # S4D-real init: A = -[1..state] per channel
+    p["A_log"] = jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None],
+                                  (di, 1)))
+    s["A_log"] = ("d_inner", None)
+    p["D"] = jnp.ones((di,), jnp.float32)
+    s["D"] = ("d_inner",)
+    p["w_out"], s["w_out"] = dense_init(ks[4], di, D, dtype, ("d_inner", "residual"))
+    return p, s
+
+
+def _ssm_coeffs(p, xc, cfg: ModelConfig):
+    """xc: (B, T, di) post-conv activations -> discretized (dA, dBx, Cc)."""
+    st, dr = cfg.ssm_state, cfg.dt_rank
+    proj = xc @ p["w_x"]                                    # (B, T, dr+2st)
+    dt_r, B_ssm, C_ssm = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B, T, di)
+    A = -jnp.exp(p["A_log"])                                # (di, st)
+    dA = jnp.exp(dt[..., None] * A)                          # (B, T, di, st)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] \
+        * B_ssm.astype(jnp.float32)[..., None, :]            # (B, T, di, st)
+    return dA, dBx, C_ssm.astype(jnp.float32)
+
+
+def _chunk_scan(h0, dA, dBx):
+    """Associative scan of h_t = dA_t h_{t-1} + dBx_t within a chunk, seeded
+    with h0 by prepending the identity element carrying h0."""
+    B, T, di, st = dA.shape
+    a = jnp.concatenate([jnp.ones((B, 1, di, st), dA.dtype), dA], axis=1)
+    b = jnp.concatenate([h0[:, None], dBx], axis=1)
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hs[:, 1:], hs[:, -1]                              # (B,T,di,st), h_T
+
+
+def _causal_conv_chunk(p, x_chunk, tail, cv):
+    """x_chunk: (B, T, di); tail: (B, cv-1, di) previous inputs."""
+    xin = jnp.concatenate([tail, x_chunk], axis=1)           # (B, T+cv-1, di)
+    out = sum(xin[:, i:i + x_chunk.shape[1]] * p["conv_w"][i]
+              for i in range(cv))
+    new_tail = xin[:, -(cv - 1):] if cv > 1 else tail
+    return out + p["conv_b"], new_tail
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, mode: str,
+                cache: MambaCache | None = None, shd=None,
+                chunk: int = 512) -> Tuple[jax.Array, MambaCache | None]:
+    """x: (B, S, D) (S == 1 for decode)."""
+    B, S, D = x.shape
+    di, st, cv = cfg.d_inner, cfg.ssm_state, cfg.conv_dim
+    xz = x @ p["w_in"]
+    xr, z = jnp.split(xz, 2, axis=-1)                        # (B, S, di) each
+    if shd is not None:
+        xr = shd.act(xr, "batch", None, "d_inner")
+
+    if mode == "decode":
+        assert cache is not None
+        conv_win = jnp.concatenate([cache.conv, xr], axis=1)  # (B, cv, di)
+        xc = jnp.einsum("bcd,cd->bd", conv_win, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None]                         # (B, 1, di)
+        dA, dBx, C_ssm = _ssm_coeffs(p, xc, cfg)
+        h = cache.h * dA[:, 0] + dBx[:, 0]                    # (B, di, st)
+        y = jnp.einsum("bds,bs->bd", h, C_ssm[:, 0])[:, None]
+        y = y + p["D"] * xc.astype(jnp.float32)
+        new_cache = MambaCache(h=h, conv=conv_win[:, 1:])
+        out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        return out @ p["w_out"], new_cache
+
+    # train / prefill: chunked scan over sequence
+    T = min(chunk, S)
+    assert S % T == 0, "seq must divide ssm chunk"
+    nc = S // T
+    xr_c = xr.reshape(B, nc, T, di).swapaxes(0, 1)           # (nc, B, T, di)
+    z_c = z.reshape(B, nc, T, di).swapaxes(0, 1)
+    if shd is not None:
+        # pin scan xs to (chunk, batch, time, channel-sharded) — without this
+        # GSPMD picks a layout whose per-iteration dynamic_slice forces an
+        # involuntary full rematerialization (observed on the 16x16 mesh)
+        xr_c = shd.act(xr_c, None, "batch", None, "d_inner")
+        z_c = shd.act(z_c, None, "batch", None, "d_inner")
+
+    h0 = jnp.zeros((B, di, st), jnp.float32)
+    tail0 = jnp.zeros((B, cv - 1, di), x.dtype)
+
+    def step(carry, inp):
+        h, tail = carry
+        xrc, zc = inp
+        xc, tail = _causal_conv_chunk(p, xrc, tail, cv)
+        xc = jax.nn.silu(xc)
+        dA, dBx, C_ssm = _ssm_coeffs(p, xc, cfg)
+        if cfg.ssm_impl == "kernel":
+            from repro.kernels.ssm_scan import ssm_scan_bt_ds
+            hs, h_last = ssm_scan_bt_ds(dA, dBx, h)
+        else:
+            hs, h_last = _chunk_scan(h, dA, dBx)
+        y = jnp.einsum("btds,bts->btd", hs, C_ssm)
+        y = y + p["D"] * xc.astype(jnp.float32)
+        y = (y * jax.nn.silu(zc.astype(jnp.float32))).astype(x.dtype)
+        return (h_last, tail), y
+
+    (h_last, tail_last), ys = jax.lax.scan(step, (h0, tail0), (xr_c, z_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    new_cache = None
+    if mode == "prefill":
+        new_cache = MambaCache(h=h_last, conv=tail_last[:, -(cv - 1):].astype(x.dtype)
+                               if cv > 1 else tail_last)
+    return y @ p["w_out"], new_cache
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int):
+    return MambaCache(
+        h=jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cfg.conv_dim - 1, cfg.d_inner),
+                                  jnp.dtype(cfg.dtype)),
+    )

@@ -1,0 +1,127 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed KV cache.
+
+Train/prefill materialize per-head K/V from the 512-dim latent (what DeepSeek
+does in training). Decode uses the *absorbed* form: the up-projections fold
+into the query/output path so attention contracts directly against the
+(B, S, kv_lora) latent cache — per-token decode FLOPs drop from
+O(S·H·dh·kv_lora) re-materialization to O(S·(kv_lora+rope)) reads, and the
+cache is ~an order of magnitude smaller than GQA's. The latent cache has no
+head axis, so it sequence-shards over 'model' at decode (flash-decoding-style
+partial softmax + two small all-reduces).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_norm, apply_rope, dense_init, norm_init
+from .attention import blockwise_attention, NEG_INF
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S, kv_lora) compressed latents
+    k_rope: jax.Array  # (B, S, rope_dim) shared positional key
+
+
+def mla_init(key, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    qn, qr, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl, ql = cfg.kv_lora, cfg.q_lora
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["wq_a"], s["wq_a"] = dense_init(ks[0], D, ql, dtype, ("residual", None))
+    p["q_norm"], s["q_norm"] = norm_init(ql, "rmsnorm", dtype)
+    p["wq_b"], s["wq_b"] = dense_init(ks[1], ql, H * (qn + qr), dtype, (None, "heads"))
+    p["wkv_a"], s["wkv_a"] = dense_init(ks[2], D, kvl + qr, dtype, ("residual", None))
+    p["kv_norm"], s["kv_norm"] = norm_init(kvl, "rmsnorm", dtype)
+    p["wkv_b"], s["wkv_b"] = dense_init(ks[3], kvl, H * (qn + vh), dtype, (None, "heads"))
+    p["wo"], s["wo"] = dense_init(ks[4], H * vh, D, dtype, ("heads", "residual"))
+    return p, s
+
+
+def _project_q(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H, qn, qr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = apply_norm(p["q_norm"], x @ p["wq_a"], "rmsnorm") @ p["wq_b"]
+    q = q.reshape(B, S, H, qn + qr)
+    q_nope, q_pe = q[..., :qn], q[..., qn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _latents(p, x, cfg: ModelConfig, positions):
+    kvl, qr = cfg.kv_lora, cfg.qk_rope_dim
+    kv = x @ p["wkv_a"]                                     # (B, S, kvl+qr)
+    c_kv = apply_norm(p["kv_norm"], kv[..., :kvl], "rmsnorm")
+    k_pe = apply_rope(kv[..., kvl:], positions, cfg.rope_theta)  # (B, S, qr)
+    return c_kv, k_pe
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions, mode: str,
+              cache: Optional[MLACache] = None,
+              pos: Optional[jax.Array] = None, shd=None
+              ) -> Tuple[jax.Array, Optional[MLACache]]:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    qn, qr, vh, kvl = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                       cfg.kv_lora)
+    q_nope, q_pe = _project_q(p, x, cfg, positions)
+
+    if mode == "decode":
+        assert cache is not None and pos is not None
+        c_new, kpe_new = _latents(p, x, cfg, positions)
+        c_kv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(cache.c_kv, c_new, pos)
+        k_rope = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0)))(cache.k_rope, kpe_new, pos)
+        new_cache = MLACache(c_kv=c_kv, k_rope=k_rope)
+
+        # absorbed attention: fold W_UK into q, W_UV into the output path
+        wkv_b = p["wkv_b"].reshape(kvl, H, qn + vh)
+        w_uk = wkv_b[..., :qn]                               # (kvl, H, qn)
+        w_uv = wkv_b[..., qn:]                               # (kvl, H, vh)
+        q_lat = jnp.einsum("bshn,khn->bshk", q_nope, w_uk)   # (B,1,H,kvl)
+        s_lat = jnp.einsum("bshk,btk->bhst", q_lat, c_kv,
+                           preferred_element_type=jnp.float32)
+        s_pe = jnp.einsum("bshr,btr->bhst", q_pe, k_rope,
+                          preferred_element_type=jnp.float32)
+        scores = (s_lat + s_pe) / jnp.sqrt(float(qn + qr))
+        mask = jnp.arange(c_kv.shape[1])[None, :] <= pos[:, None]
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btk->bshk", probs.astype(c_kv.dtype), c_kv)
+        out = jnp.einsum("bshk,khv->bshv", o_lat, w_uv)       # (B,1,H,vh)
+        out = out.reshape(B, S, H * vh) @ p["wo"]
+        return out, new_cache
+
+    # train / prefill: materialized per-head K/V
+    c_kv, k_pe = _latents(p, x, cfg, positions)
+    wkv_b = p["wkv_b"].reshape(kvl, H, qn + vh)
+    k_nope = jnp.einsum("btk,khn->bthn", c_kv, wkv_b[..., :qn])
+    v = jnp.einsum("btk,khv->bthv", c_kv, wkv_b[..., qn:])
+    k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, qr))
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    if shd is not None:
+        q = shd.act(q, "batch", "seq", "heads", None)
+        k = shd.act(k, "batch", "seq", "heads", None)
+    # pad v's head dim up to qk dim for the shared blockwise kernel
+    out = blockwise_attention(q, k,
+                              jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qn + qr - vh))),
+                              causal=True, q_chunk=cfg.q_chunk,
+                              kv_chunk=cfg.kv_chunk)[..., :vh]
+    out = out.reshape(B, S, H * vh) @ p["wo"]
+    new_cache = MLACache(c_kv=c_kv, k_rope=k_pe) if mode == "prefill" else None
+    return out, new_cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    dt = jnp.dtype(cfg.dtype)
+    return MLACache(
+        c_kv=jax.ShapeDtypeStruct((batch, seq, cfg.kv_lora), dt),
+        k_rope=jax.ShapeDtypeStruct((batch, seq, cfg.qk_rope_dim), dt),
+    )

@@ -1,0 +1,11 @@
+"""Sharded optimizers (ZeRO-1 state sharding via Sharder.opt_state_spec)."""
+from .adamw import adamw  # noqa: F401
+from .adafactor import adafactor  # noqa: F401
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise KeyError(name)

@@ -1,0 +1,75 @@
+"""Adafactor (factored second moments, no first moment) — the optimizer of
+choice for the 340B/405B dry-runs: state is O(rows+cols) per matrix instead
+of O(rows*cols), which is what lets those models fit 16 GiB/chip HBM
+alongside bf16 params (see EXPERIMENTS.md memory tables)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Optimizer
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip=1.0, warmup: int = 100):
+    def schedule(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(1, warmup))
+        return lr * warm
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def zeros(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(zeros, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        step = state["step"]
+        lr_t = schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], eps))
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                nv = beta * v["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(nv)
+                new_v = {"v": nv}
+            u = g / jnp.maximum(denom, eps)
+            norm = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, norm / clip)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return new_p, {"v": new_v, "step": step + 1}
+
+    def state_logical(param_specs):
+        def spec_of(s):
+            s = tuple(s)
+            if len(s) >= 2:
+                return {"vr": s[:-1], "vc": s[:-2] + s[-1:]}
+            return {"v": s}
+        return {"v": jax.tree.map(spec_of, param_specs,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+                "step": ()}
+
+    return Optimizer(init=init, update=update, state_logical=state_logical)

@@ -1,0 +1,64 @@
+"""AdamW. Moments in f32; params stay in their storage dtype (bf16 on TPU —
+production would add an f32 master copy or stochastic rounding; the tiny CPU
+training runs in this repo use f32 params so the update is exact).
+
+State layout mirrors the param tree; ZeRO-1 sharding comes from the Sharder:
+moments additionally shard the 'residual' axis over 'data' even when params
+are only tensor-parallel, so optimizer memory scales 1/(dp*tp)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: callable          # params -> state
+    update: callable        # (grads, state, params, step) -> (params, state)
+    state_logical: callable  # param logical specs -> state logical specs
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01,
+          warmup: int = 100):
+    def schedule(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(1, warmup))
+        return lr * warm
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        step = state["step"]
+        lr_t = schedule(step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            step_val = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_val).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step + 1}
+
+    def state_logical(param_specs):
+        return {"m": param_specs, "v": param_specs, "step": ()}
+
+    return Optimizer(init=init, update=update, state_logical=state_logical)

@@ -1,0 +1,53 @@
+"""Checkpoint manager: atomicity, retention, async, restore."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.integers(0, 9, (3,)), jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(3, t, extra={"data_step": 3})
+    assert mgr.latest_step() == 3
+    out = mgr.restore(3, t)
+    np.testing.assert_allclose(out["a"], t["a"])
+    np.testing.assert_array_equal(out["b"]["c"], t["b"]["c"])
+    assert mgr.extra(3)["data_step"] == 3
+
+
+def test_async_save_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in range(5):
+        mgr.save(s, _tree(s), blocking=False)
+    mgr.wait()
+    mgr._gc()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+    out = mgr.restore(4, _tree())
+    np.testing.assert_allclose(out["a"], _tree(4)["a"])
+
+
+def test_no_tmp_left_behind(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(0, t)
+    like = {"a": jnp.zeros((8, 4), jnp.bfloat16),
+            "b": {"c": jnp.zeros((3,), jnp.int32)}}
+    out = mgr.restore(0, like)
+    assert out["a"].dtype == jnp.bfloat16

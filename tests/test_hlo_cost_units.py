@@ -1,0 +1,57 @@
+"""Unit tests for the HLO cost model's slice-aware traffic accounting."""
+from repro.analysis.hlo_cost import HloModule, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[4,8]") == 128
+    assert _shape_bytes("bf16[10]{0}") == 20
+    assert _shape_bytes("(f32[2,2], s8[4])") == 20
+    assert _shape_bytes("pred[]") == 1
+
+
+HLO = """\
+HloModule test
+
+%fused_dus (param_0.1: f32[32,128], param_1.2: f32[1,128], param_2.3: s32[]) -> f32[32,128] {
+  %param_0.1 = f32[32,128]{1,0} parameter(0)
+  %param_1.2 = f32[1,128]{1,0} parameter(1)
+  %param_2.3 = s32[] parameter(2)
+  ROOT %dynamic-update-slice.1 = f32[32,128]{1,0} dynamic-update-slice(%param_0.1, %param_1.2, %param_2.3, %param_2.3)
+}
+
+%fused_ds (param_0.2: f32[32,128], param_1.3: s32[]) -> f32[1,128] {
+  %param_0.2 = f32[32,128]{1,0} parameter(0)
+  %param_1.3 = s32[] parameter(1)
+  ROOT %dynamic-slice.2 = f32[1,128]{1,0} dynamic-slice(%param_0.2, %param_1.3, %param_1.3), dynamic_slice_sizes={1,128}
+}
+
+ENTRY %main (a: f32[32,128], u: f32[1,128], i: s32[]) -> f32[32,128] {
+  %a = f32[32,128]{1,0} parameter(0)
+  %u = f32[1,128]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  %slice_f = f32[1,128]{1,0} fusion(%a, %i), kind=kLoop, calls=%fused_ds
+  ROOT %dus_f = f32[32,128]{1,0} fusion(%a, %slice_f, %i), kind=kLoop, calls=%fused_dus
+}
+"""
+
+
+def test_fusion_slice_accounting():
+    mod = HloModule(HLO)
+    total = mod.total()
+    # ds fusion: 2 x 512B slice; dus fusion: 2 x 512B update (+ no
+    # full-buffer charges: 32x128xf32 = 16 KiB must NOT appear)
+    assert total["mem_bytes"] == (2 * 512 + 4) + (2 * 512 + 4), total["mem_bytes"]
+
+
+def test_dot_flops_with_batch_dims():
+    hlo = """\
+HloModule d
+
+ENTRY %main (x: f32[4,8,16], y: f32[4,16,32]) -> f32[4,8,32] {
+  %x = f32[4,8,16]{2,1,0} parameter(0)
+  %y = f32[4,16,32]{2,1,0} parameter(1)
+  ROOT %dot.1 = f32[4,8,32]{2,1,0} dot(%x, %y), lhs_batch_dims={0}, rhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_contracting_dims={1}
+}
+"""
+    mod = HloModule(hlo)
+    assert mod.total()["flops"] == 2 * 4 * 8 * 32 * 16

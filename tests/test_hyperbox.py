@@ -1,0 +1,30 @@
+"""Hyperbox special case (paper Sec. 5.6) vs general simplex."""
+import numpy as np
+
+from repro.core import (OPTIMAL, hyperbox_as_general_lp, solve_batched_jax,
+                        solve_hyperbox, solve_hyperbox_ref)
+import jax.numpy as jnp
+
+RNG = np.random.default_rng(13)
+
+
+def test_matches_simplex_on_box_lps():
+    lo = RNG.uniform(-5, 0, (40, 6))
+    hi = lo + RNG.uniform(0.5, 4, (40, 6))
+    d = RNG.normal(size=(40, 6))
+    fast = np.asarray(solve_hyperbox(jnp.asarray(lo), jnp.asarray(hi),
+                                     jnp.asarray(d)))
+    lp, off = hyperbox_as_general_lp(lo, hi, d)
+    res = solve_batched_jax(lp)
+    assert (res.status == OPTIMAL).all()
+    np.testing.assert_allclose(fast, res.objective + off, rtol=1e-4)
+
+
+def test_direction_broadcast():
+    lo = RNG.uniform(-1, 0, (9, 4))
+    hi = lo + 1.0
+    dirs = RNG.normal(size=(5, 4))
+    out = np.asarray(solve_hyperbox(jnp.asarray(lo), jnp.asarray(hi),
+                                    jnp.asarray(dirs)))
+    assert out.shape == (9, 5)
+    np.testing.assert_allclose(out, solve_hyperbox_ref(lo, hi, dirs), rtol=1e-5)

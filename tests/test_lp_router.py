@@ -1,0 +1,22 @@
+"""LP-capacity MoE router: allocation properties."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expert_capacity_lp
+
+
+def test_budget_and_ceiling():
+    rng = np.random.default_rng(0)
+    demand = jnp.asarray(rng.uniform(0, 50, (3, 8)), jnp.float32)
+    caps = np.asarray(expert_capacity_lp(demand, total_slots=128.0, c_max=32.0))
+    assert caps.shape == (3, 8)
+    assert (caps <= 32.0 + 1e-3).all()
+    assert (caps.sum(-1) <= 128.0 + 1e-2).all()
+    assert (caps <= np.asarray(demand) + 1e-3).all()
+
+
+def test_hot_expert_gets_more():
+    demand = jnp.asarray([[100.0, 1.0, 1.0, 1.0]], jnp.float32)
+    caps = np.asarray(expert_capacity_lp(demand, total_slots=16.0, c_max=12.0))
+    assert caps[0, 0] >= 11.9  # hot expert saturates its ceiling
+    assert caps[0, 0] > caps[0, 1]

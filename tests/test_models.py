@@ -1,0 +1,133 @@
+"""Per-arch smoke tests (reduced configs) + cache-correctness invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(3)
+B, S = 2, 32
+
+
+def _batch(r):
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, r.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, r.vocab, (B, S)), jnp.int32),
+    }
+    if r.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            RNG.normal(size=(B, r.n_patches, r.d_model)), jnp.float32)
+    if r.family == "encdec":
+        batch["frames"] = jnp.asarray(RNG.normal(size=(B, S, r.d_model)),
+                                      jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    r = get_config(arch).reduced()
+    model = build_model(r)
+    params, specs = model.init(KEY)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, tuple))
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, _batch(r))
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_prefill(arch):
+    cfg = get_config(arch).reduced()
+    # disable capacity drops so MoE routing is batch-independent
+    if cfg.mlp_kind == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=100.0)
+    model = build_model(cfg)
+    params, _ = model.init(KEY)
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["patches"] = batch["patches"]
+    if cfg.family == "encdec":
+        kwargs["frames"] = batch["frames"]
+    S0 = S - 4
+    logits, caches = model.prefill(params, toks[:, :S0], **kwargs)
+    old_len = (cfg.n_patches + S0) if cfg.family == "vlm" else S0
+
+    def pad_seq(x):
+        if x.ndim >= 3 and x.shape[2] == old_len:
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, 4)
+            return jnp.pad(x, pad)
+        return x
+
+    caches = jax.tree.map(pad_seq, caches)
+    for t in range(4):
+        pos = jnp.full((B,), old_len + t, jnp.int32)
+        logits, caches = model.decode_step(params, caches,
+                                           toks[:, S0 + t], pos)
+    ref, _ = model.prefill(params, toks, **kwargs)
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(logits - ref))) < 2e-4 * max(1.0, scale)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "hymba-1.5b"])
+def test_loss_is_permutation_sensitive(arch):
+    """Different tokens -> different loss (model isn't degenerate)."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = model.init(KEY)
+    b1 = _batch(cfg)
+    b2 = dict(b1)
+    b2["tokens"] = (b1["tokens"] + 7) % cfg.vocab
+    l1 = float(model.loss_fn(params, b1))
+    l2 = float(model.loss_fn(params, b2))
+    assert l1 != l2
+
+
+def test_param_counts_match_published():
+    expected = {
+        "deepseek-v2-236b": 236e9, "llama4-scout-17b-a16e": 109e9,
+        "falcon-mamba-7b": 7.3e9, "whisper-small": 0.244e9,
+        "qwen3-32b": 32.8e9, "granite-20b": 20.1e9,
+        "nemotron-4-340b": 340e9, "llama3-405b": 405e9,
+        "hymba-1.5b": 1.5e9, "phi-3-vision-4.2b": 4.2e9,
+    }
+    for arch, exp in expected.items():
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        shapes = jax.eval_shape(lambda k: model.init(k)[0],
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        n = sum(int(x.size) for x in jax.tree.leaves(shapes))
+        assert 0.85 <= n / exp <= 1.2, f"{arch}: {n/1e9:.1f}B vs {exp/1e9}B"
+
+
+def test_sliding_window_limits_attention():
+    """Hymba with window w: token far past the window doesn't affect logits."""
+    cfg = dataclasses.replace(get_config("hymba-1.5b").reduced(),
+                              sliding_window=8)
+    model = build_model(cfg)
+    params, _ = model.init(KEY)
+    t1 = jnp.asarray(RNG.integers(0, cfg.vocab, (1, S)), jnp.int32)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 3) % cfg.vocab)
+    l1, _ = model.prefill(params, t1)
+    l2, _ = model.prefill(params, t2)
+    # attention part is window-limited but the SSM still carries state, so
+    # only check that attention cache shape honors the window
+    assert model.cache_shape(1, S).kv.k.shape[2] == min(S, 8)
+    del l1, l2
+
+
+def test_moe_lp_capacity_router_runs():
+    cfg = dataclasses.replace(get_config("deepseek-v2-236b").reduced(),
+                              lp_capacity=True)
+    model = build_model(cfg)
+    params, _ = model.init(KEY)
+    loss = model.loss_fn(params, _batch(cfg))
+    assert np.isfinite(float(loss))

@@ -1,0 +1,38 @@
+"""Optimizers: convergence on a quadratic + state spec shapes."""
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adafactor, adamw
+
+
+def _converges(opt, steps=200):
+    params = {"w": jnp.asarray([3.0, -2.0]), "m": jnp.ones((2, 3))}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum((p["m"] - 0.5) ** 2)
+
+    l0 = float(loss_fn(params))
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params)
+    return l0, float(loss_fn(params))
+
+
+def test_adamw_converges():
+    l0, l1 = _converges(adamw(lr=0.05, weight_decay=0.0))
+    assert l1 < 0.05 * l0
+
+
+def test_adafactor_converges():
+    l0, l1 = _converges(adafactor(lr=0.1))
+    assert l1 < 0.1 * l0
+
+
+def test_state_logical_specs():
+    opt = adafactor()
+    specs = {"w": ("residual", "ff")}
+    slog = opt.state_logical(specs)
+    assert slog["v"]["w"] == {"vr": ("residual",), "vc": ("ff",)}
+    opt2 = adamw()
+    assert opt2.state_logical(specs)["m"]["w"] == ("residual", "ff")

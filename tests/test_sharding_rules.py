@@ -1,0 +1,48 @@
+"""Sharder rules: divisibility guards, ZeRO-1 state specs, head padding."""
+import subprocess, sys, os, textwrap
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(code):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, cwd=ROOT,
+                       timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr[-3000:]
+    return r.stdout
+
+
+def test_rules_and_guards():
+    out = _run("""
+        import dataclasses, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.distributed.sharding import Sharder, make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+
+        # qwen3 reduced: 4 heads / tp=4 -> shardable
+        cfg = dataclasses.replace(get_config("qwen3-32b").reduced(),
+                                  n_heads=4, n_kv_heads=2, d_ff=128)
+        shd = Sharder(cfg, mesh)
+        assert shd.rules["heads"] == "model"
+        assert shd.rules["ff"] == "model"
+        assert shd.rules["kv_heads"] is None         # 2 % 4 != 0
+        assert shd.rules["kv_seq"] == "model"        # cache falls back to seq
+
+        # padding lifts divisibility
+        cfg2 = dataclasses.replace(cfg, n_heads=5, n_heads_padded=8)
+        assert Sharder(cfg2, mesh).rules["heads"] == "model"
+
+        # act() guard: indivisible dims degrade to replicated
+        x = jnp.ones((3, 8, 16))  # batch 3 not divisible by dp=2
+        y = shd.act(x, "batch", None, "ff")
+        assert "model" in str(y.sharding.spec), y.sharding
+
+        # ZeRO-1: residual dim of moments gains 'data'
+        spec = shd.opt_state_spec(("residual", "ff"))
+        assert spec[0] == "data" and spec[1] == "model"
+        print("RULES-OK")
+    """)
+    assert "RULES-OK" in out

@@ -1,0 +1,73 @@
+"""End-to-end: tiny LM trains (loss decreases) and resumes deterministically."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataPipeline
+from repro.distributed.steps import make_train_step
+from repro.models import build_model
+from repro.optim import get_optimizer
+
+
+def _setup(seed=0):
+    cfg = get_config("qwen3-32b").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    opt = get_optimizer("adamw", lr=3e-3, warmup=10)
+    step_fn = jax.jit(make_train_step(model, opt))
+    opt_state = opt.init(params)
+    data = DataPipeline(vocab=cfg.vocab, batch=8, seq=32, seed=seed)
+    return cfg, model, params, opt_state, step_fn, data
+
+
+def test_loss_decreases():
+    cfg, model, params, opt_state, step_fn, data = _setup()
+    losses = []
+    for s in range(30):
+        b = data.batch_at(s)
+        params, opt_state, m = step_fn(params, opt_state,
+                                       jax.tree.map(jnp.asarray, b))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+
+def test_microbatched_grads_match_full():
+    from repro.distributed.steps import make_train_step
+    cfg, model, params, opt_state, _, data = _setup()
+    opt = get_optimizer("adamw", lr=3e-3)
+    full = make_train_step(model, opt, microbatches=1)
+    micro = make_train_step(model, opt, microbatches=4)
+    b = jax.tree.map(jnp.asarray, data.batch_at(0))
+    p1, _, m1 = jax.jit(full)(params, opt_state, b)
+    p2, _, m2 = jax.jit(micro)(params, opt_state, b)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+    d = max(float(jnp.max(jnp.abs(a - b2)))
+            for a, b2 in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 5e-3
+
+
+def test_checkpoint_resume_is_deterministic(tmp_path):
+    cfg, model, params, opt_state, step_fn, data = _setup()
+    mgr = CheckpointManager(str(tmp_path))
+    for s in range(5):
+        b = jax.tree.map(jnp.asarray, data.batch_at(s))
+        params, opt_state, m = step_fn(params, opt_state, b)
+    mgr.save(5, {"params": params, "opt": opt_state}, extra={"data_step": 5})
+    # continue 3 more
+    ref, opt_ref = params, opt_state
+    for s in range(5, 8):
+        b = jax.tree.map(jnp.asarray, data.batch_at(s))
+        ref, opt_ref, _ = step_fn(ref, opt_ref, b)
+    # simulated restart: restore & replay from the recorded data step
+    state = mgr.restore(5, {"params": params, "opt": opt_state})
+    p2, o2 = state["params"], state["opt"]
+    assert mgr.extra(5)["data_step"] == 5
+    for s in range(5, 8):
+        b = jax.tree.map(jnp.asarray, data.batch_at(s))
+        p2, o2, _ = step_fn(p2, o2, b)
+    for a, b2 in zip(jax.tree.leaves(ref), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b2), atol=1e-6)
