@@ -1,0 +1,171 @@
+"""Executed-pivot-work benchmark: lockstep vs phase-compacted vs
+compaction-scheduled batched simplex (the two-level work-elimination engine).
+
+For each Table-2 size (mixed feasible/infeasible batches, half needing
+phase 1) this measures, per solver:
+
+* executed lockstep steps,
+* executed tableau-element updates (steps x occupied batch slots x tableau
+  elements — the work unit of analysis/lp_perf.py; phase-compacted steps
+  count the (m+1)(n+m+1) tableau, full steps the (m+2)(n+2m+1) one),
+* wall-clock (median over post-compile runs),
+
+and checks that all three solvers return *identical* statuses (they execute
+identical pivot sequences; only dead work differs).  Results land in
+``BENCH_pivot_work.json`` next to this file so future PRs have a perf
+trajectory to beat.
+
+  PYTHONPATH=src python -m benchmarks.pivot_work [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (LPBatch, random_lp_batch, solve_batched_compacted,
+                        solve_batched_jax)
+from repro.core.compaction import total_elements, total_steps
+from repro.core.lp import default_max_iters
+from repro.core.simplex import tableau_elements
+
+try:  # package and direct-script execution
+    from .common import timeit
+except ImportError:  # pragma: no cover
+    from common import timeit
+
+SIZES = ((5, 5), (10, 10), (28, 28), (50, 50), (100, 100))
+QUICK_SIZES = ((5, 5), (28, 28))
+
+
+def mixed_batch(m: int, n: int, B: int, seed: int = 0) -> LPBatch:
+    """Half feasible-start, half phase-1 LPs, shuffled — the workload where
+    lockstep waste is worst (paper Table 4 mixed with Table 2)."""
+    rng = np.random.default_rng(seed)
+    half = B // 2
+    b1 = random_lp_batch(rng, half, m, n, feasible_start=True)
+    b2 = random_lp_batch(rng, B - half, m, n, feasible_start=False)
+    batch = LPBatch(A=np.concatenate([b1.A, b2.A]),
+                    b=np.concatenate([b1.b, b2.b]),
+                    c=np.concatenate([b1.c, b2.c]))
+    order = rng.permutation(B)
+    return LPBatch(A=batch.A[order], b=batch.b[order], c=batch.c[order])
+
+
+def measure(m: int, n: int, B: int, *, segment_k: int = 8,
+            compact_threshold: float = 0.5, iters: int = 2,
+            seed: int = 0) -> dict:
+    batch = mixed_batch(m, n, B, seed)
+    max_iters = default_max_iters(m, n)
+
+    # --- seed lockstep (single combined loop, full tableau throughout) ------
+    lock = solve_batched_jax(batch, phase_compaction=False)
+    t_lock = timeit(lambda: solve_batched_jax(batch, phase_compaction=False),
+                    warmup=0, iters=iters)  # first call above was the warmup
+    piv = lock.iterations.astype(np.int64)
+    steps_lock = int(piv.max()) + 1
+    elems_lock = steps_lock * B * tableau_elements(m, n)
+
+    # --- Level 1: phase-compacted two-loop solve ----------------------------
+    pc = solve_batched_jax(batch)
+    t_pc = timeit(lambda: solve_batched_jax(batch), warmup=0, iters=iters)
+    # executed-step accounting via the scheduler with compaction disabled
+    # (threshold=0, one segment per stage == the monolithic loop split)
+    stats_pc = []
+    pc2 = solve_batched_compacted(batch, segment_k=max_iters,
+                                  compact_threshold=0.0, stats_out=stats_pc)
+    elems_pc = total_elements(stats_pc)
+
+    # --- Level 1+2: compaction-scheduled ------------------------------------
+    stats_sched = []
+    sched = solve_batched_compacted(batch, segment_k=segment_k,
+                                    compact_threshold=compact_threshold,
+                                    stats_out=stats_sched)
+    t_sched = timeit(lambda: solve_batched_compacted(
+        batch, segment_k=segment_k, compact_threshold=compact_threshold),
+        warmup=0, iters=iters)
+    elems_sched = total_elements(stats_sched)
+
+    statuses_identical = bool(
+        np.array_equal(lock.status, pc.status)
+        and np.array_equal(lock.status, pc2.status)
+        and np.array_equal(lock.status, sched.status))
+    buckets = sorted({s.bucket for s in stats_sched}, reverse=True)
+
+    return {
+        "m": m, "n": n, "B": B, "mixed": True,
+        "segment_k": segment_k, "compact_threshold": compact_threshold,
+        "useful_pivots": int(piv.sum()),
+        "pivots_mean": float(piv.mean()), "pivots_max": int(piv.max()),
+        "statuses_identical": statuses_identical,
+        "lockstep": {
+            "steps": steps_lock,
+            "elements": int(elems_lock),
+            "wall_s": t_lock,
+        },
+        "phase_compacted": {
+            "steps": total_steps(stats_pc),
+            "elements": int(elems_pc),
+            "wall_s": t_pc,
+        },
+        "scheduled": {
+            "steps": total_steps(stats_sched),
+            "elements": int(elems_sched),
+            "wall_s": t_sched,
+            "bucket_ladder": buckets,
+            "segments": len(stats_sched),
+        },
+        "reduction_phase_compacted": elems_lock / max(1, elems_pc),
+        "reduction_scheduled": elems_lock / max(1, elems_sched),
+    }
+
+
+def run(quick: bool = False, B: int = 4096, out: str | None = None) -> dict:
+    sizes = QUICK_SIZES if quick else SIZES
+    if quick:
+        B = min(B, 128)
+    if out is None:
+        out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                           "BENCH_pivot_work.json")
+    out = os.path.abspath(out)
+    # fail on an unwritable destination *before* burning benchmark minutes
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    rows = []
+    t0 = time.time()
+    for (m, n) in sizes:
+        iters = 1 if (quick or m >= 50) else 2
+        r = measure(m, n, B, iters=iters)
+        rows.append(r)
+        print(f"pivot_work m={m} n={n} B={B}: "
+              f"elems lockstep={r['lockstep']['elements']:.3e} "
+              f"compacted={r['phase_compacted']['elements']:.3e} "
+              f"scheduled={r['scheduled']['elements']:.3e} "
+              f"(x{r['reduction_scheduled']:.2f}) "
+              f"statuses_identical={r['statuses_identical']}")
+    result = {
+        "benchmark": "pivot_work",
+        "quick": quick,
+        "elapsed_s": time.time() - t0,
+        "workloads": rows,
+    }
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {out}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="short smoke: small sizes, B=128, 1 timing iter")
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+    run(quick=args.quick, B=args.batch, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,12 +8,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", type=str, default=None,
-                    help="comma list: table2,fig7,table4,table5,table6,table7")
+                    help="comma list: table2,fig7,table4,table5,table6,"
+                         "table7,pivot_work")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (fig7_batch_sweep, table2_layout, table4_infeasible,
-                   table5_gflops, table6_netlib, table7_reachability)
+    from . import (fig7_batch_sweep, pivot_work, table2_layout,
+                   table4_infeasible, table5_gflops, table6_netlib,
+                   table7_reachability)
 
     print("name,us_per_call,derived")
     if only is None or "table2" in only:
@@ -32,6 +34,11 @@ def main() -> None:
                           else (1, 10, 100, 1000, 10000, 100000))
     if only is None or "table7" in only:
         table7_reachability.run(T=500 if not args.full else 2000)
+    if "pivot_work" in (only or ()):  # JSON artifact, opt-in from here
+        # only a --full run may refresh the committed B=4096 baseline;
+        # quick smokes write to /tmp so they can't corrupt the trajectory
+        pivot_work.run(quick=not args.full,
+                       out=None if args.full else "/tmp/pivot_work_quick.json")
 
 
 if __name__ == "__main__":

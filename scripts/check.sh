@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a short executed-work benchmark smoke.
+#
+#   scripts/check.sh          # full tier-1 pytest + quick pivot-work smoke
+#   scripts/check.sh --fast   # pytest only
+#
+# The smoke run writes /tmp/pivot_work_smoke.json (never the committed
+# BENCH_pivot_work.json) and fails if solver statuses diverge or the
+# work-elimination engine regresses below a loose floor.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== pivot-work smoke (benchmarks/pivot_work.py --quick) =="
+  python -m benchmarks.pivot_work --quick --out /tmp/pivot_work_smoke.json
+  python - <<'EOF'
+import json
+d = json.load(open("/tmp/pivot_work_smoke.json"))
+for w in d["workloads"]:
+    assert w["statuses_identical"], f"status divergence at {w['m']}x{w['n']}"
+    assert w["reduction_scheduled"] >= 1.0, \
+        f"work-elimination regressed at {w['m']}x{w['n']}: {w['reduction_scheduled']:.2f}x"
+print("pivot-work smoke OK:",
+      ", ".join(f"{w['m']}x{w['n']}: x{w['reduction_scheduled']:.2f}"
+                for w in d["workloads"]))
+EOF
+fi
+
+echo "ALL CHECKS PASSED"

@@ -16,6 +16,14 @@ kernel, producing the numbers cited in EXPERIMENTS.md §Perf:
                            every pivot (while-loop carry); the VMEM-resident
                            kernel touches HBM once per solve: traffic ratio
                            ~= pivots executed.
+6. work elimination      — executed *tableau-element updates* before/after
+                           the two-level engine: phase-compacted tableaux
+                           (core/simplex.py) shrink the per-pivot update;
+                           the active-set compaction scheduler
+                           (core/compaction.py) shrinks the batch as LPs
+                           retire.  `element_updates_*` below are the
+                           closed-form models; benchmarks/pivot_work.py
+                           cross-checks them against measured SegmentStats.
 
   PYTHONPATH=src python -m repro.analysis.lp_perf
 """
@@ -23,8 +31,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import LPBatch, random_lp_batch, solve_batched_reference
-from repro.core.simplex import flops_per_pivot
+from repro.core import LPBatch, random_lp_batch, solve_batched_reference_detailed
+from repro.core.compaction import next_bucket
+from repro.core.simplex import flops_per_pivot, tableau_elements
 
 
 def executed_pivots(iters: np.ndarray, group: int) -> float:
@@ -33,6 +42,87 @@ def executed_pivots(iters: np.ndarray, group: int) -> float:
     pad = (-n) % group
     arr = np.concatenate([iters, np.zeros(pad, iters.dtype)])
     return float(arr.reshape(-1, group).max(axis=1).sum() * group)
+
+
+def element_updates_lockstep(iters: np.ndarray, m: int, n: int) -> float:
+    """Seed lockstep solver: every global step updates every LP's full
+    tableau (masked no-ops included) until the slowest LP terminates."""
+    steps = int(iters.max()) + 1  # +1: the final all-converged check
+    return float(steps * len(iters) * tableau_elements(m, n))
+
+
+def element_updates_phase_compacted(p1_iters: np.ndarray, iters: np.ndarray,
+                                    m: int, n: int) -> float:
+    """Level 1 only (monolithic two-loop solve): full-tableau steps until the
+    last LP leaves phase 1, compacted-tableau steps for the rest."""
+    B = len(iters)
+    s1 = int(p1_iters.max())
+    s2 = int(np.maximum(iters - p1_iters, 0).max()) + 1
+    return float(s1 * B * tableau_elements(m, n)
+                 + s2 * B * tableau_elements(m, n, compacted=True))
+
+
+class _ScheduleSim:
+    """Host-side replay of core.compaction.run_schedule's executed-work
+    accounting: same segment quantization, same power-of-two bucket ladder,
+    with bucket membership carried across stages (the real scheduler never
+    re-expands the bucket at the stage-1 -> stage-2 transition)."""
+
+    def __init__(self, B: int, segment_k: int, compact_threshold: float,
+                 pad_multiple: int):
+        self.segment_k = segment_k
+        self.compact_threshold = compact_threshold
+        self.pad_multiple = pad_multiple
+        self.in_bucket = np.ones(B, bool)
+        self.bucket = B
+        self.elems = 0.0
+
+    def run_stage(self, length: np.ndarray, retire_at: np.ndarray,
+                  per: int) -> int:
+        """``length[i]``: stage-local steps until LP i stops being *pending*
+        (its loop-exit condition); ``retire_at[i]``: steps until it stops
+        counting as RUNNING for bucket sizing (length <= retire_at).
+        Returns the stage's executed lockstep steps."""
+        done = 0
+        while True:
+            pending = self.in_bucket & (length > done)
+            if not pending.any():
+                return done
+            step = min(self.segment_k, int(length[pending].max()) - done)
+            self.elems += step * self.bucket * per
+            done += step
+            running = self.in_bucket & (retire_at > done)
+            n_run = int(running.sum())
+            if n_run == 0:
+                continue  # next pending check ends the stage
+            new_bucket = next_bucket(n_run, self.pad_multiple)
+            if new_bucket < self.bucket \
+                    and n_run < self.compact_threshold * self.bucket:
+                self.in_bucket = running
+                self.bucket = new_bucket
+
+
+def element_updates_scheduled(p1_iters: np.ndarray, iters: np.ndarray,
+                              m: int, n: int, segment_k: int = 8,
+                              compact_threshold: float = 0.5,
+                              pad_multiple: int = 1) -> float:
+    """Both levels: simulate the segment/bucket ladder of
+    core.compaction.run_schedule over the measured per-LP pivot counts —
+    no device needed."""
+    p1 = p1_iters.astype(np.int64)
+    total = iters.astype(np.int64)
+    sim = _ScheduleSim(len(total), segment_k, compact_threshold, pad_multiple)
+    # stage 1 (full tableau): an LP is pending until it leaves phase 1 and
+    # RUNNING until its whole solve terminates (total pivots + final check);
+    # meanwhile the combined step also advances its phase-2 pivots.
+    s1 = sim.run_stage(length=p1, retire_at=total + 1,
+                       per=tableau_elements(m, n))
+    # stage 2 (compacted tableau): only pivots not already executed during
+    # stage 1 remain, plus the terminal check; LPs finished in stage 1 are 0.
+    rem = np.where(total + 1 <= s1, 0, np.maximum(total - s1, 0) + 1)
+    sim.run_stage(length=rem, retire_at=rem,
+                  per=tableau_elements(m, n, compacted=True))
+    return sim.elems
 
 
 def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
@@ -49,8 +139,9 @@ def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
         batch = LPBatch(A=batch.A[order], b=batch.b[order], c=batch.c[order])
     else:
         batch = random_lp_batch(rng, B, m, n)
-    ref = solve_batched_reference(batch)
+    ref, p1_iters = solve_batched_reference_detailed(batch)
     iters = ref.iterations.astype(np.int64)
+    p1_iters = p1_iters.astype(np.int64)
 
     useful = float(iters.sum())
     lockstep = executed_pivots(iters, B)
@@ -62,13 +153,16 @@ def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
     per_tile_sorted = executed_pivots(srt, tile_b)
 
     fpp = flops_per_pivot(m, n)
-    rows = m + 2
-    cols = n + 2 * m + 1
-    tableau_bytes = rows * cols * 4
+    tableau_bytes = tableau_elements(m, n) * 4
     # HBM traffic per LP: lockstep XLA re-reads+writes the tableau per
     # executed pivot; the Pallas tile kernel reads it once and writes results
     xla_traffic = 2 * tableau_bytes * lockstep / B
     kernel_traffic = tableau_bytes + (n + 16) * 4
+
+    # two-level work-elimination model (element updates = pivots x tableau)
+    el_lock = element_updates_lockstep(iters, m, n)
+    el_pc = element_updates_phase_compacted(p1_iters, iters, m, n)
+    el_sched = element_updates_scheduled(p1_iters, iters, m, n)
 
     return {
         "m": m, "n": n, "B": B, "mixed": mixed,
@@ -79,22 +173,31 @@ def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
         "eff_per_shard_sorted": useful / per_shard_sorted,
         "eff_per_tile_sorted": useful / per_tile_sorted,
         "flops_per_pivot": fpp,
+        "flops_per_pivot_compacted": flops_per_pivot(m, n, compacted=True),
         "hbm_bytes_per_lp_xla": xla_traffic,
         "hbm_bytes_per_lp_kernel": float(kernel_traffic),
         "traffic_ratio": xla_traffic / kernel_traffic,
+        "elems_lockstep": el_lock,
+        "elems_phase_compacted": el_pc,
+        "elems_scheduled": el_sched,
+        "work_reduction_phase_compacted": el_lock / el_pc,
+        "work_reduction_scheduled": el_lock / el_sched,
     }
 
 
 def main():
     print("workload,eff_lockstep,eff_shard,eff_tile,eff_shard_sorted,"
-          "eff_tile_sorted,traffic_ratio_xla_vs_kernel")
+          "eff_tile_sorted,traffic_ratio_xla_vs_kernel,"
+          "work_red_phase_compact,work_red_scheduled")
     for (m, n, mixed) in [(5, 5, True), (28, 28, True), (50, 50, True),
                           (100, 100, True), (28, 28, False)]:
         r = analyze(m, n, mixed=mixed)
         print(f"lp_{n}d{'_mixed' if mixed else ''},"
               f"{r['eff_lockstep']:.3f},{r['eff_per_shard']:.3f},"
               f"{r['eff_per_tile']:.3f},{r['eff_per_shard_sorted']:.3f},"
-              f"{r['eff_per_tile_sorted']:.3f},{r['traffic_ratio']:.1f}")
+              f"{r['eff_per_tile_sorted']:.3f},{r['traffic_ratio']:.1f},"
+              f"{r['work_reduction_phase_compacted']:.2f},"
+              f"{r['work_reduction_scheduled']:.2f}")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@ shardable primitive (Gurung & Ray 2018, adapted CUDA->TPU/JAX).
 Public API:
     LPBatch, LPResult, status codes      — problem/result containers
     solve_batched_jax                    — lockstep pure-JAX batched simplex
+                                           (phase-compacted two-loop solve)
+    solve_batched_compacted              — active-set compaction scheduler
     solve_batched                        — HBM-aware chunked driver (Alg. 1)
     solve_hyperbox                       — box-LP closed form (Sec. 5.6)
     solve_pjit / solve_shard_map         — multi-chip batch-parallel solvers
@@ -13,12 +15,17 @@ from .lp import (  # noqa: F401
     BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED,
     LPBatch, LPResult, STATUS_NAMES, build_tableau, default_max_iters,
 )
-from .simplex import solve_batched_jax, flops_per_pivot  # noqa: F401
+from .simplex import (  # noqa: F401
+    solve_batched_jax, flops_per_pivot, tableau_elements,
+)
 from .batching import solve_batched, max_chunk_size  # noqa: F401
+from .compaction import (  # noqa: F401
+    CompactionConfig, SegmentStat, solve_batched_compacted,
+)
 from .hyperbox import solve_hyperbox, solve_hyperbox_ref, hyperbox_as_general_lp  # noqa: F401
 from .reference import (  # noqa: F401
     random_lp_batch, random_sparse_lp_batch, solve_batched_reference,
-    solve_dual_reference,
+    solve_batched_reference_detailed, solve_dual_reference,
 )
 from .distributed import solve_pjit, solve_shard_map  # noqa: F401
 from .lp_router import expert_capacity_lp  # noqa: F401

@@ -13,6 +13,7 @@ Eq. 5) and overlaps H2D/D2H copies with kernel execution via CUDA streams
 """
 from __future__ import annotations
 
+import inspect
 import math
 from typing import Callable, Optional
 
@@ -20,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .compaction import solve_batched_compacted
 from .lp import LPBatch, LPResult
 from .simplex import solve_batched_jax
 
@@ -51,6 +53,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                   chunk_size: Optional[int] = None,
                   device_bytes: int = DEFAULT_DEVICE_BYTES,
                   n_devices: int = 1, sort_by_difficulty: bool = False,
+                  compaction: bool = False,
                   **solver_kwargs) -> LPResult:
     """Chunked batched solve (Algorithm 1). ``solver`` defaults to the pure
     JAX lockstep solver; kernels.ops.solve_batched_pallas and
@@ -59,9 +62,30 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     ``sort_by_difficulty`` (beyond-paper optimization): lockstep SIMD chunks
     pay max-pivots-over-chunk; reordering LPs so similar-difficulty problems
     share a chunk cuts total executed pivots (measured in
-    analysis/lp_perf.py), then results are unpermuted."""
+    analysis/lp_perf.py), then results are unpermuted.
+
+    ``compaction=True`` routes each chunk through the active-set compaction
+    scheduler (core/compaction.py): dead LPs are retired into power-of-two
+    buckets mid-solve instead of burning masked pivots.  With ``solver=None``
+    the solver becomes ``solve_batched_compacted``; a custom ``solver`` must
+    accept a ``compaction`` kwarg itself (e.g. solve_batched_pallas) or a
+    ValueError is raised.  Composes with sorting: sorted chunks converge in
+    tighter waves, which is exactly what the bucket ladder exploits.  Pass
+    ``segment_k=``/``compact_threshold=`` through ``solver_kwargs`` to
+    tune."""
     if solver is None:
-        solver = solve_batched_jax
+        solver = solve_batched_compacted if compaction else solve_batched_jax
+    elif compaction:
+        params = inspect.signature(solver).parameters
+        accepts = "compaction" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+        if not accepts:
+            raise ValueError(
+                f"compaction=True but solver {getattr(solver, '__name__', solver)!r} "
+                "does not accept a 'compaction' kwarg; use solver=None "
+                "(solve_batched_compacted) or a compaction-aware solver such "
+                "as kernels.ops.solve_batched_pallas")
+        solver_kwargs["compaction"] = True
     B = batch.batch
     perm = None
     if sort_by_difficulty and B > 1:

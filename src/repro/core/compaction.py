@@ -1,0 +1,375 @@
+"""Active-set compaction scheduler — Level 2 of the work-elimination engine.
+
+The paper's CUDA solver load-balances through per-block early exit (Sec. 5):
+each LP's block returns the moment *its* simplex terminates, and the block
+scheduler backfills the SM.  Lockstep static-shape solvers (JAX while-loop,
+Pallas tile kernel) lose that: a converged LP keeps occupying its batch slot,
+executing masked no-op pivots until the slowest LP in its termination group
+finishes.  `analysis/lp_perf.py` measures that waste as 1 - mean/max over the
+pivot distribution — up to ~2x on mixed feasible/infeasible batches.
+
+This module is a static-shape-friendly reconstruction of per-block exit:
+
+1. run the solve in **segments** of at most ``segment_k`` pivots (each
+   segment is one XLA computation with its own early-stopping while-loop);
+2. after each segment, count surviving ``_RUNNING`` LPs on the host
+   (one tiny D2H transfer of the status vector);
+3. when the active fraction drops below ``compact_threshold``, **gather** the
+   survivors into the next power-of-two bucket size and resume.
+
+Bucket sizes walk a fixed ladder (B, B/2, B/4, ..., times ``pad_multiple``
+for sharded/tiled backends), so recompiles are amortized: every batch of the
+same starting size reuses the same ladder of compiled segment programs.
+Because gathering LPs never changes any LP's own tableau, the pivot sequence
+— and therefore status/objective/iterations — is bit-identical to the
+unsegmented solver.
+
+The scheduler is backend-agnostic: a backend supplies segment runners and
+state plumbing.  `JaxBackend` (here) runs the pure-JAX phase-compacted
+solver; `core.distributed._ShardMapBackend` runs segments under shard_map
+(per-shard termination *inside* segments); `kernels.ops.PallasBackend` runs
+the Pallas tile kernels.  Both levels compose: segments before column
+compaction run on the full tableau (stage "p1"), segments after it on the
+phase-compacted tableau (stage "p2") — see core/simplex.py for Level 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lp import ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, default_max_iters
+from .simplex import (
+    _RUNNING,
+    SimplexState,
+    build_tableau_jax,
+    compact_tableau,
+    extract_solution_compacted,
+    extract_solution_jax,
+    phase2_step,
+    simplex_step,
+    tableau_elements,
+)
+
+
+class CompactionState(NamedTuple):
+    """Resumable solver state; every leaf has the batch on axis 0 so generic
+    gathers (`backend.take`) work across backends."""
+    T: jax.Array       # tableaux (full in stage p1, compacted in stage p2)
+    basis: jax.Array
+    phase: jax.Array
+    status: jax.Array
+    iters: jax.Array
+    thr: jax.Array     # per-LP phase-1 feasibility threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionConfig:
+    segment_k: int = 8            # max pivots per segment
+    compact_threshold: float = 0.5  # gather when active fraction < this
+    pad_multiple: int = 1         # bucket sizes are multiples of this
+
+    def __post_init__(self):
+        if self.segment_k < 1:
+            raise ValueError(f"segment_k must be >= 1, got {self.segment_k}")
+        if self.pad_multiple < 1:
+            raise ValueError(
+                f"pad_multiple must be >= 1, got {self.pad_multiple}")
+
+
+@dataclasses.dataclass
+class SegmentStat:
+    """Executed-work record for one segment (benchmarks/pivot_work.py)."""
+    stage: str      # "p1" (full tableau) or "p2" (compacted)
+    bucket: int     # batch slots occupied during the segment
+    steps: int      # lockstep steps actually executed (<= segment_k)
+    elements: int   # steps * bucket * tableau_elements(stage)
+
+
+def total_elements(stats: List[SegmentStat]) -> int:
+    return sum(s.elements for s in stats)
+
+
+def total_steps(stats: List[SegmentStat]) -> int:
+    return sum(s.steps for s in stats)
+
+
+def next_bucket(active: int, pad_multiple: int = 1) -> int:
+    """Next-power-of-two bucket >= active, rounded up to pad_multiple."""
+    b = 1 << max(0, active - 1).bit_length()
+    return -(-b // pad_multiple) * pad_multiple
+
+
+# ---------------------------------------------------------------------------
+# Traceable segment runners (shared by JaxBackend and the shard_map backend)
+# ---------------------------------------------------------------------------
+
+def segment_phase1(state: CompactionState, steps, *, m: int, n: int,
+                   tol: float):
+    """Run up to `steps` combined (phase-1/phase-2) pivots on the full
+    tableau; stops early once no LP is still in phase 1."""
+    def cond(carry):
+        s, it = carry
+        pending = (s.status == _RUNNING) & (s.phase == 1)
+        return jnp.any(pending) & (it < steps)
+
+    def body(carry):
+        s, it = carry
+        ns = simplex_step(
+            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, it),
+            n=n, m=m, tol=tol, feas_thr=s.thr)
+        return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
+                               s.thr), it + 1
+
+    state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return state, it
+
+
+def segment_phase2(state: CompactionState, steps, *, m: int, n: int,
+                   tol: float):
+    """Run up to `steps` phase-2 pivots on the compacted tableau; stops early
+    once every LP is terminal."""
+    def cond(carry):
+        s, it = carry
+        return jnp.any(s.status == _RUNNING) & (it < steps)
+
+    def body(carry):
+        s, it = carry
+        ns = phase2_step(
+            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, it),
+            n=n, m=m, tol=tol)
+        return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
+                               s.thr), it + 1
+
+    state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return state, it
+
+
+_segment_phase1_jit = jax.jit(segment_phase1,
+                              static_argnames=("m", "n", "tol"))
+_segment_phase2_jit = jax.jit(segment_phase2,
+                              static_argnames=("m", "n", "tol"))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n"))
+def _compact_columns_jit(T, *, m, n):
+    return compact_tableau(T, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "compacted"))
+def _extract_jit(T, basis, status, iters, *, n, compacted):
+    if compacted:
+        x, obj = extract_solution_compacted(T, basis, n)
+    else:
+        x, obj = extract_solution_jax(T, basis, n)
+    status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
+    obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
+    return x, obj, status.astype(jnp.int8), iters
+
+
+@jax.jit
+def _take_jit(state, idx):
+    return jax.tree_util.tree_map(lambda a: a[idx], state)
+
+
+class JaxBackend:
+    """Segment runners for the pure-JAX phase-compacted solver."""
+
+    pad_multiple = 1
+
+    def __init__(self, m: int, n: int, tol: float, feas_tol: float, dtype):
+        self.m, self.n = m, n
+        self.tol, self.feas_tol = float(tol), float(feas_tol)
+        self.dtype = dtype
+
+    def init(self, A, b, c) -> CompactionState:
+        T, basis, phase = build_tableau_jax(A, b, c)
+        B = T.shape[0]
+        thr = self.feas_tol * jnp.maximum(1.0, T[:, self.m + 1, -1])
+        return CompactionState(
+            T=T, basis=basis, phase=phase,
+            status=jnp.full((B,), _RUNNING, jnp.int32),
+            iters=jnp.zeros((B,), jnp.int32), thr=thr)
+
+    def run_phase1(self, state, steps):
+        state, it = _segment_phase1_jit(state, jnp.int32(steps), m=self.m,
+                                        n=self.n, tol=self.tol)
+        return state, int(it)
+
+    def run_phase2(self, state, steps):
+        state, it = _segment_phase2_jit(state, jnp.int32(steps), m=self.m,
+                                        n=self.n, tol=self.tol)
+        return state, int(it)
+
+    def compact_columns(self, state: CompactionState) -> CompactionState:
+        return state._replace(T=_compact_columns_jit(state.T, m=self.m,
+                                                     n=self.n))
+
+    def limit_phase1(self, state: CompactionState) -> CompactionState:
+        """Budget exhausted while still in phase 1 -> iteration limit."""
+        status = jnp.where(
+            (state.status.reshape(-1) == _RUNNING)
+            & (state.phase.reshape(-1) == 1),
+            ITERATION_LIMIT, state.status.reshape(-1))
+        return state._replace(status=status.reshape(state.status.shape))
+
+    def deactivate(self, state: CompactionState, valid) -> CompactionState:
+        """Mark padding slots terminal so they never count as active."""
+        valid = jnp.asarray(np.asarray(valid).reshape(-1))
+        status = jnp.where(valid, state.status.reshape(-1), ITERATION_LIMIT)
+        return state._replace(status=status.reshape(state.status.shape).astype(
+            state.status.dtype))
+
+    def take(self, state: CompactionState, idx) -> CompactionState:
+        return _take_jit(state, jnp.asarray(idx))
+
+    def status_host(self, state) -> np.ndarray:
+        return np.asarray(state.status).reshape(-1)
+
+    def phase_host(self, state) -> np.ndarray:
+        return np.asarray(state.phase).reshape(-1)
+
+    def extract(self, state: CompactionState, stage: str):
+        x, obj, status, iters = _extract_jit(
+            state.T, state.basis, state.status.reshape(-1),
+            state.iters.reshape(-1), n=self.n, compacted=(stage == "p2"))
+        return (np.asarray(x), np.asarray(obj), np.asarray(status),
+                np.asarray(iters))
+
+    def elements_per_step(self, stage: str) -> int:
+        return tableau_elements(self.m, self.n, compacted=(stage == "p2"))
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
+                 n: int, *, max_iters: int, config: CompactionConfig,
+                 stats_out: Optional[List[SegmentStat]] = None) -> LPResult:
+    """Drive a backend through segmented stage-1 (full tableau) and stage-2
+    (phase-compacted) solves with active-set compaction in between.
+
+    ``orig`` maps each current batch slot to its index in the caller's batch
+    (-1 for padding slots, which must already be terminal).  Results land in
+    dense (B, ...) output arrays; retired LPs are flushed right before every
+    compaction, survivors at the end.
+    """
+    np_dtype = np.dtype(jnp.zeros((), backend.dtype).dtype)
+    out_x = np.zeros((B, n), np_dtype)
+    out_obj = np.full((B,), np.nan, np_dtype)
+    out_status = np.full((B,), ITERATION_LIMIT, np.int8)
+    out_iters = np.zeros((B,), np.int32)
+
+    def flush(state, orig, stage):
+        x, obj, status, iters = backend.extract(state, stage)
+        sel = orig >= 0
+        oi = orig[sel]
+        out_x[oi] = x[sel]
+        out_obj[oi] = obj[sel]
+        out_status[oi] = status[sel]
+        out_iters[oi] = iters[sel]
+
+    def maybe_compact(state, orig, stage):
+        """Returns (state, orig, status_host) — the single D2H status fetch
+        per segment lives here; callers reuse the returned host copy."""
+        status = backend.status_host(state)
+        running = status == _RUNNING
+        n_run = int(running.sum())
+        cur = len(orig)
+        if n_run == 0:
+            return state, orig, status
+        bucket = next_bucket(n_run, config.pad_multiple)
+        if bucket >= cur or n_run >= config.compact_threshold * cur:
+            return state, orig, status
+        # retire everyone's current results, then gather the survivors
+        flush(state, orig, stage)
+        idx = np.nonzero(running)[0]
+        pad = bucket - len(idx)
+        fill = idx[np.arange(pad) % len(idx)]
+        take_idx = np.concatenate([idx, fill])
+        state = backend.take(state, take_idx)
+        valid = np.arange(bucket) < len(idx)
+        state = backend.deactivate(state, valid)
+        orig = np.where(valid, np.concatenate([orig[idx], orig[fill]]), -1)
+        # post-gather host status is known without another transfer:
+        # survivors are RUNNING, fill slots were just deactivated
+        status = np.where(valid, _RUNNING, ITERATION_LIMIT)
+        return state, orig, status
+
+    def run_stage(state, orig, stage, runner, pending, budget):
+        status = backend.status_host(state)
+        while budget > 0:
+            if not pending(state, status):
+                break
+            steps = min(config.segment_k, budget)
+            state, done = runner(state, steps)
+            if stats_out is not None:
+                stats_out.append(SegmentStat(
+                    stage=stage, bucket=len(orig), steps=done,
+                    elements=done * len(orig)
+                    * backend.elements_per_step(stage)))
+            budget -= max(1, done)
+            state, orig, status = maybe_compact(state, orig, stage)
+        return state, orig, budget
+
+    def pending_p1(state, status):
+        phase = backend.phase_host(state)
+        return bool(np.any((status == _RUNNING) & (phase == 1)))
+
+    def pending_p2(state, status):
+        return bool(np.any(status == _RUNNING))
+
+    # ---- stage 1: full tableau until every LP has left phase 1 -------------
+    # (one max_iters budget shared across both stages, mirroring
+    # simplex.solve_two_phase's shared step counter)
+    state, orig, budget = run_stage(state, orig, "p1", backend.run_phase1,
+                                    pending_p1, max_iters)
+    state = backend.limit_phase1(state)
+
+    # ---- one-shot column/row compaction + stage 2 ---------------------------
+    state = backend.compact_columns(state)
+    state, orig, _ = run_stage(state, orig, "p2", backend.run_phase2,
+                               pending_p2, budget)
+
+    flush(state, orig, "p2")
+    return LPResult(x=out_x, objective=out_obj, status=out_status,
+                    iterations=out_iters)
+
+
+def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
+                            tol: Optional[float] = None,
+                            feas_tol: Optional[float] = None,
+                            max_iters: Optional[int] = None,
+                            segment_k: int = 8,
+                            compact_threshold: float = 0.5,
+                            stats_out: Optional[List[SegmentStat]] = None
+                            ) -> LPResult:
+    """Solve a batch with the two-level work-elimination engine (phase
+    compaction + active-set compaction scheduler) on the pure-JAX backend.
+
+    Bit-identical statuses/iterations to ``solve_batched_jax`` — only the
+    executed device work changes.  ``stats_out`` (a list) collects per-segment
+    SegmentStat records for executed-work accounting."""
+    m, n = batch.m, batch.n
+    if max_iters is None:
+        max_iters = default_max_iters(m, n)
+    if tol is None:
+        tol = 1e-6 if dtype == jnp.float32 else 1e-9
+    if feas_tol is None:
+        feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
+    backend = JaxBackend(m, n, tol, feas_tol, dtype)
+    state = backend.init(jnp.asarray(batch.A, dtype),
+                         jnp.asarray(batch.b, dtype),
+                         jnp.asarray(batch.c, dtype))
+    B = batch.batch
+    orig = np.arange(B, dtype=np.int64)
+    cfg = CompactionConfig(segment_k=int(segment_k),
+                           compact_threshold=float(compact_threshold),
+                           pad_multiple=backend.pad_multiple)
+    return run_schedule(backend, state, orig, B, n, max_iters=int(max_iters),
+                        config=cfg, stats_out=stats_out)

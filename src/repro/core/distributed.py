@@ -16,6 +16,15 @@ condition is an implicit cross-chip all-reduce). Two modes:
                         cross-chip communication at all — LPs are
                         embarrassingly parallel, which is the paper's point.
 
+Both now run the phase-compacted two-loop solve (core/simplex.py) under the
+hood, and ``solve_shard_map(..., segment_k=K)`` additionally composes with
+the active-set compaction scheduler (core/compaction.py): each chip runs its
+local while-loop for up to K pivots, the host counts global survivors, and
+when the active fraction drops below ``compact_threshold`` the surviving LPs
+are gathered into the next power-of-two bucket (padded to the device count)
+and the solve resumes — per-shard exit *within* a segment, per-block exit
+*across* segments.
+
 Both shard the batch axis over every mesh axis (LP solving has no model
 dimension to shard).
 """
@@ -28,12 +37,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 
 from .lp import LPBatch, LPResult, OPTIMAL, ITERATION_LIMIT, default_max_iters
-from .simplex import (
-    SimplexState, _RUNNING, build_tableau_jax, simplex_step,
-    extract_solution_jax,
+from .simplex import solve_two_phase
+from .compaction import (
+    CompactionConfig, CompactionState, JaxBackend, run_schedule,
+    segment_phase1, segment_phase2,
 )
 
 
@@ -51,29 +61,10 @@ def _pad_batch(batch: LPBatch, multiple: int):
 
 
 def _solve_local(A, b, c, *, m, n, max_iters, tol, feas_tol):
-    """The same solve body as simplex._solve_core, callable under shard_map
-    (local shapes) or pjit (global shapes)."""
-    T, basis, phase = build_tableau_jax(A, b, c)
-    B = T.shape[0]
-    feas_thr = feas_tol * jnp.maximum(1.0, T[:, m + 1, -1])
-    state = SimplexState(
-        T=T, basis=basis, phase=phase,
-        status=jnp.full((B,), _RUNNING, jnp.int32),
-        iters=jnp.zeros((B,), jnp.int32),
-        it=jnp.array(0, jnp.int32),
-    )
-
-    def cond(s):
-        return jnp.any(s.status == _RUNNING) & (s.it < max_iters)
-
-    def body(s):
-        return simplex_step(s, n=n, m=m, tol=tol, feas_thr=feas_thr)
-
-    state = jax.lax.while_loop(cond, body, state)
-    status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
-    x, obj = extract_solution_jax(state.T, state.basis, n)
-    obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
-    return x, obj, status.astype(jnp.int8), state.iters
+    """The shared two-phase solve body (phase-compacted), callable under
+    shard_map (local shapes) or pjit (global shapes)."""
+    return solve_two_phase(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+                           feas_tol=feas_tol)
 
 
 def _prep(batch: LPBatch, mesh: Mesh, dtype):
@@ -112,13 +103,91 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                     iterations=np.asarray(iters)[:orig])
 
 
+class _ShardMapBackend(JaxBackend):
+    """Compaction-scheduler backend whose segment runners execute under
+    shard_map: per-shard while-loops (each chip stops at its own segment
+    convergence), host-level survivor gathering between segments."""
+
+    def __init__(self, mesh: Mesh, m, n, tol, feas_tol, dtype):
+        super().__init__(m, n, tol, feas_tol, dtype)
+        self.mesh = mesh
+        axes = tuple(mesh.axis_names)
+        self.pad_multiple = int(np.prod(mesh.devices.shape))
+        spec = P(axes)
+        state_specs = CompactionState(T=spec, basis=spec, phase=spec,
+                                      status=spec, iters=spec, thr=spec)
+
+        def p1(state, steps):
+            state, it = segment_phase1(state, steps, m=m, n=n, tol=tol)
+            return state, it.reshape(1)
+
+        def p2(state, steps):
+            state, it = segment_phase2(state, steps, m=m, n=n, tol=tol)
+            return state, it.reshape(1)
+
+        def wrap(fn):
+            return jax.jit(shard_map(
+                fn, mesh=mesh,
+                in_specs=(state_specs, P()),
+                out_specs=(state_specs, spec),
+                check_rep=False,
+            ))
+
+        self._p1 = wrap(p1)
+        self._p2 = wrap(p2)
+
+    def run_phase1(self, state, steps):
+        state, it = self._p1(state, jnp.int32(steps))
+        return state, int(np.max(np.asarray(it)))
+
+    def run_phase2(self, state, steps):
+        state, it = self._p2(state, jnp.int32(steps))
+        return state, int(np.max(np.asarray(it)))
+
+
 def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                     tol: float = 1e-6, feas_tol: float = 1e-5,
-                    max_iters: Optional[int] = None, lower_only: bool = False):
+                    max_iters: Optional[int] = None, lower_only: bool = False,
+                    segment_k: Optional[int] = None,
+                    compact_threshold: float = 0.5, stats_out=None):
     """Per-shard termination: each chip solves its local LPs to completion
-    independently (no cross-chip sync per pivot)."""
+    independently (no cross-chip sync per pivot).
+
+    ``segment_k=None`` (default) keeps the original one-shot semantics.
+    ``segment_k=K`` runs the solve in K-pivot segments through the active-set
+    compaction scheduler (see module docstring); results are identical, work
+    shrinks with the survivor count."""
     m, n = batch.m, batch.n
     max_iters = max_iters or default_max_iters(m, n)
+
+    if segment_k is not None and lower_only:
+        raise ValueError(
+            "segment_k and lower_only cannot be combined: the segmented "
+            "scheduler is a host-driven loop with no single lowerable "
+            "computation")
+    if stats_out is not None and segment_k is None:
+        raise ValueError(
+            "stats_out requires segment_k: the one-shot solve has no "
+            "segment accounting to record")
+
+    if segment_k is not None:
+        backend = _ShardMapBackend(mesh, m, n, tol, feas_tol, dtype)
+        padded, orig_B = _pad_batch(batch, backend.pad_multiple)
+        state = backend.init(jnp.asarray(padded.A, dtype),
+                             jnp.asarray(padded.b, dtype),
+                             jnp.asarray(padded.c, dtype))
+        B_pad = padded.batch
+        orig = np.concatenate(
+            [np.arange(orig_B), np.full(B_pad - orig_B, -1)]).astype(np.int64)
+        # padding LPs are not real work: retire them before the first segment
+        state = backend.deactivate(state, orig >= 0)
+        cfg = CompactionConfig(segment_k=segment_k,
+                               compact_threshold=compact_threshold,
+                               pad_multiple=backend.pad_multiple)
+        return run_schedule(backend, state, orig, orig_B, n,
+                            max_iters=max_iters, config=cfg,
+                            stats_out=stats_out)
+
     A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
     spec = P(axes)
 
@@ -128,7 +197,7 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
         local, mesh=mesh,
         in_specs=(spec, spec, spec),
         out_specs=(spec, spec, spec, spec),
-        check_vma=False,
+        check_rep=False,
     ))
     if lower_only:
         return fn.lower(jax.ShapeDtypeStruct(A.shape, A.dtype),

@@ -22,6 +22,11 @@ The simplex tableau layout follows Sec. 4.1/5.5 of the paper:
 Keeping the artificial block allocated for *every* row (not only rows with
 b_i < 0) is what gives every LP in the batch an identical static shape — the
 JAX/TPU analogue of the paper's same-size batching requirement.
+
+Once phase 1 certifies feasibility, the artificial block and the phase-1
+objective row are dead weight; the device solvers drop them with a one-shot
+*phase compaction* (core/simplex.py) and finish phase 2 on the
+(m+1) x (n+m+1) tableau — see ``LPBatch.compacted_tableau_shape``.
 """
 from __future__ import annotations
 
@@ -89,6 +94,11 @@ class LPBatch:
     def tableau_shape(self) -> Tuple[int, int]:
         """(rows, cols) of the per-LP simplex tableau (incl. both obj rows)."""
         return (self.m + 2, self.n + 2 * self.m + 1)
+
+    def compacted_tableau_shape(self) -> Tuple[int, int]:
+        """(rows, cols) of the phase-compacted phase-2 tableau (artificial
+        columns and the phase-1 objective row removed)."""
+        return (self.m + 1, self.n + self.m + 1)
 
     def bytes_per_lp(self, dtype_size: int = 4) -> int:
         """Device bytes needed per LP — Eq. (5) of the paper, adapted.

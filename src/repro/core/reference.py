@@ -26,13 +26,19 @@ from .lp import (
 
 
 def _solve_single(T, basis, n, m, tol, max_iters):
-    """Solve one LP in-place on its (m+2, cols) float64 tableau."""
+    """Solve one LP in-place on its (m+2, cols) float64 tableau.
+
+    Returns (status, iters, p1_iters): ``p1_iters`` counts the iterations
+    consumed before phase 2 began (phase-1 pivots plus the transition check)
+    — the input to the phase-compaction executed-work models in
+    analysis/lp_perf.py and benchmarks/pivot_work.py."""
     cols = T.shape[1]
     allowed = np.zeros(cols, dtype=bool)
     allowed[: n + m] = True  # artificials and rhs never enter
     feas_thr = 1e-8 * max(1.0, T[m + 1, -1])  # relative, matches JAX backend
     phase = 1
     iters = 0
+    p1_iters = 0
     status = None
     while iters < max_iters:
         obj_row = T[m + 1] if phase == 1 else T[m]
@@ -46,6 +52,7 @@ def _solve_single(T, basis, n, m, tol, max_iters):
                     break
                 phase = 2
                 iters += 1
+                p1_iters = iters
                 continue
             status = OPTIMAL
             break
@@ -66,26 +73,42 @@ def _solve_single(T, basis, n, m, tol, max_iters):
         iters += 1
     if status is None:
         status = ITERATION_LIMIT
-    return status, iters
+    if phase == 1:
+        p1_iters = iters
+    return status, iters, p1_iters
 
 
-def solve_batched_reference(batch: LPBatch, tol: float = 1e-9,
-                            max_iters: int | None = None) -> LPResult:
-    """Sequentially solve every LP in the batch (float64). O(B) loop — this is
-    the 'CPU sequential' side of every speedup table."""
+def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
+                                     max_iters: int | None = None):
+    """Like solve_batched_reference, but also returns per-LP phase-1
+    iteration counts ``(LPResult, p1_iters)`` — the input for the
+    phase-compaction executed-work models (analysis/lp_perf.py,
+    benchmarks/pivot_work.py)."""
     B, m, n = batch.batch, batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
     T, basis, _ = build_tableau(batch.A, batch.b, batch.c)
     status = np.zeros(B, dtype=np.int8)
     iters = np.zeros(B, dtype=np.int32)
+    p1_iters = np.zeros(B, dtype=np.int32)
     for k in range(B):
-        status[k], iters[k] = _solve_single(T[k], basis[k], n, m, tol, max_iters)
+        status[k], iters[k], p1_iters[k] = _solve_single(
+            T[k], basis[k], n, m, tol, max_iters)
     x, obj = extract_solution(T, basis, n)
     # non-optimal LPs report NaN objective to make misuse loud
     bad = status != OPTIMAL
     obj = np.where(bad, np.nan, obj)
-    return LPResult(x=x, objective=obj, status=status, iterations=iters)
+    res = LPResult(x=x, objective=obj, status=status, iterations=iters)
+    return res, p1_iters
+
+
+def solve_batched_reference(batch: LPBatch, tol: float = 1e-9,
+                            max_iters: int | None = None) -> LPResult:
+    """Sequentially solve every LP in the batch (float64). O(B) loop — this is
+    the 'CPU sequential' side of every speedup table."""
+    res, _ = solve_batched_reference_detailed(batch, tol=tol,
+                                              max_iters=max_iters)
+    return res
 
 
 def solve_dual_reference(batch: LPBatch, tol: float = 1e-9) -> LPResult:

@@ -14,12 +14,47 @@ Mapping from the paper's CUDA design (Sec. 5) to this implementation:
                                        vectors live on the minor (lane) axis
 * per-block early exit             ->  active-mask: converged LPs perform
                                        masked no-ops (see core/distributed.py
-                                       for per-shard termination which
-                                       restores true early exit)
+                                       for per-shard termination and
+                                       core/compaction.py for the active-set
+                                       scheduler, which together restore true
+                                       early exit)
 
-All LPs in the batch share one static tableau shape (see core/lp.py), so the
-entire solve is a single XLA computation: no host round-trips, no dynamic
-shapes, shardable over any mesh axis with pjit/shard_map.
+Two-level work elimination (this module is Level 1)
+---------------------------------------------------
+
+The paper's per-block exit means a CUDA block never executes a single dead
+pivot.  A lockstep static-shape solver loses that twice over:
+
+1. **Dead columns.**  The two-phase tableau carries `m` artificial columns
+   and the phase-1 objective row through *every* phase-2 pivot, even though
+   artificials can never re-enter the basis and the phase-1 row is never read
+   again.  For m ~ n that is ~2x wasted FLOPs and bytes per pivot.
+2. **Dead LPs.**  Converged LPs keep burning full pivot updates as masked
+   no-ops until the slowest LP in the batch finishes
+   (`analysis/lp_perf.py` measures this lockstep efficiency as mean/max).
+
+Level 1 (here) fixes (1) structurally: the solve is **two chained
+`while_loop`s**.  Loop 1 runs the combined step on the full
+`(B, m+2, n+2m+1)` tableau until no LP is still in phase 1.  A one-shot
+`compact_tableau` then drops the `m` artificial columns and the phase-1
+objective row, and loop 2 finishes phase 2 on the `(B, m+1, n+m+1)`
+tableau.  Dropping columns that can never enter and a row that is never
+priced changes no pivot decision, so the pivot sequence — and therefore
+statuses, iteration counts, x and objective — is identical to the
+single-loop solver whenever the ``max_iters`` safety cap does not bind.
+The two loops share one ``max_iters`` budget; when the cap *does* bind,
+which LPs report ITERATION_LIMIT can differ from the single-loop schedule
+(the cap is a runaway guard, not a semantic).  ``phase_compaction=False``
+keeps the paper-faithful single loop for A/B benchmarks.
+
+Level 2 — recovering per-block exit for dead LPs — is
+`core/compaction.py`: the solve runs in segments of K pivots and survivors
+are gathered into power-of-two buckets, so terminated LPs stop occupying
+device lanes.
+
+All LPs in the batch share one static tableau shape per loop (see
+core/lp.py), so each loop is a single XLA computation: no host round-trips,
+no dynamic shapes, shardable over any mesh axis with pjit/shard_map.
 """
 from __future__ import annotations
 
@@ -45,12 +80,39 @@ _RUNNING = -1
 
 
 class SimplexState(NamedTuple):
-    T: jax.Array        # (B, m+2, C) tableaux
+    T: jax.Array        # (B, rows, C) tableaux (full or phase-compacted)
     basis: jax.Array    # (B, m) int32
     phase: jax.Array    # (B,) int32 — 1 or 2
     status: jax.Array   # (B,) int32 — _RUNNING until terminal
     iters: jax.Array    # (B,) int32
-    it: jax.Array       # () int32 global iteration counter
+    it: jax.Array       # () int32 loop-local iteration counter
+
+
+class _StepConsts(NamedTuple):
+    col_ok: np.ndarray    # (C,) bool — columns allowed to enter
+    rows_iota: np.ndarray  # (rows,) int32 — for the pivot-row replacement
+    row_m: np.ndarray     # (m,) int32 — for the basis update
+
+
+@functools.lru_cache(maxsize=None)
+def _step_consts(rows: int, m: int, n: int, C: int) -> _StepConsts:
+    """Loop-invariant masks/iotas, built once per tableau geometry as NumPy
+    constants so they are embedded in the jaxpr rather than recomputed by
+    every pivot (hoisted out of `simplex_step`)."""
+    return _StepConsts(
+        col_ok=np.arange(C) < n + m,  # artificials + rhs never enter
+        rows_iota=np.arange(rows, dtype=np.int32),
+        row_m=np.arange(m, dtype=np.int32),
+    )
+
+
+def tableau_elements(m: int, n: int, compacted: bool = False) -> int:
+    """Logical tableau elements touched by one pivot's rank-1 update —
+    the unit of the executed-work model in analysis/lp_perf.py and
+    benchmarks/pivot_work.py."""
+    if compacted:
+        return (m + 1) * (n + m + 1)
+    return (m + 2) * (n + 2 * m + 1)
 
 
 def build_tableau_jax(A: jax.Array, b: jax.Array, c: jax.Array):
@@ -77,23 +139,37 @@ def build_tableau_jax(A: jax.Array, b: jax.Array, c: jax.Array):
     return T, basis, phase
 
 
+def _pivot_update(T, factor, pivrow_raw, pe, l, do_pivot, rows_iota):
+    """Rank-1 pivot update shared by both steps: subtract the entering-column
+    outer product everywhere, then *replace* the pivot row with the scaled row
+    (matching the NumPy oracle exactly, instead of the subtract-then-add-back
+    formulation which re-rounds the pivot row)."""
+    pe_safe = jnp.where(do_pivot, pe, 1.0)
+    pivrow = pivrow_raw / pe_safe[:, None]
+    T_new = T - factor[:, :, None] * pivrow[:, None, :]
+    is_l = rows_iota[None, :, None] == l[:, None, None]
+    T_new = jnp.where(is_l, pivrow[:, None, :], T_new)
+    return jnp.where(do_pivot[:, None, None], T_new, T)
+
+
 def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
                  feas_thr) -> SimplexState:
-    """One lockstep pivot across the whole batch (masked for inactive LPs).
+    """One lockstep pivot across the whole batch (masked for inactive LPs),
+    on the **full** (B, m+2, n+2m+1) tableau.
 
     Implements Steps 1-3 of the paper's Sec. 4.1 with the Sec. 5.2 sentinel
-    trick, as dense batched tensor ops (one-hot einsum extraction instead of
-    per-LP dynamic indexing keeps everything gather-free and MXU/VPU dense).
+    trick, as dense batched tensor ops.  Per-LP column/row extraction uses
+    `take_along_axis` gathers (one element per batch row) instead of one-hot
+    einsums; loop-invariant masks come pre-built from `_step_consts`.
     """
     T, basis, phase, status, iters, it = state
     B, rows, C = T.shape
-    dtype = T.dtype
+    consts = _step_consts(rows, m, n, C)
     active = status == _RUNNING
 
     # ---- Step 1: entering variable (pivot column) --------------------------
     cost = jnp.where((phase == 1)[:, None], T[:, m + 1, :], T[:, m, :])
-    col_ok = (jnp.arange(C) < n + m)  # artificials + rhs never enter
-    masked_cost = jnp.where(col_ok[None, :], cost, -BIG)
+    masked_cost = jnp.where(consts.col_ok[None, :], cost, -BIG)
     e = jnp.argmax(masked_cost, axis=1)
     max_cost = jnp.max(masked_cost, axis=1)
     is_opt = max_cost <= tol
@@ -106,8 +182,8 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     p2_done = active & (phase == 2) & is_opt
 
     # ---- Step 2: leaving variable (pivot row), sentinel min-ratio ----------
-    onehot_e = jax.nn.one_hot(e, C, dtype=dtype)
-    col = jnp.einsum("brc,bc->br", T[:, :m, :], onehot_e)
+    factor = jnp.take_along_axis(T, e[:, None, None], axis=2)[:, :, 0]  # (B, rows)
+    col = factor[:, :m]
     rhs = T[:, :m, -1]
     valid = col > tol
     ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
@@ -121,18 +197,11 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     do_pivot = wants_pivot & ~no_row
 
     # ---- Step 3: rank-1 pivot update ---------------------------------------
-    onehot_l = jax.nn.one_hot(l, m, dtype=dtype)          # constraint rows
-    onehot_l_full = jax.nn.one_hot(l, rows, dtype=dtype)  # incl. objective rows
-    pe = jnp.einsum("br,br->b", col, onehot_l)
-    pe_safe = jnp.where(do_pivot, pe, 1.0)
-    pivrow = jnp.einsum("br,brc->bc", onehot_l, T[:, :m, :]) / pe_safe[:, None]
-    factor = jnp.einsum("brc,bc->br", T, onehot_e)        # entering col, all rows
-    T_new = T - factor[:, :, None] * pivrow[:, None, :]
-    T_new = T_new + onehot_l_full[:, :, None] * pivrow[:, None, :]
-
-    sel = do_pivot[:, None, None]
-    T = jnp.where(sel, T_new, T)
-    basis = jnp.where(do_pivot[:, None] & (onehot_l > 0.5), e[:, None].astype(jnp.int32), basis)
+    pivrow_raw = jnp.take_along_axis(T, l[:, None, None], axis=1)[:, 0, :]
+    pe = jnp.take_along_axis(col, l[:, None], axis=1)[:, 0]
+    T = _pivot_update(T, factor, pivrow_raw, pe, l, do_pivot, consts.rows_iota)
+    basis = jnp.where(do_pivot[:, None] & (consts.row_m[None, :] == l[:, None]),
+                      e[:, None].astype(jnp.int32), basis)
 
     status = jnp.where(infeasible, INFEASIBLE, status)
     status = jnp.where(unbounded, UNBOUNDED, status)
@@ -143,17 +212,101 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     return SimplexState(T, basis, phase, status, iters, it + 1)
 
 
-def extract_solution_jax(T: jax.Array, basis: jax.Array, n: int):
-    m = T.shape[1] - 2
+def phase2_step(state: SimplexState, *, n: int, m: int, tol: float) -> SimplexState:
+    """One lockstep phase-2 pivot on the **compacted** (B, m+1, n+m+1)
+    tableau (artificial columns and the phase-1 objective row removed).
+
+    Artificials can never enter (they were masked out of Step 1 already) and
+    the phase-1 row is never priced in phase 2, so this performs exactly the
+    pivots `simplex_step` would — at (m+1)(n+m+1)/((m+2)(n+2m+1)) of the
+    per-pivot FLOPs/bytes."""
+    T, basis, phase, status, iters, it = state
+    B, rows, C = T.shape          # rows == m + 1, C == n + m + 1
+    consts = _step_consts(rows, m, n, C)
+    active = (status == _RUNNING) & (phase == 2)
+
+    cost = T[:, m, :]
+    masked_cost = jnp.where(consts.col_ok[None, :], cost, -BIG)
+    e = jnp.argmax(masked_cost, axis=1)
+    max_cost = jnp.max(masked_cost, axis=1)
+    is_opt = max_cost <= tol
+    p2_done = active & is_opt
+
+    factor = jnp.take_along_axis(T, e[:, None, None], axis=2)[:, :, 0]
+    col = factor[:, :m]
     rhs = T[:, :m, -1]
-    onehot = jax.nn.one_hot(basis, n, dtype=T.dtype)  # (B, m, n); 0-row if basis>=n
-    x = jnp.einsum("bm,bmn->bn", rhs, onehot)
+    valid = col > tol
+    ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
+    l = jnp.argmin(ratios, axis=1)
+    min_ratio = jnp.min(ratios, axis=1)
+    no_row = min_ratio >= BIG / 2
+
+    wants_pivot = active & ~is_opt
+    unbounded = wants_pivot & no_row
+    do_pivot = wants_pivot & ~no_row
+
+    pivrow_raw = jnp.take_along_axis(T, l[:, None, None], axis=1)[:, 0, :]
+    pe = jnp.take_along_axis(col, l[:, None], axis=1)[:, 0]
+    T = _pivot_update(T, factor, pivrow_raw, pe, l, do_pivot, consts.rows_iota)
+    basis = jnp.where(do_pivot[:, None] & (consts.row_m[None, :] == l[:, None]),
+                      e[:, None].astype(jnp.int32), basis)
+
+    status = jnp.where(unbounded, UNBOUNDED, status)
+    status = jnp.where(p2_done, OPTIMAL, status)
+    iters = iters + (active & ~p2_done).astype(jnp.int32)
+    return SimplexState(T, basis, phase, status, iters, it + 1)
+
+
+def compact_tableau(T: jax.Array, *, m: int, n: int) -> jax.Array:
+    """One-shot phase compaction: drop the m artificial columns and the
+    phase-1 objective row: (B, m+2, n+2m+1) -> (B, m+1, n+m+1).
+
+    Basis entries that still point at a (degenerate, value-0) artificial stay
+    as-is: they are >= n, so solution extraction ignores them, and removing
+    the column just pins that artificial to zero — which is exactly the
+    feasibility phase 1 certified."""
+    return jnp.concatenate([T[:, :m + 1, :n + m], T[:, :m + 1, -1:]], axis=2)
+
+
+def scatter_solution(rhs: jax.Array, basis: jax.Array, n: int) -> jax.Array:
+    """x[b, basis[b, i]] = rhs[b, i] for structural basis entries (basis < n),
+    as a batched scatter-add (replaces the old one-hot einsum: no (B, m, n)
+    intermediate)."""
+    B = rhs.shape[0]
+    contrib = jnp.where(basis < n, rhs, 0.0)
+    safe = jnp.clip(basis, 0, n - 1)
+    x = jnp.zeros((B, n), rhs.dtype)
+    return x.at[jnp.arange(B)[:, None], safe].add(contrib)
+
+
+def extract_solution_jax(T: jax.Array, basis: jax.Array, n: int):
+    """Read (x, objective) off **full** (rows = m+2) tableaux."""
+    m = T.shape[1] - 2
+    x = scatter_solution(T[:, :m, -1], basis[:, :m], n)
     objective = -T[:, m, -1]
     return x, objective
 
 
-@functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol", "feas_tol"))
-def _solve_core(A, b, c, *, m: int, n: int, max_iters: int, tol: float, feas_tol: float):
+def extract_solution_compacted(T: jax.Array, basis: jax.Array, n: int):
+    """Read (x, objective) off **phase-compacted** (rows = m+1) tableaux."""
+    m = T.shape[1] - 1
+    x = scatter_solution(T[:, :m, -1], basis[:, :m], n)
+    objective = -T[:, m, -1]
+    return x, objective
+
+
+def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
+                    feas_tol: float, phase_compaction: bool = True):
+    """Traceable two-phase solve body, shared by jit (`_solve_core`), pjit and
+    shard_map (core/distributed.py).
+
+    phase_compaction=True (default): loop 1 on the full tableau until no LP
+    is still in phase 1, then `compact_tableau`, then loop 2 on the small
+    tableau.  The two loops share one `max_iters` budget (loop 2 resumes the
+    step counter where loop 1 stopped).
+    phase_compaction=False: the paper-faithful single lockstep loop (the seed
+    behavior), kept as the A/B baseline for benchmarks/pivot_work.py.
+    """
     T, basis, phase = build_tableau_jax(A, b, c)
     B = T.shape[0]
     # Phase-1 feasibility threshold is *relative* to the initial infeasibility
@@ -166,26 +319,65 @@ def _solve_core(A, b, c, *, m: int, n: int, max_iters: int, tol: float, feas_tol
         it=jnp.array(0, jnp.int32),
     )
 
-    def cond(s: SimplexState):
-        return jnp.any(s.status == _RUNNING) & (s.it < max_iters)
-
-    def body(s: SimplexState):
+    def body1(s: SimplexState):
         return simplex_step(s, n=n, m=m, tol=tol, feas_thr=feas_thr)
 
-    state = jax.lax.while_loop(cond, body, state)
-    status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
-    x, obj = extract_solution_jax(state.T, state.basis, n)
+    if not phase_compaction:
+        def cond(s: SimplexState):
+            return jnp.any(s.status == _RUNNING) & (s.it < max_iters)
+
+        state = jax.lax.while_loop(cond, body1, state)
+        status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
+        x, obj = extract_solution_jax(state.T, state.basis, n)
+    else:
+        # ---- loop 1: full tableau, until every LP has left phase 1 ---------
+        def cond1(s: SimplexState):
+            pending = (s.status == _RUNNING) & (s.phase == 1)
+            return jnp.any(pending) & (s.it < max_iters)
+
+        state = jax.lax.while_loop(cond1, body1, state)
+        status = jnp.where((state.status == _RUNNING) & (state.phase == 1),
+                           ITERATION_LIMIT, state.status)
+
+        # ---- one-shot compaction + loop 2 on the small tableau -------------
+        # (loop 2 inherits the step counter: one shared max_iters budget)
+        state = SimplexState(
+            T=compact_tableau(state.T, m=m, n=n), basis=state.basis,
+            phase=state.phase, status=status, iters=state.iters,
+            it=state.it)
+
+        def cond2(s: SimplexState):
+            return jnp.any(s.status == _RUNNING) & (s.it < max_iters)
+
+        def body2(s: SimplexState):
+            return phase2_step(s, n=n, m=m, tol=tol)
+
+        state = jax.lax.while_loop(cond2, body2, state)
+        status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
+        x, obj = extract_solution_compacted(state.T, state.basis, n)
+
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
     return x, obj, status.astype(jnp.int8), state.iters
 
 
+@functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
+                                             "feas_tol", "phase_compaction"))
+def _solve_core(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
+                feas_tol: float, phase_compaction: bool = True):
+    return solve_two_phase(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+                           feas_tol=feas_tol, phase_compaction=phase_compaction)
+
+
 def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = None,
-                      feas_tol: float | None = None, max_iters: int | None = None) -> LPResult:
+                      feas_tol: float | None = None, max_iters: int | None = None,
+                      phase_compaction: bool = True) -> LPResult:
     """Solve a batch of LPs with the lockstep pure-JAX simplex.
 
-    This is the paper-faithful batched solver (every LP advances one pivot
-    per device step; converged LPs are masked). For per-shard termination
-    across a mesh use core.distributed.solve_sharded.
+    Phase-compacted by default (identical pivot sequence, ~35-50% fewer
+    tableau elements per phase-2 pivot); ``phase_compaction=False`` restores
+    the paper-faithful single-loop solver.  For per-shard termination across
+    a mesh use core.distributed.solve_shard_map; for active-set compaction
+    (retiring finished LPs mid-solve) use core.compaction.
     """
     m, n = batch.m, batch.n
     if max_iters is None:
@@ -199,17 +391,20 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     c = jnp.asarray(batch.c, dtype=dtype)
     x, obj, status, iters = _solve_core(
         A, b, c, m=m, n=n, max_iters=int(max_iters), tol=float(tol),
-        feas_tol=float(feas_tol))
+        feas_tol=float(feas_tol), phase_compaction=bool(phase_compaction))
     return LPResult(x=np.asarray(x), objective=np.asarray(obj),
                     status=np.asarray(status), iterations=np.asarray(iters))
 
 
-def flops_per_pivot(m: int, n: int) -> int:
+def flops_per_pivot(m: int, n: int, compacted: bool = False) -> int:
     """Approximate FLOPs of one pivot across one tableau (for Table-5-style
-    Gflop/s accounting): rank-1 update dominates: 2*(m+2)*C plus the two
+    Gflop/s accounting): rank-1 update dominates: 2*rows*C plus the two
     reductions and the row scale."""
-    C = n + 2 * m + 1
-    rank1 = 2 * (m + 2) * C
+    if compacted:
+        rows, C = m + 1, n + m + 1
+    else:
+        rows, C = m + 2, n + 2 * m + 1
+    rank1 = 2 * rows * C
     reductions = 2 * C + 3 * m
     scale = C
     return rank1 + reductions + scale

@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot-spots: the batched simplex
-pivot loop (simplex_tile.py) and the hyperbox special case
-(hyperbox_kernel.py). Validated on CPU with interpret=True against ref.py."""
-from .ops import solve_batched_pallas, solve_hyperbox_pallas  # noqa: F401
-from .simplex_tile import pick_tile_b, simplex_pallas  # noqa: F401
+pivot loop (simplex_tile.py, phase-compacted two-loop solve + resumable
+segment kernels for the active-set compaction scheduler) and the hyperbox
+special case (hyperbox_kernel.py). Validated on CPU with interpret=True
+against ref.py."""
+from .ops import PallasBackend, solve_batched_pallas, solve_hyperbox_pallas  # noqa: F401
+from .simplex_tile import (  # noqa: F401
+    compacted_dims, full_dims, pick_tile_b, segment_pallas, simplex_pallas,
+)
 from .hyperbox_kernel import hyperbox_pallas  # noqa: F401

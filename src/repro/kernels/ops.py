@@ -4,25 +4,114 @@
 (same LPBatch -> LPResult contract) and is what core.batching dispatches to
 when ``solver=`` is pointed here. ``interpret=True`` executes the kernel body
 on CPU for validation; on a real TPU pass ``interpret=False``.
+
+``compaction=True`` routes the solve through the active-set compaction
+scheduler (core/compaction.py) with Pallas segment kernels: the batch is
+solved in K-pivot segments and surviving LPs are gathered into
+power-of-two buckets (multiples of ``tile_b``) as others terminate — the
+paper's per-block early exit rebuilt on static shapes. Defaults preserve the
+one-shot whole-solve kernel semantics.
 """
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lp import LPBatch, LPResult, default_max_iters
-from .simplex_tile import pick_tile_b, simplex_pallas
+from repro.core.lp import ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, default_max_iters
+from repro.core.compaction import (
+    CompactionConfig, CompactionState, JaxBackend, SegmentStat, run_schedule,
+)
+from repro.core.simplex import _RUNNING, scatter_solution
+from .simplex_tile import (
+    _compact_tile, build_padded_tableau, pick_tile_b, segment_pallas,
+    simplex_pallas,
+)
 from .hyperbox_kernel import hyperbox_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n"))
+def _compact_padded_jit(T, *, m, n):
+    return _compact_tile(T, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n"))
+def _extract_padded_jit(T, basis, status, iters, *, m, n):
+    C = T.shape[2]
+    rows = T.shape[1]
+    rhs = T[:, :, C - 1]
+    x = scatter_solution(rhs, basis[:, :rows], n)
+    obj = -T[:, m, C - 1]
+    status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
+    obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
+    return x, obj, status.astype(jnp.int8), iters
+
+
+class PallasBackend(JaxBackend):
+    """Compaction-scheduler backend running Pallas segment kernels on the
+    lane-padded tile layout (RHS in the last padded column). Bucket sizes
+    are multiples of ``tile_b`` so every segment is a whole grid of tiles;
+    executed-work accounting stays in logical (unpadded) tableau elements so
+    numbers are comparable across backends."""
+
+    def __init__(self, m, n, tol, feas_tol, tile_b, interpret=True,
+                 dtype=jnp.float32):
+        super().__init__(m, n, tol, feas_tol, dtype)
+        self.tile_b = int(tile_b)
+        self.interpret = bool(interpret)
+        self.pad_multiple = self.tile_b
+
+    def init(self, A, b, c) -> CompactionState:
+        T, basis, phase, thr, _, _ = build_padded_tableau(
+            A, b, c, self.tile_b, feas_tol=self.feas_tol)
+        B_pad = T.shape[0]
+        return CompactionState(
+            T=T, basis=basis, phase=phase,
+            status=jnp.full((B_pad, 1), _RUNNING, jnp.int32),
+            iters=jnp.zeros((B_pad, 1), jnp.int32), thr=thr)
+
+    def _run(self, state: CompactionState, steps: int, stage: str):
+        T, basis, phase, status, iters, it = segment_pallas(
+            jnp.int32(steps), state.T, state.basis, state.phase, state.thr,
+            state.status, state.iters, stage=stage, m=self.m, n=self.n,
+            tile_b=self.tile_b, tol=self.tol, interpret=self.interpret)
+        new = CompactionState(T=T, basis=basis, phase=phase, status=status,
+                              iters=iters, thr=state.thr)
+        return new, int(np.max(np.asarray(it)))
+
+    def run_phase1(self, state, steps):
+        return self._run(state, steps, "p1")
+
+    def run_phase2(self, state, steps):
+        return self._run(state, steps, "p2")
+
+    def compact_columns(self, state: CompactionState) -> CompactionState:
+        return state._replace(
+            T=_compact_padded_jit(state.T, m=self.m, n=self.n))
+
+    def extract(self, state: CompactionState, stage: str):
+        x, obj, status, iters = _extract_padded_jit(
+            state.T, state.basis, state.status.reshape(-1),
+            state.iters.reshape(-1), m=self.m, n=self.n)
+        return (np.asarray(x), np.asarray(obj), np.asarray(status),
+                np.asarray(iters))
 
 
 def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                          tile_b: Optional[int] = None,
                          max_iters: Optional[int] = None,
                          tol: float = 1e-6,
+                         feas_tol: float = 1e-5,
                          vmem_budget: int = 8 * 2 ** 20,
-                         interpret: bool = True) -> LPResult:
+                         interpret: bool = True,
+                         compaction: bool = False,
+                         segment_k: int = 8,
+                         compact_threshold: float = 0.5,
+                         stats_out: Optional[List[SegmentStat]] = None
+                         ) -> LPResult:
     m, n = batch.m, batch.n
     if tile_b is None:
         tile_b = pick_tile_b(m, n, vmem_budget)
@@ -31,9 +120,26 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
     A = jnp.asarray(batch.A, dtype)
     b = jnp.asarray(batch.b, dtype)
     c = jnp.asarray(batch.c, dtype)
+
+    if compaction:
+        backend = PallasBackend(m, n, tol, feas_tol, tile_b,
+                                interpret=interpret, dtype=dtype)
+        state = backend.init(A, b, c)
+        B = batch.batch
+        B_pad = state.T.shape[0]
+        orig = np.concatenate(
+            [np.arange(B), np.full(B_pad - B, -1)]).astype(np.int64)
+        state = backend.deactivate(state, orig >= 0)
+        cfg = CompactionConfig(segment_k=int(segment_k),
+                               compact_threshold=float(compact_threshold),
+                               pad_multiple=backend.pad_multiple)
+        return run_schedule(backend, state, orig, B, n,
+                            max_iters=int(max_iters), config=cfg,
+                            stats_out=stats_out)
+
     x, obj, status, iters = simplex_pallas(
         A, b, c, m=m, n=n, tile_b=int(tile_b), max_iters=int(max_iters),
-        tol=float(tol), interpret=interpret)
+        tol=float(tol), feas_tol=float(feas_tol), interpret=interpret)
     return LPResult(x=np.asarray(x), objective=np.asarray(obj),
                     status=np.asarray(status), iterations=np.asarray(iters))
 

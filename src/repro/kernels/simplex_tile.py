@@ -21,12 +21,30 @@ CUDA design (paper Sec. 5) -> TPU realization:
 * per-block early exit
     -> per-tile ``while_loop``: a tile whose LPs all terminated stops
        pivoting (grid steps execute sequentially per core, so early tiles
-       hand their time to later ones).
+       hand their time to later ones); the segment kernels below additionally
+       let core/compaction.py retire finished LPs *between* tiles — the
+       bucket-ladder reconstruction of the paper's per-block exit.
 
-Every LP in the tile shares static shapes: rows = m + 2 (two objective rows:
-phase-2 and phase-1), cols = n + 2m + 1 padded to a lane multiple, with the
-RHS moved to the *last padded* column so padding columns (always zero, never
-allowed to enter) sit inertly in the middle.
+Two-level work elimination (mirrors core/simplex.py):
+
+* **Level 1 — phase-compacted tableaux.** The whole-solve kernel runs two
+  chained while_loops: the combined two-phase step on the full
+  (tile_b, R, C) tile until no LP in the tile still needs phase 1, then an
+  in-register compaction that drops the m artificial columns and the phase-1
+  objective row, then a pure phase-2 loop on the (tile_b, R2, C2) tile.
+  On the lane-padded layout this saves whole 128-lane column blocks whenever
+  round_up(n+m+1) < round_up(n+2m+1) (e.g. 100x100: 384 -> 256 lanes) and
+  always saves the wasted phase-1-row FMAs.
+* **Level 2 — segment kernels.** ``segment_pallas`` exposes the same loops
+  as resumable K-pivot segments (state in/state out, dynamic step bound read
+  from a scalar input) so the active-set compaction scheduler can shrink the
+  batch between segments.
+
+Every LP in the tile shares static shapes: full stage rows = m + 2 (two
+objective rows: phase-2 and phase-1), cols = n + 2m + 1 padded to a lane
+multiple, with the RHS moved to the *last padded* column so padding columns
+(always zero, never allowed to enter) sit inertly in the middle; compacted
+stage rows = m + 1, cols = n + m + 1 padded likewise.
 """
 from __future__ import annotations
 
@@ -42,11 +60,59 @@ from repro.core.lp import BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED
 _RUNNING = -1
 
 
+def _round_up(v: int, k: int) -> int:
+    return (v + k - 1) // k * k
+
+
+def compacted_dims(m: int, n: int) -> Tuple[int, int]:
+    """(rows, lane-padded cols) of the phase-compacted tile."""
+    return _round_up(m + 1, 8), _round_up(n + m + 1, 128)
+
+
+def full_dims(m: int, n: int) -> Tuple[int, int]:
+    """(rows, lane-padded cols) of the full two-phase tile."""
+    return _round_up(m + 2, 8), _round_up(n + 2 * m + 1, 128)
+
+
+def _tile_min_ratio(T, col_full, row_ids, *, m: int, tol: float):
+    """Step 2: sentinel min-ratio over the constraint rows (lane-axis argmin).
+    Returns (l, no_row)."""
+    C = T.shape[2]
+    col = jnp.where(row_ids < m, col_full, 0.0)
+    rhs = T[:, :, C - 1]                                        # (tile_b, R)
+    valid = col > tol
+    ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
+    min_ratio = jnp.min(ratios, axis=1, keepdims=True)
+    l = jnp.argmin(ratios, axis=1)[:, None]                     # (tile_b, 1)
+    no_row = min_ratio >= BIG / 2
+    return l, no_row
+
+
+def _tile_pivot(T, basis, col_full, row_ids, e, l, do_pivot, *, m: int):
+    """Step 3: rank-1 pivot update + basis update, shared by the full and
+    compacted tile steps (one copy keeps them bit-for-bit in sync with each
+    other and with the pure-JAX `_pivot_update`)."""
+    dtype = T.dtype
+    is_l = row_ids == l                                         # (tile_b, R)
+    pe = jnp.sum(col_full * is_l.astype(dtype), axis=1, keepdims=True)
+    pe_safe = jnp.where(do_pivot, pe, 1.0)
+    pivrow = jnp.sum(T * is_l.astype(dtype)[:, :, None], axis=1) / pe_safe
+    T_new = T - col_full[:, :, None] * pivrow[:, None, :]
+    # replace (not re-add) the pivot row — matches the NumPy oracle
+    T_new = jnp.where(is_l[:, :, None], pivrow[:, None, :], T_new)
+    T = jnp.where(do_pivot[:, :, None], T_new, T)
+
+    basis_rows = jax.lax.broadcasted_iota(jnp.int32, basis.shape, 1)
+    basis = jnp.where(do_pivot & (basis_rows == l) & (basis_rows < m),
+                      e.astype(jnp.int32), basis)
+    return T, basis
+
+
 def _tile_step(T, basis, phase, status, iters, *, m: int, n: int, tol: float,
                thr):
-    """One pivot across the (tile_b, R, C) tile. Broadcast/reduce formulation
-    (no einsum) so every op lowers to VPU-friendly elementwise + lane
-    reductions inside Pallas."""
+    """One combined two-phase pivot across the (tile_b, R, C) tile.
+    Broadcast/reduce formulation (no einsum) so every op lowers to
+    VPU-friendly elementwise + lane reductions inside Pallas."""
     tile_b, R, C = T.shape
     dtype = T.dtype
     active = status == _RUNNING
@@ -68,34 +134,17 @@ def _tile_step(T, basis, phase, status, iters, *, m: int, n: int, tol: float,
     to_phase2 = p1_done & ~infeasible
     p2_done = active & (phase == 2) & is_opt
 
-    # ---- Step 2: leaving row (sentinel min-ratio, lane-axis argmin) --------
+    # ---- Steps 2 + 3 --------------------------------------------------------
     onehot_e = (lane == e).astype(dtype)                        # (tile_b, C)
     col_full = jnp.sum(T * onehot_e[:, None, :], axis=2)        # (tile_b, R)
-    col = jnp.where(row_ids < m, col_full, 0.0)
-    rhs = T[:, :, C - 1]                                        # (tile_b, R)
-    valid = col > tol
-    ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
-    min_ratio = jnp.min(ratios, axis=1, keepdims=True)
-    l = jnp.argmin(ratios, axis=1)[:, None]                     # (tile_b, 1)
-    no_row = min_ratio >= BIG / 2
+    l, no_row = _tile_min_ratio(T, col_full, row_ids, m=m, tol=tol)
 
     wants_pivot = active & ~is_opt
     unbounded = wants_pivot & no_row & (phase == 2)
     stuck = wants_pivot & no_row & (phase == 1)
     do_pivot = wants_pivot & ~no_row
 
-    # ---- Step 3: rank-1 pivot update ----------------------------------------
-    onehot_l = (row_ids == l).astype(dtype)                     # (tile_b, R)
-    pe = jnp.sum(col_full * onehot_l, axis=1, keepdims=True)
-    pe_safe = jnp.where(do_pivot, pe, 1.0)
-    pivrow = jnp.sum(T * onehot_l[:, :, None], axis=1) / pe_safe  # (tile_b, C)
-    T_new = T - col_full[:, :, None] * pivrow[:, None, :]
-    T_new = T_new + onehot_l[:, :, None] * pivrow[:, None, :]
-    T = jnp.where(do_pivot[:, :, None], T_new, T)
-
-    basis_rows = jax.lax.broadcasted_iota(jnp.int32, basis.shape, 1)
-    basis = jnp.where(do_pivot & (basis_rows == l) & (basis_rows < m),
-                      e.astype(jnp.int32), basis)
+    T, basis = _tile_pivot(T, basis, col_full, row_ids, e, l, do_pivot, m=m)
 
     status = jnp.where(infeasible, INFEASIBLE, status)
     status = jnp.where(unbounded, UNBOUNDED, status)
@@ -106,56 +155,227 @@ def _tile_step(T, basis, phase, status, iters, *, m: int, n: int, tol: float,
     return T, basis, phase, status, iters
 
 
+def _tile_step_p2(T, basis, phase, status, iters, *, m: int, n: int,
+                  tol: float):
+    """One phase-2 pivot on the **compacted** (tile_b, R2, C2) tile: no
+    artificial columns, no phase-1 row, no phase bookkeeping."""
+    tile_b, R2, C2 = T.shape
+    dtype = T.dtype
+    active = (status == _RUNNING) & (phase == 2)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tile_b, C2), 1)
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_b, R2), 1)
+
+    cost = T[:, m, :]
+    col_ok = lane < (n + m)
+    masked_cost = jnp.where(col_ok, cost, -BIG)
+    max_cost = jnp.max(masked_cost, axis=1, keepdims=True)
+    e = jnp.argmax(masked_cost, axis=1)[:, None]
+    is_opt = max_cost <= tol
+    p2_done = active & is_opt
+
+    onehot_e = (lane == e).astype(dtype)
+    col_full = jnp.sum(T * onehot_e[:, None, :], axis=2)
+    l, no_row = _tile_min_ratio(T, col_full, row_ids, m=m, tol=tol)
+
+    wants_pivot = active & ~is_opt
+    unbounded = wants_pivot & no_row
+    do_pivot = wants_pivot & ~no_row
+
+    T, basis = _tile_pivot(T, basis, col_full, row_ids, e, l, do_pivot, m=m)
+
+    status = jnp.where(unbounded, UNBOUNDED, status)
+    status = jnp.where(p2_done, OPTIMAL, status)
+    iters = iters + (active & ~p2_done).astype(jnp.int32)
+    return T, basis, phase, status, iters
+
+
+def _compact_tile(T, *, m: int, n: int):
+    """Drop artificial columns + phase-1 row on the lane-padded layout:
+    (B, R, C) -> (B, R2, C2) with the RHS moved to the new last lane.
+    Works on kernel tile values and on batched host arrays alike."""
+    C = T.shape[2]
+    R2, C2 = compacted_dims(m, n)
+    T2 = jnp.zeros(T.shape[:1] + (R2, C2), T.dtype)
+    T2 = T2.at[:, :m + 1, :n + m].set(T[:, :m + 1, :n + m])
+    T2 = T2.at[:, :m + 1, C2 - 1].set(T[:, :m + 1, C - 1])
+    return T2
+
+
+def _extract_tile(T2, basis, status, *, m: int, n: int, n_pad: int):
+    """In-kernel solution extraction from the compacted tile: only
+    (x, obj) leave VMEM — the paper's "D2H-res" transfer shape."""
+    tile_b, R2, C2 = T2.shape
+    rhs = T2[:, :, C2 - 1]                                     # (tile_b, R2)
+    b2 = basis[:, :R2]
+    xcols = jax.lax.broadcasted_iota(jnp.int32, (tile_b, R2, n_pad), 2)
+    hit = (b2[:, :, None] == xcols) & (b2[:, :, None] < n)
+    x = jnp.sum(jnp.where(hit, rhs[:, :, None], 0.0), axis=1)
+    obj = -T2[:, m, C2 - 1][:, None]
+    obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
+    return x, obj
+
+
 def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref,
                     x_ref, obj_ref, status_ref, iters_ref,
                     *, m: int, n: int, tol: float, max_iters: int):
+    """Whole-solve kernel: loop 1 (combined step, full tile) -> in-register
+    phase compaction -> loop 2 (phase-2 step, compacted tile) -> extraction.
+    The loops share one ``max_iters`` budget (loop 2 resumes loop 1's step
+    counter), mirroring core.simplex.solve_two_phase."""
     T = T_ref[...]
     basis = basis_ref[...]
     phase = phase_ref[...]
     thr = thr_ref[...]
-    tile_b, R, C = T.shape
+    tile_b = T.shape[0]
     status = jnp.full((tile_b, 1), _RUNNING, jnp.int32)
     iters = jnp.zeros((tile_b, 1), jnp.int32)
 
-    def cond(state):
+    # ---- loop 1: full tile until no LP in the tile still needs phase 1 -----
+    def cond1(state):
         T, basis, phase, status, iters, it = state
-        return jnp.any(status == _RUNNING) & (it < max_iters)
+        pending = (status == _RUNNING) & (phase == 1)
+        return jnp.any(pending) & (it < max_iters)
 
-    def body(state):
+    def body1(state):
         T, basis, phase, status, iters, it = state
         T, basis, phase, status, iters = _tile_step(
             T, basis, phase, status, iters, m=m, n=n, tol=tol, thr=thr)
         return T, basis, phase, status, iters, it + 1
 
-    T, basis, phase, status, iters, _ = jax.lax.while_loop(
-        cond, body, (T, basis, phase, status, iters, jnp.int32(0)))
+    T, basis, phase, status, iters, it1 = jax.lax.while_loop(
+        cond1, body1, (T, basis, phase, status, iters, jnp.int32(0)))
+    status = jnp.where((status == _RUNNING) & (phase == 1), ITERATION_LIMIT,
+                       status)
 
+    # ---- phase compaction + loop 2 on the small tile ------------------------
+    T2 = _compact_tile(T, m=m, n=n)
+
+    def cond2(state):
+        T2, basis, phase, status, iters, it = state
+        return jnp.any(status == _RUNNING) & (it < max_iters)
+
+    def body2(state):
+        T2, basis, phase, status, iters, it = state
+        T2, basis, phase, status, iters = _tile_step_p2(
+            T2, basis, phase, status, iters, m=m, n=n, tol=tol)
+        return T2, basis, phase, status, iters, it + 1
+
+    T2, basis, phase, status, iters, _ = jax.lax.while_loop(
+        cond2, body2, (T2, basis, phase, status, iters, it1))
     status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
 
-    # solution extraction in-kernel: only (x, obj, status, iters) leave VMEM —
-    # the paper's "D2H-res" (results only, not tableaux) transfer shape.
-    rhs = T[:, :, C - 1]                                       # (tile_b, R)
-    n_pad = x_ref.shape[1]
-    xcols = jax.lax.broadcasted_iota(jnp.int32, (tile_b, R, n_pad), 2)
-    hit = (basis[:, :, None] == xcols) & (basis[:, :, None] < n)
-    x_ref[...] = jnp.sum(jnp.where(hit, rhs[:, :, None], 0.0), axis=1)
-    obj = -T[:, m, C - 1][:, None]
-    obj_ref[...] = jnp.where(status == OPTIMAL, obj, jnp.nan)
+    x, obj = _extract_tile(T2, basis, status, m=m, n=n, n_pad=x_ref.shape[1])
+    x_ref[...] = x
+    obj_ref[...] = obj
     status_ref[...] = status
     iters_ref[...] = iters
 
 
-def _round_up(v: int, k: int) -> int:
-    return (v + k - 1) // k * k
+def _segment_kernel(steps_ref, T_ref, basis_ref, phase_ref, thr_ref,
+                    status_ref, iters_ref,
+                    T_out, basis_out, phase_out, status_out, iters_out, it_out,
+                    *, stage: str, m: int, n: int, tol: float):
+    """Resumable K-pivot segment for the compaction scheduler: state in,
+    state out, step bound read from a scalar input (no recompile per K)."""
+    steps = steps_ref[0, 0]
+    T = T_ref[...]
+    basis = basis_ref[...]
+    phase = phase_ref[...]
+    thr = thr_ref[...]
+    status = status_ref[...]
+    iters = iters_ref[...]
+    tile_b = T.shape[0]
+
+    if stage == "p1":
+        def cond(state):
+            T, basis, phase, status, iters, it = state
+            pending = (status == _RUNNING) & (phase == 1)
+            return jnp.any(pending) & (it < steps)
+
+        def body(state):
+            T, basis, phase, status, iters, it = state
+            T, basis, phase, status, iters = _tile_step(
+                T, basis, phase, status, iters, m=m, n=n, tol=tol, thr=thr)
+            return T, basis, phase, status, iters, it + 1
+    else:
+        def cond(state):
+            T, basis, phase, status, iters, it = state
+            return jnp.any(status == _RUNNING) & (it < steps)
+
+        def body(state):
+            T, basis, phase, status, iters, it = state
+            T, basis, phase, status, iters = _tile_step_p2(
+                T, basis, phase, status, iters, m=m, n=n, tol=tol)
+            return T, basis, phase, status, iters, it + 1
+
+    T, basis, phase, status, iters, it = jax.lax.while_loop(
+        cond, body, (T, basis, phase, status, iters, jnp.int32(0)))
+
+    T_out[...] = T
+    basis_out[...] = basis
+    phase_out[...] = phase
+    status_out[...] = status
+    iters_out[...] = iters
+    it_out[...] = jnp.full((tile_b, 1), it, jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stage", "m", "n", "tile_b", "tol", "interpret"))
+def segment_pallas(steps, T, basis, phase, thr, status, iters, *, stage: str,
+                   m: int, n: int, tile_b: int, tol: float,
+                   interpret: bool = True):
+    """Run one scheduler segment (<= ``steps`` pivots) over all tiles.
+    Returns (T, basis, phase, status, iters, it) with ``it`` the per-tile
+    executed step count broadcast over the tile's rows."""
+    B, R_, C_ = T.shape
+    grid = (B // tile_b,)
+    Rb = basis.shape[1]
+    steps_arr = jnp.full((1, 1), steps, jnp.int32)
+    kernel = functools.partial(_segment_kernel, stage=stage, m=m, n=n,
+                               tol=float(tol))
+    vec = lambda i: (i, 0)  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, Rb), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, Rb), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R_, C_), T.dtype),
+            jax.ShapeDtypeStruct((B, Rb), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(steps_arr, T, basis, phase, thr, status, iters)
 
 
 def pick_tile_b(m: int, n: int, vmem_budget: int = 8 * 2 ** 20,
                 dtype_size: int = 4) -> int:
     """Choose the LP-tile batch so the working set fits the VMEM budget —
     the paper's Eq. (5)/(6) block-size limit recast as a VMEM tiling rule
-    (and the reason our solver has no 511-dimension hard cap)."""
-    R = _round_up(m + 2, 8)
-    C = _round_up(n + 2 * m + 1, 128)
+    (and the reason our solver has no 511-dimension hard cap). Sized for
+    loop 1 (the full tableau); the compacted loop-2 tile is strictly
+    smaller."""
+    R, C = full_dims(m, n)
     # tableau + ~6 (tile_b, C) scratch vectors + basis/ratios
     per_lp = (R * C + 6 * C + 4 * R) * dtype_size
     tile = max(1, vmem_budget // per_lp)
@@ -165,13 +385,14 @@ def pick_tile_b(m: int, n: int, vmem_budget: int = 8 * 2 ** 20,
 
 
 def build_padded_tableau(A: jax.Array, b: jax.Array, c: jax.Array,
-                         tile_b: int) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, int, int]:
-    """Build (B_pad, R, C_pad) tableaux with RHS in the last padded column,
+                         tile_b: int, feas_tol: float = 1e-5
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                    jax.Array, int, int]:
+    """Build (B_pad, R, C) tableaux with RHS in the last padded column,
     plus basis/phase/threshold, padded so B divides into tiles."""
     B, m, n = A.shape
     dtype = A.dtype
-    R = _round_up(m + 2, 8)
-    C = _round_up(n + 2 * m + 1, 128)
+    R, C = full_dims(m, n)
     B_pad = _round_up(B, tile_b)
 
     neg = b < 0
@@ -195,19 +416,22 @@ def build_padded_tableau(A: jax.Array, b: jax.Array, c: jax.Array,
     # padding LPs: all-zero tableau -> phase-2 cost row all zeros -> they
     # terminate OPTIMAL on the first check and never pivot.
     thr = jnp.zeros((B_pad, 1), dtype)
-    thr = thr.at[:B, 0].set(1e-5 * jnp.maximum(1.0, T[:B, m + 1, C - 1]))
+    thr = thr.at[:B, 0].set(feas_tol * jnp.maximum(1.0, T[:B, m + 1, C - 1]))
     return T, basis, phase, thr, R, C
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("m", "n", "tile_b", "max_iters", "tol", "interpret"))
+    static_argnames=("m", "n", "tile_b", "max_iters", "tol", "feas_tol",
+                     "interpret"))
 def simplex_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
-                   tol: float = 1e-6, interpret: bool = True):
-    """Solve the batch with the Pallas tile kernel. Returns (x, obj, status,
-    iters) for the original (unpadded) batch."""
+                   tol: float = 1e-6, feas_tol: float = 1e-5,
+                   interpret: bool = True):
+    """Solve the batch with the phase-compacted Pallas tile kernel. Returns
+    (x, obj, status, iters) for the original (unpadded) batch."""
     B = A.shape[0]
-    T, basis, phase, thr, R, C = build_padded_tableau(A, b, c, tile_b)
+    T, basis, phase, thr, R, C = build_padded_tableau(A, b, c, tile_b,
+                                                      feas_tol=feas_tol)
     B_pad = T.shape[0]
     grid = (B_pad // tile_b,)
     n_pad = _round_up(n, 128)

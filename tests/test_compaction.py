@@ -1,0 +1,169 @@
+"""Active-set compaction scheduler correctness (core/compaction.py).
+
+Gathering survivors into smaller buckets never touches any LP's own tableau,
+so the scheduled solve must be *bit-identical* to the monolithic
+phase-compacted solver — and both must match the float64 NumPy oracle on
+status for these well-conditioned batches."""
+import numpy as np
+import pytest
+
+from repro.core import (INFEASIBLE, OPTIMAL, UNBOUNDED, LPBatch,
+                        random_lp_batch, solve_batched, solve_batched_compacted,
+                        solve_batched_jax, solve_batched_reference)
+from repro.core.compaction import next_bucket, total_elements
+from repro.core.simplex import tableau_elements
+
+RNG = np.random.default_rng(5)
+
+
+def _mixed_statuses_batch(rng, B_each=10, m=8, n=6):
+    """OPTIMAL + INFEASIBLE + UNBOUNDED LPs in one randomly permuted batch."""
+    feas = random_lp_batch(rng, B_each, m, n, feasible_start=True)
+    p1 = random_lp_batch(rng, B_each, m, n, feasible_start=False)
+    # infeasible: first row forces x_0 <= -1 with x >= 0
+    inf = random_lp_batch(rng, B_each, m, n, feasible_start=True)
+    A_inf, b_inf = inf.A.copy(), inf.b.copy()
+    A_inf[:, 0, :] = 0.0
+    A_inf[:, 0, 0] = 1.0
+    b_inf[:, 0] = -1.0
+    # unbounded: only constrain x_1.., leave x_0 free to grow
+    unb = random_lp_batch(rng, B_each, m, n, feasible_start=True)
+    A_unb = unb.A.copy()
+    A_unb[:, :, 0] = 0.0
+    c_unb = unb.c.copy()
+    c_unb[:, 0] = 1.0
+    batch = LPBatch(
+        A=np.concatenate([feas.A, p1.A, A_inf, A_unb]),
+        b=np.concatenate([feas.b, p1.b, b_inf, unb.b]),
+        c=np.concatenate([feas.c, p1.c, inf.c, c_unb]))
+    perm = rng.permutation(batch.batch)
+    return LPBatch(A=batch.A[perm], b=batch.b[perm], c=batch.c[perm])
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(a.status, b.status)
+    np.testing.assert_array_equal(a.iterations, b.iterations)
+    np.testing.assert_array_equal(a.x, b.x)
+    np.testing.assert_array_equal(np.nan_to_num(a.objective),
+                                  np.nan_to_num(b.objective))
+
+
+@pytest.mark.parametrize("segment_k", [1, 4, 16])
+def test_scheduled_bitwise_matches_monolithic(segment_k):
+    batch = _mixed_statuses_batch(np.random.default_rng(17))
+    mono = solve_batched_jax(batch)
+    sched = solve_batched_compacted(batch, segment_k=segment_k)
+    _assert_bitwise(mono, sched)
+    # the batch really exercises every terminal status
+    for code in (OPTIMAL, INFEASIBLE, UNBOUNDED):
+        assert (sched.status == code).any()
+
+
+def test_matches_oracle_status_and_objective():
+    batch = _mixed_statuses_batch(np.random.default_rng(23))
+    ref = solve_batched_reference(batch)
+    sched = solve_batched_compacted(batch, segment_k=4)
+    np.testing.assert_array_equal(ref.status, sched.status)
+    ok = ref.status == OPTIMAL
+    rel = np.abs(ref.objective[ok] - sched.objective[ok]) \
+        / np.abs(ref.objective[ok])
+    assert rel.max() < 2e-3
+    # x agrees where optimal (f32 vs f64 pivots, same sequence)
+    assert np.abs(ref.x[ok] - sched.x[ok]).max() \
+        / max(1.0, np.abs(ref.x[ok]).max()) < 2e-3
+
+
+def test_permutation_invariance():
+    rng = np.random.default_rng(31)
+    batch = _mixed_statuses_batch(rng)
+    base = solve_batched_compacted(batch, segment_k=4)
+    perm = rng.permutation(batch.batch)
+    permuted = LPBatch(A=batch.A[perm], b=batch.b[perm], c=batch.c[perm])
+    res = solve_batched_compacted(permuted, segment_k=4)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    np.testing.assert_array_equal(base.status, res.status[inv])
+    np.testing.assert_array_equal(base.iterations, res.iterations[inv])
+    np.testing.assert_array_equal(np.nan_to_num(base.objective),
+                                  np.nan_to_num(res.objective[inv]))
+
+
+def test_single_lp_batch():
+    batch = random_lp_batch(np.random.default_rng(3), 1, 6, 4,
+                            feasible_start=False)
+    mono = solve_batched_jax(batch)
+    sched = solve_batched_compacted(batch, segment_k=2)
+    _assert_bitwise(mono, sched)
+
+
+def test_all_converged_early():
+    """Every LP finishes inside the first segment -> one segment per stage,
+    no compaction, still correct."""
+    # max 0 s.t. x <= 1: terminates on the first phase-2 optimality check
+    B, m, n = 7, 3, 3
+    A = np.tile(np.eye(m, n)[None], (B, 1, 1))
+    b = np.ones((B, m))
+    c = np.zeros((B, n))
+    batch = LPBatch(A=A, b=b, c=c)
+    mono = solve_batched_jax(batch)
+    sched = solve_batched_compacted(batch, segment_k=64)
+    _assert_bitwise(mono, sched)
+    assert (sched.status == OPTIMAL).all()
+    assert (sched.iterations == 0).all()
+
+
+def test_stats_accounting():
+    batch = _mixed_statuses_batch(np.random.default_rng(41))
+    stats = []
+    solve_batched_compacted(batch, segment_k=4, stats_out=stats)
+    m, n = batch.m, batch.n
+    for s in stats:
+        assert s.stage in ("p1", "p2")
+        per = tableau_elements(m, n, compacted=(s.stage == "p2"))
+        assert s.elements == s.steps * s.bucket * per
+        assert 0 < s.steps <= 4
+    # buckets only ever shrink, and p1 segments precede p2 segments
+    stages = [s.stage for s in stats]
+    assert stages == sorted(stages)  # "p1" < "p2"
+    buckets = [s.bucket for s in stats]
+    assert buckets == sorted(buckets, reverse=True)
+    assert total_elements(stats) > 0
+
+
+def test_compaction_reduces_work_on_skewed_batch():
+    """A batch with a heavy tail: most LPs trivial, a few long — the bucket
+    ladder must retire the trivial ones."""
+    rng = np.random.default_rng(59)
+    easy_m, n = 8, 6
+    hard = random_lp_batch(rng, 8, easy_m, n, feasible_start=False)
+    B_easy = 120
+    A = np.tile(np.eye(easy_m, n)[None], (B_easy, 1, 1))
+    batch = LPBatch(A=np.concatenate([A * 1.0, hard.A]),
+                    b=np.concatenate([np.ones((B_easy, easy_m)), hard.b]),
+                    c=np.concatenate([np.zeros((B_easy, n)), hard.c]))
+    stats_on, stats_off = [], []
+    on = solve_batched_compacted(batch, segment_k=4, compact_threshold=0.5,
+                                 stats_out=stats_on)
+    off = solve_batched_compacted(batch, segment_k=4, compact_threshold=0.0,
+                                  stats_out=stats_off)
+    _assert_bitwise(on, off)
+    assert total_elements(stats_on) < 0.5 * total_elements(stats_off)
+    assert min(s.bucket for s in stats_on) <= 16
+
+
+def test_solve_batched_compaction_kwarg():
+    batch = _mixed_statuses_batch(np.random.default_rng(67))
+    plain = solve_batched(batch, chunk_size=16)
+    comp = solve_batched(batch, chunk_size=16, compaction=True, segment_k=4)
+    np.testing.assert_array_equal(plain.status, comp.status)
+    np.testing.assert_array_equal(plain.iterations, comp.iterations)
+
+
+def test_next_bucket_ladder():
+    assert next_bucket(1) == 1
+    assert next_bucket(3) == 4
+    assert next_bucket(4) == 4
+    assert next_bucket(5) == 8
+    assert next_bucket(5, pad_multiple=8) == 8
+    assert next_bucket(9, pad_multiple=8) == 16
+    assert next_bucket(3, pad_multiple=8) == 8

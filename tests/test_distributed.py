@@ -43,6 +43,30 @@ def test_lp_solvers_sharded_match_reference():
     assert "LP-OK" in out
 
 
+def test_lp_shard_map_segmented_compaction_bitwise():
+    """solve_shard_map(segment_k=...) — per-shard segment loops + global
+    bucket-ladder compaction — must be bit-identical to the single-device
+    solver (same pivot sequences, only dead work removed)."""
+    out = _run("""
+        import numpy as np
+        from repro.core import random_lp_batch, solve_batched_jax, solve_shard_map
+        from repro.distributed.sharding import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(2)
+        batch = random_lp_batch(rng, B=37, m=12, n=8, feasible_start=False)
+        jx = solve_batched_jax(batch)
+        stats = []
+        res = solve_shard_map(batch, mesh, segment_k=4, stats_out=stats)
+        assert np.array_equal(jx.status, res.status)
+        assert np.array_equal(jx.iterations, res.iterations)
+        assert np.array_equal(np.nan_to_num(jx.objective),
+                              np.nan_to_num(res.objective))
+        assert len(stats) >= 2 and all(s.bucket % 8 == 0 for s in stats)
+        print("SEG-OK", len(stats))
+    """)
+    assert "SEG-OK" in out
+
+
 def test_sharded_train_step_matches_single_device():
     out = _run("""
         import dataclasses

@@ -43,8 +43,8 @@ def test_collectives_counted_in_scan_body():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.analysis.hlo_cost import module_cost
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.sharding import make_mesh
+        mesh = make_mesh((4,), ("model",))
         L, M = 9, 32
         def f(x, ws):
             def body(c, w):
