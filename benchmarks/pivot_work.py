@@ -1,5 +1,6 @@
 """Executed-pivot-work benchmark: lockstep vs phase-compacted vs
-compaction-scheduled batched simplex (the two-level work-elimination engine).
+compaction-scheduled batched simplex (the two-level work-elimination engine),
+now crossed with the pluggable pricing engine.
 
 For each Table-2 size (mixed feasible/infeasible batches, half needing
 phase 1) this measures, per solver:
@@ -11,9 +12,14 @@ phase 1) this measures, per solver:
 * wall-clock (median over post-compile runs),
 
 and checks that all three solvers return *identical* statuses (they execute
-identical pivot sequences; only dead work differs).  Results land in
-``BENCH_pivot_work.json`` next to this file so future PRs have a perf
-trajectory to beat.
+identical pivot sequences; only dead work differs).
+
+On top of that, a per-rule section runs the full two-level engine under each
+pricing rule (core/pricing.py: dantzig / steepest_edge / devex) and records
+per-LP executed pivots, element updates, wall-clock, and that every rule
+agrees with Dantzig on statuses (rules change the path, never the
+certificate).  Results land in ``BENCH_pivot_work.json`` next to this file
+so future PRs have a perf trajectory to beat.
 
   PYTHONPATH=src python -m benchmarks.pivot_work [--quick] [--out PATH]
 """
@@ -28,8 +34,9 @@ import numpy as np
 
 from repro.core import (LPBatch, random_lp_batch, solve_batched_compacted,
                         solve_batched_jax)
-from repro.core.compaction import total_elements, total_steps
+from repro.core.compaction import auto_segment_k, total_elements, total_steps
 from repro.core.lp import default_max_iters
+from repro.core.pricing import PRICING_RULES
 from repro.core.simplex import tableau_elements
 
 try:  # package and direct-script execution
@@ -55,11 +62,13 @@ def mixed_batch(m: int, n: int, B: int, seed: int = 0) -> LPBatch:
     return LPBatch(A=batch.A[order], b=batch.b[order], c=batch.c[order])
 
 
-def measure(m: int, n: int, B: int, *, segment_k: int = 8,
+def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
             compact_threshold: float = 0.5, iters: int = 2,
             seed: int = 0) -> dict:
     batch = mixed_batch(m, n, B, seed)
     max_iters = default_max_iters(m, n)
+    if segment_k is None:
+        segment_k = auto_segment_k(m, n)  # the compaction auto-tune heuristic
 
     # --- seed lockstep (single combined loop, full tableau throughout) ------
     lock = solve_batched_jax(batch, phase_compaction=False)
@@ -95,6 +104,37 @@ def measure(m: int, n: int, B: int, *, segment_k: int = 8,
         and np.array_equal(lock.status, sched.status))
     buckets = sorted({s.bucket for s in stats_sched}, reverse=True)
 
+    # --- pricing rules x two-level engine ------------------------------------
+    # (dantzig reuses the scheduled run above: same solver, same rule)
+    rules = {}
+    for rule in PRICING_RULES:
+        if rule == "dantzig":
+            r_res, r_stats, r_wall = sched, stats_sched, t_sched
+        else:
+            r_stats = []
+            r_res = solve_batched_compacted(
+                batch, segment_k=segment_k, compact_threshold=compact_threshold,
+                pricing=rule, stats_out=r_stats)
+            r_wall = timeit(lambda: solve_batched_compacted(
+                batch, segment_k=segment_k,
+                compact_threshold=compact_threshold, pricing=rule),
+                warmup=0, iters=iters)
+        r_piv = r_res.iterations.astype(np.int64)
+        rules[rule] = {
+            "pivots_mean": float(r_piv.mean()),
+            "pivots_max": int(r_piv.max()),
+            "pivots_total": int(r_piv.sum()),
+            "steps": total_steps(r_stats),
+            "elements": int(total_elements(r_stats)),
+            "wall_s": r_wall,
+            "statuses_match_dantzig": bool(
+                np.array_equal(r_res.status, sched.status)),
+        }
+    dz_mean = rules["dantzig"]["pivots_mean"]
+    for rule in PRICING_RULES:
+        rules[rule]["pivot_cut_vs_dantzig"] = (
+            1.0 - rules[rule]["pivots_mean"] / max(dz_mean, 1e-12))
+
     return {
         "m": m, "n": n, "B": B, "mixed": True,
         "segment_k": segment_k, "compact_threshold": compact_threshold,
@@ -117,9 +157,13 @@ def measure(m: int, n: int, B: int, *, segment_k: int = 8,
             "wall_s": t_sched,
             "bucket_ladder": buckets,
             "segments": len(stats_sched),
+            "survivor_curve": [s.survivors for s in stats_sched],
         },
+        "rules": rules,
         "reduction_phase_compacted": elems_lock / max(1, elems_pc),
         "reduction_scheduled": elems_lock / max(1, elems_sched),
+        "reduction_steepest_edge": elems_lock / max(
+            1, rules["steepest_edge"]["elements"]),
     }
 
 
@@ -145,6 +189,11 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None) -> dict:
               f"scheduled={r['scheduled']['elements']:.3e} "
               f"(x{r['reduction_scheduled']:.2f}) "
               f"statuses_identical={r['statuses_identical']}")
+        for rule, rr in r["rules"].items():
+            print(f"  pricing={rule:<14} pivots_mean={rr['pivots_mean']:8.2f} "
+                  f"(cut {rr['pivot_cut_vs_dantzig']:+.1%}) "
+                  f"elems={rr['elements']:.3e} wall={rr['wall_s']:.3f}s "
+                  f"statuses_match={rr['statuses_match_dantzig']}")
     result = {
         "benchmark": "pivot_work",
         "quick": quick,

@@ -28,6 +28,12 @@ print(f"10k LPs (jax):    {res.summary()}")
 res_k = solve_batched(big, solver=solve_batched_pallas, chunk_size=4096)
 print(f"10k LPs (pallas): {res_k.summary()}")
 
+# 3b) steepest-edge pricing: same certificates, ~half the pivots
+res_se = solve_batched(big, pricing="steepest_edge")
+print(f"10k LPs (steepest-edge): {res_se.summary()} "
+      f"(mean pivots {res_se.iterations.mean():.1f} "
+      f"vs dantzig {res.iterations.mean():.1f})")
+
 # cross-check 100 of them against the float64 oracle
 sub = LPBatch(A=big.A[:100], b=big.b[:100], c=big.c[:100])
 ref = solve_batched_reference(sub)

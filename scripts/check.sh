@@ -16,7 +16,7 @@ echo "== tier-1 pytest =="
 python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
-  echo "== pivot-work smoke (benchmarks/pivot_work.py --quick) =="
+  echo "== pivot-work + pricing smoke (benchmarks/pivot_work.py --quick) =="
   python -m benchmarks.pivot_work --quick --out /tmp/pivot_work_smoke.json
   python - <<'EOF'
 import json
@@ -25,8 +25,19 @@ for w in d["workloads"]:
     assert w["statuses_identical"], f"status divergence at {w['m']}x{w['n']}"
     assert w["reduction_scheduled"] >= 1.0, \
         f"work-elimination regressed at {w['m']}x{w['n']}: {w['reduction_scheduled']:.2f}x"
+    # pricing smoke: every rule must agree with Dantzig on statuses
+    # (rules change the pivot path, never the certificate)
+    for rule, rr in w["rules"].items():
+        assert rr["statuses_match_dantzig"], \
+            f"pricing rule {rule} diverged on statuses at {w['m']}x{w['n']}"
+    assert w["rules"]["steepest_edge"]["pivot_cut_vs_dantzig"] > 0.0, \
+        f"steepest_edge did not cut pivots at {w['m']}x{w['n']}"
 print("pivot-work smoke OK:",
       ", ".join(f"{w['m']}x{w['n']}: x{w['reduction_scheduled']:.2f}"
+                for w in d["workloads"]))
+print("pricing smoke OK:",
+      ", ".join(f"{w['m']}x{w['n']}: se cut "
+                f"{w['rules']['steepest_edge']['pivot_cut_vs_dantzig']:.1%}"
                 for w in d["workloads"]))
 EOF
 fi

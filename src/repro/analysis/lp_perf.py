@@ -24,6 +24,12 @@ kernel, producing the numbers cited in EXPERIMENTS.md §Perf:
                            retire.  `element_updates_*` below are the
                            closed-form models; benchmarks/pivot_work.py
                            cross-checks them against measured SegmentStats.
+7. pricing rules         — every model above is per-rule: ``pricing=``
+                           replays the workload under dantzig /
+                           steepest_edge / devex pivot selection
+                           (core/pricing.py), so the work models quantify
+                           how fewer pivots multiply against both
+                           compaction levels (`compare_pricing`).
 
   PYTHONPATH=src python -m repro.analysis.lp_perf
 """
@@ -33,6 +39,7 @@ import numpy as np
 
 from repro.core import LPBatch, random_lp_batch, solve_batched_reference_detailed
 from repro.core.compaction import next_bucket
+from repro.core.pricing import PRICING_RULES
 from repro.core.simplex import flops_per_pivot, tableau_elements
 
 
@@ -125,8 +132,7 @@ def element_updates_scheduled(p1_iters: np.ndarray, iters: np.ndarray,
     return sim.elems
 
 
-def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
-            chips: int = 256, tile_b: int = 8, seed: int = 0):
+def _workload(m: int, n: int, B: int, mixed: bool, seed: int) -> LPBatch:
     rng = np.random.default_rng(seed)
     half = B // 2
     if mixed:
@@ -139,7 +145,14 @@ def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
         batch = LPBatch(A=batch.A[order], b=batch.b[order], c=batch.c[order])
     else:
         batch = random_lp_batch(rng, B, m, n)
-    ref, p1_iters = solve_batched_reference_detailed(batch)
+    return batch
+
+
+def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
+            chips: int = 256, tile_b: int = 8, seed: int = 0,
+            pricing: str = "dantzig"):
+    batch = _workload(m, n, B, mixed, seed)
+    ref, p1_iters = solve_batched_reference_detailed(batch, pricing=pricing)
     iters = ref.iterations.astype(np.int64)
     p1_iters = p1_iters.astype(np.int64)
 
@@ -165,7 +178,7 @@ def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
     el_sched = element_updates_scheduled(p1_iters, iters, m, n)
 
     return {
-        "m": m, "n": n, "B": B, "mixed": mixed,
+        "m": m, "n": n, "B": B, "mixed": mixed, "pricing": pricing,
         "pivots_mean": float(iters.mean()), "pivots_max": int(iters.max()),
         "eff_lockstep": useful / lockstep,
         "eff_per_shard": useful / per_shard,
@@ -185,6 +198,39 @@ def analyze(m: int, n: int, B: int = 4096, mixed: bool = True,
     }
 
 
+def compare_pricing(m: int, n: int, B: int = 4096, mixed: bool = True,
+                    seed: int = 0) -> dict:
+    """Replay one workload under every pricing rule through the float64
+    oracle and report per-rule pivot counts plus the two-level work models —
+    the closed-form view of how pivot savings multiply against phase
+    compaction and the bucket ladder.  Rules must agree on statuses (they
+    change the path, never the certificate)."""
+    batch = _workload(m, n, B, mixed, seed)
+    out = {"m": m, "n": n, "B": B, "mixed": mixed, "rules": {}}
+    base_status = None
+    for rule in PRICING_RULES:
+        ref, p1 = solve_batched_reference_detailed(batch, pricing=rule)
+        iters = ref.iterations.astype(np.int64)
+        p1 = p1.astype(np.int64)
+        if base_status is None:
+            base_status = ref.status
+        out["rules"][rule] = {
+            "pivots_mean": float(iters.mean()),
+            "pivots_max": int(iters.max()),
+            "pivots_total": int(iters.sum()),
+            "statuses_match": bool(np.array_equal(ref.status, base_status)),
+            "elems_lockstep": element_updates_lockstep(iters, m, n),
+            "elems_phase_compacted":
+                element_updates_phase_compacted(p1, iters, m, n),
+            "elems_scheduled": element_updates_scheduled(p1, iters, m, n),
+        }
+    dz = out["rules"]["dantzig"]["pivots_mean"]
+    for rule in PRICING_RULES:
+        out["rules"][rule]["pivot_cut_vs_dantzig"] = (
+            1.0 - out["rules"][rule]["pivots_mean"] / max(dz, 1e-12))
+    return out
+
+
 def main():
     print("workload,eff_lockstep,eff_shard,eff_tile,eff_shard_sorted,"
           "eff_tile_sorted,traffic_ratio_xla_vs_kernel,"
@@ -198,6 +244,14 @@ def main():
               f"{r['eff_per_tile_sorted']:.3f},{r['traffic_ratio']:.1f},"
               f"{r['work_reduction_phase_compacted']:.2f},"
               f"{r['work_reduction_scheduled']:.2f}")
+    print()
+    print("pricing,pivots_mean,pivots_max,pivot_cut_vs_dantzig,"
+          "elems_scheduled,statuses_match  # 28x28 mixed B=4096")
+    cmp = compare_pricing(28, 28)
+    for rule, r in cmp["rules"].items():
+        print(f"{rule},{r['pivots_mean']:.2f},{r['pivots_max']},"
+              f"{r['pivot_cut_vs_dantzig']:.3f},{r['elems_scheduled']:.3e},"
+              f"{r['statuses_match']}")
 
 
 if __name__ == "__main__":

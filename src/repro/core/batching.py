@@ -43,26 +43,37 @@ def max_chunk_size(batch: LPBatch, device_bytes: int = DEFAULT_DEVICE_BYTES,
 def difficulty_proxy(batch: LPBatch) -> np.ndarray:
     """Cheap per-LP difficulty estimate for sorted batching: LPs needing
     phase 1 (any b_i < 0) pivot roughly 2x as long as feasible-start ones, so
-    grouping them keeps each lockstep chunk's max-iteration bound tight."""
+    grouping them keeps each lockstep chunk's max-iteration bound tight.
+
+    Primary key: the count of infeasible rows (each one seeds an artificial
+    that phase 1 must drive out).  Tie-break (a strictly sub-unit fraction,
+    so it never reorders across counts): relative infeasibility mass — LPs
+    starting deeper in the infeasible region tend to take more phase-1
+    pivots.  With ``compaction=True`` this ordering is what makes buckets
+    drain in waves: each chunk's survivor curve collapses together, so the
+    power-of-two ladder shrinks early and often."""
     b = np.asarray(batch.b)
-    neg = (b < 0).sum(axis=1)
-    return neg.astype(np.float64)
+    neg = b < 0
+    count = neg.sum(axis=1).astype(np.float64)
+    mass = np.where(neg, -b, 0.0).sum(axis=1)
+    frac = mass / (1.0 + mass.max()) if mass.max() > 0 else 0.0
+    return count + frac
 
 
 def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                   chunk_size: Optional[int] = None,
                   device_bytes: int = DEFAULT_DEVICE_BYTES,
                   n_devices: int = 1, sort_by_difficulty: bool = False,
-                  compaction: bool = False,
+                  compaction: bool = False, pricing: str = "dantzig",
                   **solver_kwargs) -> LPResult:
     """Chunked batched solve (Algorithm 1). ``solver`` defaults to the pure
     JAX lockstep solver; kernels.ops.solve_batched_pallas and
     core.distributed solvers are drop-in.
 
     ``sort_by_difficulty`` (beyond-paper optimization): lockstep SIMD chunks
-    pay max-pivots-over-chunk; reordering LPs so similar-difficulty problems
-    share a chunk cuts total executed pivots (measured in
-    analysis/lp_perf.py), then results are unpermuted.
+    pay max-pivots-over-chunk; reordering LPs by ``difficulty_proxy`` so
+    similar-difficulty problems share a chunk cuts total executed pivots
+    (measured in analysis/lp_perf.py), then results are unpermuted.
 
     ``compaction=True`` routes each chunk through the active-set compaction
     scheduler (core/compaction.py): dead LPs are retired into power-of-two
@@ -70,22 +81,40 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     the solver becomes ``solve_batched_compacted``; a custom ``solver`` must
     accept a ``compaction`` kwarg itself (e.g. solve_batched_pallas) or a
     ValueError is raised.  Composes with sorting: sorted chunks converge in
-    tighter waves, which is exactly what the bucket ladder exploits.  Pass
-    ``segment_k=``/``compact_threshold=`` through ``solver_kwargs`` to
-    tune."""
+    tighter waves, which is exactly what the bucket ladder exploits — the
+    difficulty pre-pass makes buckets drain in waves instead of dribbling.
+    Pass ``segment_k=``/``compact_threshold=`` through ``solver_kwargs`` to
+    tune.
+
+    ``pricing`` selects the entering-column rule (core/pricing.py) and is
+    forwarded to the solver; a custom ``solver`` must accept it when a
+    non-default rule is requested."""
     if solver is None:
         solver = solve_batched_compacted if compaction else solve_batched_jax
-    elif compaction:
+        solver_kwargs["pricing"] = pricing
+    elif compaction or pricing != "dantzig":
+        # only introspect when a kwarg actually needs forwarding, so
+        # non-introspectable callables keep working on the default path
         params = inspect.signature(solver).parameters
-        accepts = "compaction" in params or any(
-            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
-        if not accepts:
-            raise ValueError(
-                f"compaction=True but solver {getattr(solver, '__name__', solver)!r} "
-                "does not accept a 'compaction' kwarg; use solver=None "
-                "(solve_batched_compacted) or a compaction-aware solver such "
-                "as kernels.ops.solve_batched_pallas")
-        solver_kwargs["compaction"] = True
+        has_varkw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                        for p in params.values())
+        if compaction:
+            if "compaction" not in params and not has_varkw:
+                raise ValueError(
+                    f"compaction=True but solver {getattr(solver, '__name__', solver)!r} "
+                    "does not accept a 'compaction' kwarg; use solver=None "
+                    "(solve_batched_compacted) or a compaction-aware solver such "
+                    "as kernels.ops.solve_batched_pallas")
+            solver_kwargs["compaction"] = True
+        if pricing != "dantzig":
+            if "pricing" in params or has_varkw:
+                solver_kwargs.setdefault("pricing", pricing)
+            else:
+                raise ValueError(
+                    f"pricing={pricing!r} requested but solver "
+                    f"{getattr(solver, '__name__', solver)!r} does not accept "
+                    "a 'pricing' kwarg; use solver=None or a pricing-aware "
+                    "solver")
     B = batch.batch
     perm = None
     if sort_by_difficulty and B > 1:

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .lp import ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, default_max_iters
+from .pricing import canonicalize_rule, compact_weights, init_weights
 from .simplex import (
     _RUNNING,
     SimplexState,
@@ -64,7 +65,19 @@ class CompactionState(NamedTuple):
     phase: jax.Array
     status: jax.Array
     iters: jax.Array
+    w: jax.Array       # (B, C) pricing weights (core/pricing.py); gathered
+                       # across segment boundaries like every other leaf
     thr: jax.Array     # per-LP phase-1 feasibility threshold
+
+
+def auto_segment_k(m: int, n: int) -> int:
+    """Segment length heuristic when the caller passes ``segment_k=None``:
+    ~1/64 of the `default_max_iters` cap (floor 4), so a typical solve gets
+    a handful of compaction checkpoints regardless of problem size instead
+    of the one-size static 8.  Dantzig pivots O(m+n) times on the paper's
+    classes, so this lands segments at roughly every 15% of the expected
+    solve; steeper rules just hit the checkpoints sooner."""
+    return max(4, default_max_iters(m, n) // 64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +101,8 @@ class SegmentStat:
     bucket: int     # batch slots occupied during the segment
     steps: int      # lockstep steps actually executed (<= segment_k)
     elements: int   # steps * bucket * tableau_elements(stage)
+    survivors: int = -1  # RUNNING LPs observed after the segment (the
+                         # survivor curve the auto-tune heuristic targets)
 
 
 def total_elements(stats: List[SegmentStat]) -> int:
@@ -109,7 +124,7 @@ def next_bucket(active: int, pad_multiple: int = 1) -> int:
 # ---------------------------------------------------------------------------
 
 def segment_phase1(state: CompactionState, steps, *, m: int, n: int,
-                   tol: float):
+                   tol: float, rule: str = "dantzig"):
     """Run up to `steps` combined (phase-1/phase-2) pivots on the full
     tableau; stops early once no LP is still in phase 1."""
     def cond(carry):
@@ -120,17 +135,17 @@ def segment_phase1(state: CompactionState, steps, *, m: int, n: int,
     def body(carry):
         s, it = carry
         ns = simplex_step(
-            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, it),
-            n=n, m=m, tol=tol, feas_thr=s.thr)
+            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w, it),
+            n=n, m=m, tol=tol, feas_thr=s.thr, rule=rule)
         return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
-                               s.thr), it + 1
+                               ns.w, s.thr), it + 1
 
     state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, it
 
 
 def segment_phase2(state: CompactionState, steps, *, m: int, n: int,
-                   tol: float):
+                   tol: float, rule: str = "dantzig"):
     """Run up to `steps` phase-2 pivots on the compacted tableau; stops early
     once every LP is terminal."""
     def cond(carry):
@@ -140,24 +155,29 @@ def segment_phase2(state: CompactionState, steps, *, m: int, n: int,
     def body(carry):
         s, it = carry
         ns = phase2_step(
-            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, it),
-            n=n, m=m, tol=tol)
+            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w, it),
+            n=n, m=m, tol=tol, rule=rule)
         return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
-                               s.thr), it + 1
+                               ns.w, s.thr), it + 1
 
     state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, it
 
 
 _segment_phase1_jit = jax.jit(segment_phase1,
-                              static_argnames=("m", "n", "tol"))
+                              static_argnames=("m", "n", "tol", "rule"))
 _segment_phase2_jit = jax.jit(segment_phase2,
-                              static_argnames=("m", "n", "tol"))
+                              static_argnames=("m", "n", "tol", "rule"))
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n"))
 def _compact_columns_jit(T, *, m, n):
     return compact_tableau(T, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n"))
+def _compact_weights_jit(w, *, m, n):
+    return compact_weights(w, m=m, n=n)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "compacted"))
@@ -181,33 +201,43 @@ class JaxBackend:
 
     pad_multiple = 1
 
-    def __init__(self, m: int, n: int, tol: float, feas_tol: float, dtype):
+    def __init__(self, m: int, n: int, tol: float, feas_tol: float, dtype,
+                 pricing: str = "dantzig"):
         self.m, self.n = m, n
         self.tol, self.feas_tol = float(tol), float(feas_tol)
         self.dtype = dtype
+        self.rule = canonicalize_rule(pricing)
 
     def init(self, A, b, c) -> CompactionState:
         T, basis, phase = build_tableau_jax(A, b, c)
         B = T.shape[0]
         thr = self.feas_tol * jnp.maximum(1.0, T[:, self.m + 1, -1])
+        # dantzig never reads weights: carry a (B, 1) stub so segments and
+        # bucket gathers don't move a dead (B, C) array
+        w = (jnp.ones((B, 1), T.dtype) if self.rule == "dantzig"
+             else init_weights(self.rule, T, self.m))
         return CompactionState(
             T=T, basis=basis, phase=phase,
             status=jnp.full((B,), _RUNNING, jnp.int32),
-            iters=jnp.zeros((B,), jnp.int32), thr=thr)
+            iters=jnp.zeros((B,), jnp.int32), w=w, thr=thr)
 
     def run_phase1(self, state, steps):
         state, it = _segment_phase1_jit(state, jnp.int32(steps), m=self.m,
-                                        n=self.n, tol=self.tol)
+                                        n=self.n, tol=self.tol,
+                                        rule=self.rule)
         return state, int(it)
 
     def run_phase2(self, state, steps):
         state, it = _segment_phase2_jit(state, jnp.int32(steps), m=self.m,
-                                        n=self.n, tol=self.tol)
+                                        n=self.n, tol=self.tol,
+                                        rule=self.rule)
         return state, int(it)
 
     def compact_columns(self, state: CompactionState) -> CompactionState:
-        return state._replace(T=_compact_columns_jit(state.T, m=self.m,
-                                                     n=self.n))
+        w = (state.w if self.rule == "dantzig"
+             else _compact_weights_jit(state.w, m=self.m, n=self.n))
+        return state._replace(
+            T=_compact_columns_jit(state.T, m=self.m, n=self.n), w=w)
 
     def limit_phase1(self, state: CompactionState) -> CompactionState:
         """Budget exhausted while still in phase 1 -> iteration limit."""
@@ -307,14 +337,17 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
             if not pending(state, status):
                 break
             steps = min(config.segment_k, budget)
+            bucket = len(orig)
             state, done = runner(state, steps)
-            if stats_out is not None:
-                stats_out.append(SegmentStat(
-                    stage=stage, bucket=len(orig), steps=done,
-                    elements=done * len(orig)
-                    * backend.elements_per_step(stage)))
             budget -= max(1, done)
             state, orig, status = maybe_compact(state, orig, stage)
+            if stats_out is not None:
+                # survivor count is compaction-invariant (gathers only drop
+                # terminal LPs), so the post-compact host status serves both
+                stats_out.append(SegmentStat(
+                    stage=stage, bucket=bucket, steps=done,
+                    elements=done * bucket * backend.elements_per_step(stage),
+                    survivors=int((status == _RUNNING).sum())))
         return state, orig, budget
 
     def pending_p1(state, status):
@@ -345,24 +378,30 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
                             tol: Optional[float] = None,
                             feas_tol: Optional[float] = None,
                             max_iters: Optional[int] = None,
-                            segment_k: int = 8,
+                            segment_k: Optional[int] = None,
                             compact_threshold: float = 0.5,
+                            pricing: str = "dantzig",
                             stats_out: Optional[List[SegmentStat]] = None
                             ) -> LPResult:
     """Solve a batch with the two-level work-elimination engine (phase
     compaction + active-set compaction scheduler) on the pure-JAX backend.
 
-    Bit-identical statuses/iterations to ``solve_batched_jax`` — only the
-    executed device work changes.  ``stats_out`` (a list) collects per-segment
-    SegmentStat records for executed-work accounting."""
+    Bit-identical statuses/iterations to ``solve_batched_jax`` with the same
+    ``pricing`` rule — only the executed device work changes.
+    ``segment_k=None`` derives the segment length from `auto_segment_k`
+    (scales with the `default_max_iters` cap).  ``stats_out`` (a list)
+    collects per-segment SegmentStat records — executed work plus the
+    observed survivor curve — for benchmarks/pivot_work.py."""
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
+    if segment_k is None:
+        segment_k = auto_segment_k(m, n)
     if tol is None:
         tol = 1e-6 if dtype == jnp.float32 else 1e-9
     if feas_tol is None:
         feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
-    backend = JaxBackend(m, n, tol, feas_tol, dtype)
+    backend = JaxBackend(m, n, tol, feas_tol, dtype, pricing=pricing)
     state = backend.init(jnp.asarray(batch.A, dtype),
                          jnp.asarray(batch.b, dtype),
                          jnp.asarray(batch.c, dtype))

@@ -60,11 +60,12 @@ def _pad_batch(batch: LPBatch, multiple: int):
     return LPBatch(A=A, b=b, c=c), B
 
 
-def _solve_local(A, b, c, *, m, n, max_iters, tol, feas_tol):
+def _solve_local(A, b, c, *, m, n, max_iters, tol, feas_tol,
+                 pricing="dantzig"):
     """The shared two-phase solve body (phase-compacted), callable under
     shard_map (local shapes) or pjit (global shapes)."""
     return solve_two_phase(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
-                           feas_tol=feas_tol)
+                           feas_tol=feas_tol, pricing=pricing)
 
 
 def _prep(batch: LPBatch, mesh: Mesh, dtype):
@@ -79,9 +80,13 @@ def _prep(batch: LPBatch, mesh: Mesh, dtype):
 
 def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                tol: float = 1e-6, feas_tol: float = 1e-5,
-               max_iters: Optional[int] = None, lower_only: bool = False):
+               max_iters: Optional[int] = None, lower_only: bool = False,
+               pricing: str = "dantzig"):
     """Lockstep global solve: batch sharded over all mesh axes, single global
-    while_loop (the paper-faithful distributed baseline)."""
+    while_loop (the paper-faithful distributed baseline).  ``pricing``
+    selects the entering-column rule (core/pricing.py); the per-LP weights
+    are loop state sharded like the tableaux, so no rule adds cross-chip
+    traffic."""
     m, n = batch.m, batch.n
     max_iters = max_iters or default_max_iters(m, n)
     A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
@@ -89,7 +94,7 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     shard = NamedSharding(mesh, spec)
     fn = jax.jit(
         functools.partial(_solve_local, m=m, n=n, max_iters=max_iters,
-                          tol=tol, feas_tol=feas_tol),
+                          tol=tol, feas_tol=feas_tol, pricing=pricing),
         in_shardings=(shard, shard, shard),
         out_shardings=(shard, shard, shard, shard),
     )
@@ -108,21 +113,26 @@ class _ShardMapBackend(JaxBackend):
     shard_map: per-shard while-loops (each chip stops at its own segment
     convergence), host-level survivor gathering between segments."""
 
-    def __init__(self, mesh: Mesh, m, n, tol, feas_tol, dtype):
-        super().__init__(m, n, tol, feas_tol, dtype)
+    def __init__(self, mesh: Mesh, m, n, tol, feas_tol, dtype,
+                 pricing: str = "dantzig"):
+        super().__init__(m, n, tol, feas_tol, dtype, pricing=pricing)
         self.mesh = mesh
         axes = tuple(mesh.axis_names)
         self.pad_multiple = int(np.prod(mesh.devices.shape))
         spec = P(axes)
         state_specs = CompactionState(T=spec, basis=spec, phase=spec,
-                                      status=spec, iters=spec, thr=spec)
+                                      status=spec, iters=spec, w=spec,
+                                      thr=spec)
+        rule = self.rule
 
         def p1(state, steps):
-            state, it = segment_phase1(state, steps, m=m, n=n, tol=tol)
+            state, it = segment_phase1(state, steps, m=m, n=n, tol=tol,
+                                       rule=rule)
             return state, it.reshape(1)
 
         def p2(state, steps):
-            state, it = segment_phase2(state, steps, m=m, n=n, tol=tol)
+            state, it = segment_phase2(state, steps, m=m, n=n, tol=tol,
+                                       rule=rule)
             return state, it.reshape(1)
 
         def wrap(fn):
@@ -149,14 +159,16 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                     tol: float = 1e-6, feas_tol: float = 1e-5,
                     max_iters: Optional[int] = None, lower_only: bool = False,
                     segment_k: Optional[int] = None,
-                    compact_threshold: float = 0.5, stats_out=None):
+                    compact_threshold: float = 0.5,
+                    pricing: str = "dantzig", stats_out=None):
     """Per-shard termination: each chip solves its local LPs to completion
     independently (no cross-chip sync per pivot).
 
     ``segment_k=None`` (default) keeps the original one-shot semantics.
     ``segment_k=K`` runs the solve in K-pivot segments through the active-set
     compaction scheduler (see module docstring); results are identical, work
-    shrinks with the survivor count."""
+    shrinks with the survivor count.  ``pricing`` selects the entering-column
+    rule (core/pricing.py) in both modes."""
     m, n = batch.m, batch.n
     max_iters = max_iters or default_max_iters(m, n)
 
@@ -171,7 +183,8 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
             "segment accounting to record")
 
     if segment_k is not None:
-        backend = _ShardMapBackend(mesh, m, n, tol, feas_tol, dtype)
+        backend = _ShardMapBackend(mesh, m, n, tol, feas_tol, dtype,
+                                   pricing=pricing)
         padded, orig_B = _pad_batch(batch, backend.pad_multiple)
         state = backend.init(jnp.asarray(padded.A, dtype),
                              jnp.asarray(padded.b, dtype),
@@ -192,7 +205,7 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     spec = P(axes)
 
     local = functools.partial(_solve_local, m=m, n=n, max_iters=max_iters,
-                              tol=tol, feas_tol=feas_tol)
+                              tol=tol, feas_tol=feas_tol, pricing=pricing)
     fn = jax.jit(shard_map(
         local, mesh=mesh,
         in_specs=(spec, spec, spec),

@@ -1,0 +1,187 @@
+"""Pluggable pricing engine: pivot-column selection rules for the batched simplex.
+
+The paper's Step 1 (Sec. 4.1/5.2) hardcodes **Dantzig's rule** — enter the
+column with the most positive reduced cost.  It is the cheapest rule per
+pivot (one argmax the tableau already pays for) but the worst in pivot
+*count*, and pivot count is exactly what the two-level work-elimination
+engine (phase compaction + active-set compaction, PR 1) multiplies against:
+every pivot a better rule avoids is a full rank-1 tableau update saved
+across the surviving batch.
+
+Three rules, one contract:
+
+* ``dantzig``        — e = argmax_j d_j.  Stateless; the weights array is
+                       carried but never read, so the compiled program (and
+                       the pivot sequence) is identical to the pre-pricing
+                       solver.
+* ``steepest_edge``  — e = argmax_j d_j^2 / gamma_j with **exact** reference
+                       weights gamma_j = 1 + ||B^-1 A_j||^2.  In a dense
+                       tableau the current column T[:m, j] *is* B^-1 A_j, so
+                       the exact gamma is a column-norm reduction over the
+                       freshly updated tableau — the same O(m*C) cost as the
+                       classic Goldfarb recurrence but with zero drift, which
+                       is why the recompute (fused into the pivot update) is
+                       the reference formulation here.
+* ``devex``          — e = argmax_j d_j^2 / w_j with Forrest/Goldfarb
+                       approximate reference weights: w_j starts at 1 and
+                       after a pivot on (l, e) becomes
+                       max(w_j, alpha_j^2 * w_e) with alpha the scaled pivot
+                       row; the leaving variable r gets max(w_e/alpha_e^2, 1)
+                       and the framework resets to 1 when weights overflow.
+                       O(C) per pivot instead of O(m*C).
+
+All rules share the optimality test (max_j d_j <= tol) and Steps 2-3
+unchanged, so INFEASIBLE/UNBOUNDED/OPTIMAL certificates are rule-independent
+— only the path (and its length) through the basis graph differs.  Weights
+live in the solver state as a (B, C) array whose batch axis 0 makes the
+active-set compaction gathers, shard_map specs and Pallas tile BlockSpecs
+uniform across rules; phase compaction slices weights with the same column
+selection as the tableau (dropping columns never changes surviving columns'
+norms, so exact steepest-edge weights survive the drop exactly).
+
+This module holds the rule math in two dialects — batched JAX (used by
+core/simplex.py) and scalar NumPy (used by the float64 oracle in
+core/reference.py); kernels/simplex_tile.py re-expresses the same formulas
+in broadcast/one-hot form for Pallas.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .lp import BIG
+
+PRICING_RULES = ("dantzig", "steepest_edge", "devex")
+
+# Devex framework reset: when any reference weight exceeds this, the whole
+# framework restarts at 1 (standard practice; keeps f32 scores well-scaled).
+DEVEX_RESET = 1e7
+
+
+def canonicalize_rule(pricing: str) -> str:
+    """Validate and normalize a pricing-rule name."""
+    rule = str(pricing).lower()
+    if rule not in PRICING_RULES:
+        raise ValueError(
+            f"unknown pricing rule {pricing!r}; expected one of {PRICING_RULES}")
+    return rule
+
+
+# ---------------------------------------------------------------------------
+# Batched JAX dialect (core/simplex.py)
+# ---------------------------------------------------------------------------
+
+def init_weights(rule: str, T: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Initial (B, C) pricing weights for a batch of tableaux.
+
+    steepest_edge: exact gamma_j = 1 + ||T[:m, j]||^2 (the initial basis is
+    the slack/artificial identity, so this is 1 + ||A_j||^2 for structurals).
+    dantzig/devex: ones (dantzig never reads them; devex starts its reference
+    framework at 1)."""
+    B, _, C = T.shape
+    if rule == "steepest_edge":
+        return 1.0 + jnp.sum(T[:, :m, :] * T[:, :m, :], axis=1)
+    return jnp.ones((B, C), T.dtype)
+
+
+def select_entering(masked_cost: jnp.ndarray, w: jnp.ndarray, *, rule: str,
+                    tol: float):
+    """Step 1 under a pricing rule.
+
+    ``masked_cost`` is the objective row with disallowed columns already at
+    -BIG.  Returns ``(e, max_cost)``: the entering column per LP and the max
+    reduced cost (the rule-independent optimality test — a rule only changes
+    *which* improving column enters, never *whether* one exists)."""
+    max_cost = jnp.max(masked_cost, axis=1)
+    if rule == "dantzig":
+        e = jnp.argmax(masked_cost, axis=1)
+    else:
+        improving = masked_cost > tol
+        d = jnp.where(improving, masked_cost, 0.0)
+        score = jnp.where(improving, d * d / w, -BIG)
+        e = jnp.argmax(score, axis=1)
+    return e, max_cost
+
+
+def update_weights(rule: str, w, T_new, pivrow, pe_safe, e, r, do_pivot,
+                   *, m: int, n: int):
+    """Post-pivot weight recurrence, fused into the rank-1 update.
+
+    ``T_new``  — tableau *after* the pivot; ``pivrow`` — the scaled pivot row
+    (T_new's row l); ``pe_safe`` — pivot element (1 where ~do_pivot);
+    ``e``/``r`` — entering column / leaving variable's column per LP.
+    Non-pivoting LPs keep their weights bitwise.
+
+    Devex invariant (shared by every dialect): weights of non-priceable
+    columns — artificials, rhs, padding, i.e. index >= n+m — are pinned to 1.
+    Selection never reads them, but without the pin they would still feed the
+    DEVEX_RESET overflow max (and a leaving *artificial*'s slot aliases the
+    rhs after phase compaction), making reset timing depend on which layout
+    a backend happens to use.  Pinned, the full, phase-compacted, lane-padded
+    and float64 dialects all carry identical effective state."""
+    if rule == "dantzig":
+        return w
+    if rule == "steepest_edge":
+        w_new = 1.0 + jnp.sum(T_new[:, :m, :] * T_new[:, :m, :], axis=1)
+        return jnp.where(do_pivot[:, None], w_new, w)
+    # devex
+    C = w.shape[1]
+    cols = jnp.arange(C)
+    w_e = jnp.take_along_axis(w, e[:, None], axis=1)[:, 0]
+    w_new = jnp.maximum(w, pivrow * pivrow * w_e[:, None])
+    w_leave = jnp.maximum(w_e / (pe_safe * pe_safe), 1.0)
+    w_new = jnp.where(cols[None, :] == r[:, None], w_leave[:, None], w_new)
+    w_new = jnp.where(cols[None, :] == e[:, None], 1.0, w_new)
+    w_new = jnp.where((cols < n + m)[None, :], w_new, 1.0)
+    overflow = jnp.max(w_new, axis=1) > DEVEX_RESET
+    w_new = jnp.where(overflow[:, None], 1.0, w_new)
+    return jnp.where(do_pivot[:, None], w_new, w)
+
+
+def compact_weights(w: jnp.ndarray, *, m: int, n: int) -> jnp.ndarray:
+    """Phase compaction for weights: same column drop as
+    ``simplex.compact_tableau`` — keep structurals+slacks and the rhs slot:
+    (B, n+2m+1) -> (B, n+m+1).  Surviving columns' norms are untouched by
+    the drop, so exact steepest-edge weights stay exact."""
+    return jnp.concatenate([w[:, :n + m], w[:, -1:]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Scalar NumPy dialect (core/reference.py float64 oracle)
+# ---------------------------------------------------------------------------
+
+def init_weights_np(rule: str, T: np.ndarray, m: int) -> np.ndarray:
+    """(C,) initial weights for one float64 tableau (see init_weights)."""
+    if rule == "steepest_edge":
+        return 1.0 + (T[:m] * T[:m]).sum(axis=0)
+    return np.ones(T.shape[1])
+
+
+def select_entering_np(reduced: np.ndarray, w: np.ndarray, *, rule: str,
+                       tol: float) -> int:
+    """Scalar Step 1 (reduced costs with disallowed columns at -BIG)."""
+    if rule == "dantzig":
+        return int(np.argmax(reduced))
+    improving = reduced > tol
+    d = np.where(improving, reduced, 0.0)
+    score = np.where(improving, d * d / w, -BIG)
+    return int(np.argmax(score))
+
+
+def update_weights_np(rule: str, w: np.ndarray, T_new: np.ndarray,
+                      pivrow: np.ndarray, pe: float, e: int, r: int,
+                      *, m: int, n: int) -> np.ndarray:
+    """Scalar post-pivot recurrence (see update_weights, including the devex
+    non-priceable-column pin)."""
+    if rule == "dantzig":
+        return w
+    if rule == "steepest_edge":
+        return 1.0 + (T_new[:m] * T_new[:m]).sum(axis=0)
+    w_e = w[e]
+    w = np.maximum(w, pivrow * pivrow * w_e)
+    w[r] = max(w_e / (pe * pe), 1.0)
+    w[e] = 1.0
+    w[n + m:] = 1.0
+    if w.max() > DEVEX_RESET:
+        w[:] = 1.0
+    return w

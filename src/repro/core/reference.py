@@ -3,9 +3,11 @@
 Plays the role GLPK/CPLEX play in the paper's evaluation: a trusted
 *sequential* CPU solver that batched device solvers are compared against,
 both for correctness (tests) and for speedup curves (benchmarks). It
-implements the exact same Dantzig-rule/two-phase/sentinel algorithm as the
-JAX and Pallas backends so that iteration counts and pivot sequences match
-bit-for-bit modulo dtype.
+implements the exact same two-phase/sentinel algorithm as the JAX and Pallas
+backends — including the pluggable pricing engine (``pricing=`` selects
+dantzig / steepest_edge / devex, see core/pricing.py) — so that iteration
+counts and pivot sequences match bit-for-bit modulo dtype *per rule*: the
+oracle is the per-rule pivot-sequence ground truth.
 """
 from __future__ import annotations
 
@@ -23,9 +25,15 @@ from .lp import (
     default_max_iters,
     extract_solution,
 )
+from .pricing import (
+    canonicalize_rule,
+    init_weights_np,
+    select_entering_np,
+    update_weights_np,
+)
 
 
-def _solve_single(T, basis, n, m, tol, max_iters):
+def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig"):
     """Solve one LP in-place on its (m+2, cols) float64 tableau.
 
     Returns (status, iters, p1_iters): ``p1_iters`` counts the iterations
@@ -36,6 +44,7 @@ def _solve_single(T, basis, n, m, tol, max_iters):
     allowed = np.zeros(cols, dtype=bool)
     allowed[: n + m] = True  # artificials and rhs never enter
     feas_thr = 1e-8 * max(1.0, T[m + 1, -1])  # relative, matches JAX backend
+    weights = init_weights_np(rule, T, m)
     phase = 1
     iters = 0
     p1_iters = 0
@@ -43,8 +52,8 @@ def _solve_single(T, basis, n, m, tol, max_iters):
     while iters < max_iters:
         obj_row = T[m + 1] if phase == 1 else T[m]
         reduced = np.where(allowed, obj_row, -BIG)
-        e = int(np.argmax(reduced))
-        if reduced[e] <= tol:
+        e = select_entering_np(reduced, weights, rule=rule, tol=tol)
+        if np.max(reduced) <= tol:
             if phase == 1:
                 w = T[m + 1, -1]
                 if w > feas_thr:
@@ -69,6 +78,8 @@ def _solve_single(T, basis, n, m, tol, max_iters):
         factor = T[:, e].copy()
         T -= factor[:, None] * pivrow[None, :]
         T[l] = pivrow
+        weights = update_weights_np(rule, weights, T, pivrow, pe, e, basis[l],
+                                    m=m, n=n)
         basis[l] = e
         iters += 1
     if status is None:
@@ -79,12 +90,14 @@ def _solve_single(T, basis, n, m, tol, max_iters):
 
 
 def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
-                                     max_iters: int | None = None):
+                                     max_iters: int | None = None,
+                                     pricing: str = "dantzig"):
     """Like solve_batched_reference, but also returns per-LP phase-1
     iteration counts ``(LPResult, p1_iters)`` — the input for the
     phase-compaction executed-work models (analysis/lp_perf.py,
     benchmarks/pivot_work.py)."""
     B, m, n = batch.batch, batch.m, batch.n
+    rule = canonicalize_rule(pricing)
     if max_iters is None:
         max_iters = default_max_iters(m, n)
     T, basis, _ = build_tableau(batch.A, batch.b, batch.c)
@@ -93,7 +106,7 @@ def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
     p1_iters = np.zeros(B, dtype=np.int32)
     for k in range(B):
         status[k], iters[k], p1_iters[k] = _solve_single(
-            T[k], basis[k], n, m, tol, max_iters)
+            T[k], basis[k], n, m, tol, max_iters, rule=rule)
     x, obj = extract_solution(T, basis, n)
     # non-optimal LPs report NaN objective to make misuse loud
     bad = status != OPTIMAL
@@ -103,11 +116,13 @@ def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
 
 
 def solve_batched_reference(batch: LPBatch, tol: float = 1e-9,
-                            max_iters: int | None = None) -> LPResult:
+                            max_iters: int | None = None,
+                            pricing: str = "dantzig") -> LPResult:
     """Sequentially solve every LP in the batch (float64). O(B) loop — this is
     the 'CPU sequential' side of every speedup table."""
     res, _ = solve_batched_reference_detailed(batch, tol=tol,
-                                              max_iters=max_iters)
+                                              max_iters=max_iters,
+                                              pricing=pricing)
     return res
 
 

@@ -18,6 +18,14 @@ Mapping from the paper's CUDA design (Sec. 5) to this implementation:
                                        core/compaction.py for the active-set
                                        scheduler, which together restore true
                                        early exit)
+* Dantzig entering rule (Step 1)   ->  pluggable pricing engine
+                                       (core/pricing.py): ``pricing=`` selects
+                                       dantzig (paper default, bit-identical),
+                                       steepest_edge (exact gamma weights) or
+                                       devex (approximate weights); per-LP
+                                       weights ride in `SimplexState.w` and
+                                       their recurrence is fused into the
+                                       rank-1 pivot update
 
 Two-level work elimination (this module is Level 1)
 ---------------------------------------------------
@@ -75,6 +83,13 @@ from .lp import (
     LPResult,
     default_max_iters,
 )
+from .pricing import (
+    canonicalize_rule,
+    compact_weights,
+    init_weights,
+    select_entering,
+    update_weights,
+)
 
 _RUNNING = -1
 
@@ -85,6 +100,8 @@ class SimplexState(NamedTuple):
     phase: jax.Array    # (B,) int32 — 1 or 2
     status: jax.Array   # (B,) int32 — _RUNNING until terminal
     iters: jax.Array    # (B,) int32
+    w: jax.Array        # (B, C) pricing weights (see core/pricing.py;
+                        #  carried-but-unread under the dantzig rule)
     it: jax.Array       # () int32 loop-local iteration counter
 
 
@@ -139,21 +156,33 @@ def build_tableau_jax(A: jax.Array, b: jax.Array, c: jax.Array):
     return T, basis, phase
 
 
-def _pivot_update(T, factor, pivrow_raw, pe, l, do_pivot, rows_iota):
+def _pivot_update(T, w, basis, factor, pivrow_raw, pe, e, l, do_pivot,
+                  rows_iota, *, m, n, rule):
     """Rank-1 pivot update shared by both steps: subtract the entering-column
     outer product everywhere, then *replace* the pivot row with the scaled row
     (matching the NumPy oracle exactly, instead of the subtract-then-add-back
-    formulation which re-rounds the pivot row)."""
+    formulation which re-rounds the pivot row).
+
+    The pricing-weight recurrence (core/pricing.py) is fused here: it reads
+    the freshly updated tableau / scaled pivot row while they are live, so
+    steepest-edge's exact gamma recompute and devex's O(C) update add no
+    extra pass over state.  Under ``rule == "dantzig"`` the weights pass
+    through untouched and the whole computation DCEs away."""
     pe_safe = jnp.where(do_pivot, pe, 1.0)
     pivrow = pivrow_raw / pe_safe[:, None]
     T_new = T - factor[:, :, None] * pivrow[:, None, :]
     is_l = rows_iota[None, :, None] == l[:, None, None]
     T_new = jnp.where(is_l, pivrow[:, None, :], T_new)
-    return jnp.where(do_pivot[:, None, None], T_new, T)
+    T_out = jnp.where(do_pivot[:, None, None], T_new, T)
+    # leaving variable's column (basis *before* its own update) for devex
+    r = jnp.take_along_axis(basis, l[:, None], axis=1)[:, 0]
+    w = update_weights(rule, w, T_out, pivrow, pe_safe, e, r, do_pivot,
+                       m=m, n=n)
+    return T_out, w
 
 
 def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
-                 feas_thr) -> SimplexState:
+                 feas_thr, rule: str = "dantzig") -> SimplexState:
     """One lockstep pivot across the whole batch (masked for inactive LPs),
     on the **full** (B, m+2, n+2m+1) tableau.
 
@@ -161,8 +190,11 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     trick, as dense batched tensor ops.  Per-LP column/row extraction uses
     `take_along_axis` gathers (one element per batch row) instead of one-hot
     einsums; loop-invariant masks come pre-built from `_step_consts`.
+    Step 1 delegates to the pricing engine (``rule``, static): dantzig keeps
+    the paper's argmax bit-for-bit; steepest_edge/devex score candidates by
+    d_j^2 / weight using the weights carried in ``state.w``.
     """
-    T, basis, phase, status, iters, it = state
+    T, basis, phase, status, iters, w, it = state
     B, rows, C = T.shape
     consts = _step_consts(rows, m, n, C)
     active = status == _RUNNING
@@ -170,14 +202,13 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     # ---- Step 1: entering variable (pivot column) --------------------------
     cost = jnp.where((phase == 1)[:, None], T[:, m + 1, :], T[:, m, :])
     masked_cost = jnp.where(consts.col_ok[None, :], cost, -BIG)
-    e = jnp.argmax(masked_cost, axis=1)
-    max_cost = jnp.max(masked_cost, axis=1)
+    e, max_cost = select_entering(masked_cost, w, rule=rule, tol=tol)
     is_opt = max_cost <= tol
 
     # phase bookkeeping at optimality of the current objective row
-    w = T[:, m + 1, -1]
+    p1_obj = T[:, m + 1, -1]
     p1_done = active & (phase == 1) & is_opt
-    infeasible = p1_done & (w > feas_thr)
+    infeasible = p1_done & (p1_obj > feas_thr)
     to_phase2 = p1_done & ~infeasible
     p2_done = active & (phase == 2) & is_opt
 
@@ -196,10 +227,11 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     stuck = wants_pivot & no_row & (phase == 1)  # numerically impossible path
     do_pivot = wants_pivot & ~no_row
 
-    # ---- Step 3: rank-1 pivot update ---------------------------------------
+    # ---- Step 3: rank-1 pivot update (+ fused pricing-weight recurrence) ---
     pivrow_raw = jnp.take_along_axis(T, l[:, None, None], axis=1)[:, 0, :]
     pe = jnp.take_along_axis(col, l[:, None], axis=1)[:, 0]
-    T = _pivot_update(T, factor, pivrow_raw, pe, l, do_pivot, consts.rows_iota)
+    T, w = _pivot_update(T, w, basis, factor, pivrow_raw, pe, e, l, do_pivot,
+                         consts.rows_iota, m=m, n=n, rule=rule)
     basis = jnp.where(do_pivot[:, None] & (consts.row_m[None, :] == l[:, None]),
                       e[:, None].astype(jnp.int32), basis)
 
@@ -209,26 +241,27 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     status = jnp.where(p2_done, OPTIMAL, status)
     phase = jnp.where(to_phase2, 2, phase)
     iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
-    return SimplexState(T, basis, phase, status, iters, it + 1)
+    return SimplexState(T, basis, phase, status, iters, w, it + 1)
 
 
-def phase2_step(state: SimplexState, *, n: int, m: int, tol: float) -> SimplexState:
+def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
+                rule: str = "dantzig") -> SimplexState:
     """One lockstep phase-2 pivot on the **compacted** (B, m+1, n+m+1)
     tableau (artificial columns and the phase-1 objective row removed).
 
     Artificials can never enter (they were masked out of Step 1 already) and
     the phase-1 row is never priced in phase 2, so this performs exactly the
     pivots `simplex_step` would — at (m+1)(n+m+1)/((m+2)(n+2m+1)) of the
-    per-pivot FLOPs/bytes."""
-    T, basis, phase, status, iters, it = state
+    per-pivot FLOPs/bytes.  ``rule`` selects the pricing engine exactly as in
+    `simplex_step`; ``state.w`` is the phase-compacted weight vector."""
+    T, basis, phase, status, iters, w, it = state
     B, rows, C = T.shape          # rows == m + 1, C == n + m + 1
     consts = _step_consts(rows, m, n, C)
     active = (status == _RUNNING) & (phase == 2)
 
     cost = T[:, m, :]
     masked_cost = jnp.where(consts.col_ok[None, :], cost, -BIG)
-    e = jnp.argmax(masked_cost, axis=1)
-    max_cost = jnp.max(masked_cost, axis=1)
+    e, max_cost = select_entering(masked_cost, w, rule=rule, tol=tol)
     is_opt = max_cost <= tol
     p2_done = active & is_opt
 
@@ -247,14 +280,15 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float) -> SimplexSt
 
     pivrow_raw = jnp.take_along_axis(T, l[:, None, None], axis=1)[:, 0, :]
     pe = jnp.take_along_axis(col, l[:, None], axis=1)[:, 0]
-    T = _pivot_update(T, factor, pivrow_raw, pe, l, do_pivot, consts.rows_iota)
+    T, w = _pivot_update(T, w, basis, factor, pivrow_raw, pe, e, l, do_pivot,
+                         consts.rows_iota, m=m, n=n, rule=rule)
     basis = jnp.where(do_pivot[:, None] & (consts.row_m[None, :] == l[:, None]),
                       e[:, None].astype(jnp.int32), basis)
 
     status = jnp.where(unbounded, UNBOUNDED, status)
     status = jnp.where(p2_done, OPTIMAL, status)
     iters = iters + (active & ~p2_done).astype(jnp.int32)
-    return SimplexState(T, basis, phase, status, iters, it + 1)
+    return SimplexState(T, basis, phase, status, iters, w, it + 1)
 
 
 def compact_tableau(T: jax.Array, *, m: int, n: int) -> jax.Array:
@@ -296,7 +330,8 @@ def extract_solution_compacted(T: jax.Array, basis: jax.Array, n: int):
 
 
 def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
-                    feas_tol: float, phase_compaction: bool = True):
+                    feas_tol: float, phase_compaction: bool = True,
+                    pricing: str = "dantzig"):
     """Traceable two-phase solve body, shared by jit (`_solve_core`), pjit and
     shard_map (core/distributed.py).
 
@@ -306,7 +341,10 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
     step counter where loop 1 stopped).
     phase_compaction=False: the paper-faithful single lockstep loop (the seed
     behavior), kept as the A/B baseline for benchmarks/pivot_work.py.
+    ``pricing`` selects the entering-column rule (core/pricing.py); weights
+    are initialized here and phase-compacted alongside the tableau.
     """
+    rule = canonicalize_rule(pricing)
     T, basis, phase = build_tableau_jax(A, b, c)
     B = T.shape[0]
     # Phase-1 feasibility threshold is *relative* to the initial infeasibility
@@ -316,11 +354,13 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
         T=T, basis=basis, phase=phase,
         status=jnp.full((B,), _RUNNING, jnp.int32),
         iters=jnp.zeros((B,), jnp.int32),
+        w=init_weights(rule, T, m),
         it=jnp.array(0, jnp.int32),
     )
 
     def body1(s: SimplexState):
-        return simplex_step(s, n=n, m=m, tol=tol, feas_thr=feas_thr)
+        return simplex_step(s, n=n, m=m, tol=tol, feas_thr=feas_thr,
+                            rule=rule)
 
     if not phase_compaction:
         def cond(s: SimplexState):
@@ -344,13 +384,14 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
         state = SimplexState(
             T=compact_tableau(state.T, m=m, n=n), basis=state.basis,
             phase=state.phase, status=status, iters=state.iters,
+            w=compact_weights(state.w, m=m, n=n),
             it=state.it)
 
         def cond2(s: SimplexState):
             return jnp.any(s.status == _RUNNING) & (s.it < max_iters)
 
         def body2(s: SimplexState):
-            return phase2_step(s, n=n, m=m, tol=tol)
+            return phase2_step(s, n=n, m=m, tol=tol, rule=rule)
 
         state = jax.lax.while_loop(cond2, body2, state)
         status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
@@ -361,16 +402,20 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
-                                             "feas_tol", "phase_compaction"))
+                                             "feas_tol", "phase_compaction",
+                                             "pricing"))
 def _solve_core(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
-                feas_tol: float, phase_compaction: bool = True):
+                feas_tol: float, phase_compaction: bool = True,
+                pricing: str = "dantzig"):
     return solve_two_phase(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
-                           feas_tol=feas_tol, phase_compaction=phase_compaction)
+                           feas_tol=feas_tol, phase_compaction=phase_compaction,
+                           pricing=pricing)
 
 
 def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = None,
                       feas_tol: float | None = None, max_iters: int | None = None,
-                      phase_compaction: bool = True) -> LPResult:
+                      phase_compaction: bool = True,
+                      pricing: str = "dantzig") -> LPResult:
     """Solve a batch of LPs with the lockstep pure-JAX simplex.
 
     Phase-compacted by default (identical pivot sequence, ~35-50% fewer
@@ -378,6 +423,9 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     the paper-faithful single-loop solver.  For per-shard termination across
     a mesh use core.distributed.solve_shard_map; for active-set compaction
     (retiring finished LPs mid-solve) use core.compaction.
+    ``pricing`` selects the entering-column rule — "dantzig" (paper default),
+    "steepest_edge" or "devex" (core/pricing.py); better rules trade a
+    cheaper pivot *count* against a slightly costlier pivot.
     """
     m, n = batch.m, batch.n
     if max_iters is None:
@@ -391,7 +439,8 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     c = jnp.asarray(batch.c, dtype=dtype)
     x, obj, status, iters = _solve_core(
         A, b, c, m=m, n=n, max_iters=int(max_iters), tol=float(tol),
-        feas_tol=float(feas_tol), phase_compaction=bool(phase_compaction))
+        feas_tol=float(feas_tol), phase_compaction=bool(phase_compaction),
+        pricing=canonicalize_rule(pricing))
     return LPResult(x=np.asarray(x), objective=np.asarray(obj),
                     status=np.asarray(status), iterations=np.asarray(iters))
 

@@ -11,6 +11,9 @@ solved in K-pivot segments and surviving LPs are gathered into
 power-of-two buckets (multiples of ``tile_b``) as others terminate — the
 paper's per-block early exit rebuilt on static shapes. Defaults preserve the
 one-shot whole-solve kernel semantics.
+
+``pricing=`` selects the entering-column rule (core/pricing.py:
+dantzig | steepest_edge | devex) on both the whole-solve and segment paths.
 """
 from __future__ import annotations
 
@@ -23,12 +26,14 @@ import numpy as np
 
 from repro.core.lp import ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, default_max_iters
 from repro.core.compaction import (
-    CompactionConfig, CompactionState, JaxBackend, SegmentStat, run_schedule,
+    CompactionConfig, CompactionState, JaxBackend, SegmentStat, auto_segment_k,
+    run_schedule,
 )
+from repro.core.pricing import canonicalize_rule
 from repro.core.simplex import _RUNNING, scatter_solution
 from .simplex_tile import (
-    _compact_tile, build_padded_tableau, pick_tile_b, segment_pallas,
-    simplex_pallas,
+    _compact_tile, _compact_tile_weights, _init_tile_weights,
+    build_padded_tableau, pick_tile_b, segment_pallas, simplex_pallas,
 )
 from .hyperbox_kernel import hyperbox_pallas
 
@@ -36,6 +41,17 @@ from .hyperbox_kernel import hyperbox_pallas
 @functools.partial(jax.jit, static_argnames=("m", "n"))
 def _compact_padded_jit(T, *, m, n):
     return _compact_tile(T, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n"))
+def _compact_padded_weights_jit(w, *, m, n):
+    return _compact_tile_weights(w, m=m, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "rule"))
+def _init_padded_weights_jit(T, *, m, rule):
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, T.shape[:2], 1)
+    return _init_tile_weights(T, row_ids, m=m, rule=rule)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n"))
@@ -58,8 +74,8 @@ class PallasBackend(JaxBackend):
     numbers are comparable across backends."""
 
     def __init__(self, m, n, tol, feas_tol, tile_b, interpret=True,
-                 dtype=jnp.float32):
-        super().__init__(m, n, tol, feas_tol, dtype)
+                 dtype=jnp.float32, pricing="dantzig"):
+        super().__init__(m, n, tol, feas_tol, dtype, pricing=pricing)
         self.tile_b = int(tile_b)
         self.interpret = bool(interpret)
         self.pad_multiple = self.tile_b
@@ -68,18 +84,23 @@ class PallasBackend(JaxBackend):
         T, basis, phase, thr, _, _ = build_padded_tableau(
             A, b, c, self.tile_b, feas_tol=self.feas_tol)
         B_pad = T.shape[0]
+        # dantzig never reads weights: a (B, 1) stub keeps the segment
+        # kernels from streaming a dead (B, C) lane row through HBM
+        w = (jnp.ones((B_pad, 1), T.dtype) if self.rule == "dantzig"
+             else _init_padded_weights_jit(T, m=self.m, rule=self.rule))
         return CompactionState(
             T=T, basis=basis, phase=phase,
             status=jnp.full((B_pad, 1), _RUNNING, jnp.int32),
-            iters=jnp.zeros((B_pad, 1), jnp.int32), thr=thr)
+            iters=jnp.zeros((B_pad, 1), jnp.int32), w=w, thr=thr)
 
     def _run(self, state: CompactionState, steps: int, stage: str):
-        T, basis, phase, status, iters, it = segment_pallas(
-            jnp.int32(steps), state.T, state.basis, state.phase, state.thr,
-            state.status, state.iters, stage=stage, m=self.m, n=self.n,
-            tile_b=self.tile_b, tol=self.tol, interpret=self.interpret)
+        T, basis, w, phase, status, iters, it = segment_pallas(
+            jnp.int32(steps), state.T, state.basis, state.w, state.phase,
+            state.thr, state.status, state.iters, stage=stage, m=self.m,
+            n=self.n, tile_b=self.tile_b, tol=self.tol,
+            interpret=self.interpret, pricing=self.rule)
         new = CompactionState(T=T, basis=basis, phase=phase, status=status,
-                              iters=iters, thr=state.thr)
+                              iters=iters, w=w, thr=state.thr)
         return new, int(np.max(np.asarray(it)))
 
     def run_phase1(self, state, steps):
@@ -89,8 +110,10 @@ class PallasBackend(JaxBackend):
         return self._run(state, steps, "p2")
 
     def compact_columns(self, state: CompactionState) -> CompactionState:
+        w = (state.w if self.rule == "dantzig"
+             else _compact_padded_weights_jit(state.w, m=self.m, n=self.n))
         return state._replace(
-            T=_compact_padded_jit(state.T, m=self.m, n=self.n))
+            T=_compact_padded_jit(state.T, m=self.m, n=self.n), w=w)
 
     def extract(self, state: CompactionState, stage: str):
         x, obj, status, iters = _extract_padded_jit(
@@ -108,22 +131,27 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                          vmem_budget: int = 8 * 2 ** 20,
                          interpret: bool = True,
                          compaction: bool = False,
-                         segment_k: int = 8,
+                         segment_k: Optional[int] = None,
                          compact_threshold: float = 0.5,
+                         pricing: str = "dantzig",
                          stats_out: Optional[List[SegmentStat]] = None
                          ) -> LPResult:
     m, n = batch.m, batch.n
+    pricing = canonicalize_rule(pricing)
     if tile_b is None:
         tile_b = pick_tile_b(m, n, vmem_budget)
     if max_iters is None:
         max_iters = default_max_iters(m, n)
+    if segment_k is None:
+        segment_k = auto_segment_k(m, n)
     A = jnp.asarray(batch.A, dtype)
     b = jnp.asarray(batch.b, dtype)
     c = jnp.asarray(batch.c, dtype)
 
     if compaction:
         backend = PallasBackend(m, n, tol, feas_tol, tile_b,
-                                interpret=interpret, dtype=dtype)
+                                interpret=interpret, dtype=dtype,
+                                pricing=pricing)
         state = backend.init(A, b, c)
         B = batch.batch
         B_pad = state.T.shape[0]
@@ -139,7 +167,8 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
 
     x, obj, status, iters = simplex_pallas(
         A, b, c, m=m, n=n, tile_b=int(tile_b), max_iters=int(max_iters),
-        tol=float(tol), feas_tol=float(feas_tol), interpret=interpret)
+        tol=float(tol), feas_tol=float(feas_tol), interpret=interpret,
+        pricing=pricing)
     return LPResult(x=np.asarray(x), objective=np.asarray(obj),
                     status=np.asarray(status), iterations=np.asarray(iters))
 

@@ -45,6 +45,14 @@ objective rows: phase-2 and phase-1), cols = n + 2m + 1 padded to a lane
 multiple, with the RHS moved to the *last padded* column so padding columns
 (always zero, never allowed to enter) sit inertly in the middle; compacted
 stage rows = m + 1, cols = n + m + 1 padded likewise.
+
+Pricing (core/pricing.py) is threaded through both kernels as a static
+``pricing`` argument: Step 1 scores candidates per rule, and the per-LP
+weight vector — a (tile_b, C) lane-aligned row riding next to the tableau —
+has its recurrence fused into `_tile_pivot`.  The whole-solve kernel
+initializes weights in VMEM (nothing extra crosses HBM); the resumable
+segment kernels carry them as explicit state so the active-set compaction
+scheduler can gather them across bucket shrinks.
 """
 from __future__ import annotations
 
@@ -56,6 +64,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.lp import BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED
+from repro.core.pricing import DEVEX_RESET
 
 _RUNNING = -1
 
@@ -88,10 +97,30 @@ def _tile_min_ratio(T, col_full, row_ids, *, m: int, tol: float):
     return l, no_row
 
 
-def _tile_pivot(T, basis, col_full, row_ids, e, l, do_pivot, *, m: int):
+def _tile_select(masked_cost, w, *, rule: str, tol: float):
+    """Step 1 under a pricing rule, tile/broadcast form (lane-axis argmax of
+    the rule's score; the optimality test stays the rule-independent max
+    reduced cost).  Mirrors core.pricing.select_entering."""
+    max_cost = jnp.max(masked_cost, axis=1, keepdims=True)
+    if rule == "dantzig":
+        e = jnp.argmax(masked_cost, axis=1)[:, None]
+    else:
+        improving = masked_cost > tol
+        d = jnp.where(improving, masked_cost, 0.0)
+        score = jnp.where(improving, d * d / w, -BIG)
+        e = jnp.argmax(score, axis=1)[:, None]
+    return e, max_cost
+
+
+def _tile_pivot(T, basis, w, col_full, row_ids, lane, e, l, do_pivot,
+                *, m: int, n: int, rule: str):
     """Step 3: rank-1 pivot update + basis update, shared by the full and
     compacted tile steps (one copy keeps them bit-for-bit in sync with each
-    other and with the pure-JAX `_pivot_update`)."""
+    other and with the pure-JAX `_pivot_update`).  The pricing-weight
+    recurrence is fused here exactly as in the pure-JAX path: steepest-edge
+    recomputes exact gammas off the live updated tile, devex applies its
+    O(C) multiplicative update (with the non-priceable-column pin — see
+    core.pricing.update_weights), dantzig passes weights through untouched."""
     dtype = T.dtype
     is_l = row_ids == l                                         # (tile_b, R)
     pe = jnp.sum(col_full * is_l.astype(dtype), axis=1, keepdims=True)
@@ -102,14 +131,36 @@ def _tile_pivot(T, basis, col_full, row_ids, e, l, do_pivot, *, m: int):
     T_new = jnp.where(is_l[:, :, None], pivrow[:, None, :], T_new)
     T = jnp.where(do_pivot[:, :, None], T_new, T)
 
+    if rule == "steepest_edge":
+        con = jnp.where((row_ids < m)[:, :, None], T, 0.0)
+        w_new = 1.0 + jnp.sum(con * con, axis=1)
+        w = jnp.where(do_pivot, w_new, w)
+    elif rule == "devex":
+        onehot_e = (lane == e).astype(dtype)
+        w_e = jnp.sum(w * onehot_e, axis=1, keepdims=True)
+        # leaving variable's column: basis at the pivot row, pre-update
+        # (basis keeps the full-stage row height across both stages — slice
+        # it to this tile's rows before masking with the tile-height iotas)
+        b_rows = basis[:, :row_ids.shape[1]]
+        r = jnp.sum(jnp.where(is_l & (row_ids < m), b_rows, 0), axis=1,
+                    keepdims=True)
+        w_new = jnp.maximum(w, pivrow * pivrow * w_e)
+        w_leave = jnp.maximum(w_e / (pe_safe * pe_safe), 1.0)
+        w_new = jnp.where(lane == r, w_leave, w_new)
+        w_new = jnp.where(lane == e, 1.0, w_new)
+        w_new = jnp.where(lane < n + m, w_new, 1.0)
+        overflow = jnp.max(w_new, axis=1, keepdims=True) > DEVEX_RESET
+        w_new = jnp.where(overflow, 1.0, w_new)
+        w = jnp.where(do_pivot, w_new, w)
+
     basis_rows = jax.lax.broadcasted_iota(jnp.int32, basis.shape, 1)
     basis = jnp.where(do_pivot & (basis_rows == l) & (basis_rows < m),
                       e.astype(jnp.int32), basis)
-    return T, basis
+    return T, basis, w
 
 
-def _tile_step(T, basis, phase, status, iters, *, m: int, n: int, tol: float,
-               thr):
+def _tile_step(T, basis, w, phase, status, iters, *, m: int, n: int,
+               tol: float, thr, rule: str = "dantzig"):
     """One combined two-phase pivot across the (tile_b, R, C) tile.
     Broadcast/reduce formulation (no einsum) so every op lowers to
     VPU-friendly elementwise + lane reductions inside Pallas."""
@@ -120,17 +171,16 @@ def _tile_step(T, basis, phase, status, iters, *, m: int, n: int, tol: float,
     lane = jax.lax.broadcasted_iota(jnp.int32, (tile_b, C), 1)
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_b, R), 1)
 
-    # ---- Step 1: entering column (Dantzig rule, lane-axis argmax) ----------
+    # ---- Step 1: entering column (pricing rule, lane-axis argmax) ----------
     cost = jnp.where((phase == 1), T[:, m + 1, :], T[:, m, :])
     col_ok = lane < (n + m)
     masked_cost = jnp.where(col_ok, cost, -BIG)
-    max_cost = jnp.max(masked_cost, axis=1, keepdims=True)
-    e = jnp.argmax(masked_cost, axis=1)[:, None]                # (tile_b, 1)
+    e, max_cost = _tile_select(masked_cost, w, rule=rule, tol=tol)
     is_opt = max_cost <= tol
 
-    w = T[:, m + 1, C - 1][:, None]
+    p1_obj = T[:, m + 1, C - 1][:, None]
     p1_done = active & (phase == 1) & is_opt
-    infeasible = p1_done & (w > thr)
+    infeasible = p1_done & (p1_obj > thr)
     to_phase2 = p1_done & ~infeasible
     p2_done = active & (phase == 2) & is_opt
 
@@ -144,7 +194,8 @@ def _tile_step(T, basis, phase, status, iters, *, m: int, n: int, tol: float,
     stuck = wants_pivot & no_row & (phase == 1)
     do_pivot = wants_pivot & ~no_row
 
-    T, basis = _tile_pivot(T, basis, col_full, row_ids, e, l, do_pivot, m=m)
+    T, basis, w = _tile_pivot(T, basis, w, col_full, row_ids, lane, e, l,
+                              do_pivot, m=m, n=n, rule=rule)
 
     status = jnp.where(infeasible, INFEASIBLE, status)
     status = jnp.where(unbounded, UNBOUNDED, status)
@@ -152,11 +203,11 @@ def _tile_step(T, basis, phase, status, iters, *, m: int, n: int, tol: float,
     status = jnp.where(p2_done, OPTIMAL, status)
     phase = jnp.where(to_phase2, 2, phase)
     iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
-    return T, basis, phase, status, iters
+    return T, basis, w, phase, status, iters
 
 
-def _tile_step_p2(T, basis, phase, status, iters, *, m: int, n: int,
-                  tol: float):
+def _tile_step_p2(T, basis, w, phase, status, iters, *, m: int, n: int,
+                  tol: float, rule: str = "dantzig"):
     """One phase-2 pivot on the **compacted** (tile_b, R2, C2) tile: no
     artificial columns, no phase-1 row, no phase bookkeeping."""
     tile_b, R2, C2 = T.shape
@@ -169,8 +220,7 @@ def _tile_step_p2(T, basis, phase, status, iters, *, m: int, n: int,
     cost = T[:, m, :]
     col_ok = lane < (n + m)
     masked_cost = jnp.where(col_ok, cost, -BIG)
-    max_cost = jnp.max(masked_cost, axis=1, keepdims=True)
-    e = jnp.argmax(masked_cost, axis=1)[:, None]
+    e, max_cost = _tile_select(masked_cost, w, rule=rule, tol=tol)
     is_opt = max_cost <= tol
     p2_done = active & is_opt
 
@@ -182,12 +232,13 @@ def _tile_step_p2(T, basis, phase, status, iters, *, m: int, n: int,
     unbounded = wants_pivot & no_row
     do_pivot = wants_pivot & ~no_row
 
-    T, basis = _tile_pivot(T, basis, col_full, row_ids, e, l, do_pivot, m=m)
+    T, basis, w = _tile_pivot(T, basis, w, col_full, row_ids, lane, e, l,
+                              do_pivot, m=m, n=n, rule=rule)
 
     status = jnp.where(unbounded, UNBOUNDED, status)
     status = jnp.where(p2_done, OPTIMAL, status)
     iters = iters + (active & ~p2_done).astype(jnp.int32)
-    return T, basis, phase, status, iters
+    return T, basis, w, phase, status, iters
 
 
 def _compact_tile(T, *, m: int, n: int):
@@ -200,6 +251,24 @@ def _compact_tile(T, *, m: int, n: int):
     T2 = T2.at[:, :m + 1, :n + m].set(T[:, :m + 1, :n + m])
     T2 = T2.at[:, :m + 1, C2 - 1].set(T[:, :m + 1, C - 1])
     return T2
+
+
+def _compact_tile_weights(w, *, m: int, n: int):
+    """Phase compaction of the lane-padded pricing-weight row:
+    (B, C) -> (B, C2).  Dropped/pad lanes get weight 1 (never priced —
+    they sit outside the ``lane < n+m`` entering mask)."""
+    _, C2 = compacted_dims(m, n)
+    w2 = jnp.ones(w.shape[:1] + (C2,), w.dtype)
+    return w2.at[:, :n + m].set(w[:, :n + m])
+
+
+def _init_tile_weights(T, row_ids, *, m: int, rule: str):
+    """In-VMEM weight init (mirrors core.pricing.init_weights on the padded
+    layout): exact gammas for steepest_edge, ones otherwise."""
+    if rule == "steepest_edge":
+        con = jnp.where((row_ids < m)[:, :, None], T, 0.0)
+        return 1.0 + jnp.sum(con * con, axis=1)
+    return jnp.ones(T.shape[:1] + (T.shape[2],), T.dtype)
 
 
 def _extract_tile(T2, basis, status, *, m: int, n: int, n_pad: int):
@@ -218,51 +287,59 @@ def _extract_tile(T2, basis, status, *, m: int, n: int, n_pad: int):
 
 def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref,
                     x_ref, obj_ref, status_ref, iters_ref,
-                    *, m: int, n: int, tol: float, max_iters: int):
+                    *, m: int, n: int, tol: float, max_iters: int,
+                    rule: str = "dantzig"):
     """Whole-solve kernel: loop 1 (combined step, full tile) -> in-register
     phase compaction -> loop 2 (phase-2 step, compacted tile) -> extraction.
     The loops share one ``max_iters`` budget (loop 2 resumes loop 1's step
-    counter), mirroring core.simplex.solve_two_phase."""
+    counter), mirroring core.simplex.solve_two_phase.  Pricing weights are
+    initialized and carried entirely in VMEM — selecting a smarter rule
+    changes zero HBM traffic."""
     T = T_ref[...]
     basis = basis_ref[...]
     phase = phase_ref[...]
     thr = thr_ref[...]
-    tile_b = T.shape[0]
+    tile_b, R, _ = T.shape
     status = jnp.full((tile_b, 1), _RUNNING, jnp.int32)
     iters = jnp.zeros((tile_b, 1), jnp.int32)
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_b, R), 1)
+    w = _init_tile_weights(T, row_ids, m=m, rule=rule)
 
     # ---- loop 1: full tile until no LP in the tile still needs phase 1 -----
     def cond1(state):
-        T, basis, phase, status, iters, it = state
+        T, basis, w, phase, status, iters, it = state
         pending = (status == _RUNNING) & (phase == 1)
         return jnp.any(pending) & (it < max_iters)
 
     def body1(state):
-        T, basis, phase, status, iters, it = state
-        T, basis, phase, status, iters = _tile_step(
-            T, basis, phase, status, iters, m=m, n=n, tol=tol, thr=thr)
-        return T, basis, phase, status, iters, it + 1
+        T, basis, w, phase, status, iters, it = state
+        T, basis, w, phase, status, iters = _tile_step(
+            T, basis, w, phase, status, iters, m=m, n=n, tol=tol, thr=thr,
+            rule=rule)
+        return T, basis, w, phase, status, iters, it + 1
 
-    T, basis, phase, status, iters, it1 = jax.lax.while_loop(
-        cond1, body1, (T, basis, phase, status, iters, jnp.int32(0)))
+    T, basis, w, phase, status, iters, it1 = jax.lax.while_loop(
+        cond1, body1, (T, basis, w, phase, status, iters, jnp.int32(0)))
     status = jnp.where((status == _RUNNING) & (phase == 1), ITERATION_LIMIT,
                        status)
 
     # ---- phase compaction + loop 2 on the small tile ------------------------
     T2 = _compact_tile(T, m=m, n=n)
+    w2 = _compact_tile_weights(w, m=m, n=n)
 
     def cond2(state):
-        T2, basis, phase, status, iters, it = state
+        T2, basis, w2, phase, status, iters, it = state
         return jnp.any(status == _RUNNING) & (it < max_iters)
 
     def body2(state):
-        T2, basis, phase, status, iters, it = state
-        T2, basis, phase, status, iters = _tile_step_p2(
-            T2, basis, phase, status, iters, m=m, n=n, tol=tol)
-        return T2, basis, phase, status, iters, it + 1
+        T2, basis, w2, phase, status, iters, it = state
+        T2, basis, w2, phase, status, iters = _tile_step_p2(
+            T2, basis, w2, phase, status, iters, m=m, n=n, tol=tol,
+            rule=rule)
+        return T2, basis, w2, phase, status, iters, it + 1
 
-    T2, basis, phase, status, iters, _ = jax.lax.while_loop(
-        cond2, body2, (T2, basis, phase, status, iters, it1))
+    T2, basis, w2, phase, status, iters, _ = jax.lax.while_loop(
+        cond2, body2, (T2, basis, w2, phase, status, iters, it1))
     status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
 
     x, obj = _extract_tile(T2, basis, status, m=m, n=n, n_pad=x_ref.shape[1])
@@ -272,15 +349,19 @@ def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref,
     iters_ref[...] = iters
 
 
-def _segment_kernel(steps_ref, T_ref, basis_ref, phase_ref, thr_ref,
+def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, phase_ref, thr_ref,
                     status_ref, iters_ref,
-                    T_out, basis_out, phase_out, status_out, iters_out, it_out,
-                    *, stage: str, m: int, n: int, tol: float):
+                    T_out, basis_out, w_out, phase_out, status_out, iters_out,
+                    it_out, *, stage: str, m: int, n: int, tol: float,
+                    rule: str = "dantzig"):
     """Resumable K-pivot segment for the compaction scheduler: state in,
-    state out, step bound read from a scalar input (no recompile per K)."""
+    state out (pricing weights included, so bucket gathers between segments
+    preserve the rule's recurrence), step bound read from a scalar input
+    (no recompile per K)."""
     steps = steps_ref[0, 0]
     T = T_ref[...]
     basis = basis_ref[...]
+    w = w_ref[...]
     phase = phase_ref[...]
     thr = thr_ref[...]
     status = status_ref[...]
@@ -289,31 +370,34 @@ def _segment_kernel(steps_ref, T_ref, basis_ref, phase_ref, thr_ref,
 
     if stage == "p1":
         def cond(state):
-            T, basis, phase, status, iters, it = state
+            T, basis, w, phase, status, iters, it = state
             pending = (status == _RUNNING) & (phase == 1)
             return jnp.any(pending) & (it < steps)
 
         def body(state):
-            T, basis, phase, status, iters, it = state
-            T, basis, phase, status, iters = _tile_step(
-                T, basis, phase, status, iters, m=m, n=n, tol=tol, thr=thr)
-            return T, basis, phase, status, iters, it + 1
+            T, basis, w, phase, status, iters, it = state
+            T, basis, w, phase, status, iters = _tile_step(
+                T, basis, w, phase, status, iters, m=m, n=n, tol=tol,
+                thr=thr, rule=rule)
+            return T, basis, w, phase, status, iters, it + 1
     else:
         def cond(state):
-            T, basis, phase, status, iters, it = state
+            T, basis, w, phase, status, iters, it = state
             return jnp.any(status == _RUNNING) & (it < steps)
 
         def body(state):
-            T, basis, phase, status, iters, it = state
-            T, basis, phase, status, iters = _tile_step_p2(
-                T, basis, phase, status, iters, m=m, n=n, tol=tol)
-            return T, basis, phase, status, iters, it + 1
+            T, basis, w, phase, status, iters, it = state
+            T, basis, w, phase, status, iters = _tile_step_p2(
+                T, basis, w, phase, status, iters, m=m, n=n, tol=tol,
+                rule=rule)
+            return T, basis, w, phase, status, iters, it + 1
 
-    T, basis, phase, status, iters, it = jax.lax.while_loop(
-        cond, body, (T, basis, phase, status, iters, jnp.int32(0)))
+    T, basis, w, phase, status, iters, it = jax.lax.while_loop(
+        cond, body, (T, basis, w, phase, status, iters, jnp.int32(0)))
 
     T_out[...] = T
     basis_out[...] = basis
+    w_out[...] = w
     phase_out[...] = phase
     status_out[...] = status
     iters_out[...] = iters
@@ -322,19 +406,21 @@ def _segment_kernel(steps_ref, T_ref, basis_ref, phase_ref, thr_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stage", "m", "n", "tile_b", "tol", "interpret"))
-def segment_pallas(steps, T, basis, phase, thr, status, iters, *, stage: str,
-                   m: int, n: int, tile_b: int, tol: float,
-                   interpret: bool = True):
+    static_argnames=("stage", "m", "n", "tile_b", "tol", "interpret",
+                     "pricing"))
+def segment_pallas(steps, T, basis, w, phase, thr, status, iters, *,
+                   stage: str, m: int, n: int, tile_b: int, tol: float,
+                   interpret: bool = True, pricing: str = "dantzig"):
     """Run one scheduler segment (<= ``steps`` pivots) over all tiles.
-    Returns (T, basis, phase, status, iters, it) with ``it`` the per-tile
+    Returns (T, basis, w, phase, status, iters, it) with ``it`` the per-tile
     executed step count broadcast over the tile's rows."""
     B, R_, C_ = T.shape
     grid = (B // tile_b,)
     Rb = basis.shape[1]
+    Cw = w.shape[1]
     steps_arr = jnp.full((1, 1), steps, jnp.int32)
     kernel = functools.partial(_segment_kernel, stage=stage, m=m, n=n,
-                               tol=float(tol))
+                               tol=float(tol), rule=pricing)
     vec = lambda i: (i, 0)  # noqa: E731
     return pl.pallas_call(
         kernel,
@@ -343,6 +429,7 @@ def segment_pallas(steps, T, basis, phase, thr, status, iters, *, stage: str,
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
             pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
             pl.BlockSpec((tile_b, Rb), vec),
+            pl.BlockSpec((tile_b, Cw), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
@@ -351,6 +438,7 @@ def segment_pallas(steps, T, basis, phase, thr, status, iters, *, stage: str,
         out_specs=[
             pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
             pl.BlockSpec((tile_b, Rb), vec),
+            pl.BlockSpec((tile_b, Cw), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
@@ -359,13 +447,14 @@ def segment_pallas(steps, T, basis, phase, thr, status, iters, *, stage: str,
         out_shape=[
             jax.ShapeDtypeStruct((B, R_, C_), T.dtype),
             jax.ShapeDtypeStruct((B, Rb), jnp.int32),
+            jax.ShapeDtypeStruct((B, Cw), T.dtype),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(steps_arr, T, basis, phase, thr, status, iters)
+    )(steps_arr, T, basis, w, phase, thr, status, iters)
 
 
 def pick_tile_b(m: int, n: int, vmem_budget: int = 8 * 2 ** 20,
@@ -423,12 +512,13 @@ def build_padded_tableau(A: jax.Array, b: jax.Array, c: jax.Array,
 @functools.partial(
     jax.jit,
     static_argnames=("m", "n", "tile_b", "max_iters", "tol", "feas_tol",
-                     "interpret"))
+                     "interpret", "pricing"))
 def simplex_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
                    tol: float = 1e-6, feas_tol: float = 1e-5,
-                   interpret: bool = True):
+                   interpret: bool = True, pricing: str = "dantzig"):
     """Solve the batch with the phase-compacted Pallas tile kernel. Returns
-    (x, obj, status, iters) for the original (unpadded) batch."""
+    (x, obj, status, iters) for the original (unpadded) batch.  ``pricing``
+    selects the entering-column rule (core/pricing.py)."""
     B = A.shape[0]
     T, basis, phase, thr, R, C = build_padded_tableau(A, b, c, tile_b,
                                                       feas_tol=feas_tol)
@@ -437,7 +527,7 @@ def simplex_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
     n_pad = _round_up(n, 128)
 
     kernel = functools.partial(_simplex_kernel, m=m, n=n, tol=tol,
-                               max_iters=max_iters)
+                               max_iters=max_iters, rule=pricing)
     x, obj, status, iters = pl.pallas_call(
         kernel,
         grid=grid,

@@ -1,0 +1,180 @@
+"""Pricing-engine invariance (core/pricing.py).
+
+A pricing rule changes *which* improving column enters — the path through
+the basis graph — but never the optimality/infeasibility/unboundedness
+certificate.  So for every rule: statuses must match Dantzig and the float64
+oracle, objectives must agree to tolerance, and each rule must be
+*self-consistent* across every solve path (pure JAX, compaction scheduler,
+Pallas interpret, shard_map): same rule => same pivot sequence => bitwise
+identical iterations/status regardless of which engine executes it.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    OPTIMAL,
+    PRICING_RULES,
+    LPBatch,
+    random_lp_batch,
+    random_sparse_lp_batch,
+    solve_batched,
+    solve_batched_compacted,
+    solve_batched_jax,
+    solve_batched_reference,
+    solve_shard_map,
+)
+from repro.core.compaction import auto_segment_k
+from repro.core.lp import default_max_iters
+from repro.distributed.sharding import make_mesh
+from repro.kernels import solve_batched_pallas
+
+
+def _mixed_batch(rng, B_each=8, m=10, n=8):
+    f = random_lp_batch(rng, B_each, m, n, feasible_start=True)
+    p1 = random_lp_batch(rng, B_each, m, n, feasible_start=False)
+    return LPBatch(A=np.concatenate([f.A, p1.A]),
+                   b=np.concatenate([f.b, p1.b]),
+                   c=np.concatenate([f.c, p1.c]))
+
+
+def _assert_same_solution(a, b, rtol=1e-4):
+    np.testing.assert_array_equal(a.status, b.status)
+    ok = a.status == OPTIMAL
+    np.testing.assert_allclose(a.objective[ok], b.objective[ok], rtol=rtol)
+
+
+@pytest.mark.parametrize("rule", PRICING_RULES)
+def test_rule_matches_reference_and_dantzig_dense(rule):
+    """Dense mixed batch: each rule agrees with its own float64 oracle on
+    status/objective, and with Dantzig on the certificate."""
+    batch = _mixed_batch(np.random.default_rng(11))
+    ref = solve_batched_reference(batch, pricing=rule)
+    jx = solve_batched_jax(batch, pricing=rule)
+    _assert_same_solution(ref, jx)
+    dz = solve_batched_jax(batch)
+    _assert_same_solution(dz, jx)
+
+
+@pytest.mark.parametrize("rule", ["steepest_edge", "devex"])
+def test_rule_matches_reference_sparse(rule):
+    batch = random_sparse_lp_batch(np.random.default_rng(7), B=12, m=14, n=10)
+    ref = solve_batched_reference(batch, pricing=rule)
+    jx = solve_batched_jax(batch, pricing=rule)
+    _assert_same_solution(ref, jx)
+    dz = solve_batched_jax(batch)
+    _assert_same_solution(dz, jx)
+
+
+@pytest.mark.parametrize("rule", PRICING_RULES)
+def test_rule_survives_compaction_bitwise(rule):
+    """Active-set compaction gathers must preserve the pricing-weight state:
+    the scheduled solve is bitwise the monolithic solve under every rule."""
+    batch = _mixed_batch(np.random.default_rng(23))
+    mono = solve_batched_jax(batch, pricing=rule)
+    sched = solve_batched_compacted(batch, pricing=rule, segment_k=3,
+                                    compact_threshold=0.9)
+    np.testing.assert_array_equal(mono.status, sched.status)
+    np.testing.assert_array_equal(mono.iterations, sched.iterations)
+    np.testing.assert_array_equal(mono.x, sched.x)
+    np.testing.assert_array_equal(np.nan_to_num(mono.objective),
+                                  np.nan_to_num(sched.objective))
+
+
+@pytest.mark.parametrize("rule", PRICING_RULES)
+@pytest.mark.parametrize("m,n", [(10, 8), (7, 9)])
+def test_rule_pallas_interpret_matches_jax(rule, m, n):
+    """Pallas tile kernels (interpret) execute the same per-rule pivot
+    sequence as the pure-JAX solver, whole-solve and segmented alike.
+    m=7 covers the tile geometry where the compacted row pad (8) differs
+    from the full-stage pad (16)."""
+    batch = _mixed_batch(np.random.default_rng(31), B_each=9, m=m, n=n)
+    jx = solve_batched_jax(batch, pricing=rule)
+    pal = solve_batched_pallas(batch, tile_b=8, pricing=rule)
+    np.testing.assert_array_equal(jx.status, pal.status)
+    np.testing.assert_array_equal(jx.iterations, pal.iterations)
+    ok = jx.status == OPTIMAL
+    np.testing.assert_allclose(jx.objective[ok], pal.objective[ok], rtol=1e-5)
+    palc = solve_batched_pallas(batch, tile_b=8, pricing=rule,
+                                compaction=True, segment_k=4)
+    np.testing.assert_array_equal(pal.status, palc.status)
+    np.testing.assert_array_equal(pal.iterations, palc.iterations)
+
+
+@pytest.mark.parametrize("rule", ["steepest_edge", "devex"])
+def test_rule_shard_map_single_device(rule):
+    """pricing= plumbs through solve_shard_map (1-device mesh here; the
+    multi-device path is covered by tests/test_distributed.py)."""
+    mesh = make_mesh((1,), ("data",))
+    batch = _mixed_batch(np.random.default_rng(41), B_each=6)
+    jx = solve_batched_jax(batch, pricing=rule)
+    sm = solve_shard_map(batch, mesh, pricing=rule)
+    sms = solve_shard_map(batch, mesh, pricing=rule, segment_k=4)
+    for res in (sm, sms):
+        np.testing.assert_array_equal(jx.status, res.status)
+        np.testing.assert_array_equal(jx.iterations, res.iterations)
+
+
+@pytest.mark.parametrize("rule", ["steepest_edge", "devex"])
+def test_rule_phase_compaction_invariant(rule):
+    """Dropping artificial columns must not change the rule's pivot path:
+    weight state for priceable columns is layout-independent (devex pins
+    non-priceable slots to 1, steepest-edge recomputes from live columns),
+    so the single-loop and two-loop solves are bitwise identical."""
+    batch = _mixed_batch(np.random.default_rng(59), B_each=12)
+    two_loop = solve_batched_jax(batch, pricing=rule)
+    single = solve_batched_jax(batch, pricing=rule, phase_compaction=False)
+    np.testing.assert_array_equal(two_loop.status, single.status)
+    np.testing.assert_array_equal(two_loop.iterations, single.iterations)
+    np.testing.assert_array_equal(two_loop.x, single.x)
+
+
+def test_steepest_edge_cuts_pivots():
+    """The reason this engine exists: steepest-edge needs meaningfully fewer
+    pivots than Dantzig on the paper's mixed workload."""
+    batch = _mixed_batch(np.random.default_rng(5), B_each=32, m=14, n=14)
+    dz = solve_batched_jax(batch)
+    se = solve_batched_jax(batch, pricing="steepest_edge")
+    assert se.iterations.mean() < 0.9 * dz.iterations.mean()
+
+
+def test_sorted_compacted_unpermutes_correctly():
+    """sort_by_difficulty + compaction + non-default pricing: the difficulty
+    pre-pass reorders LPs into waves and results must come back unpermuted —
+    bitwise equal to the unsorted solve of the same rule."""
+    batch = _mixed_batch(np.random.default_rng(19), B_each=16)
+    plain = solve_batched(batch, chunk_size=8, compaction=True,
+                          pricing="steepest_edge", segment_k=4)
+    srt = solve_batched(batch, chunk_size=8, compaction=True,
+                        pricing="steepest_edge", segment_k=4,
+                        sort_by_difficulty=True)
+    np.testing.assert_array_equal(plain.status, srt.status)
+    np.testing.assert_array_equal(plain.iterations, srt.iterations)
+    np.testing.assert_array_equal(plain.x, srt.x)
+    np.testing.assert_array_equal(np.nan_to_num(plain.objective),
+                                  np.nan_to_num(srt.objective))
+
+
+def test_auto_segment_k_and_survivor_curve():
+    """segment_k=None derives the segment length from the iteration cap, and
+    SegmentStat records a non-increasing survivor curve ending at zero."""
+    m = n = 10
+    assert auto_segment_k(m, n) == max(4, default_max_iters(m, n) // 64)
+    batch = _mixed_batch(np.random.default_rng(3), B_each=16, m=m, n=n)
+    stats = []
+    auto = solve_batched_compacted(batch, segment_k=None, stats_out=stats)
+    explicit = solve_batched_compacted(batch, segment_k=auto_segment_k(m, n))
+    np.testing.assert_array_equal(auto.status, explicit.status)
+    np.testing.assert_array_equal(auto.iterations, explicit.iterations)
+    curve = [s.survivors for s in stats]
+    assert curve, "expected at least one segment"
+    assert all(a >= b for a, b in zip(curve, curve[1:])), curve
+    assert curve[-1] == 0
+
+
+def test_unknown_rule_raises():
+    with pytest.raises(ValueError, match="unknown pricing rule"):
+        solve_batched_jax(_mixed_batch(np.random.default_rng(0), B_each=1),
+                          pricing="bland")
+    with pytest.raises(ValueError, match="pricing"):
+        solve_batched(_mixed_batch(np.random.default_rng(0), B_each=1),
+                      solver=lambda b: None, pricing="steepest_edge")
