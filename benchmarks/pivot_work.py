@@ -18,10 +18,24 @@ On top of that, a per-rule section runs the full two-level engine under each
 pricing rule (core/pricing.py: dantzig / steepest_edge / devex) and records
 per-LP executed pivots, element updates, wall-clock, and that every rule
 agrees with Dantzig on statuses (rules change the path, never the
-certificate).  Results land in ``BENCH_pivot_work.json`` next to this file
-so future PRs have a perf trajectory to beat.
+certificate).
+
+A per-backend section (``workloads[].backends``, ``--backend`` selects)
+crosses the tableau engine with the revised-simplex engine
+(core/revised.py, dantzig + partial pricing): executed pivots, wall-clock,
+tableau-element-equivalent updates (`revised_elements` — state written per
+pivot, the unit the tableau's rank-1 update is charged in) and the honest
+flops model (`analysis.lp_perf.revised_pivot_flops`, where the dense-square
+tableau still wins and the crossover sits at n/m ~ 2-4), plus a
+statuses-match check against the tableau engine.
+
+Results land in ``BENCH_pivot_work.json`` next to this file so future PRs
+have a perf trajectory to beat; a ``quick_workloads`` section re-runs the
+--quick configuration (B=128) so scripts/bench_gate.py can diff a CI smoke
+run against the committed baseline on exactly matching workloads.
 
   PYTHONPATH=src python -m benchmarks.pivot_work [--quick] [--out PATH]
+                                                 [--backend tableau|revised|all]
 """
 from __future__ import annotations
 
@@ -32,8 +46,10 @@ import time
 
 import numpy as np
 
-from repro.core import (LPBatch, random_lp_batch, solve_batched_compacted,
-                        solve_batched_jax)
+from repro.analysis.lp_perf import revised_pivot_flops, tableau_pivot_flops
+from repro.core import (LPBatch, random_lp_batch, revised_elements,
+                        solve_batched_compacted, solve_batched_jax,
+                        solve_batched_revised, solve_batched_revised_compacted)
 from repro.core.compaction import auto_segment_k, total_elements, total_steps
 from repro.core.lp import default_max_iters
 from repro.core.pricing import PRICING_RULES
@@ -62,9 +78,72 @@ def mixed_batch(m: int, n: int, B: int, seed: int = 0) -> LPBatch:
     return LPBatch(A=batch.A[order], b=batch.b[order], c=batch.c[order])
 
 
+def measure_backends(batch: LPBatch, sched, segment_k: int, iters: int) -> dict:
+    """Per-backend rows: the revised engine (dantzig + partial pricing) vs
+    the tableau engine, monolithic and through the compaction scheduler.
+    ``sched`` is the tableau engine's compaction-scheduled result (the
+    statuses-match reference).
+
+    On CPU the revised engine's triangular/eta solves are latency-bound
+    (hundreds of tiny ops per lockstep step), so at the Table-2 tail the
+    measured rows use a leading slice of the same workload (``B`` in the
+    row records it): statuses are compared against the tableau result on
+    that slice, and the element-reduction stays honest because the
+    executed-work unit is per pivot — the tableau side is re-quantified on
+    the identical slice."""
+    m, n = batch.m, batch.n
+    B = batch.batch
+    # full batch through 28x28; 512 at 50x50; 256 at 100x100+
+    B_rev = min(B, 512 if m < 100 else 256) if m >= 50 else B
+    sub = LPBatch(A=np.asarray(batch.A)[:B_rev],
+                  b=np.asarray(batch.b)[:B_rev],
+                  c=np.asarray(batch.c)[:B_rev])
+    tab_status = np.asarray(sched.status)[:B_rev]
+    tab_iters = np.asarray(sched.iterations)[:B_rev].astype(np.int64)
+    steps_tab = int(tab_iters.max()) + 1
+    out = {
+        "tableau": {
+            "pivots_mean": float(sched.iterations.mean()),
+            "elements_per_pivot": tableau_elements(m, n, compacted=True),
+            "flops_per_pivot": tableau_pivot_flops(m, n, compacted=True),
+            "statuses_match_tableau": True,
+        }
+    }
+    for rule in ("dantzig", "partial"):
+        partial = rule == "partial"
+        res = solve_batched_revised(sub, pricing=rule)
+        wall = timeit(lambda: solve_batched_revised(sub, pricing=rule),
+                      warmup=0, iters=iters)
+        stats = []
+        res_sched = solve_batched_revised_compacted(
+            sub, segment_k=segment_k, pricing=rule, stats_out=stats)
+        steps = int(res.iterations.max()) + 1
+        per_pivot = revised_elements(m, n, partial=partial)
+        out[f"revised_{rule}"] = {
+            "B": B_rev,
+            "pivots_mean": float(res.iterations.astype(np.int64).mean()),
+            "pivots_max": int(res.iterations.max()),
+            "elements_per_pivot": per_pivot,
+            "flops_per_pivot": revised_pivot_flops(m, n, partial=partial),
+            "elements_lockstep": int(steps * B_rev * per_pivot),
+            "elements_scheduled": int(total_elements(stats)),
+            "wall_s": wall,
+            "statuses_match_tableau": bool(
+                np.array_equal(res.status, tab_status)),
+            "scheduled_statuses_match": bool(
+                np.array_equal(res_sched.status, tab_status)),
+        }
+        # tableau-element-equivalent reduction at matching (lockstep)
+        # granularity on the identical LP slice: steps x slots x per-pivot
+        out[f"revised_{rule}"]["element_reduction_vs_tableau"] = (
+            steps_tab * B_rev * tableau_elements(m, n)
+            / max(1, out[f"revised_{rule}"]["elements_lockstep"]))
+    return out
+
+
 def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
             compact_threshold: float = 0.5, iters: int = 2,
-            seed: int = 0) -> dict:
+            seed: int = 0, backends: str = "all") -> dict:
     batch = mixed_batch(m, n, B, seed)
     max_iters = default_max_iters(m, n)
     if segment_k is None:
@@ -135,6 +214,9 @@ def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
         rules[rule]["pivot_cut_vs_dantzig"] = (
             1.0 - rules[rule]["pivots_mean"] / max(dz_mean, 1e-12))
 
+    backend_rows = (measure_backends(batch, sched, segment_k, iters)
+                    if backends in ("all", "revised") else {})
+
     return {
         "m": m, "n": n, "B": B, "mixed": True,
         "segment_k": segment_k, "compact_threshold": compact_threshold,
@@ -160,6 +242,7 @@ def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
             "survivor_curve": [s.survivors for s in stats_sched],
         },
         "rules": rules,
+        "backends": backend_rows,
         "reduction_phase_compacted": elems_lock / max(1, elems_pc),
         "reduction_scheduled": elems_lock / max(1, elems_sched),
         "reduction_steepest_edge": elems_lock / max(
@@ -167,21 +250,11 @@ def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
     }
 
 
-def run(quick: bool = False, B: int = 4096, out: str | None = None) -> dict:
-    sizes = QUICK_SIZES if quick else SIZES
-    if quick:
-        B = min(B, 128)
-    if out is None:
-        out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
-                           "BENCH_pivot_work.json")
-    out = os.path.abspath(out)
-    # fail on an unwritable destination *before* burning benchmark minutes
-    os.makedirs(os.path.dirname(out), exist_ok=True)
+def _measure_rows(sizes, B: int, quick: bool, backends: str) -> list:
     rows = []
-    t0 = time.time()
     for (m, n) in sizes:
         iters = 1 if (quick or m >= 50) else 2
-        r = measure(m, n, B, iters=iters)
+        r = measure(m, n, B, iters=iters, backends=backends)
         rows.append(r)
         print(f"pivot_work m={m} n={n} B={B}: "
               f"elems lockstep={r['lockstep']['elements']:.3e} "
@@ -194,11 +267,44 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None) -> dict:
                   f"(cut {rr['pivot_cut_vs_dantzig']:+.1%}) "
                   f"elems={rr['elements']:.3e} wall={rr['wall_s']:.3f}s "
                   f"statuses_match={rr['statuses_match_dantzig']}")
+        for name, bb in r["backends"].items():
+            if name == "tableau":
+                continue
+            print(f"  backend={name:<15} pivots_mean={bb['pivots_mean']:8.2f} "
+                  f"elems={bb['elements_lockstep']:.3e} "
+                  f"(x{bb['element_reduction_vs_tableau']:.1f} fewer element "
+                  f"updates) wall={bb['wall_s']:.3f}s "
+                  f"statuses_match={bb['statuses_match_tableau']}")
+    return rows
+
+
+def run(quick: bool = False, B: int = 4096, out: str | None = None,
+        backends: str = "all") -> dict:
+    sizes = QUICK_SIZES if quick else SIZES
+    if quick:
+        B = min(B, 128)
+    if out is None:
+        out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                           "BENCH_pivot_work.json")
+    out = os.path.abspath(out)
+    # fail on an unwritable destination *before* burning benchmark minutes
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    t0 = time.time()
+    rows = _measure_rows(sizes, B, quick, backends)
+    if quick:
+        quick_rows = rows
+    else:
+        # the --quick configuration again, so scripts/bench_gate.py can diff
+        # a CI smoke run against this file on exactly matching workloads
+        print("-- quick_workloads (bench_gate baseline) --")
+        quick_rows = _measure_rows(QUICK_SIZES, 128, True, backends)
     result = {
         "benchmark": "pivot_work",
         "quick": quick,
+        "backends": backends,
         "elapsed_s": time.time() - t0,
         "workloads": rows,
+        "quick_workloads": quick_rows,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
@@ -212,8 +318,13 @@ def main() -> None:
                     help="short smoke: small sizes, B=128, 1 timing iter")
     ap.add_argument("--batch", type=int, default=4096)
     ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--backend", choices=("tableau", "revised", "all"),
+                    default="all",
+                    help="which solver engines get per-backend rows "
+                         "(tableau base metrics are always measured; "
+                         "'tableau' skips the revised-engine rows)")
     args = ap.parse_args()
-    run(quick=args.quick, B=args.batch, out=args.out)
+    run(quick=args.quick, B=args.batch, out=args.out, backends=args.backend)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,143 @@
+"""Bench-regression gate: diff a pivot-work smoke run against the committed
+baseline and fail CI when the work-elimination engine or a pricing rule
+regresses.
+
+    python scripts/bench_gate.py /tmp/pivot_work_smoke.json \
+        [--baseline BENCH_pivot_work.json] [--rel-drop 0.2]
+
+Matching: smoke workloads are compared against the baseline's
+``quick_workloads`` section (the committed bench re-runs the --quick
+configuration exactly so (m, n, B) match; ``workloads`` is the fallback for
+older baselines).  On every matching workload the gate fails when:
+
+* solver statuses diverge anywhere (backends, scheduler, pricing rules) —
+  these are exact invariants, no tolerance;
+* ``reduction_scheduled`` drops more than ``--rel-drop`` (default 20%)
+  relative to the baseline;
+* any pricing rule's ``pivot_cut_vs_dantzig`` drops more than ``--rel-drop``
+  relative, with a small absolute slack (``--cut-slack``) so rules whose
+  baseline cut is already ~0 (dantzig itself, devex on tiny LPs) don't gate
+  on noise;
+* any revised-backend row's ``element_reduction_vs_tableau`` drops more than
+  ``--rel-drop`` relative (only checked when the smoke measured backend
+  rows, i.e. was not run with --backend tableau).
+
+Pivot counts and reductions are deterministic for a given seed/B/software
+stack, so on one machine the gate only fires on real behavior changes; the
+relative margin absorbs cross-platform float differences.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_pivot_work.json")
+
+
+def _key(w: dict):
+    return (w["m"], w["n"], w["B"])
+
+
+def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
+         cut_slack: float = 0.02) -> list:
+    """Returns a list of human-readable failure strings (empty == pass)."""
+    failures = []
+    base_rows = {_key(w): w
+                 for w in (baseline.get("quick_workloads")
+                           or baseline.get("workloads", []))}
+    check_backends = current.get("backends", "all") in ("all", "revised")
+    matched = 0
+    for w in current.get("workloads", []):
+        b = base_rows.get(_key(w))
+        if b is None:
+            continue
+        matched += 1
+        tag = f"{w['m']}x{w['n']} B={w['B']}"
+
+        if not w.get("statuses_identical", True):
+            failures.append(f"{tag}: solver statuses diverged")
+        floor = b["reduction_scheduled"] * (1.0 - rel_drop)
+        if w["reduction_scheduled"] < floor:
+            failures.append(
+                f"{tag}: reduction_scheduled {w['reduction_scheduled']:.3f} "
+                f"< {floor:.3f} (baseline {b['reduction_scheduled']:.3f} "
+                f"- {rel_drop:.0%})")
+
+        for rule, br in b.get("rules", {}).items():
+            cr = w.get("rules", {}).get(rule)
+            if cr is None:
+                failures.append(f"{tag}: pricing rule {rule!r} missing")
+                continue
+            if not cr.get("statuses_match_dantzig", True):
+                failures.append(f"{tag}: rule {rule!r} status divergence")
+            cut_floor = (br["pivot_cut_vs_dantzig"] * (1.0 - rel_drop)
+                         - cut_slack)
+            if cr["pivot_cut_vs_dantzig"] < cut_floor:
+                failures.append(
+                    f"{tag}: rule {rule!r} pivot_cut_vs_dantzig "
+                    f"{cr['pivot_cut_vs_dantzig']:.3f} < {cut_floor:.3f} "
+                    f"(baseline {br['pivot_cut_vs_dantzig']:.3f} "
+                    f"- {rel_drop:.0%})")
+
+        if not check_backends:
+            continue
+        for name, bb in (b.get("backends") or {}).items():
+            if name == "tableau":
+                continue
+            cb = (w.get("backends") or {}).get(name)
+            if cb is None:
+                failures.append(f"{tag}: backend row {name!r} missing")
+                continue
+            if not cb.get("statuses_match_tableau", True):
+                failures.append(
+                    f"{tag}: backend {name!r} statuses diverged from tableau")
+            red_floor = (bb["element_reduction_vs_tableau"]
+                         * (1.0 - rel_drop))
+            if cb["element_reduction_vs_tableau"] < red_floor:
+                failures.append(
+                    f"{tag}: backend {name!r} element_reduction_vs_tableau "
+                    f"{cb['element_reduction_vs_tableau']:.2f} < "
+                    f"{red_floor:.2f} (baseline "
+                    f"{bb['element_reduction_vs_tableau']:.2f} "
+                    f"- {rel_drop:.0%})")
+    if matched == 0:
+        failures.append(
+            "no workload in the smoke run matches the baseline on (m, n, B) "
+            "— regenerate BENCH_pivot_work.json (its quick_workloads section "
+            "is the gate's comparison target)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="smoke-run JSON (benchmarks.pivot_work "
+                                    "--quick output)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed bench JSON (default: repo "
+                         "BENCH_pivot_work.json)")
+    ap.add_argument("--rel-drop", type=float, default=0.2,
+                    help="max tolerated relative drop per metric")
+    ap.add_argument("--cut-slack", type=float, default=0.02,
+                    help="absolute slack on pivot_cut_vs_dantzig floors")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = gate(current, baseline, rel_drop=args.rel_drop,
+                    cut_slack=args.cut_slack)
+    if failures:
+        print("bench gate FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(f"bench gate OK ({os.path.basename(args.current)} vs "
+          f"{os.path.basename(args.baseline)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,26 +1,58 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + a short executed-work benchmark smoke.
+# CI entry point: tier-1 tests + executed-work benchmark smoke + bench gate.
 #
-#   scripts/check.sh          # full tier-1 pytest + quick pivot-work smoke
-#   scripts/check.sh --fast   # pytest only
+#   scripts/check.sh                       # tier-1 pytest + tableau smoke + gate
+#   scripts/check.sh --fast                # pytest only
+#   scripts/check.sh --backend revised     # suite + smoke for the revised engine
+#   scripts/check.sh --backend all         # suite + smoke once per backend
 #
-# The smoke run writes /tmp/pivot_work_smoke.json (never the committed
-# BENCH_pivot_work.json) and fails if solver statuses diverge or the
-# work-elimination engine regresses below a loose floor.
+# Per backend the smoke run writes /tmp/pivot_work_smoke_<backend>.json
+# (never the committed BENCH_pivot_work.json), asserts the absolute
+# invariants (identical statuses across solvers/rules/backends, the
+# work-elimination engine still eliminating work), and then
+# scripts/bench_gate.py diffs it against the committed baseline so a >20%
+# relative regression of reduction_scheduled / any rule's pivot cut /
+# the revised backend's element reduction fails CI here rather than in a
+# future bench run.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+BACKENDS="tableau"
+FAST=0
+while [[ $# -gt 0 ]]; do
+  case "$1" in
+    --fast) FAST=1 ;;
+    --backend) shift; BACKENDS="${1:?--backend needs a value}" ;;
+    --backend=*) BACKENDS="${1#*=}" ;;
+    *) echo "usage: $0 [--fast] [--backend tableau|revised|all]" >&2; exit 2 ;;
+  esac
+  shift
+done
+case "$BACKENDS" in
+  all) BACKENDS="tableau revised" ;;
+  tableau|revised) ;;
+  *) echo "unknown backend '$BACKENDS' (tableau|revised|all)" >&2; exit 2 ;;
+esac
+
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 pytest =="
-python -m pytest -x -q
+if [[ "$FAST" == 1 ]]; then
+  echo "== tier-1 pytest (fast) =="
+  python -m pytest -x -q
+  echo "ALL CHECKS PASSED"
+  exit 0
+fi
 
-if [[ "${1:-}" != "--fast" ]]; then
-  echo "== pivot-work + pricing smoke (benchmarks/pivot_work.py --quick) =="
-  python -m benchmarks.pivot_work --quick --out /tmp/pivot_work_smoke.json
-  python - <<'EOF'
-import json
-d = json.load(open("/tmp/pivot_work_smoke.json"))
+for backend in $BACKENDS; do
+  echo "== tier-1 pytest (backend=$backend) =="
+  python -m pytest -x -q
+
+  smoke="/tmp/pivot_work_smoke_${backend}.json"
+  echo "== pivot-work + pricing smoke (backend=$backend) =="
+  python -m benchmarks.pivot_work --quick --backend "$backend" --out "$smoke"
+  SMOKE_JSON="$smoke" python - <<'EOF'
+import json, os
+d = json.load(open(os.environ["SMOKE_JSON"]))
 for w in d["workloads"]:
     assert w["statuses_identical"], f"status divergence at {w['m']}x{w['n']}"
     assert w["reduction_scheduled"] >= 1.0, \
@@ -32,6 +64,13 @@ for w in d["workloads"]:
             f"pricing rule {rule} diverged on statuses at {w['m']}x{w['n']}"
     assert w["rules"]["steepest_edge"]["pivot_cut_vs_dantzig"] > 0.0, \
         f"steepest_edge did not cut pivots at {w['m']}x{w['n']}"
+    # backend smoke: the revised engine must agree with the tableau engine
+    # on every status, monolithic and through the compaction scheduler
+    for name, bb in w.get("backends", {}).items():
+        assert bb["statuses_match_tableau"], \
+            f"backend {name} diverged on statuses at {w['m']}x{w['n']}"
+        assert bb.get("scheduled_statuses_match", True), \
+            f"backend {name} diverged under compaction at {w['m']}x{w['n']}"
 print("pivot-work smoke OK:",
       ", ".join(f"{w['m']}x{w['n']}: x{w['reduction_scheduled']:.2f}"
                 for w in d["workloads"]))
@@ -39,7 +78,15 @@ print("pricing smoke OK:",
       ", ".join(f"{w['m']}x{w['n']}: se cut "
                 f"{w['rules']['steepest_edge']['pivot_cut_vs_dantzig']:.1%}"
                 for w in d["workloads"]))
+if d["workloads"][0].get("backends"):
+    print("backend smoke OK:",
+          ", ".join(f"{w['m']}x{w['n']}: revised x"
+                    f"{w['backends']['revised_dantzig']['element_reduction_vs_tableau']:.1f}"
+                    for w in d["workloads"]))
 EOF
-fi
+
+  echo "== bench-regression gate (backend=$backend) =="
+  python scripts/bench_gate.py "$smoke"
+done
 
 echo "ALL CHECKS PASSED"

@@ -30,6 +30,16 @@ kernel, producing the numbers cited in EXPERIMENTS.md §Perf:
                            (core/pricing.py), so the work models quantify
                            how fewer pivots multiply against both
                            compaction levels (`compare_pricing`).
+8. revised simplex       — flops-per-pivot model for the basis-factor
+                           backend (core/revised.py): BTRAN/FTRAN
+                           triangular+eta solves O(m^2), pricing O(m*C),
+                           amortized LU refactorization — vs the tableau's
+                           O(m*(n+2m)) rank-1 update.  `revised_crossover`
+                           locates the n/m frontier where the revised
+                           backend wins on *flops*; on element *updates*
+                           (state written per pivot, `revised_elements`)
+                           it wins everywhere because the (m, n+2m) data
+                           block is immutable.
 
   PYTHONPATH=src python -m repro.analysis.lp_perf
 """
@@ -39,7 +49,8 @@ import numpy as np
 
 from repro.core import LPBatch, random_lp_batch, solve_batched_reference_detailed
 from repro.core.compaction import next_bucket
-from repro.core.pricing import PRICING_RULES
+from repro.core.pricing import PRICING_RULES, partial_priced_candidates
+from repro.core.revised import auto_refactor_period, revised_elements  # noqa: F401  (re-export: the element-update side of the model)
 from repro.core.simplex import flops_per_pivot, tableau_elements
 
 
@@ -130,6 +141,59 @@ def element_updates_scheduled(p1_iters: np.ndarray, iters: np.ndarray,
     sim.run_stage(length=rem, retire_at=rem,
                   per=tableau_elements(m, n, compacted=True))
     return sim.elems
+
+
+def revised_pivot_flops(m: int, n: int, *, refactor_period: int | None = None,
+                        partial: bool = False,
+                        block: int | None = None) -> float:
+    """Honest flops of one revised-simplex pivot (core/revised.py).
+
+    * BTRAN + FTRAN: two LU solves (2 m^2 flops each) ......... 4 m^2
+    * eta passes: 2 applications x avg K/2 etas x 3 flops/el .. 3 K m
+    * pricing matvec over priced candidates ................... 2 m C_priced
+      (full: C = n+m; partial: one block + the amortized full
+       fallback, ~once per block cycle)
+    * amortized refactorization: LU (2/3 m^3) + basis gather .. /K
+    * x_B / eta update ........................................ 5 m
+
+    Unlike ``revised_elements`` (state *written*, where revised wins at
+    every size because the tableau's rank-1 write never happens), the flops
+    model charges triangular-solve reads — so the tableau backend, at
+    2 flops per tableau element, stays cheaper on *square* dense LPs and the
+    revised method pays off as n grows past a few multiples of m (or under
+    sparsity the dense model can't see): the classic textbook crossover,
+    located by `revised_crossover`."""
+    K = refactor_period or auto_refactor_period(m, n)
+    ncand = n + m
+    priced = partial_priced_candidates(ncand, block, partial=partial)
+    solves = 4.0 * m * m
+    etas = 3.0 * K * m
+    pricing = 2.0 * m * priced
+    refac = (2.0 * m ** 3 / 3.0 + m * m) / K
+    return solves + etas + pricing + refac + 5.0 * m
+
+
+def tableau_pivot_flops(m: int, n: int, compacted: bool = False) -> float:
+    """Tableau-backend flops per pivot in the same currency: ~2 flops per
+    tableau element touched by the rank-1 update (see `flops_per_pivot` for
+    the Gflop/s-accounting variant; this one drops the shared reductions so
+    the backend comparison isolates the update term)."""
+    return 2.0 * tableau_elements(m, n, compacted=compacted)
+
+
+def revised_crossover(m: int, *, partial: bool = True,
+                      refactor_period: int | None = None,
+                      max_ratio: int = 64) -> int | None:
+    """Smallest n (scanned up to ``max_ratio * m``) where the revised
+    backend's flops-per-pivot model undercuts the phase-compacted tableau's.
+    Returns None if the tableau wins over the whole scanned range (dense
+    square-ish problems — the tableau's best case)."""
+    for n in range(1, max_ratio * m + 1):
+        if revised_pivot_flops(m, n, partial=partial,
+                               refactor_period=refactor_period) \
+                < tableau_pivot_flops(m, n, compacted=True):
+            return n
+    return None
 
 
 def _workload(m: int, n: int, B: int, mixed: bool, seed: int) -> LPBatch:
@@ -252,6 +316,16 @@ def main():
         print(f"{rule},{r['pivots_mean']:.2f},{r['pivots_max']},"
               f"{r['pivot_cut_vs_dantzig']:.3f},{r['elems_scheduled']:.3e},"
               f"{r['statuses_match']}")
+    print()
+    print("backend_model,m,n,flops_per_pivot,element_updates_per_pivot,"
+          "crossover_n_at_m  # tableau (compacted) vs revised")
+    for (m, n) in [(28, 28), (100, 100), (100, 400), (50, 500)]:
+        print(f"tableau,{m},{n},{tableau_pivot_flops(m, n, compacted=True):.3e},"
+              f"{tableau_elements(m, n, compacted=True):.3e},")
+        print(f"revised_partial,{m},{n},"
+              f"{revised_pivot_flops(m, n, partial=True):.3e},"
+              f"{revised_elements(m, n, partial=True):.3e},"
+              f"{revised_crossover(m)}")
 
 
 if __name__ == "__main__":

@@ -5,26 +5,36 @@ Public API:
     LPBatch, LPResult, status codes      — problem/result containers
     solve_batched_jax                    — lockstep pure-JAX batched simplex
                                            (phase-compacted two-loop solve)
+    solve_batched_revised                — revised simplex: basis-factor
+                                           updates + partial pricing
+                                           (``backend="revised"`` on every
+                                           solve_* is the same engine)
     solve_batched_compacted              — active-set compaction scheduler
     solve_batched                        — HBM-aware chunked driver (Alg. 1)
     solve_hyperbox                       — box-LP closed form (Sec. 5.6)
     solve_pjit / solve_shard_map         — multi-chip batch-parallel solvers
     expert_capacity_lp                   — MoE integration (LP router)
-    PRICING_RULES                        — pluggable pivot pricing
+    PRICING_RULES / ALL_PRICING          — pluggable pivot pricing
                                            (``pricing=`` on every solve_*):
                                            dantzig | steepest_edge | devex
+                                           | partial
 """
 from .lp import (  # noqa: F401
     BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED,
     LPBatch, LPResult, STATUS_NAMES, build_tableau, default_max_iters,
 )
-from .pricing import PRICING_RULES, canonicalize_rule  # noqa: F401
+from .pricing import ALL_PRICING, PRICING_RULES, canonicalize_rule  # noqa: F401
 from .simplex import (  # noqa: F401
     solve_batched_jax, flops_per_pivot, tableau_elements,
 )
 from .batching import solve_batched, max_chunk_size  # noqa: F401
 from .compaction import (  # noqa: F401
-    CompactionConfig, SegmentStat, auto_segment_k, solve_batched_compacted,
+    CompactionConfig, SegmentStat, auto_compact_threshold, auto_segment_k,
+    solve_batched_compacted,
+)
+from .revised import (  # noqa: F401
+    auto_refactor_period, revised_elements, solve_batched_revised,
+    solve_batched_revised_compacted,
 )
 from .hyperbox import solve_hyperbox, solve_hyperbox_ref, hyperbox_as_general_lp  # noqa: F401
 from .reference import (  # noqa: F401

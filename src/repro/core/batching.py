@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .compaction import solve_batched_compacted
-from .lp import LPBatch, LPResult
+from .lp import LPBatch, LPResult, canonicalize_backend
 from .simplex import solve_batched_jax
 
 # Conservative default budget for planning on real devices; on CPU hosts this
@@ -65,6 +65,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                   device_bytes: int = DEFAULT_DEVICE_BYTES,
                   n_devices: int = 1, sort_by_difficulty: bool = False,
                   compaction: bool = False, pricing: str = "dantzig",
+                  backend: str = "tableau",
                   **solver_kwargs) -> LPResult:
     """Chunked batched solve (Algorithm 1). ``solver`` defaults to the pure
     JAX lockstep solver; kernels.ops.solve_batched_pallas and
@@ -88,11 +89,25 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
 
     ``pricing`` selects the entering-column rule (core/pricing.py) and is
     forwarded to the solver; a custom ``solver`` must accept it when a
-    non-default rule is requested."""
+    non-default rule is requested.
+
+    ``backend`` selects the solver engine — "tableau" (dense rank-1 tableau
+    updates) or "revised" (core/revised.py basis-factor updates); with
+    ``solver=None`` it picks the matching compacted/monolithic solver, and a
+    custom ``solver`` must accept a ``backend`` kwarg when "revised" is
+    requested (solve_batched_pallas does)."""
+    canonicalize_backend(backend)
     if solver is None:
-        solver = solve_batched_compacted if compaction else solve_batched_jax
+        if backend == "revised":
+            from .revised import (solve_batched_revised,
+                                  solve_batched_revised_compacted)
+            solver = (solve_batched_revised_compacted if compaction
+                      else solve_batched_revised)
+        else:
+            solver = (solve_batched_compacted if compaction
+                      else solve_batched_jax)
         solver_kwargs["pricing"] = pricing
-    elif compaction or pricing != "dantzig":
+    elif compaction or pricing != "dantzig" or backend != "tableau":
         # only introspect when a kwarg actually needs forwarding, so
         # non-introspectable callables keep working on the default path
         params = inspect.signature(solver).parameters
@@ -115,6 +130,15 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                     f"{getattr(solver, '__name__', solver)!r} does not accept "
                     "a 'pricing' kwarg; use solver=None or a pricing-aware "
                     "solver")
+        if backend != "tableau":
+            if "backend" in params or has_varkw:
+                solver_kwargs.setdefault("backend", backend)
+            else:
+                raise ValueError(
+                    f"backend={backend!r} requested but solver "
+                    f"{getattr(solver, '__name__', solver)!r} does not accept "
+                    "a 'backend' kwarg; use solver=None or a backend-aware "
+                    "solver such as kernels.ops.solve_batched_pallas")
     B = batch.batch
     perm = None
     if sort_by_difficulty and B > 1:

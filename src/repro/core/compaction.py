@@ -80,6 +80,36 @@ def auto_segment_k(m: int, n: int) -> int:
     return max(4, default_max_iters(m, n) // 64)
 
 
+def auto_compact_threshold(segment_k: int) -> float:
+    """Compact-threshold heuristic when the caller passes
+    ``compact_threshold=None``, tuned from the observed ``SegmentStat``
+    survivor curves in BENCH_pivot_work.json (``scheduled.survivor_curve``).
+
+    A gather costs ~2 state touches (read + scatter-write), i.e. roughly 2
+    lockstep steps of the *new* bucket, while compacting at active fraction
+    f saves (1 - f) * segment_k step-slots over the next segment alone — so
+    a shrink pays off once segment_k >= 2 f / (1 - f), giving the eagerness
+    curve f* = segment_k / (segment_k + 2).  The measured survivor curves
+    collapse by 30-50% per segment (e.g. 2181 -> 1729 -> 150 of 4096 at
+    5x5), so for the auto-derived segment_k (>= 4) every power-of-two shrink
+    pays: the derived threshold sits above the pow2 ladder's own f <= 1/2
+    shrink gate and never blocks one.  Only very short segments
+    (segment_k <= 2, where gather overhead rivals the segment itself) get a
+    stricter bar than the historical static 0.5."""
+    if segment_k < 1:
+        raise ValueError(f"segment_k must be >= 1, got {segment_k}")
+    return min(0.95, segment_k / (segment_k + 2.0))
+
+
+def resolve_compact_threshold(compact_threshold: Optional[float],
+                              segment_k: int) -> float:
+    """``None`` -> derived (`auto_compact_threshold`); floats pass through
+    (0.5 was the historical static default)."""
+    if compact_threshold is None:
+        return auto_compact_threshold(segment_k)
+    return float(compact_threshold)
+
+
 @dataclasses.dataclass(frozen=True)
 class CompactionConfig:
     segment_k: int = 8            # max pivots per segment
@@ -214,7 +244,7 @@ class JaxBackend:
         thr = self.feas_tol * jnp.maximum(1.0, T[:, self.m + 1, -1])
         # dantzig never reads weights: carry a (B, 1) stub so segments and
         # bucket gathers don't move a dead (B, C) array
-        w = (jnp.ones((B, 1), T.dtype) if self.rule == "dantzig"
+        w = (jnp.ones((B, 1), T.dtype) if self.rule in ("dantzig", "partial")
              else init_weights(self.rule, T, self.m))
         return CompactionState(
             T=T, basis=basis, phase=phase,
@@ -234,7 +264,7 @@ class JaxBackend:
         return state, int(it)
 
     def compact_columns(self, state: CompactionState) -> CompactionState:
-        w = (state.w if self.rule == "dantzig"
+        w = (state.w if self.rule in ("dantzig", "partial")
              else _compact_weights_jit(state.w, m=self.m, n=self.n))
         return state._replace(
             T=_compact_columns_jit(state.T, m=self.m, n=self.n), w=w)
@@ -379,7 +409,7 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
                             feas_tol: Optional[float] = None,
                             max_iters: Optional[int] = None,
                             segment_k: Optional[int] = None,
-                            compact_threshold: float = 0.5,
+                            compact_threshold: Optional[float] = None,
                             pricing: str = "dantzig",
                             stats_out: Optional[List[SegmentStat]] = None
                             ) -> LPResult:
@@ -389,9 +419,11 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
     Bit-identical statuses/iterations to ``solve_batched_jax`` with the same
     ``pricing`` rule — only the executed device work changes.
     ``segment_k=None`` derives the segment length from `auto_segment_k`
-    (scales with the `default_max_iters` cap).  ``stats_out`` (a list)
-    collects per-segment SegmentStat records — executed work plus the
-    observed survivor curve — for benchmarks/pivot_work.py."""
+    (scales with the `default_max_iters` cap); ``compact_threshold=None``
+    derives the gather eagerness from `auto_compact_threshold` (tuned from
+    the observed survivor curves).  ``stats_out`` (a list) collects
+    per-segment SegmentStat records — executed work plus the observed
+    survivor curve — for benchmarks/pivot_work.py."""
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
@@ -407,8 +439,10 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
                          jnp.asarray(batch.c, dtype))
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
-    cfg = CompactionConfig(segment_k=int(segment_k),
-                           compact_threshold=float(compact_threshold),
-                           pad_multiple=backend.pad_multiple)
+    cfg = CompactionConfig(
+        segment_k=int(segment_k),
+        compact_threshold=resolve_compact_threshold(compact_threshold,
+                                                    int(segment_k)),
+        pad_multiple=backend.pad_multiple)
     return run_schedule(backend, state, orig, B, n, max_iters=int(max_iters),
                         config=cfg, stats_out=stats_out)

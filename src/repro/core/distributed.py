@@ -39,11 +39,16 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .lp import LPBatch, LPResult, OPTIMAL, ITERATION_LIMIT, default_max_iters
+from .lp import (LPBatch, LPResult, OPTIMAL, ITERATION_LIMIT,
+                 canonicalize_backend, default_max_iters)
 from .simplex import solve_two_phase
 from .compaction import (
-    CompactionConfig, CompactionState, JaxBackend, run_schedule,
-    segment_phase1, segment_phase2,
+    CompactionConfig, CompactionState, JaxBackend, resolve_compact_threshold,
+    run_schedule, segment_phase1, segment_phase2,
+)
+from .revised import (
+    RevisedBackend, RevisedState, auto_refactor_period, solve_revised,
+    segment_revised_phase1, segment_revised_phase2,
 )
 
 
@@ -61,11 +66,21 @@ def _pad_batch(batch: LPBatch, multiple: int):
 
 
 def _solve_local(A, b, c, *, m, n, max_iters, tol, feas_tol,
-                 pricing="dantzig"):
-    """The shared two-phase solve body (phase-compacted), callable under
-    shard_map (local shapes) or pjit (global shapes)."""
+                 pricing="dantzig", backend="tableau",
+                 refactor_period=None):
+    """The shared solve body — tableau (phase-compacted two-phase) or
+    revised (basis-factor updates) — callable under shard_map (local
+    shapes) or pjit (global shapes)."""
+    if backend == "revised":
+        return solve_revised(
+            A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+            feas_tol=feas_tol,
+            refactor_period=int(refactor_period or auto_refactor_period(m, n)),
+            pricing=pricing)
     return solve_two_phase(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
                            feas_tol=feas_tol, pricing=pricing)
+
+
 
 
 def _prep(batch: LPBatch, mesh: Mesh, dtype):
@@ -81,12 +96,16 @@ def _prep(batch: LPBatch, mesh: Mesh, dtype):
 def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                tol: float = 1e-6, feas_tol: float = 1e-5,
                max_iters: Optional[int] = None, lower_only: bool = False,
-               pricing: str = "dantzig"):
+               pricing: str = "dantzig", backend: str = "tableau",
+               refactor_period: Optional[int] = None):
     """Lockstep global solve: batch sharded over all mesh axes, single global
     while_loop (the paper-faithful distributed baseline).  ``pricing``
     selects the entering-column rule (core/pricing.py); the per-LP weights
     are loop state sharded like the tableaux, so no rule adds cross-chip
-    traffic."""
+    traffic.  ``backend="revised"`` runs the basis-factor engine
+    (core/revised.py) — its eta file and LU factors are loop state sharded
+    with the batch, so it too stays communication-free."""
+    canonicalize_backend(backend)
     m, n = batch.m, batch.n
     max_iters = max_iters or default_max_iters(m, n)
     A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
@@ -94,7 +113,8 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     shard = NamedSharding(mesh, spec)
     fn = jax.jit(
         functools.partial(_solve_local, m=m, n=n, max_iters=max_iters,
-                          tol=tol, feas_tol=feas_tol, pricing=pricing),
+                          tol=tol, feas_tol=feas_tol, pricing=pricing,
+                          backend=backend, refactor_period=refactor_period),
         in_shardings=(shard, shard, shard),
         out_shardings=(shard, shard, shard, shard),
     )
@@ -155,20 +175,76 @@ class _ShardMapBackend(JaxBackend):
         return state, int(np.max(np.asarray(it)))
 
 
+class _RevisedShardMapBackend(RevisedBackend):
+    """Revised-simplex segment runners under shard_map: per-shard
+    while-loops (each chip's eta file and LU factors stay chip-local since
+    every RevisedState leaf is batched on axis 0), host-level survivor
+    gathering — and refactor-on-compact — between segments."""
+
+    def __init__(self, mesh: Mesh, m, n, tol, feas_tol, dtype,
+                 pricing: str = "dantzig",
+                 refactor_period: Optional[int] = None):
+        super().__init__(m, n, tol, feas_tol, dtype, pricing=pricing,
+                         refactor_period=refactor_period)
+        self.mesh = mesh
+        axes = tuple(mesh.axis_names)
+        self.pad_multiple = int(np.prod(mesh.devices.shape))
+        spec = P(axes)
+        state_specs = RevisedState(
+            **{f: spec for f in RevisedState._fields})
+        rule, K = self.rule, self.refactor_period
+
+        def p1(state, steps):
+            state, it = segment_revised_phase1(
+                state, steps, m=m, n=n, tol=tol, refactor_period=K,
+                rule=rule)
+            return state, it.reshape(1)
+
+        def p2(state, steps):
+            state, it = segment_revised_phase2(
+                state, steps, m=m, n=n, tol=tol, refactor_period=K,
+                rule=rule)
+            return state, it.reshape(1)
+
+        def wrap(fn):
+            return jax.jit(shard_map(
+                fn, mesh=mesh,
+                in_specs=(state_specs, P()),
+                out_specs=(state_specs, spec),
+                check_rep=False,
+            ))
+
+        self._p1 = wrap(p1)
+        self._p2 = wrap(p2)
+
+    def run_phase1(self, state, steps):
+        state, it = self._p1(state, jnp.int32(steps))
+        return state, int(np.max(np.asarray(it)))
+
+    def run_phase2(self, state, steps):
+        state, it = self._p2(state, jnp.int32(steps))
+        return state, int(np.max(np.asarray(it)))
+
+
 def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                     tol: float = 1e-6, feas_tol: float = 1e-5,
                     max_iters: Optional[int] = None, lower_only: bool = False,
                     segment_k: Optional[int] = None,
-                    compact_threshold: float = 0.5,
-                    pricing: str = "dantzig", stats_out=None):
+                    compact_threshold: Optional[float] = None,
+                    pricing: str = "dantzig", stats_out=None,
+                    backend: str = "tableau",
+                    refactor_period: Optional[int] = None):
     """Per-shard termination: each chip solves its local LPs to completion
     independently (no cross-chip sync per pivot).
 
     ``segment_k=None`` (default) keeps the original one-shot semantics.
     ``segment_k=K`` runs the solve in K-pivot segments through the active-set
     compaction scheduler (see module docstring); results are identical, work
-    shrinks with the survivor count.  ``pricing`` selects the entering-column
-    rule (core/pricing.py) in both modes."""
+    shrinks with the survivor count (``compact_threshold=None`` derives the
+    gather eagerness from `auto_compact_threshold`).  ``pricing`` selects the
+    entering-column rule (core/pricing.py) in both modes, and
+    ``backend="revised"`` the basis-factor engine (core/revised.py)."""
+    canonicalize_backend(backend)
     m, n = batch.m, batch.n
     max_iters = max_iters or default_max_iters(m, n)
 
@@ -183,21 +259,28 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
             "segment accounting to record")
 
     if segment_k is not None:
-        backend = _ShardMapBackend(mesh, m, n, tol, feas_tol, dtype,
-                                   pricing=pricing)
-        padded, orig_B = _pad_batch(batch, backend.pad_multiple)
-        state = backend.init(jnp.asarray(padded.A, dtype),
-                             jnp.asarray(padded.b, dtype),
-                             jnp.asarray(padded.c, dtype))
+        if backend == "revised":
+            runner = _RevisedShardMapBackend(
+                mesh, m, n, tol, feas_tol, dtype, pricing=pricing,
+                refactor_period=refactor_period)
+        else:
+            runner = _ShardMapBackend(mesh, m, n, tol, feas_tol, dtype,
+                                      pricing=pricing)
+        padded, orig_B = _pad_batch(batch, runner.pad_multiple)
+        state = runner.init(jnp.asarray(padded.A, dtype),
+                            jnp.asarray(padded.b, dtype),
+                            jnp.asarray(padded.c, dtype))
         B_pad = padded.batch
         orig = np.concatenate(
             [np.arange(orig_B), np.full(B_pad - orig_B, -1)]).astype(np.int64)
         # padding LPs are not real work: retire them before the first segment
-        state = backend.deactivate(state, orig >= 0)
-        cfg = CompactionConfig(segment_k=segment_k,
-                               compact_threshold=compact_threshold,
-                               pad_multiple=backend.pad_multiple)
-        return run_schedule(backend, state, orig, orig_B, n,
+        state = runner.deactivate(state, orig >= 0)
+        cfg = CompactionConfig(
+            segment_k=segment_k,
+            compact_threshold=resolve_compact_threshold(compact_threshold,
+                                                        segment_k),
+            pad_multiple=runner.pad_multiple)
+        return run_schedule(runner, state, orig, orig_B, n,
                             max_iters=max_iters, config=cfg,
                             stats_out=stats_out)
 
@@ -205,7 +288,8 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     spec = P(axes)
 
     local = functools.partial(_solve_local, m=m, n=n, max_iters=max_iters,
-                              tol=tol, feas_tol=feas_tol, pricing=pricing)
+                              tol=tol, feas_tol=feas_tol, pricing=pricing,
+                              backend=backend, refactor_period=refactor_period)
     fn = jax.jit(shard_map(
         local, mesh=mesh,
         in_specs=(spec, spec, spec),

@@ -53,6 +53,19 @@ STATUS_NAMES = {
 # with a conditional.
 BIG = 1e30
 
+# Solver engines selectable via ``backend=`` on every solve_* entry point:
+# "tableau" — dense tableaux, rank-1 pivot updates (core/simplex.py);
+# "revised" — immutable data, basis-factor updates (core/revised.py).
+BACKENDS = ("tableau", "revised")
+
+
+def canonicalize_backend(backend: str) -> str:
+    """Validate a solver-engine name (shared by every ``backend=`` kwarg)."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    return backend
+
 
 @dataclasses.dataclass(frozen=True)
 class LPBatch:

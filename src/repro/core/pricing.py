@@ -8,7 +8,7 @@ engine (phase compaction + active-set compaction, PR 1) multiplies against:
 every pivot a better rule avoids is a full rank-1 tableau update saved
 across the surviving batch.
 
-Three rules, one contract:
+Four rules, one contract:
 
 * ``dantzig``        — e = argmax_j d_j.  Stateless; the weights array is
                        carried but never read, so the compiled program (and
@@ -29,6 +29,20 @@ Three rules, one contract:
                        row; the leaving variable r gets max(w_e/alpha_e^2, 1)
                        and the framework resets to 1 when weights overflow.
                        O(C) per pivot instead of O(m*C).
+* ``partial``        — Dantzig restricted to a rotating candidate *block* of
+                       columns, falling back to full Dantzig pricing the
+                       moment an LP's block prices out (no improving column
+                       in the block).  The block clock is the LP's own
+                       iteration count (``iters % n_blocks``), which every
+                       dialect already carries, so the block schedule — and
+                       therefore the pivot sequence — is identical across
+                       the tableau solver, the revised-simplex backend
+                       (core/revised.py, where blocks actually cut the
+                       pricing matvec from O(m*(n+m)) to O(m*block)) and the
+                       float64 oracle.  On tableau backends the full cost
+                       row is materialized anyway, so partial changes the
+                       entering choice but not the per-pivot cost; it exists
+                       there for cross-backend pivot-sequence parity.
 
 All rules share the optimality test (max_j d_j <= tol) and Steps 2-3
 unchanged, so INFEASIBLE/UNBOUNDED/OPTIMAL certificates are rule-independent
@@ -51,20 +65,55 @@ import numpy as np
 
 from .lp import BIG
 
+# Weighted rules (carry per-LP weight state through every backend).  The
+# ``partial`` mode rides on top of Dantzig scoring and needs no weights, only
+# the per-LP iteration clock — it is listed separately so weight-centric code
+# (Pallas tile kernels, weight-gather plumbing) keeps iterating the original
+# triple.
 PRICING_RULES = ("dantzig", "steepest_edge", "devex")
+ALL_PRICING = PRICING_RULES + ("partial",)
 
 # Devex framework reset: when any reference weight exceeds this, the whole
 # framework restarts at 1 (standard practice; keeps f32 scores well-scaled).
 DEVEX_RESET = 1e7
 
+# Partial pricing: candidate columns are scanned in blocks of this many
+# columns (clamped to the candidate count).  64 keeps the revised backend's
+# per-pivot pricing matvec lane-aligned and a small fraction of n+m for the
+# paper's Table-5/6 regime while leaving enough candidates per block that the
+# full-pricing fallback stays rare.
+PARTIAL_BLOCK = 64
+
 
 def canonicalize_rule(pricing: str) -> str:
     """Validate and normalize a pricing-rule name."""
     rule = str(pricing).lower()
-    if rule not in PRICING_RULES:
+    if rule not in ALL_PRICING:
         raise ValueError(
-            f"unknown pricing rule {pricing!r}; expected one of {PRICING_RULES}")
+            f"unknown pricing rule {pricing!r}; expected one of {ALL_PRICING}")
     return rule
+
+
+def partial_geometry(ncand: int, block: int | None = None):
+    """(n_blocks, block_size) for partial pricing over ``ncand`` candidate
+    columns.  Shared by every dialect so the block schedule is identical."""
+    blk = min(int(block or PARTIAL_BLOCK), ncand)
+    return -(-ncand // blk), blk
+
+
+def partial_priced_candidates(ncand: int, block: int | None = None,
+                              partial: bool = True) -> int:
+    """Candidate columns priced per pivot under the given mode — one block
+    pass plus the amortized full-pricing fallback (~once per block cycle);
+    a single block degenerates to full pricing.  The shared quantity behind
+    both halves of the revised work model (`core.revised.revised_elements`
+    and `analysis.lp_perf.revised_pivot_flops`)."""
+    if not partial:
+        return ncand
+    n_blocks, blk = partial_geometry(ncand, block)
+    if n_blocks <= 1:
+        return ncand
+    return blk + ncand // n_blocks
 
 
 # ---------------------------------------------------------------------------
@@ -85,16 +134,33 @@ def init_weights(rule: str, T: jnp.ndarray, m: int) -> jnp.ndarray:
 
 
 def select_entering(masked_cost: jnp.ndarray, w: jnp.ndarray, *, rule: str,
-                    tol: float):
+                    tol: float, iters: jnp.ndarray | None = None,
+                    ncand: int | None = None):
     """Step 1 under a pricing rule.
 
     ``masked_cost`` is the objective row with disallowed columns already at
     -BIG.  Returns ``(e, max_cost)``: the entering column per LP and the max
     reduced cost (the rule-independent optimality test — a rule only changes
-    *which* improving column enters, never *whether* one exists)."""
+    *which* improving column enters, never *whether* one exists).
+
+    ``partial`` additionally needs ``iters`` (the per-LP iteration clock that
+    rotates the candidate block) and ``ncand`` (count of priceable columns,
+    n+m in every tableau layout); the tableau dialect has the full cost row
+    in hand, so the block restriction is a mask, not a work saving — see
+    core/revised.py for the dialect where blocks cut the pricing matvec."""
     max_cost = jnp.max(masked_cost, axis=1)
     if rule == "dantzig":
         e = jnp.argmax(masked_cost, axis=1)
+    elif rule == "partial":
+        n_blocks, blk_sz = partial_geometry(ncand)
+        blk = (iters % n_blocks).astype(jnp.int32)
+        cols = jnp.arange(masked_cost.shape[1], dtype=jnp.int32)
+        in_blk = (cols // blk_sz)[None, :] == blk[:, None]
+        blk_cost = jnp.where(in_blk, masked_cost, -BIG)
+        blk_max = jnp.max(blk_cost, axis=1)
+        e = jnp.where(blk_max > tol,
+                      jnp.argmax(blk_cost, axis=1),
+                      jnp.argmax(masked_cost, axis=1))
     else:
         improving = masked_cost > tol
         d = jnp.where(improving, masked_cost, 0.0)
@@ -119,7 +185,7 @@ def update_weights(rule: str, w, T_new, pivrow, pe_safe, e, r, do_pivot,
     rhs after phase compaction), making reset timing depend on which layout
     a backend happens to use.  Pinned, the full, phase-compacted, lane-padded
     and float64 dialects all carry identical effective state."""
-    if rule == "dantzig":
+    if rule in ("dantzig", "partial"):
         return w
     if rule == "steepest_edge":
         w_new = 1.0 + jnp.sum(T_new[:, :m, :] * T_new[:, :m, :], axis=1)
@@ -158,9 +224,22 @@ def init_weights_np(rule: str, T: np.ndarray, m: int) -> np.ndarray:
 
 
 def select_entering_np(reduced: np.ndarray, w: np.ndarray, *, rule: str,
-                       tol: float) -> int:
-    """Scalar Step 1 (reduced costs with disallowed columns at -BIG)."""
+                       tol: float, iters: int = 0,
+                       ncand: int | None = None) -> int:
+    """Scalar Step 1 (reduced costs with disallowed columns at -BIG).
+
+    ``partial`` scans the candidate block selected by the LP's iteration
+    clock (``iters``) and falls back to full Dantzig when it prices out —
+    the same schedule as the JAX dialects, so oracle pivot sequences remain
+    the per-rule ground truth."""
     if rule == "dantzig":
+        return int(np.argmax(reduced))
+    if rule == "partial":
+        n_blocks, blk_sz = partial_geometry(ncand)
+        blk = iters % n_blocks
+        blk_red = reduced[blk * blk_sz:(blk + 1) * blk_sz]
+        if blk_red.size and np.max(blk_red) > tol:
+            return blk * blk_sz + int(np.argmax(blk_red))
         return int(np.argmax(reduced))
     improving = reduced > tol
     d = np.where(improving, reduced, 0.0)
@@ -173,7 +252,7 @@ def update_weights_np(rule: str, w: np.ndarray, T_new: np.ndarray,
                       *, m: int, n: int) -> np.ndarray:
     """Scalar post-pivot recurrence (see update_weights, including the devex
     non-priceable-column pin)."""
-    if rule == "dantzig":
+    if rule in ("dantzig", "partial"):
         return w
     if rule == "steepest_edge":
         return 1.0 + (T_new[:m] * T_new[:m]).sum(axis=0)

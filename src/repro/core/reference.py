@@ -52,7 +52,8 @@ def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig"):
     while iters < max_iters:
         obj_row = T[m + 1] if phase == 1 else T[m]
         reduced = np.where(allowed, obj_row, -BIG)
-        e = select_entering_np(reduced, weights, rule=rule, tol=tol)
+        e = select_entering_np(reduced, weights, rule=rule, tol=tol,
+                               iters=iters, ncand=n + m)
         if np.max(reduced) <= tol:
             if phase == 1:
                 w = T[m + 1, -1]

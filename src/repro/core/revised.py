@@ -1,0 +1,634 @@
+"""Batched revised simplex — basis-factor updates instead of tableau updates.
+
+The paper's solver (core/simplex.py) carries the *entire* dense tableau
+through every pivot: one rank-1 update writes O(m*(n+2m)) elements, which is
+what PR 1's work-elimination engine and PR 2's pricing rules multiply
+against.  The classic fix — the **revised simplex method** — keeps the
+constraint data immutable and maintains only a factorization of the m x m
+basis matrix:
+
+* ``Abar`` (B, m, n+2m) — the sign-adjusted constraint columns (structurals,
+  slacks, artificials; exactly the tableau's column layout, so basis indices,
+  statuses and solution extraction are interchangeable with the tableau
+  backend).  **Never written after construction.**
+* ``lu/perm`` — a batched LU factorization (``jax.lax.linalg.lu``) of the
+  basis matrix at the last refactorization point.
+* ``etaR/etaV`` — a product-form **eta file**: one rank-1 update factor per
+  pivot since the last refactorization.  After pivot (l, e) with FTRAN column
+  u = B^-1 a_e, the new basis inverse is E B^-1 with E the identity except
+  column l = eta, eta_l = 1/u_l, eta_i = -u_i/u_l.
+* every ``refactor_period`` pivots (and at every active-set compaction
+  gather) the basis matrix is re-gathered from ``Abar`` and re-factorized,
+  emptying the eta file — the standard stability/cost tradeoff.
+
+Per pivot the solver runs:
+
+1. **BTRAN**: y = B^-T c_B — reverse-order transposed eta applications, then
+   a transposed LU solve.  O(m^2 + k*m).
+2. **pricing**: reduced costs d_j = c_j - y . a_j over candidate columns.
+   ``pricing="dantzig"`` prices all n+m candidates (O(m*(n+m)));
+   ``pricing="partial"`` prices one rotating block of ``PARTIAL_BLOCK``
+   columns (O(m*block)) and falls back to a full pass only for LPs whose
+   block prices out (which is also where optimality is detected) — the
+   contract extension in core/pricing.py, same block schedule as the tableau
+   dialect and the float64 oracle.
+3. **ratio test**: u = B^-1 a_e by FTRAN (LU solve + forward eta
+   applications), then the paper's sentinel min-ratio over u.  O(m^2 + k*m).
+4. **update**: x_B and one appended eta column — O(m) writes.  The tableau
+   backend writes O(m*(n+2m)) elements here; this asymmetry is the whole
+   point (see ``revised_elements``).
+
+Phase handling mirrors the tableau backend exactly: the same two-phase
+construction (phase-1 cost = -1 on artificials), the same per-LP phase
+switch, feasibility threshold, status codes and iteration accounting — so on
+well-conditioned batches the two backends execute the same pivot sequence
+and report identical statuses (cross-checked in benchmarks/pivot_work.py and
+tests/test_revised.py; float32 reduced costs are *recomputed* here rather
+than carried incrementally, so long degenerate ties can order differently
+without changing certificates).
+
+Composition: ``RevisedBackend`` plugs into the active-set compaction
+scheduler (core/compaction.py) — every state leaf keeps the batch on axis 0
+so bucket gathers work unchanged, and ``take`` refactorizes after each
+gather (**refactor-on-compact**) so segments always resume from a clean LU.
+
+Reproducibility contract: unlike the tableau engine (whose per-LP rank-1
+path is independent of batchmates, hence bitwise-invariant to batch
+decomposition), the eta-file slot clock and the refactor trigger are shared
+across the (local) batch — splitting a batch across shard_map shards or
+compaction buckets shifts *when* each LP's basis is refactorized and hence
+f32 rounding.  Identical batch composition (jit vs pjit) is bitwise;
+different decompositions guarantee identical certificates and
+objectives/solutions to f32 tolerance (~1e-6), verified in
+tests/test_revised.py.
+``backend="revised"`` on solve_batched / solve_pjit / solve_shard_map /
+solve_batched_pallas routes here (the Pallas entry point falls back to this
+pure-JAX path with a warning until a revised tile kernel exists).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .compaction import (
+    CompactionConfig,
+    JaxBackend,
+    SegmentStat,
+    auto_segment_k,
+    resolve_compact_threshold,
+    run_schedule,
+)
+from .lp import (
+    BIG,
+    INFEASIBLE,
+    ITERATION_LIMIT,
+    OPTIMAL,
+    UNBOUNDED,
+    LPBatch,
+    LPResult,
+    default_max_iters,
+)
+from .pricing import (canonicalize_rule, partial_geometry,
+                      partial_priced_candidates)
+from .simplex import _RUNNING, scatter_solution
+
+# Pricing rules the revised backend supports.  steepest_edge needs
+# ||B^-1 a_j||^2 per candidate (O(m^2) per column without the tableau) and
+# devex needs the full updated pivot row — both are tableau-dialect rules;
+# the revised backend's lever is *partial* pricing instead.
+REVISED_RULES = ("dantzig", "partial")
+
+
+def canonicalize_revised_rule(pricing: str) -> str:
+    rule = canonicalize_rule(pricing)
+    if rule not in REVISED_RULES:
+        raise ValueError(
+            f"pricing rule {rule!r} is tableau-only; the revised backend "
+            f"supports {REVISED_RULES} (steepest-edge/devex weights need "
+            "the dense tableau the revised method exists to avoid)")
+    return rule
+
+
+def auto_refactor_period(m: int, n: int) -> int:
+    """Eta-file length when the caller passes ``refactor_period=None``.
+
+    Balancing the amortized refactorization cost (~(2/3)m^3/K flops per
+    pivot) against the eta-application cost (~3*K*m per pivot, growing with
+    the file) gives K* ~ m/2; clamp to keep tiny problems from refactoring
+    every pivot and huge ones from dragging hundred-deep eta files."""
+    return max(4, min(64, m // 2))
+
+
+def revised_elements(m: int, n: int, *, refactor_period: int | None = None,
+                     partial: bool = False, block: int | None = None) -> int:
+    """Tableau-element-equivalent work of one revised pivot, in the repo's
+    executed-work unit (state elements *written* per pivot — the unit
+    ``simplex.tableau_elements`` charges the tableau's rank-1 update).
+
+    The immutable (m, n+2m) block is never written; a pivot writes the BTRAN
+    and FTRAN solution vectors, the updated basic solution and one eta column
+    (4m), plus the priced reduced costs, plus the amortized refactorization
+    (LU factors + the gathered basis matrix, 2m^2 every K pivots).  The
+    O(m*(n+m)) -> O(m^2)/K + pricing drop is the revised method's claim;
+    ``analysis.lp_perf.revised_pivot_flops`` gives the companion flops model
+    (where triangular-solve *reads* are charged too, and the crossover is in
+    the n/m aspect ratio rather than uniform)."""
+    K = refactor_period or auto_refactor_period(m, n)
+    priced = partial_priced_candidates(n + m, block, partial=partial)
+    return int(4 * m + priced + (2 * m * m) // K)
+
+
+class RevisedState(NamedTuple):
+    """Resumable revised-simplex state; every leaf keeps the batch on axis 0
+    so the compaction scheduler's generic gathers apply unchanged."""
+    Abar: jax.Array      # (B, m, n+2m) immutable sign-adjusted columns
+    cvec: jax.Array      # (B, n+m) phase-2 costs over candidate columns
+    xB: jax.Array        # (B, m) basic-variable values
+    basis: jax.Array     # (B, m) int32 — column basic in each row
+    phase: jax.Array     # (B,) int32
+    status: jax.Array    # (B,) int32 — _RUNNING until terminal
+    iters: jax.Array     # (B,) int32
+    lu: jax.Array        # (B, m, m) LU factors of the refactorization basis
+    perm: jax.Array      # (B, m) int32 — row permutation (A[perm] = L U)
+    perm_inv: jax.Array  # (B, m) int32 — its inverse, for transposed solves
+    etaR: jax.Array      # (B, K) int32 — eta pivot rows
+    etaV: jax.Array      # (B, K, m) — eta columns
+    cnt: jax.Array       # (B,) int32 — live etas (uniform; array-shaped so
+                         #  compaction gathers treat it like every leaf)
+    thr: jax.Array       # (B,) phase-1 feasibility threshold
+
+
+def build_revised_state(A: jax.Array, b: jax.Array, c: jax.Array, *,
+                        feas_tol: float, refactor_period: int) -> RevisedState:
+    """Initial state: tableau column layout (structurals | slacks |
+    artificials), sign-adjusted rows, identity starting basis => LU of I."""
+    B, m, n = A.shape
+    dtype = A.dtype
+    neg = b < 0
+    sign = jnp.where(neg, -1.0, 1.0).astype(dtype)
+    idx = jnp.arange(m)
+
+    slack = jnp.zeros((B, m, m), dtype).at[:, idx, idx].set(sign)
+    art = jnp.zeros((B, m, m), dtype).at[:, idx, idx].set(
+        jnp.where(neg, 1.0, 0.0).astype(dtype))
+    Abar = jnp.concatenate([A * sign[:, :, None], slack, art], axis=2)
+    bbar = b * sign
+    cvec = jnp.concatenate([c, jnp.zeros((B, m), dtype)], axis=1)
+
+    basis = jnp.where(neg, n + m + idx[None, :],
+                      n + idx[None, :]).astype(jnp.int32)
+    phase = jnp.where(neg.any(axis=1), 1, 2).astype(jnp.int32)
+    # same relative phase-1 threshold as the tableau backend: the initial
+    # phase-1 objective is the total infeasibility mass sum_neg bbar_i
+    thr = feas_tol * jnp.maximum(1.0, jnp.where(neg, bbar, 0.0).sum(axis=1))
+
+    eye = jnp.broadcast_to(jnp.eye(m, dtype=dtype), (B, m, m))
+    iota = jnp.broadcast_to(idx.astype(jnp.int32), (B, m))
+    K = int(refactor_period)
+    return RevisedState(
+        Abar=Abar, cvec=cvec, xB=bbar, basis=basis, phase=phase,
+        status=jnp.full((B,), _RUNNING, jnp.int32),
+        iters=jnp.zeros((B,), jnp.int32),
+        lu=eye, perm=iota, perm_inv=iota,
+        etaR=jnp.zeros((B, K), jnp.int32),
+        etaV=jnp.zeros((B, K, m), dtype),
+        cnt=jnp.zeros((B,), jnp.int32), thr=thr)
+
+
+# ---------------------------------------------------------------------------
+# FTRAN / BTRAN
+# ---------------------------------------------------------------------------
+
+def _lu_solve(lu, perm, v):
+    """x = B0^-1 v via P B0 = L U: x = U^-1 L^-1 v[perm]."""
+    t = jnp.take_along_axis(v, perm, axis=1)[..., None]
+    t = lax.linalg.triangular_solve(lu, t, left_side=True, lower=True,
+                                    unit_diagonal=True)
+    t = lax.linalg.triangular_solve(lu, t, left_side=True, lower=False)
+    return t[..., 0]
+
+
+def _lu_solve_t(lu, perm_inv, v):
+    """y = B0^-T v via B0^T = U^T L^T P: solve the two transposed triangles,
+    then undo the row permutation."""
+    t = v[..., None]
+    t = lax.linalg.triangular_solve(lu, t, left_side=True, lower=False,
+                                    transpose_a=True)
+    t = lax.linalg.triangular_solve(lu, t, left_side=True, lower=True,
+                                    transpose_a=True, unit_diagonal=True)
+    return jnp.take_along_axis(t[..., 0], perm_inv, axis=1)
+
+
+def _apply_etas_fwd(v, etaR, etaV, cnt0, iota_m):
+    """FTRAN tail: v <- E_k ... E_1 v, oldest eta first.
+    (E v)_i = v_i + eta_i * v_r for i != r, (E v)_r = eta_r * v_r."""
+    def body(k, v):
+        r = lax.dynamic_index_in_dim(etaR, k, axis=1, keepdims=False)
+        eta = lax.dynamic_index_in_dim(etaV, k, axis=1, keepdims=False)
+        vr = jnp.take_along_axis(v, r[:, None], axis=1)
+        upd = eta * vr
+        return jnp.where(iota_m[None, :] == r[:, None], upd, v + upd)
+
+    return lax.fori_loop(0, cnt0, body, v)
+
+
+def _apply_etas_rev(v, etaR, etaV, cnt0, iota_m):
+    """BTRAN head: v <- E_1^T ... E_k^T v, newest eta first.
+    (E^T v)_j = v_j for j != r, (E^T v)_r = eta . v."""
+    def body(i, v):
+        k = cnt0 - 1 - i
+        r = lax.dynamic_index_in_dim(etaR, k, axis=1, keepdims=False)
+        eta = lax.dynamic_index_in_dim(etaV, k, axis=1, keepdims=False)
+        dot = jnp.sum(eta * v, axis=1, keepdims=True)
+        return jnp.where(iota_m[None, :] == r[:, None], dot, v)
+
+    return lax.fori_loop(0, cnt0, body, v)
+
+
+def _refactorize(Abar, basis):
+    """Gather the current basis matrix from the immutable columns and LU it,
+    emptying the eta file (cnt is reset by the caller)."""
+    B0 = jnp.take_along_axis(Abar, basis[:, None, :].astype(jnp.int32), axis=2)
+    lu, _, perm = lax.linalg.lu(B0)
+    perm = perm.astype(jnp.int32)
+    perm_inv = jnp.argsort(perm, axis=1).astype(jnp.int32)
+    return lu, perm, perm_inv
+
+
+# ---------------------------------------------------------------------------
+# One lockstep revised pivot
+# ---------------------------------------------------------------------------
+
+def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
+                 refactor_period: int, rule: str = "dantzig") -> RevisedState:
+    """One lockstep revised-simplex pivot across the batch (masked for
+    inactive LPs): refactor-if-due, BTRAN, pricing, FTRAN, min-ratio,
+    eta-append — the Step 1-3 structure of simplex_step re-expressed on the
+    basis factorization instead of the tableau."""
+    (Abar, cvec, xB, basis, phase, status, iters, lu, perm, perm_inv,
+     etaR, etaV, cnt, thr) = state
+    B = xB.shape[0]
+    K = int(refactor_period)
+    iota_m = jnp.arange(m, dtype=jnp.int32)
+    ncand = n + m
+    active = status == _RUNNING
+
+    # ---- periodic refactorization (eta file full) --------------------------
+    def do_refac(_):
+        l, p, pi = _refactorize(Abar, basis)
+        return l, p, pi, jnp.zeros_like(cnt)
+
+    lu, perm, perm_inv, cnt = lax.cond(
+        cnt[0] >= K, do_refac, lambda _: (lu, perm, perm_inv, cnt),
+        operand=None)
+    cnt0 = cnt[0]
+
+    # ---- Step 1: BTRAN + pricing ------------------------------------------
+    # phase-2 costs: c on structurals (slacks 0); phase-1 costs: -1 on
+    # artificials, 0 on candidates => candidate reduced costs -y.a_j
+    basis_c = jnp.where(basis < ncand,
+                        jnp.take_along_axis(
+                            cvec, jnp.minimum(basis, ncand - 1), axis=1),
+                        0.0)
+    cB = jnp.where((phase == 1)[:, None],
+                   -(basis >= ncand).astype(xB.dtype), basis_c)
+    y = _apply_etas_rev(cB, etaR, etaV, cnt0, iota_m)
+    y = _lu_solve_t(lu, perm_inv, y)
+
+    in_p2 = (phase == 2)[:, None]
+
+    # Basic columns are masked out of pricing: their reduced cost is exactly
+    # zero in exact arithmetic (so the mask never changes a pivot), but here
+    # it is *recomputed* as c_j - y.a_j and the f32 residual can exceed tol —
+    # the tableau dialect zeroes the entering column exactly during the
+    # rank-1 update and needs no mask; without it a basic column can
+    # "re-enter" as a no-op pivot forever.
+    bidx = jnp.arange(B)
+    basis_safe = jnp.minimum(basis, ncand - 1)
+    basis_mask_val = jnp.where(basis < ncand, -BIG, BIG)  # BIG => no-op min
+
+    def price_full(_):
+        d = jnp.where(in_p2, cvec, 0.0) - jnp.einsum(
+            "bm,bmn->bn", y, Abar[:, :, :ncand])
+        return d.at[bidx[:, None], basis_safe].min(basis_mask_val)
+
+    if rule == "partial":
+        n_blocks, blk_sz = partial_geometry(ncand)
+        blk = (iters % n_blocks).astype(jnp.int32)
+        cols = blk[:, None] * blk_sz + jnp.arange(blk_sz, dtype=jnp.int32)
+        valid = cols < ncand
+        cols_safe = jnp.minimum(cols, ncand - 1)
+        Ablk = jnp.take_along_axis(Abar, cols_safe[:, None, :], axis=2)
+        cblk = jnp.where(in_p2, jnp.take_along_axis(cvec, cols_safe, axis=1),
+                         0.0)
+        in_basis = (cols_safe[:, :, None] == basis[:, None, :]).any(axis=2)
+        d_blk = jnp.where(valid & ~in_basis,
+                          cblk - jnp.einsum("bm,bmc->bc", y, Ablk), -BIG)
+        blk_max = jnp.max(d_blk, axis=1)
+        e_blk = jnp.take_along_axis(
+            cols_safe, jnp.argmax(d_blk, axis=1)[:, None], axis=1)[:, 0]
+        blk_improving = blk_max > tol
+        # the full fallback also carries the optimality test, so it runs
+        # (for the whole batch) only when some active LP's block priced out
+        need_full = jnp.any(active & ~blk_improving)
+        d_full = lax.cond(need_full, price_full,
+                          lambda _: jnp.full((B, ncand), -BIG, xB.dtype),
+                          operand=None)
+        full_max = jnp.max(d_full, axis=1)
+        e = jnp.where(blk_improving, e_blk,
+                      jnp.argmax(d_full, axis=1).astype(jnp.int32))
+        max_cost = jnp.where(blk_improving, blk_max, full_max)
+    else:
+        d_full = price_full(None)
+        e = jnp.argmax(d_full, axis=1).astype(jnp.int32)
+        max_cost = jnp.max(d_full, axis=1)
+
+    is_opt = max_cost <= tol
+
+    # phase bookkeeping at optimality of the current objective (pre-pivot)
+    p1_obj = jnp.where(basis >= ncand, xB, 0.0).sum(axis=1)
+    p1_done = active & (phase == 1) & is_opt
+    infeasible = p1_done & (p1_obj > thr)
+    to_phase2 = p1_done & ~infeasible
+    p2_done = active & (phase == 2) & is_opt
+
+    # ---- Step 2: FTRAN + sentinel min-ratio --------------------------------
+    a_e = jnp.take_along_axis(Abar, e[:, None, None], axis=2)[:, :, 0]
+    u = _lu_solve(lu, perm, a_e)
+    u = _apply_etas_fwd(u, etaR, etaV, cnt0, iota_m)
+    valid_row = u > tol
+    ratios = jnp.where(valid_row, xB / jnp.where(valid_row, u, 1.0), BIG)
+    l = jnp.argmin(ratios, axis=1).astype(jnp.int32)
+    min_ratio = jnp.min(ratios, axis=1)
+    no_row = min_ratio >= BIG / 2
+
+    wants_pivot = active & ~is_opt
+    unbounded = wants_pivot & no_row & (phase == 2)
+    stuck = wants_pivot & no_row & (phase == 1)
+    do_pivot = wants_pivot & ~no_row
+
+    # ---- Step 3: O(m) update — x_B and one eta column ----------------------
+    ul = jnp.take_along_axis(u, l[:, None], axis=1)[:, 0]
+    ul_safe = jnp.where(do_pivot, ul, 1.0)
+    theta = jnp.where(do_pivot, min_ratio, 0.0)
+    is_l = iota_m[None, :] == l[:, None]
+    xB_new = jnp.where(is_l, theta[:, None], xB - theta[:, None] * u)
+    xB = jnp.where(do_pivot[:, None], xB_new, xB)
+
+    r_eta = jnp.where(do_pivot, l, 0)
+    eta = jnp.where(do_pivot[:, None], -u / ul_safe[:, None], 0.0)
+    eta = jnp.where(iota_m[None, :] == r_eta[:, None],
+                    jnp.where(do_pivot, 1.0 / ul_safe, 1.0)[:, None], eta)
+    etaR = lax.dynamic_update_slice(etaR, r_eta[:, None], (0, cnt0))
+    etaV = lax.dynamic_update_slice(etaV, eta[:, None, :], (0, cnt0, 0))
+    # non-pivoting LPs got an identity eta; skip the slot when nobody pivots
+    cnt = cnt + jnp.any(do_pivot).astype(jnp.int32)
+
+    basis = jnp.where(do_pivot[:, None] & is_l, e[:, None], basis)
+
+    status = jnp.where(infeasible, INFEASIBLE, status)
+    status = jnp.where(unbounded, UNBOUNDED, status)
+    status = jnp.where(stuck, ITERATION_LIMIT, status)
+    status = jnp.where(p2_done, OPTIMAL, status)
+    phase = jnp.where(to_phase2, 2, phase)
+    iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
+    return RevisedState(Abar, cvec, xB, basis, phase, status, iters,
+                        lu, perm, perm_inv, etaR, etaV, cnt, thr)
+
+
+def extract_solution_revised(state: RevisedState, n: int):
+    """(x, objective) off the basic solution — no tableau to read."""
+    x = scatter_solution(state.xB, state.basis, n)
+    ncand = state.cvec.shape[1]
+    cb = jnp.take_along_axis(state.cvec,
+                             jnp.minimum(state.basis, ncand - 1), axis=1)
+    obj = jnp.where(state.basis < n, cb * state.xB, 0.0).sum(axis=1)
+    return x, obj
+
+
+def solve_revised(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
+                  feas_tol: float, refactor_period: int,
+                  pricing: str = "dantzig"):
+    """Traceable whole-solve body (shared by jit, pjit and shard_map): one
+    while_loop, per-LP phase switch inside the step (the revised method has
+    no dead tableau columns, so there is nothing to phase-compact)."""
+    rule = canonicalize_revised_rule(pricing)
+    state = build_revised_state(A, b, c, feas_tol=feas_tol,
+                                refactor_period=refactor_period)
+
+    def cond(carry):
+        s, it = carry
+        return jnp.any(s.status == _RUNNING) & (it < max_iters)
+
+    def body(carry):
+        s, it = carry
+        return revised_step(s, m=m, n=n, tol=tol,
+                            refactor_period=refactor_period,
+                            rule=rule), it + 1
+
+    state, _ = lax.while_loop(cond, body, (state, jnp.int32(0)))
+    status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
+    x, obj = extract_solution_revised(state, n)
+    obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
+    return x, obj, status.astype(jnp.int8), state.iters
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
+                                             "feas_tol", "refactor_period",
+                                             "pricing"))
+def _solve_revised_core(A, b, c, *, m, n, max_iters, tol, feas_tol,
+                        refactor_period, pricing):
+    return solve_revised(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+                         feas_tol=feas_tol, refactor_period=refactor_period,
+                         pricing=pricing)
+
+
+def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
+                          tol: float | None = None,
+                          feas_tol: float | None = None,
+                          max_iters: int | None = None,
+                          refactor_period: int | None = None,
+                          pricing: str = "dantzig") -> LPResult:
+    """Solve a batch of LPs with the lockstep revised simplex.
+
+    Same LPBatch -> LPResult contract, status codes and defaults as
+    ``solve_batched_jax``; ``pricing`` accepts "dantzig" (full pricing) or
+    "partial" (rotating column blocks, core/pricing.py).  ``refactor_period``
+    bounds the eta file (None derives ~m/2 via `auto_refactor_period`)."""
+    m, n = batch.m, batch.n
+    if max_iters is None:
+        max_iters = default_max_iters(m, n)
+    if refactor_period is None:
+        refactor_period = auto_refactor_period(m, n)
+    if tol is None:
+        tol = 1e-6 if dtype == jnp.float32 else 1e-9
+    if feas_tol is None:
+        feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
+    x, obj, status, iters = _solve_revised_core(
+        jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
+        jnp.asarray(batch.c, dtype), m=m, n=n, max_iters=int(max_iters),
+        tol=float(tol), feas_tol=float(feas_tol),
+        refactor_period=int(refactor_period),
+        pricing=canonicalize_revised_rule(pricing))
+    return LPResult(x=np.asarray(x), objective=np.asarray(obj),
+                    status=np.asarray(status), iterations=np.asarray(iters))
+
+
+# ---------------------------------------------------------------------------
+# Active-set compaction integration
+# ---------------------------------------------------------------------------
+
+def segment_revised_phase1(state: RevisedState, steps, *, m: int, n: int,
+                           tol: float, refactor_period: int,
+                           rule: str = "dantzig"):
+    """Run up to `steps` revised pivots; stops early once no LP is still in
+    phase 1 (stage-1 contract of core.compaction.run_schedule)."""
+    def cond(carry):
+        s, it = carry
+        pending = (s.status == _RUNNING) & (s.phase == 1)
+        return jnp.any(pending) & (it < steps)
+
+    def body(carry):
+        s, it = carry
+        return revised_step(s, m=m, n=n, tol=tol,
+                            refactor_period=refactor_period,
+                            rule=rule), it + 1
+
+    return lax.while_loop(cond, body, (state, jnp.int32(0)))
+
+
+def segment_revised_phase2(state: RevisedState, steps, *, m: int, n: int,
+                           tol: float, refactor_period: int,
+                           rule: str = "dantzig"):
+    """Run up to `steps` revised pivots; stops early once every LP is
+    terminal (stage-2 contract)."""
+    def cond(carry):
+        s, it = carry
+        return jnp.any(s.status == _RUNNING) & (it < steps)
+
+    def body(carry):
+        s, it = carry
+        return revised_step(s, m=m, n=n, tol=tol,
+                            refactor_period=refactor_period,
+                            rule=rule), it + 1
+
+    return lax.while_loop(cond, body, (state, jnp.int32(0)))
+
+
+_segment_rev_p1_jit = jax.jit(
+    segment_revised_phase1,
+    static_argnames=("m", "n", "tol", "refactor_period", "rule"))
+_segment_rev_p2_jit = jax.jit(
+    segment_revised_phase2,
+    static_argnames=("m", "n", "tol", "refactor_period", "rule"))
+
+
+@jax.jit
+def _refactor_state_jit(state: RevisedState) -> RevisedState:
+    lu, perm, perm_inv = _refactorize(state.Abar, state.basis)
+    return state._replace(lu=lu, perm=perm, perm_inv=perm_inv,
+                          cnt=jnp.zeros_like(state.cnt))
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _extract_revised_jit(state: RevisedState, *, n: int):
+    x, obj = extract_solution_revised(state, n)
+    status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT,
+                       state.status)
+    obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
+    return x, obj, status.astype(jnp.int8), state.iters
+
+
+class RevisedBackend(JaxBackend):
+    """Compaction-scheduler backend for the revised simplex.
+
+    Reuses JaxBackend's generic plumbing (status/phase host fetches, padding
+    deactivation, bucket gathers via the tree-mapped take) — RevisedState
+    keeps every leaf batched on axis 0, including the eta file and LU
+    factors, exactly so those gathers stay generic.  ``take`` additionally
+    refactorizes after every gather (refactor-on-compact): the gathered LU
+    is still valid per LP, but restarting segments from a clean factor keeps
+    the eta file short and bounds f32 drift across bucket shrinks."""
+
+    def __init__(self, m, n, tol, feas_tol, dtype, pricing="dantzig",
+                 refactor_period: int | None = None):
+        super().__init__(m, n, tol, feas_tol, dtype, pricing="dantzig")
+        self.rule = canonicalize_revised_rule(pricing)
+        self.refactor_period = int(refactor_period
+                                   or auto_refactor_period(m, n))
+
+    def init(self, A, b, c) -> RevisedState:
+        return build_revised_state(A, b, c, feas_tol=self.feas_tol,
+                                   refactor_period=self.refactor_period)
+
+    def run_phase1(self, state, steps):
+        state, it = _segment_rev_p1_jit(
+            state, jnp.int32(steps), m=self.m, n=self.n, tol=self.tol,
+            refactor_period=self.refactor_period, rule=self.rule)
+        return state, int(it)
+
+    def run_phase2(self, state, steps):
+        state, it = _segment_rev_p2_jit(
+            state, jnp.int32(steps), m=self.m, n=self.n, tol=self.tol,
+            refactor_period=self.refactor_period, rule=self.rule)
+        return state, int(it)
+
+    def compact_columns(self, state: RevisedState) -> RevisedState:
+        # nothing to drop: the revised method never materialized the
+        # artificial columns' tableau, only their immutable data columns
+        return state
+
+    def take(self, state: RevisedState, idx) -> RevisedState:
+        gathered = super().take(state, idx)
+        return _refactor_state_jit(gathered)
+
+    def extract(self, state: RevisedState, stage: str):
+        x, obj, status, iters = _extract_revised_jit(state, n=self.n)
+        return (np.asarray(x), np.asarray(obj), np.asarray(status),
+                np.asarray(iters))
+
+    def elements_per_step(self, stage: str) -> int:
+        return revised_elements(self.m, self.n,
+                                refactor_period=self.refactor_period,
+                                partial=(self.rule == "partial"))
+
+
+def solve_batched_revised_compacted(
+        batch: LPBatch, *, dtype=jnp.float32, tol: Optional[float] = None,
+        feas_tol: Optional[float] = None, max_iters: Optional[int] = None,
+        segment_k: Optional[int] = None,
+        compact_threshold: Optional[float] = None,
+        refactor_period: Optional[int] = None, pricing: str = "dantzig",
+        stats_out: Optional[List[SegmentStat]] = None) -> LPResult:
+    """Revised simplex under the active-set compaction scheduler: K-pivot
+    segments, power-of-two bucket gathers of survivors (eta file, LU factors
+    and basis arrays gathered alongside), refactorization after every gather.
+    Same contract as ``solve_batched_compacted``."""
+    m, n = batch.m, batch.n
+    if max_iters is None:
+        max_iters = default_max_iters(m, n)
+    if segment_k is None:
+        segment_k = auto_segment_k(m, n)
+    if tol is None:
+        tol = 1e-6 if dtype == jnp.float32 else 1e-9
+    if feas_tol is None:
+        feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
+    backend = RevisedBackend(m, n, tol, feas_tol, dtype, pricing=pricing,
+                             refactor_period=refactor_period)
+    state = backend.init(jnp.asarray(batch.A, dtype),
+                         jnp.asarray(batch.b, dtype),
+                         jnp.asarray(batch.c, dtype))
+    B = batch.batch
+    orig = np.arange(B, dtype=np.int64)
+    cfg = CompactionConfig(
+        segment_k=int(segment_k),
+        compact_threshold=resolve_compact_threshold(
+            compact_threshold, int(segment_k)),
+        pad_multiple=backend.pad_multiple)
+    return run_schedule(backend, state, orig, B, n, max_iters=int(max_iters),
+                        config=cfg, stats_out=stats_out)

@@ -81,6 +81,7 @@ from .lp import (
     UNBOUNDED,
     LPBatch,
     LPResult,
+    canonicalize_backend,
     default_max_iters,
 )
 from .pricing import (
@@ -202,7 +203,8 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     # ---- Step 1: entering variable (pivot column) --------------------------
     cost = jnp.where((phase == 1)[:, None], T[:, m + 1, :], T[:, m, :])
     masked_cost = jnp.where(consts.col_ok[None, :], cost, -BIG)
-    e, max_cost = select_entering(masked_cost, w, rule=rule, tol=tol)
+    e, max_cost = select_entering(masked_cost, w, rule=rule, tol=tol,
+                                  iters=iters, ncand=n + m)
     is_opt = max_cost <= tol
 
     # phase bookkeeping at optimality of the current objective row
@@ -261,7 +263,8 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
 
     cost = T[:, m, :]
     masked_cost = jnp.where(consts.col_ok[None, :], cost, -BIG)
-    e, max_cost = select_entering(masked_cost, w, rule=rule, tol=tol)
+    e, max_cost = select_entering(masked_cost, w, rule=rule, tol=tol,
+                                  iters=iters, ncand=n + m)
     is_opt = max_cost <= tol
     p2_done = active & is_opt
 
@@ -415,7 +418,9 @@ def _solve_core(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
 def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = None,
                       feas_tol: float | None = None, max_iters: int | None = None,
                       phase_compaction: bool = True,
-                      pricing: str = "dantzig") -> LPResult:
+                      pricing: str = "dantzig",
+                      backend: str = "tableau",
+                      refactor_period: int | None = None) -> LPResult:
     """Solve a batch of LPs with the lockstep pure-JAX simplex.
 
     Phase-compacted by default (identical pivot sequence, ~35-50% fewer
@@ -424,9 +429,20 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     a mesh use core.distributed.solve_shard_map; for active-set compaction
     (retiring finished LPs mid-solve) use core.compaction.
     ``pricing`` selects the entering-column rule — "dantzig" (paper default),
-    "steepest_edge" or "devex" (core/pricing.py); better rules trade a
-    cheaper pivot *count* against a slightly costlier pivot.
+    "steepest_edge", "devex" or "partial" (core/pricing.py); better rules
+    trade a cheaper pivot *count* against a slightly costlier pivot.
+    ``backend`` selects the solver engine: "tableau" (this module — dense
+    tableaux, rank-1 pivot updates) or "revised" (core/revised.py — immutable
+    constraint data, basis-factor updates, O(m^2)+pricing per pivot;
+    ``refactor_period`` bounds its eta file, ``phase_compaction`` does not
+    apply).  Statuses agree across backends; pivot paths may differ in f32.
     """
+    if canonicalize_backend(backend) == "revised":
+        from .revised import solve_batched_revised  # local: avoids cycle
+        return solve_batched_revised(
+            batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
+            max_iters=max_iters, refactor_period=refactor_period,
+            pricing=pricing)
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)

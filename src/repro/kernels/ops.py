@@ -14,20 +14,29 @@ one-shot whole-solve kernel semantics.
 
 ``pricing=`` selects the entering-column rule (core/pricing.py:
 dantzig | steepest_edge | devex) on both the whole-solve and segment paths.
+``pricing="partial"`` degrades to dantzig here with a warning: the tile
+kernel keeps the full cost row resident in VMEM, so block-restricted pricing
+saves nothing — the rule exists for the revised backend's pricing matvec.
+
+``backend="revised"`` (core/revised.py) currently has no Pallas kernel: the
+call falls back to the pure-JAX revised path with a warning so the
+entry-point contract stays uniform across the stack.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lp import ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, default_max_iters
+from repro.core.lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult,
+                           canonicalize_backend, default_max_iters)
 from repro.core.compaction import (
     CompactionConfig, CompactionState, JaxBackend, SegmentStat, auto_segment_k,
-    run_schedule,
+    resolve_compact_threshold, run_schedule,
 )
 from repro.core.pricing import canonicalize_rule
 from repro.core.simplex import _RUNNING, scatter_solution
@@ -86,7 +95,7 @@ class PallasBackend(JaxBackend):
         B_pad = T.shape[0]
         # dantzig never reads weights: a (B, 1) stub keeps the segment
         # kernels from streaming a dead (B, C) lane row through HBM
-        w = (jnp.ones((B_pad, 1), T.dtype) if self.rule == "dantzig"
+        w = (jnp.ones((B_pad, 1), T.dtype) if self.rule in ("dantzig", "partial")
              else _init_padded_weights_jit(T, m=self.m, rule=self.rule))
         return CompactionState(
             T=T, basis=basis, phase=phase,
@@ -110,7 +119,7 @@ class PallasBackend(JaxBackend):
         return self._run(state, steps, "p2")
 
     def compact_columns(self, state: CompactionState) -> CompactionState:
-        w = (state.w if self.rule == "dantzig"
+        w = (state.w if self.rule in ("dantzig", "partial")
              else _compact_padded_weights_jit(state.w, m=self.m, n=self.n))
         return state._replace(
             T=_compact_padded_jit(state.T, m=self.m, n=self.n), w=w)
@@ -132,12 +141,40 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                          interpret: bool = True,
                          compaction: bool = False,
                          segment_k: Optional[int] = None,
-                         compact_threshold: float = 0.5,
+                         compact_threshold: Optional[float] = None,
                          pricing: str = "dantzig",
+                         backend: str = "tableau",
+                         refactor_period: Optional[int] = None,
                          stats_out: Optional[List[SegmentStat]] = None
                          ) -> LPResult:
     m, n = batch.m, batch.n
     pricing = canonicalize_rule(pricing)
+    canonicalize_backend(backend)
+    if backend == "revised":
+        warnings.warn(
+            "solve_batched_pallas(backend='revised'): no Pallas revised "
+            "kernel exists yet; falling back to the pure-JAX revised path "
+            "(core/revised.py)", stacklevel=2)
+        from repro.core.revised import (solve_batched_revised,
+                                        solve_batched_revised_compacted)
+        if compaction:
+            return solve_batched_revised_compacted(
+                batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
+                max_iters=max_iters, segment_k=segment_k,
+                compact_threshold=compact_threshold,
+                refactor_period=refactor_period, pricing=pricing,
+                stats_out=stats_out)
+        return solve_batched_revised(
+            batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
+            max_iters=max_iters, refactor_period=refactor_period,
+            pricing=pricing)
+    if pricing == "partial":
+        warnings.warn(
+            "solve_batched_pallas(pricing='partial'): the tile kernel keeps "
+            "the full cost row in VMEM, so partial pricing saves nothing "
+            "here; using dantzig (identical certificates). Use "
+            "backend='revised' for real block pricing.", stacklevel=2)
+        pricing = "dantzig"
     if tile_b is None:
         tile_b = pick_tile_b(m, n, vmem_budget)
     if max_iters is None:
@@ -149,19 +186,21 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
     c = jnp.asarray(batch.c, dtype)
 
     if compaction:
-        backend = PallasBackend(m, n, tol, feas_tol, tile_b,
-                                interpret=interpret, dtype=dtype,
-                                pricing=pricing)
-        state = backend.init(A, b, c)
+        runner = PallasBackend(m, n, tol, feas_tol, tile_b,
+                               interpret=interpret, dtype=dtype,
+                               pricing=pricing)
+        state = runner.init(A, b, c)
         B = batch.batch
         B_pad = state.T.shape[0]
         orig = np.concatenate(
             [np.arange(B), np.full(B_pad - B, -1)]).astype(np.int64)
-        state = backend.deactivate(state, orig >= 0)
-        cfg = CompactionConfig(segment_k=int(segment_k),
-                               compact_threshold=float(compact_threshold),
-                               pad_multiple=backend.pad_multiple)
-        return run_schedule(backend, state, orig, B, n,
+        state = runner.deactivate(state, orig >= 0)
+        cfg = CompactionConfig(
+            segment_k=int(segment_k),
+            compact_threshold=resolve_compact_threshold(
+                compact_threshold, int(segment_k)),
+            pad_multiple=runner.pad_multiple)
+        return run_schedule(runner, state, orig, B, n,
                             max_iters=int(max_iters), config=cfg,
                             stats_out=stats_out)
 

@@ -1,0 +1,135 @@
+"""scripts/bench_gate.py must demonstrably fail on a regressed bench file
+(and pass on a faithful one) — the CI bench-regression gate's own test."""
+import copy
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_GATE = os.path.join(_REPO, "scripts", "bench_gate.py")
+
+spec = importlib.util.spec_from_file_location("bench_gate", _GATE)
+bench_gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(bench_gate)
+
+
+def _workload(m=5, n=5, B=128):
+    return {
+        "m": m, "n": n, "B": B,
+        "statuses_identical": True,
+        "reduction_scheduled": 2.0,
+        "rules": {
+            "dantzig": {"pivot_cut_vs_dantzig": 0.0,
+                        "statuses_match_dantzig": True},
+            "steepest_edge": {"pivot_cut_vs_dantzig": 0.40,
+                              "statuses_match_dantzig": True},
+            "devex": {"pivot_cut_vs_dantzig": 0.15,
+                      "statuses_match_dantzig": True},
+        },
+        "backends": {
+            "tableau": {"statuses_match_tableau": True},
+            "revised_dantzig": {"statuses_match_tableau": True,
+                                "element_reduction_vs_tableau": 10.0},
+        },
+    }
+
+
+@pytest.fixture
+def baseline():
+    return {"benchmark": "pivot_work", "quick": False, "backends": "all",
+            "quick_workloads": [_workload()]}
+
+
+@pytest.fixture
+def current():
+    return {"benchmark": "pivot_work", "quick": True, "backends": "all",
+            "workloads": [_workload()]}
+
+
+def test_gate_passes_on_matching_run(baseline, current):
+    assert bench_gate.gate(current, baseline) == []
+
+
+def test_gate_passes_within_tolerance(baseline, current):
+    # 10% relative drop is inside the 20% budget
+    current["workloads"][0]["reduction_scheduled"] = 1.8
+    current["workloads"][0]["rules"]["steepest_edge"][
+        "pivot_cut_vs_dantzig"] = 0.36
+    assert bench_gate.gate(current, baseline) == []
+
+
+def test_gate_fails_on_scheduled_regression(baseline, current):
+    current["workloads"][0]["reduction_scheduled"] = 1.5  # -25%
+    failures = bench_gate.gate(current, baseline)
+    assert any("reduction_scheduled" in f for f in failures)
+
+
+def test_gate_fails_on_pricing_cut_regression(baseline, current):
+    current["workloads"][0]["rules"]["steepest_edge"][
+        "pivot_cut_vs_dantzig"] = 0.25  # -37.5% relative
+    failures = bench_gate.gate(current, baseline)
+    assert any("steepest_edge" in f for f in failures)
+
+
+def test_gate_ignores_noise_on_near_zero_cuts(baseline, current):
+    # devex baseline 0.15 -> floor 0.15*0.8 - 0.02 = 0.10
+    current["workloads"][0]["rules"]["devex"]["pivot_cut_vs_dantzig"] = 0.11
+    assert bench_gate.gate(current, baseline) == []
+    current["workloads"][0]["rules"]["devex"]["pivot_cut_vs_dantzig"] = 0.05
+    assert bench_gate.gate(current, baseline) != []
+
+
+def test_gate_fails_on_status_divergence(baseline, current):
+    current["workloads"][0]["statuses_identical"] = False
+    assert any("diverged" in f for f in bench_gate.gate(current, baseline))
+    current["workloads"][0]["statuses_identical"] = True
+    current["workloads"][0]["backends"]["revised_dantzig"][
+        "statuses_match_tableau"] = False
+    assert any("revised_dantzig" in f
+               for f in bench_gate.gate(current, baseline))
+
+
+def test_gate_fails_on_backend_element_regression(baseline, current):
+    current["workloads"][0]["backends"]["revised_dantzig"][
+        "element_reduction_vs_tableau"] = 6.0  # -40%
+    assert any("element_reduction_vs_tableau" in f
+               for f in bench_gate.gate(current, baseline))
+
+
+def test_gate_skips_backend_rows_for_tableau_only_smoke(baseline, current):
+    current["backends"] = "tableau"
+    del current["workloads"][0]["backends"]
+    assert bench_gate.gate(current, baseline) == []
+
+
+def test_gate_fails_when_nothing_matches(baseline, current):
+    current["workloads"][0]["B"] = 4096  # different workload entirely
+    assert any("no workload" in f for f in bench_gate.gate(current, baseline))
+
+
+def test_gate_cli_exit_codes(tmp_path, baseline, current):
+    """End-to-end: the CLI exits 0 on a clean run and 1 on a synthetic
+    regression — what scripts/check.sh and the CI `full` job rely on."""
+    base_p = tmp_path / "baseline.json"
+    base_p.write_text(json.dumps(baseline))
+    good_p = tmp_path / "good.json"
+    good_p.write_text(json.dumps(current))
+    bad = copy.deepcopy(current)
+    bad["workloads"][0]["reduction_scheduled"] = 0.9
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps(bad))
+
+    def run(cur):
+        return subprocess.run(
+            [sys.executable, _GATE, str(cur), "--baseline", str(base_p)],
+            capture_output=True, text=True)
+
+    ok = run(good_p)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    fail = run(bad_p)
+    assert fail.returncode == 1
+    assert "reduction_scheduled" in fail.stdout
