@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: timing, CSV emission, problem generators."""
+"""Shared benchmark utilities: timing, CSV emission, problem generators,
+and the general-form oracle-agreement check."""
 from __future__ import annotations
 
 import time
@@ -7,6 +8,26 @@ from typing import Callable
 import numpy as np
 
 RNG = np.random.default_rng(2018)  # paper year
+
+
+def oracle_checks(general, res, ref) -> dict:
+    """Agreement of a recovered f32 result with the float64 oracle on the
+    same general-form batch: status-match fraction, relative objective
+    error over jointly-OPTIMAL members, and the original-space feasibility
+    certificate (max `general_violation`).  Shared by table6_netlib and
+    pivot_work so the metric definitions cannot drift apart."""
+    from repro.core import OPTIMAL, general_violation
+
+    status = np.asarray(res.status)
+    ok = (status == OPTIMAL) & (np.asarray(ref.status) == OPTIMAL)
+    rel = (np.abs(res.objective[ok] - ref.objective[ok])
+           / np.abs(ref.objective[ok])).max() if ok.any() else 0.0
+    viol = general_violation(general, np.asarray(res.x))
+    return {
+        "status_match_oracle_frac": float((status == ref.status).mean()),
+        "rel_obj_err": float(rel),
+        "max_violation": float(viol[ok].max() if ok.any() else 0.0),
+    }
 
 
 def timeit(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:

@@ -29,6 +29,16 @@ flops model (`analysis.lp_perf.revised_pivot_flops`, where the dense-square
 tableau still wins and the crossover sits at n/m ~ 2-4), plus a
 statuses-match check against the tableau engine.
 
+A ``general_workloads`` section exercises the general-form pipeline on the
+vendored real-instance MPS fixtures (io/mps.py + core/forms.py): each
+fixture is batch-expanded by perturbation, solved by both engines in f32,
+and compared against the float64 oracle *after recovery to original
+coordinates* — plus a scaled-vs-unscaled f32 A/B that records whether
+presolve equilibration changes iteration counts or statuses (it flips the
+ill-scaled SC50B-class staircase from failing to solving).  These rows are
+identical in --quick and full runs so scripts/bench_gate.py can gate status
+regressions on real instances.
+
 Results land in ``BENCH_pivot_work.json`` next to this file so future PRs
 have a perf trajectory to beat; a ``quick_workloads`` section re-runs the
 --quick configuration (B=128) so scripts/bench_gate.py can diff a CI smoke
@@ -62,6 +72,8 @@ except ImportError:  # pragma: no cover
 
 SIZES = ((5, 5), (10, 10), (28, 28), (50, 50), (100, 100))
 QUICK_SIZES = ((5, 5), (28, 28))
+GENERAL_FIXTURES = ("afiro", "sc50b_like")
+GENERAL_B = 32      # same in --quick and full runs: the gate matches on it
 
 
 def mixed_batch(m: int, n: int, B: int, seed: int = 0) -> LPBatch:
@@ -139,6 +151,60 @@ def measure_backends(batch: LPBatch, sched, segment_k: int, iters: int) -> dict:
             steps_tab * B_rev * tableau_elements(m, n)
             / max(1, out[f"revised_{rule}"]["elements_lockstep"]))
     return out
+
+
+def measure_general(fixture: str, B: int = GENERAL_B, *, iters: int = 1,
+                    seed: int = 0, backends: str = "all") -> dict:
+    """One fixture-backed general-form workload row: canonical-shape
+    accounting, the selected f32 engines vs the float64 oracle after
+    recovery (status parity + objective error + original-space
+    feasibility), and the scaled-vs-unscaled f32 A/B on the source
+    instance.  ``backends`` mirrors the CLI flag so a per-engine CI leg
+    measures only its own engine."""
+    from repro.analysis.lp_perf import canonical_work
+    from repro.core import solve_batched_jax, solve_batched_reference
+    from repro.io.mps import fixture_path, perturbed_batch, read_mps
+
+    try:
+        from .common import oracle_checks
+    except ImportError:  # pragma: no cover - direct-script execution
+        from common import oracle_checks
+
+    g1 = read_mps(fixture_path(fixture))
+    batch = perturbed_batch(g1, B, np.random.default_rng(seed))
+    shapes = canonical_work(g1)
+    ref = solve_batched_reference(batch)
+    row = {
+        "fixture": fixture, "B": B,
+        "m": g1.m, "n": g1.n,
+        "m_canonical": shapes["m_canonical"],
+        "n_canonical": shapes["n_canonical"],
+        "revised_wins_flops_canonical": shapes["revised_wins_flops"],
+        "oracle_pivots_mean": float(ref.iterations.mean()),
+        "backends": {},
+    }
+    engines = (("tableau", "revised") if backends == "all"
+               else (backends,))
+    for backend in engines:
+        res = solve_batched_jax(batch, backend=backend)
+        wall = timeit(lambda: solve_batched_jax(batch, backend=backend),
+                      warmup=0, iters=iters)
+        row["backends"][backend] = dict(
+            oracle_checks(batch, res, ref),
+            pivots_mean=float(res.iterations.astype(np.int64).mean()),
+            wall_s=wall)
+    # scaling A/B on the single source instance (deterministic)
+    scaled = solve_batched_jax(g1, scale=True)
+    raw = solve_batched_jax(g1, scale=False)
+    row["scaling"] = {
+        "scaled_status": int(scaled.status[0]),
+        "scaled_iters": int(scaled.iterations[0]),
+        "unscaled_status": int(raw.status[0]),
+        "unscaled_iters": int(raw.iterations[0]),
+        "changes_f32": bool(scaled.status[0] != raw.status[0]
+                            or scaled.iterations[0] != raw.iterations[0]),
+    }
+    return row
 
 
 def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
@@ -298,6 +364,19 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
         # a CI smoke run against this file on exactly matching workloads
         print("-- quick_workloads (bench_gate baseline) --")
         quick_rows = _measure_rows(QUICK_SIZES, 128, True, backends)
+    print("-- general_workloads (fixture-backed, bench_gate baseline) --")
+    general_rows = []
+    for fixture in GENERAL_FIXTURES:
+        r = measure_general(fixture, backends=backends)
+        general_rows.append(r)
+        print(f"general {r['fixture']} B={r['B']}: "
+              f"{r['m']}x{r['n']} -> canonical "
+              f"{r['m_canonical']}x{r['n_canonical']}  "
+              + "  ".join(
+                  f"{k}: match={v['status_match_oracle_frac']:.2f} "
+                  f"err={v['rel_obj_err']:.1e}"
+                  for k, v in r["backends"].items())
+              + f"  scaling_changes_f32={r['scaling']['changes_f32']}")
     result = {
         "benchmark": "pivot_work",
         "quick": quick,
@@ -305,6 +384,7 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
         "elapsed_s": time.time() - t0,
         "workloads": rows,
         "quick_workloads": quick_rows,
+        "general_workloads": general_rows,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

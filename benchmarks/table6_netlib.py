@@ -1,22 +1,76 @@
-"""Paper Table 6: Netlib-like problems, batched device solve vs sequential
-CPU (GLPK/CPLEX stand-in = float64 NumPy simplex)."""
-from repro.core import random_sparse_lp_batch, solve_batched_jax, \
-    solve_batched_reference
+"""Paper Table 6: real Netlib-class instances, batched device solve vs
+sequential CPU (GLPK/CPLEX stand-in = float64 NumPy simplex).
 
-from .common import NETLIB_LIKE, RNG, emit, timeit
+Runs on the vendored general-form MPS fixtures (``tests/fixtures/``; AFIRO
+reproduces the published Netlib optimum exactly — see the fixtures README
+for provenance), batch-expanded by multiplicative perturbation the way the
+paper builds its Netlib batches (Sec. 6).  For each fixture x batch size:
+
+* both device engines (tableau and revised) solve the batch in f32 and are
+  checked against the float64 oracle *after recovery to original
+  coordinates* (status parity + relative objective error + original-space
+  feasibility certificate);
+* the sequential-CPU side is the float64 oracle on a capped subset,
+  extrapolated — the paper's Table-6 speedup methodology;
+* the presolve-scaling A/B records how geometric-mean equilibration
+  changes f32 iteration counts / accuracy per fixture (the paper's Sec. 6
+  f32-accuracy concern; on the deliberately ill-scaled SC50B-class
+  staircase the unscaled f32 solve fails outright).
+"""
+import dataclasses
+
+from repro.core import solve_batched_jax, solve_batched_reference
+from repro.io.mps import fixture_path, perturbed_batch, read_mps
+
+from .common import RNG, emit, oracle_checks, timeit
+
+FIXTURES = ("afiro", "sc50b_like")
 
 
-def run(batches=(1, 10, 100, 1000), problems=NETLIB_LIKE, seq_cap: int = 50):
+def _head(g, k: int):
+    """Leading k members of a GeneralLPBatch (shared structure, sliced
+    numeric data)."""
+    return dataclasses.replace(
+        g, A=g.A[:k], rhs=g.rhs[:k], lb=g.lb[:k], ub=g.ub[:k], c=g.c[:k],
+        c0=g.c0[:k])
+
+
+def run(batches=(1, 10, 100, 1000), fixtures=FIXTURES, seq_cap: int = 50):
     rows = []
-    for name, m, n in problems:
+    for name in fixtures:
+        g1 = read_mps(fixture_path(name))
         for B in batches:
-            lps = random_sparse_lp_batch(RNG, B=B, m=m, n=n, density=0.1)
+            lps = perturbed_batch(g1, B, RNG)
             t_jax = timeit(lambda: solve_batched_jax(lps), iters=2)
+
+            # sequential-CPU side: float64 oracle on the leading slice,
+            # extrapolated (the paper's Table-6 methodology) — the same
+            # slice is the post-recovery correctness reference, so the
+            # per-backend check solves only the slice, not the full batch
             Bs = min(B, seq_cap)
-            sub = random_sparse_lp_batch(RNG, B=Bs, m=m, n=n, density=0.1)
+            sub = _head(lps, Bs)
+            ref = solve_batched_reference(sub)
             t_seq = timeit(lambda: solve_batched_reference(sub), warmup=0,
                            iters=1) * (B / Bs)
+
+            checks = {
+                backend: oracle_checks(
+                    sub, solve_batched_jax(sub, backend=backend), ref)
+                for backend in ("tableau", "revised")
+            }
             emit(f"table6/{name}_batch{B}", t_jax,
-                 f"seq={t_seq:.4f}s;speedup={t_seq / t_jax:.2f}x")
-            rows.append((name, B, t_seq, t_jax))
+                 f"seq={t_seq:.4f}s;speedup={t_seq / t_jax:.2f}x;"
+                 f"tab_err={checks['tableau']['rel_obj_err']:.1e};"
+                 f"rev_err={checks['revised']['rel_obj_err']:.1e}")
+            rows.append((name, B, t_seq, t_jax, checks))
+
+        # presolve-scaling A/B (single instance, f32): the Sec.-6 accuracy
+        # story measured rather than asserted
+        scaled = solve_batched_jax(g1, scale=True)
+        raw = solve_batched_jax(g1, scale=False)
+        emit(f"table6/{name}_scaling_ab", 0.0,
+             f"scaled:status={int(scaled.status[0])},"
+             f"iters={int(scaled.iterations[0])};"
+             f"unscaled:status={int(raw.status[0])},"
+             f"iters={int(raw.iterations[0])}")
     return rows

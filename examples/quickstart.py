@@ -1,17 +1,38 @@
-"""Quickstart: solve a batch of LPs on-device, three ways.
+"""Quickstart: solve LPs on-device — from an MPS file or raw arrays.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.analysis.lp_perf import (revised_crossover, revised_pivot_flops,
-                                    tableau_pivot_flops)
+from repro.analysis.lp_perf import (canonical_work, revised_crossover,
+                                    revised_pivot_flops, tableau_pivot_flops)
 from repro.core import (LPBatch, STATUS_NAMES, random_lp_batch,
                         revised_elements, solve_batched,
                         solve_batched_reference, tableau_elements)
+from repro.io.mps import fixture_path, perturbed_batch, read_mps
 from repro.kernels import solve_batched_pallas
 
 rng = np.random.default_rng(0)
+
+# 0) the general-form entry path: MPS file -> GeneralLPBatch -> any solve_*.
+# Netlib AFIRO (8 equality rows, minimization) is canonicalized on ingestion
+# (equalities grow m: 27x32 -> 35x32, presolve + pow2 equilibration on by
+# default) and the result is recovered into ORIGINAL coordinates — here the
+# published optimum -464.7531.
+afiro = read_mps(fixture_path("afiro"))
+res0 = solve_batched(afiro, backend="revised")
+print(f"AFIRO (MPS -> general form -> revised backend): "
+      f"status={STATUS_NAMES[int(res0.status[0])]} "
+      f"objective={res0.objective[0]:.4f}")
+w = canonical_work(afiro)
+print(f"  canonical shape {w['m_canonical']}x{w['n_canonical']} "
+      f"(from {w['m']}x{w['n']}); revised wins on flops there: "
+      f"{w['revised_wins_flops']}")
+
+# 0b) the paper's batch recipe: one real instance x B perturbed copies
+batch_afiro = perturbed_batch(afiro, 512, rng)
+res0b = solve_batched(batch_afiro, backend="revised", pricing="partial")
+print(f"AFIRO x512 perturbed batch: {res0b.summary()}")
 
 # 1) a hand-written LP:  max x+2y  s.t.  x+y<=4, x<=2, y<=3, x,y>=0  -> 7 at (1,3)
 batch = LPBatch.from_arrays(

@@ -20,7 +20,13 @@ older baselines).  On every matching workload the gate fails when:
   on noise;
 * any revised-backend row's ``element_reduction_vs_tableau`` drops more than
   ``--rel-drop`` relative (only checked when the smoke measured backend
-  rows, i.e. was not run with --backend tableau).
+  rows, i.e. was not run with --backend tableau);
+* a ``general_workloads`` row (fixture-backed real instances through the
+  MPS/canonicalization pipeline) regresses: per-backend status agreement
+  with the float64 oracle drops below baseline - 0.02, relative objective
+  error exceeds 2e-3, or the presolve-scaling f32 effect recorded in the
+  baseline (``scaling.changes_f32``) disappears — status regressions on
+  real instances fail CI here, not in a paper rerun.
 
 Pivot counts and reductions are deterministic for a given seed/B/software
 stack, so on one machine the gate only fires on real behavior changes; the
@@ -108,6 +114,44 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
             "no workload in the smoke run matches the baseline on (m, n, B) "
             "— regenerate BENCH_pivot_work.json (its quick_workloads section "
             "is the gate's comparison target)")
+
+    # ---- general-form (fixture-backed) rows -------------------------------
+    # a per-engine smoke leg (--backend tableau|revised) measures only its
+    # own engine's general rows; the gate compares exactly what it measured
+    mode = current.get("backends", "all")
+    measured = {"tableau", "revised"} if mode == "all" else {mode}
+    cur_gen = {(w["fixture"], w["B"]): w
+               for w in current.get("general_workloads", [])}
+    for bg in baseline.get("general_workloads", []):
+        key = (bg["fixture"], bg["B"])
+        tag = f"general {bg['fixture']} B={bg['B']}"
+        cg = cur_gen.get(key)
+        if cg is None:
+            failures.append(f"{tag}: row missing from the smoke run")
+            continue
+        for backend, bb in bg.get("backends", {}).items():
+            if backend not in measured:
+                continue
+            cb = cg.get("backends", {}).get(backend)
+            if cb is None:
+                failures.append(f"{tag}: backend {backend!r} missing")
+                continue
+            floor = bb["status_match_oracle_frac"] - 0.02
+            if cb["status_match_oracle_frac"] < floor:
+                failures.append(
+                    f"{tag}: {backend} status agreement with the f64 oracle "
+                    f"{cb['status_match_oracle_frac']:.3f} < {floor:.3f} "
+                    f"(baseline {bb['status_match_oracle_frac']:.3f})")
+            if cb["rel_obj_err"] > 2e-3:
+                failures.append(
+                    f"{tag}: {backend} rel_obj_err {cb['rel_obj_err']:.2e} "
+                    "> 2e-3 after recovery")
+        if bg.get("scaling", {}).get("changes_f32") \
+                and not cg.get("scaling", {}).get("changes_f32"):
+            failures.append(
+                f"{tag}: presolve-scaling f32 effect disappeared (baseline "
+                "recorded a scaled-vs-unscaled difference; the smoke run "
+                "shows none — the equilibration pass likely stopped running)")
     return failures
 
 

@@ -2,9 +2,13 @@
 # CI entry point: tier-1 tests + executed-work benchmark smoke + bench gate.
 #
 #   scripts/check.sh                       # tier-1 pytest + tableau smoke + gate
-#   scripts/check.sh --fast                # pytest only
+#   scripts/check.sh --fast                # pytest + mps-roundtrip smoke
 #   scripts/check.sh --backend revised     # suite + smoke for the revised engine
 #   scripts/check.sh --backend all         # suite + smoke once per backend
+#
+# The smoke also carries the general-form rows (vendored MPS fixtures through
+# canonicalize -> solve -> recover vs the float64 oracle) and the fast path
+# an mps-roundtrip check (parse fixtures, write, re-parse, assert equal).
 #
 # Per backend the smoke run writes /tmp/pivot_work_smoke_<backend>.json
 # (never the committed BENCH_pivot_work.json), asserts the absolute
@@ -36,9 +40,38 @@ esac
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+mps_roundtrip_smoke() {
+  echo "== mps-roundtrip smoke =="
+  python - <<'EOF'
+# parse every vendored fixture, write it back, re-parse, assert bit-equality
+# (seconds of work — the fixtures are tiny, nothing is solved)
+import tempfile, os
+import numpy as np
+from repro.io.mps import FIXTURE_NAMES, fixture_path, read_mps, write_mps
+
+for name in FIXTURE_NAMES:
+    g = read_mps(fixture_path(name))
+    with tempfile.NamedTemporaryFile(suffix=".mps", delete=False) as f:
+        path = f.name
+    write_mps(g, path)
+    g2 = read_mps(path)
+    os.unlink(path)
+    for field in ("A", "rhs", "c", "c0", "lb", "ub", "sense"):
+        a, b = getattr(g, field), getattr(g2, field)
+        assert np.array_equal(a, b), f"{name}: {field} changed in round-trip"
+    assert g.maximize == g2.maximize
+    if g.ranges is not None:
+        assert np.array_equal(np.nan_to_num(g.ranges, nan=-1),
+                              np.nan_to_num(g2.ranges, nan=-1)), name
+    print(f"  {name}: {g.m}x{g.n} round-trips bit-identically")
+print("mps-roundtrip smoke OK")
+EOF
+}
+
 if [[ "$FAST" == 1 ]]; then
   echo "== tier-1 pytest (fast) =="
   python -m pytest -x -q
+  mps_roundtrip_smoke
   echo "ALL CHECKS PASSED"
   exit 0
 fi
@@ -71,6 +104,16 @@ for w in d["workloads"]:
             f"backend {name} diverged on statuses at {w['m']}x{w['n']}"
         assert bb.get("scheduled_statuses_match", True), \
             f"backend {name} diverged under compaction at {w['m']}x{w['n']}"
+# general-form smoke: real fixtures through the MPS/canonicalization
+# pipeline must track the float64 oracle after recovery
+for gw in d.get("general_workloads", []):
+    for name, bb in gw["backends"].items():
+        assert bb["status_match_oracle_frac"] >= 0.95, \
+            f"general {gw['fixture']}: {name} status agreement " \
+            f"{bb['status_match_oracle_frac']:.2f} < 0.95"
+        assert bb["rel_obj_err"] < 2e-3, \
+            f"general {gw['fixture']}: {name} rel_obj_err " \
+            f"{bb['rel_obj_err']:.2e}"
 print("pivot-work smoke OK:",
       ", ".join(f"{w['m']}x{w['n']}: x{w['reduction_scheduled']:.2f}"
                 for w in d["workloads"]))
@@ -83,6 +126,11 @@ if d["workloads"][0].get("backends"):
           ", ".join(f"{w['m']}x{w['n']}: revised x"
                     f"{w['backends']['revised_dantzig']['element_reduction_vs_tableau']:.1f}"
                     for w in d["workloads"]))
+if d.get("general_workloads"):
+    print("general-form smoke OK:",
+          ", ".join(f"{gw['fixture']} ({gw['m_canonical']}x"
+                    f"{gw['n_canonical']} canonical)"
+                    for gw in d["general_workloads"]))
 EOF
 
   echo "== bench-regression gate (backend=$backend) =="

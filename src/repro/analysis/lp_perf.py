@@ -40,6 +40,16 @@ kernel, producing the numbers cited in EXPERIMENTS.md §Perf:
                            (state written per pivot, `revised_elements`)
                            it wins everywhere because the (m, n+2m) data
                            block is immutable.
+9. canonical shapes      — general-form problems (core/forms.py) are solved
+                           at their *canonical* shape: equalities and
+                           finite upper bounds grow m, free variables grow
+                           n, presolve shrinks both.  `canonical_work`
+                           re-evaluates every per-pivot model at the
+                           canonical (m, n) — the revised-vs-tableau
+                           crossover must be judged there, not at the
+                           original shape (a square-looking Netlib
+                           instance with many equalities canonicalizes
+                           tall, which is tableau-hostile).
 
   PYTHONPATH=src python -m repro.analysis.lp_perf
 """
@@ -196,6 +206,36 @@ def revised_crossover(m: int, *, partial: bool = True,
     return None
 
 
+def canonical_work(g, *, presolve: bool = True) -> dict:
+    """Canonical-vs-original shape accounting for a general-form batch.
+
+    Returns the original and canonical (m, n) plus every per-pivot work
+    model evaluated at the canonical shape — the shape the device solvers
+    actually run at.  ``revised_wins_flops`` is the headline: whether the
+    basis-factor backend undercuts the phase-compacted tableau *on this
+    instance's canonical geometry* (equalities/upper bounds grow m, so
+    instances that look square in the original data are often
+    revised-territory after canonicalization).
+    """
+    from repro.core.forms import canonical_shape
+
+    mc, nc = canonical_shape(g, presolve=presolve)
+    tab_flops = tableau_pivot_flops(mc, nc, compacted=True)
+    rev_flops = revised_pivot_flops(mc, nc, partial=True)
+    return {
+        "name": g.name, "m": g.m, "n": g.n,
+        "m_canonical": mc, "n_canonical": nc,
+        "row_growth": mc / max(1, g.m), "col_growth": nc / max(1, g.n),
+        "tableau_elements_canonical": tableau_elements(mc, nc,
+                                                       compacted=True),
+        "revised_elements_canonical": revised_elements(mc, nc, partial=True),
+        "tableau_flops_canonical": tab_flops,
+        "revised_flops_canonical": rev_flops,
+        "revised_wins_flops": bool(rev_flops < tab_flops),
+        "revised_crossover_n": revised_crossover(mc),
+    }
+
+
 def _workload(m: int, n: int, B: int, mixed: bool, seed: int) -> LPBatch:
     rng = np.random.default_rng(seed)
     half = B // 2
@@ -326,6 +366,15 @@ def main():
               f"{revised_pivot_flops(m, n, partial=True):.3e},"
               f"{revised_elements(m, n, partial=True):.3e},"
               f"{revised_crossover(m)}")
+    print()
+    print("fixture,m,n,m_canonical,n_canonical,tableau_flops,revised_flops,"
+          "revised_wins  # general-form instances at canonical shape")
+    from repro.io.mps import FIXTURE_NAMES, fixture_path, read_mps
+    for name in FIXTURE_NAMES:
+        w = canonical_work(read_mps(fixture_path(name)))
+        print(f"{w['name']},{w['m']},{w['n']},{w['m_canonical']},"
+              f"{w['n_canonical']},{w['tableau_flops_canonical']:.3e},"
+              f"{w['revised_flops_canonical']:.3e},{w['revised_wins_flops']}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,23 @@
 """The paper's own workload as a dry-run config: batches of small/medium LPs
 solved by the batched simplex across the production mesh (pure batch
-parallelism — the paper's Sec. 5.1 load-balancing story at pod scale)."""
+parallelism — the paper's Sec. 5.1 load-balancing story at pod scale).
+
+Two workload classes:
+
+* synthetic — random standard-form LPs at the paper's Table-2 sizes;
+* fixture-backed — a vendored general-form MPS instance
+  (``tests/fixtures/``, see ``repro.io.mps``) expanded into a batch of
+  perturbed copies exactly the way the paper builds its Netlib batches
+  (Sec. 6).  ``m``/``n`` record the *original* shape; the device solvers
+  run at the canonical shape (``analysis.lp_perf.canonical_work``), which
+  is how these workloads must be costed.
+
+``build_batch`` materializes either kind.
+"""
 import dataclasses
+from typing import Optional
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -11,6 +27,7 @@ class LPWorkload:
     m: int
     n: int
     feasible_start: bool = True
+    fixture: Optional[str] = None     # repro.io.mps fixture name
 
 
 WORKLOADS = (
@@ -18,5 +35,24 @@ WORKLOADS = (
     LPWorkload("lp_28d_100k", batch=100_000, m=28, n=28),
     LPWorkload("lp_100d_50k", batch=50_000, m=100, n=100),
     LPWorkload("lp_300d_2k", batch=2048, m=300, n=300),
-    LPWorkload("lp_netlib_adlittle", batch=100_000, m=71, n=97),
+    # real general-form instances, batch-expanded (canonical 35x32 / 79x49)
+    LPWorkload("lp_afiro_100k", batch=100_000, m=27, n=32, fixture="afiro"),
+    LPWorkload("lp_sc50b_like_50k", batch=50_000, m=50, n=48,
+               fixture="sc50b_like"),
 )
+
+
+def build_batch(w: LPWorkload, batch: Optional[int] = None,
+                rng: Optional[np.random.Generator] = None):
+    """Materialize a workload: an ``LPBatch`` for synthetic entries, a
+    ``GeneralLPBatch`` (perturbed copies of the vendored instance) for
+    fixture-backed ones — both solvable by every ``solve_*`` entry point."""
+    from repro.core.reference import random_lp_batch
+
+    B = batch or w.batch
+    rng = rng or np.random.default_rng(2018)
+    if w.fixture is None:
+        return random_lp_batch(rng, B=B, m=w.m, n=w.n,
+                               feasible_start=w.feasible_start)
+    from repro.io.mps import fixture_path, perturbed_batch, read_mps
+    return perturbed_batch(read_mps(fixture_path(w.fixture)), B, rng)

@@ -3,6 +3,11 @@ shardable primitive (Gurung & Ray 2018, adapted CUDA->TPU/JAX).
 
 Public API:
     LPBatch, LPResult, status codes      — problem/result containers
+    GeneralLPBatch, canonicalize         — general-form LPs (senses/ranges/
+                                           bounds/min-max, core/forms.py):
+                                           every solve_* accepts one
+                                           directly; io/mps.py parses MPS
+                                           files into them
     solve_batched_jax                    — lockstep pure-JAX batched simplex
                                            (phase-compacted two-loop solve)
     solve_batched_revised                — revised simplex: basis-factor
@@ -22,6 +27,10 @@ Public API:
 from .lp import (  # noqa: F401
     BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED,
     LPBatch, LPResult, STATUS_NAMES, build_tableau, default_max_iters,
+)
+from .forms import (  # noqa: F401
+    GeneralLPBatch, Recovery, canonical_shape, canonicalize,
+    general_violation, random_general_lp_batch,
 )
 from .pricing import ALL_PRICING, PRICING_RULES, canonicalize_rule  # noqa: F401
 from .simplex import (  # noqa: F401

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .compaction import solve_batched_compacted
+from .forms import ensure_canonical, finish_result
 from .lp import LPBatch, LPResult, canonicalize_backend
 from .simplex import solve_batched_jax
 
@@ -66,6 +67,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                   n_devices: int = 1, sort_by_difficulty: bool = False,
                   compaction: bool = False, pricing: str = "dantzig",
                   backend: str = "tableau",
+                  presolve: bool = True, scale: Optional[bool] = None,
                   **solver_kwargs) -> LPResult:
     """Chunked batched solve (Algorithm 1). ``solver`` defaults to the pure
     JAX lockstep solver; kernels.ops.solve_batched_pallas and
@@ -95,8 +97,15 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     updates) or "revised" (core/revised.py basis-factor updates); with
     ``solver=None`` it picks the matching compacted/monolithic solver, and a
     custom ``solver`` must accept a ``backend`` kwarg when "revised" is
-    requested (solve_batched_pallas does)."""
+    requested (solve_batched_pallas does).
+
+    A ``GeneralLPBatch`` (core/forms.py) is canonicalized *once* up front —
+    chunking, sorting and memory planning all operate on the canonical
+    shape (Eq. 5 budgets the canonical tableau) — and the concatenated
+    result is recovered into original coordinates at the end;
+    ``presolve``/``scale`` control the canonicalization."""
     canonicalize_backend(backend)
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     if solver is None:
         if backend == "revised":
             from .revised import (solve_batched_revised,
@@ -150,7 +159,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
         chunk_size = max_chunk_size(batch, device_bytes, n_devices)
     if chunk_size >= B:
         res = solver(batch, **solver_kwargs)
-        return _unpermute(res, perm)
+        return finish_result(rec, _unpermute(res, perm))
 
     n_chunks = math.ceil(B / chunk_size)
     pending = []
@@ -166,7 +175,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
         status=np.concatenate([np.asarray(r.status) for r in pending]),
         iterations=np.concatenate([np.asarray(r.iterations) for r in pending]),
     )
-    return _unpermute(res, perm)
+    return finish_result(rec, _unpermute(res, perm))
 
 
 def _unpermute(res: LPResult, perm) -> LPResult:

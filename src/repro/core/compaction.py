@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .forms import ensure_canonical, finish_result
 from .lp import ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, default_max_iters
 from .pricing import canonicalize_rule, compact_weights, init_weights
 from .simplex import (
@@ -411,10 +412,13 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
                             segment_k: Optional[int] = None,
                             compact_threshold: Optional[float] = None,
                             pricing: str = "dantzig",
-                            stats_out: Optional[List[SegmentStat]] = None
-                            ) -> LPResult:
+                            stats_out: Optional[List[SegmentStat]] = None,
+                            presolve: bool = True,
+                            scale: Optional[bool] = None) -> LPResult:
     """Solve a batch with the two-level work-elimination engine (phase
     compaction + active-set compaction scheduler) on the pure-JAX backend.
+    Accepts a GeneralLPBatch like every solver entry point (canonicalize on
+    ingestion, recover on the way out).
 
     Bit-identical statuses/iterations to ``solve_batched_jax`` with the same
     ``pricing`` rule — only the executed device work changes.
@@ -424,6 +428,7 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
     the observed survivor curves).  ``stats_out`` (a list) collects
     per-segment SegmentStat records — executed work plus the observed
     survivor curve — for benchmarks/pivot_work.py."""
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
@@ -444,5 +449,6 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
         compact_threshold=resolve_compact_threshold(compact_threshold,
                                                     int(segment_k)),
         pad_multiple=backend.pad_multiple)
-    return run_schedule(backend, state, orig, B, n, max_iters=int(max_iters),
-                        config=cfg, stats_out=stats_out)
+    return finish_result(rec, run_schedule(backend, state, orig, B, n,
+                                           max_iters=int(max_iters),
+                                           config=cfg, stats_out=stats_out))

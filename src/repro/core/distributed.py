@@ -39,6 +39,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from .forms import ensure_canonical, finish_result
 from .lp import (LPBatch, LPResult, OPTIMAL, ITERATION_LIMIT,
                  canonicalize_backend, default_max_iters)
 from .simplex import solve_two_phase
@@ -97,15 +98,19 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                tol: float = 1e-6, feas_tol: float = 1e-5,
                max_iters: Optional[int] = None, lower_only: bool = False,
                pricing: str = "dantzig", backend: str = "tableau",
-               refactor_period: Optional[int] = None):
+               refactor_period: Optional[int] = None,
+               presolve: bool = True, scale: Optional[bool] = None):
     """Lockstep global solve: batch sharded over all mesh axes, single global
     while_loop (the paper-faithful distributed baseline).  ``pricing``
     selects the entering-column rule (core/pricing.py); the per-LP weights
     are loop state sharded like the tableaux, so no rule adds cross-chip
     traffic.  ``backend="revised"`` runs the basis-factor engine
     (core/revised.py) — its eta file and LU factors are loop state sharded
-    with the batch, so it too stays communication-free."""
+    with the batch, so it too stays communication-free.  GeneralLPBatch
+    inputs are canonicalized on the host before sharding (the canonical
+    shape is what gets partitioned) and recovered after the gather."""
     canonicalize_backend(backend)
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     max_iters = max_iters or default_max_iters(m, n)
     A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
@@ -123,9 +128,10 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                         jax.ShapeDtypeStruct(b.shape, b.dtype),
                         jax.ShapeDtypeStruct(c.shape, c.dtype))
     x, obj, status, iters = fn(A, b, c)
-    return LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
-                    status=np.asarray(status)[:orig],
-                    iterations=np.asarray(iters)[:orig])
+    res = LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
+                   status=np.asarray(status)[:orig],
+                   iterations=np.asarray(iters)[:orig])
+    return finish_result(rec, res)
 
 
 class _ShardMapBackend(JaxBackend):
@@ -233,7 +239,8 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                     compact_threshold: Optional[float] = None,
                     pricing: str = "dantzig", stats_out=None,
                     backend: str = "tableau",
-                    refactor_period: Optional[int] = None):
+                    refactor_period: Optional[int] = None,
+                    presolve: bool = True, scale: Optional[bool] = None):
     """Per-shard termination: each chip solves its local LPs to completion
     independently (no cross-chip sync per pivot).
 
@@ -243,8 +250,11 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     shrinks with the survivor count (``compact_threshold=None`` derives the
     gather eagerness from `auto_compact_threshold`).  ``pricing`` selects the
     entering-column rule (core/pricing.py) in both modes, and
-    ``backend="revised"`` the basis-factor engine (core/revised.py)."""
+    ``backend="revised"`` the basis-factor engine (core/revised.py).
+    GeneralLPBatch inputs canonicalize on the host before sharding and
+    recover after the gather, in both the one-shot and segmented modes."""
     canonicalize_backend(backend)
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     max_iters = max_iters or default_max_iters(m, n)
 
@@ -280,9 +290,9 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
             compact_threshold=resolve_compact_threshold(compact_threshold,
                                                         segment_k),
             pad_multiple=runner.pad_multiple)
-        return run_schedule(runner, state, orig, orig_B, n,
-                            max_iters=max_iters, config=cfg,
-                            stats_out=stats_out)
+        return finish_result(rec, run_schedule(runner, state, orig, orig_B, n,
+                                               max_iters=max_iters, config=cfg,
+                                               stats_out=stats_out))
 
     A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
     spec = P(axes)
@@ -301,6 +311,7 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                         jax.ShapeDtypeStruct(b.shape, b.dtype),
                         jax.ShapeDtypeStruct(c.shape, c.dtype))
     x, obj, status, iters = fn(A, b, c)
-    return LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
-                    status=np.asarray(status)[:orig],
-                    iterations=np.asarray(iters)[:orig])
+    res = LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
+                   status=np.asarray(status)[:orig],
+                   iterations=np.asarray(iters)[:orig])
+    return finish_result(rec, res)

@@ -1,0 +1,483 @@
+"""General-form LP batches and the canonicalization pipeline.
+
+Real LP suites (Netlib here; MIPLIB-derived batches elsewhere) are
+*general-form*: min/max objectives, ``<=`` / ``=`` / ``>=`` and ranged rows,
+and variable lower/upper/free bounds — while every solver in this repo
+consumes the paper's *standard form* (``max c.x  s.t.  A x <= b, x >= 0``,
+core/lp.py).  This module is the bridge:
+
+    GeneralLPBatch  --canonicalize()-->  (LPBatch, Recovery)
+
+``canonicalize`` is an invertible, host-side (float64 NumPy) transform:
+
+1. **presolve** (on by default): fixed-variable elimination (``lb == ub``),
+   empty-column elimination (cost-optimal bound substitution), empty-row
+   removal (with per-LP infeasibility detection folded into ``Recovery``);
+2. **bound handling**: finite lower bounds are shifted out
+   (``y = x - lb``), free variables (``lb = -inf``) are split into
+   ``y+ - y-`` column pairs, finite upper bounds become extra rows;
+3. **row senses**: ``>=`` rows are negated, ``=`` and ranged rows become a
+   ``<=`` pair — equalities and upper bounds *grow m*, which is why the
+   revised-vs-tableau work models (analysis/lp_perf.py) must be evaluated
+   on canonical shapes;
+4. **scaling** (on by default): geometric-mean row/column equilibration of
+   the canonical data, with scales snapped to powers of two so the
+   transform is mantissa-exact; unscaling is folded into ``Recovery``.
+   Scaling never changes exact-arithmetic statuses but does change float32
+   pivot paths — it is the f32 accuracy lever for badly-scaled instances
+   (the paper's Sec. 6 concern).
+
+``Recovery.recover`` maps an ``LPResult`` on the canonical batch back to
+original coordinates: un-scale, un-split, un-shift, re-insert presolved
+variables, re-apply the objective sense and constant, and override statuses
+for LPs presolve proved infeasible.  The reported objective is *recomputed*
+as ``c.x + c0`` in original coordinates, so result self-consistency is
+exact by construction; ``general_violation`` provides the matching
+original-space primal certificate check.
+
+Every ``solve_*`` entry point accepts a ``GeneralLPBatch`` directly (it
+canonicalizes on ingestion and recovers on the way out), so the tableau and
+revised engines, compaction, pricing, shard_map and Pallas all compose
+unchanged — they only ever see the canonical ``LPBatch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .lp import INFEASIBLE, OPTIMAL, LPBatch, LPResult
+
+# Row senses (MPS letters).
+LE, GE, EQ = "L", "G", "E"
+SENSES = (LE, GE, EQ)
+
+
+def _bcast(arr, shape, name, dtype=np.float64):
+    """Broadcast per-structure (m,)/(n,) data against the batch axis."""
+    out = np.asarray(arr, dtype=dtype)
+    if out.ndim == len(shape) - 1:
+        out = np.broadcast_to(out[None], shape)
+    if out.shape != shape:
+        raise ValueError(f"{name}: expected shape {shape}, got {out.shape}")
+    return np.ascontiguousarray(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneralLPBatch:
+    """A batch of B general-form LPs sharing one structure.
+
+        optimize  c . x + c0      (min by default — the MPS convention)
+        s.t.      lo_i <= A_i . x <= hi_i    (senses/ranges per row)
+                  lb <= x <= ub              (+-inf allowed)
+
+    Numeric data (``A``, ``rhs``, ``lb``, ``ub``, ``c``, ``c0``) is per-LP;
+    structure (``sense``, ``ranges``, names, objective direction) is shared
+    across the batch so the canonical form has one static shape — the same
+    same-size contract the paper's batches obey (perturbed copies of one
+    instance, Sec. 6).
+    """
+
+    A: np.ndarray          # (B, m, n) float64
+    sense: np.ndarray      # (m,) '<U1' in {L, G, E}
+    rhs: np.ndarray        # (B, m)
+    lb: np.ndarray         # (B, n), -inf for free-below
+    ub: np.ndarray         # (B, n), +inf for unbounded-above
+    c: np.ndarray          # (B, n)
+    c0: np.ndarray         # (B,) objective constant
+    maximize: bool = False
+    ranges: Optional[np.ndarray] = None  # (m,), NaN = no range
+    name: str = "general"
+    row_names: Optional[Tuple[str, ...]] = None
+    col_names: Optional[Tuple[str, ...]] = None
+
+    @property
+    def batch(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.A.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[2]
+
+    @staticmethod
+    def from_arrays(A, sense, rhs, *, lb=None, ub=None, c=None, c0=0.0,
+                    maximize=False, ranges=None, name="general",
+                    row_names=None, col_names=None) -> "GeneralLPBatch":
+        A = np.asarray(A, dtype=np.float64)
+        if A.ndim == 2:
+            A = A[None]
+        B, m, n = A.shape
+        sense = np.asarray(sense, dtype="<U1").reshape(m)
+        bad = ~np.isin(sense, SENSES)
+        if bad.any():
+            raise ValueError(f"unknown row senses {set(sense[bad])}; "
+                             f"expected one of {SENSES}")
+        rhs = _bcast(rhs, (B, m), "rhs")
+        lb = _bcast(np.zeros(n) if lb is None else lb, (B, n), "lb")
+        ub = _bcast(np.full(n, np.inf) if ub is None else ub, (B, n), "ub")
+        c = _bcast(np.zeros(n) if c is None else c, (B, n), "c")
+        c0 = np.broadcast_to(np.asarray(c0, np.float64), (B,)).copy()
+        if ranges is not None:
+            ranges = np.asarray(ranges, np.float64).reshape(m)
+        if (lb > ub).any():
+            raise ValueError("lb > ub on some variable")
+        return GeneralLPBatch(A=A, sense=sense, rhs=rhs, lb=lb, ub=ub, c=c,
+                              c0=c0, maximize=bool(maximize), ranges=ranges,
+                              name=name,
+                              row_names=tuple(row_names) if row_names else None,
+                              col_names=tuple(col_names) if col_names else None)
+
+    def row_bounds(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-row activity interval (lo, hi), each (B, m), from sense +
+        rhs + RANGES (MPS semantics: an ``E`` row's range sign picks the
+        side the interval grows toward)."""
+        B, m = self.rhs.shape
+        lo = np.full((B, m), -np.inf)
+        hi = np.full((B, m), np.inf)
+        is_l = self.sense == LE
+        is_g = self.sense == GE
+        is_e = self.sense == EQ
+        hi[:, is_l] = self.rhs[:, is_l]
+        lo[:, is_g] = self.rhs[:, is_g]
+        lo[:, is_e] = self.rhs[:, is_e]
+        hi[:, is_e] = self.rhs[:, is_e]
+        if self.ranges is not None:
+            has = ~np.isnan(self.ranges)
+            r = self.ranges
+            sel = has & is_l
+            lo[:, sel] = self.rhs[:, sel] - np.abs(r[sel])[None]
+            sel = has & is_g
+            hi[:, sel] = self.rhs[:, sel] + np.abs(r[sel])[None]
+            sel = has & is_e & (r >= 0)
+            hi[:, sel] = self.rhs[:, sel] + r[sel][None]
+            sel = has & is_e & (r < 0)
+            lo[:, sel] = self.rhs[:, sel] + r[sel][None]
+        return lo, hi
+
+    def objective_value(self, x: np.ndarray) -> np.ndarray:
+        """c . x + c0 in original coordinates (the recovered objective)."""
+        return np.einsum("bn,bn->b", self.c,
+                         np.asarray(x, np.float64)) + self.c0
+
+
+def general_violation(g: GeneralLPBatch, x: np.ndarray) -> np.ndarray:
+    """Max primal violation per LP of ``x`` in *original* coordinates
+    (row activity intervals and variable bounds) — the original-space
+    feasibility certificate used by tests and benchmarks."""
+    x = np.asarray(x, np.float64)
+    lo, hi = g.row_bounds()
+    act = np.einsum("bmn,bn->bm", g.A, x)
+    vrow = np.maximum(np.where(np.isfinite(lo), lo - act, 0.0),
+                      np.where(np.isfinite(hi), act - hi, 0.0))
+    vcol = np.maximum(np.where(np.isfinite(g.lb), g.lb - x, 0.0),
+                      np.where(np.isfinite(g.ub), x - g.ub, 0.0))
+    return np.maximum(vrow.max(axis=1, initial=0.0),
+                      vcol.max(axis=1, initial=0.0))
+
+
+def _pow2(s: np.ndarray) -> np.ndarray:
+    """Snap positive scales to the nearest power of two (mantissa-exact
+    scaling: equilibration then changes exponents only)."""
+    return np.exp2(np.round(np.log2(s)))
+
+
+def _equilibrate(A: np.ndarray, iters: int = 2):
+    """Geometric-mean row/column equilibration of a (B, m, n) batch.
+    Returns (row_scale (B, m), col_scale (B, n)), powers of two, such that
+    ``row_scale[:, :, None] * A * col_scale[:, None, :]`` has row/column
+    magnitude ranges centered near 1.  All-zero rows/columns get scale 1."""
+    B, m, n = A.shape
+    r = np.ones((B, m))
+    s = np.ones((B, n))
+    W = np.abs(A)
+    for _ in range(iters):
+        cur = W * r[:, :, None] * s[:, None, :]
+        nz = cur > 0
+        big = np.where(nz, cur, -np.inf).max(axis=2)
+        small = np.where(nz, cur, np.inf).min(axis=2)
+        ok = np.isfinite(big) & (big > 0)
+        r = r * np.where(ok, 1.0 / np.sqrt(np.where(ok, big * small, 1.0)), 1.0)
+        cur = W * r[:, :, None] * s[:, None, :]
+        nz = cur > 0
+        big = np.where(nz, cur, -np.inf).max(axis=1)
+        small = np.where(nz, cur, np.inf).min(axis=1)
+        ok = np.isfinite(big) & (big > 0)
+        s = s * np.where(ok, 1.0 / np.sqrt(np.where(ok, big * small, 1.0)), 1.0)
+    return _pow2(r), _pow2(s)
+
+
+@dataclasses.dataclass(frozen=True)
+class Recovery:
+    """Invertible record of everything ``canonicalize`` did, sufficient to
+    report an ``LPResult`` in original coordinates."""
+
+    general: GeneralLPBatch
+    kept: np.ndarray           # (nk,) original column indices that survived
+    baseline: np.ndarray       # (B, n) presolved-variable values (0 elsewhere)
+    shift: np.ndarray          # (B, nk) lower-bound shift (0 for free cols)
+    free: np.ndarray           # (nk,) bool — column was split (has neg part)
+    status_override: np.ndarray  # (B,) int16, -1 = none (presolve verdicts)
+    col_scale: Optional[np.ndarray]  # (B, n_canonical) or None
+    row_scale: Optional[np.ndarray]  # (B, m_canonical) or None
+    m_canonical: int
+    n_canonical: int
+
+    def recover_x(self, x_can: np.ndarray) -> np.ndarray:
+        """Canonical solution (B, n_canonical) -> original x (B, n)."""
+        x_can = np.asarray(x_can, np.float64)
+        if self.col_scale is not None:
+            x_can = x_can * self.col_scale
+        nk = len(self.kept)
+        y = x_can[:, :nk].copy()
+        if self.free.any():
+            y[:, self.free] -= x_can[:, nk:]
+        y += self.shift
+        x = self.baseline.copy()
+        x[:, self.kept] = y
+        return x
+
+    def recover(self, res: LPResult) -> LPResult:
+        """Map a canonical LPResult back to the original problem: original
+        coordinates, original objective sense/constant, presolve status
+        overrides applied.  The objective is recomputed as ``c.x + c0`` in
+        original coordinates (NaN for non-optimal statuses, matching the
+        solver convention)."""
+        x = self.recover_x(np.asarray(res.x))
+        status = np.asarray(res.status).copy()
+        ov = self.status_override >= 0
+        status[ov] = self.status_override[ov].astype(status.dtype)
+        obj = self.general.objective_value(x)
+        obj = np.where(status == OPTIMAL, obj, np.nan)
+        return LPResult(x=x, objective=obj, status=status,
+                        iterations=np.asarray(res.iterations))
+
+
+def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
+                 scale: Optional[bool] = None,
+                 feas_tol: float = 1e-9) -> Tuple[LPBatch, Recovery]:
+    """General form -> the paper's standard form (see module docstring).
+
+    ``scale=None`` follows ``presolve`` (equilibration is part of the
+    default presolve pass); pass ``scale=False`` to canonicalize without
+    touching the numbers — useful for A/B-ing f32 behavior.
+    """
+    if scale is None:
+        scale = presolve
+    B, m, n = g.batch, g.m, g.n
+    lo, hi = g.row_bounds()
+    A = np.asarray(g.A, np.float64)
+    csign = 1.0 if g.maximize else -1.0
+    cmax = csign * np.asarray(g.c, np.float64)   # standard form maximizes
+    lb = np.asarray(g.lb, np.float64)
+    ub = np.asarray(g.ub, np.float64)
+
+    baseline = np.zeros((B, n))
+    keep_col = np.ones(n, bool)
+    keep_row = np.ones(m, bool)
+    status_override = np.full(B, -1, np.int16)
+
+    if presolve:
+        # --- fixed variables: lb == ub for every batch member ------------
+        fixed = (lb == ub).all(axis=0) & np.isfinite(lb).all(axis=0)
+        # --- empty columns: structurally zero across the batch -----------
+        empty = (A == 0.0).all(axis=(0, 1)) & ~fixed
+        # value each member wants: the cost-optimal bound; keep the column
+        # when any member's *optimizing* bound is infinite — dropping it
+        # would hide unboundedness (the kept zero column's positive-cost
+        # side then has no ratio row, so the solver certifies UNBOUNDED)
+        want_ub = cmax > 0
+        want_lb = cmax < 0
+        val = np.where(want_ub, ub,
+                       np.where(want_lb, lb,
+                                np.where(np.isfinite(lb), lb, ub)))
+        droppable = empty & np.isfinite(val).all(axis=0)
+        sub = fixed | droppable
+        if sub.any():
+            baseline[:, fixed] = lb[:, fixed]
+            baseline[:, droppable] = val[:, droppable]
+            contrib = np.einsum("bmk,bk->bm", A[:, :, sub], baseline[:, sub])
+            lo = lo - contrib
+            hi = hi - contrib
+            keep_col &= ~sub
+        # --- empty rows (after column elimination) ------------------------
+        empty_row = (A[:, :, keep_col] == 0.0).all(axis=(0, 2))
+        if empty_row.any():
+            bad = ((np.where(np.isfinite(lo), lo, -np.inf) > feas_tol)
+                   | (np.where(np.isfinite(hi), hi, np.inf) < -feas_tol))
+            status_override[bad[:, empty_row].any(axis=1)] = INFEASIBLE
+            keep_row &= ~empty_row
+
+    kept = np.flatnonzero(keep_col)
+    rows = np.flatnonzero(keep_row)
+    A = A[:, rows][:, :, kept]
+    lo, hi = lo[:, rows], hi[:, rows]
+    lbk, ubk, ck = lb[:, kept], ub[:, kept], cmax[:, kept]
+
+    # --- bounds: shift finite lower bounds, split free columns -----------
+    lb_fin = np.isfinite(lbk)
+    mixed = lb_fin.any(axis=0) & ~lb_fin.all(axis=0)
+    if mixed.any():
+        raise ValueError(
+            "lower-bound finiteness must be batch-uniform per column "
+            f"(columns {np.flatnonzero(mixed)} mix finite and -inf): the "
+            "canonical batch needs one static shape")
+    free = ~lb_fin[0] if B else ~lb_fin.any(axis=0)
+    shift = np.where(lb_fin, lbk, 0.0)
+    contrib = np.einsum("bmk,bk->bm", A, shift)
+    lo, hi = lo - contrib, hi - contrib
+    ub_shifted = ubk - shift            # finite iff ub finite
+    ub_fin = np.isfinite(ub_shifted)
+    if (ub_fin.any(axis=0) & ~ub_fin.all(axis=0)).any():
+        raise ValueError(
+            "upper-bound finiteness must be batch-uniform per column: the "
+            "canonical batch needs one static shape")
+    ub_cols = np.flatnonzero(ub_fin.all(axis=0)) if B else np.array([], int)
+
+    nk = len(kept)
+    nf = int(free.sum())
+    n_can = nk + nf
+    hi_fin = np.isfinite(hi)
+    lo_fin = np.isfinite(lo)
+    # A row bound that is infinite for some members but finite for others
+    # has no faithful static-shape encoding (substituting a large finite
+    # bound would mis-report genuinely unbounded members as OPTIMAL), so
+    # reject it — same contract as the variable-bound uniformity checks.
+    mixed_rows = ((hi_fin.any(axis=0) & ~hi_fin.all(axis=0))
+                  | (lo_fin.any(axis=0) & ~lo_fin.all(axis=0)))
+    if mixed_rows.any():
+        raise ValueError(
+            "row-bound finiteness must be batch-uniform per row (rows "
+            f"{np.flatnonzero(mixed_rows)} mix finite and infinite rhs): "
+            "the canonical batch needs one static shape")
+    hi_rows = np.flatnonzero(hi_fin.all(axis=0))
+    lo_rows = np.flatnonzero(lo_fin.all(axis=0))
+    m_can = len(hi_rows) + len(lo_rows) + len(ub_cols)
+
+    A_can = np.zeros((B, m_can, n_can))
+    b_can = np.zeros((B, m_can))
+    pos = A if nf == 0 else np.concatenate([A, -A[:, :, free]], axis=2)
+    r0 = len(hi_rows)
+    A_can[:, :r0] = pos[:, hi_rows]
+    b_can[:, :r0] = hi[:, hi_rows]
+    r1 = r0 + len(lo_rows)
+    A_can[:, r0:r1] = -pos[:, lo_rows]
+    b_can[:, r0:r1] = -lo[:, lo_rows]
+    # upper-bound rows: y_j <= ub' (free columns: y+ - y- <= ub')
+    free_slot = np.cumsum(free) - 1      # index into the neg block
+    for k, j in enumerate(ub_cols):
+        i = r1 + k
+        A_can[:, i, j] = 1.0
+        if free[j]:
+            A_can[:, i, nk + free_slot[j]] = -1.0
+        b_can[:, i] = ub_shifted[:, j]
+    c_can = ck if nf == 0 else np.concatenate([ck, -ck[:, free]], axis=1)
+
+    # Degenerate shells: presolve can empty the canonical problem entirely
+    # (every row redundant and/or every column substituted).  The solvers
+    # need at least one row and one column, so pad with an inert 0.y <= 1
+    # row / zero-cost zero column — neither changes the solution set, and
+    # unboundedness along a padded-away direction is still caught (an empty
+    # entering column has no ratio row).
+    if n_can == 0:
+        n_can = 1
+        A_can = np.zeros((B, m_can, 1))
+        c_can = np.zeros((B, 1))
+    if m_can == 0:
+        m_can = 1
+        A_can = np.zeros((B, 1, n_can))
+        b_can = np.ones((B, 1))
+
+    row_scale = col_scale = None
+    if scale and m_can and n_can:
+        row_scale, col_scale = _equilibrate(A_can)
+        A_can = A_can * row_scale[:, :, None] * col_scale[:, None, :]
+        b_can = b_can * row_scale
+        c_can = c_can * col_scale
+
+    lp = LPBatch(A=A_can, b=b_can, c=c_can)
+    rec = Recovery(general=g, kept=kept, baseline=baseline, shift=shift,
+                   free=free, status_override=status_override,
+                   col_scale=col_scale, row_scale=row_scale,
+                   m_canonical=m_can, n_canonical=n_can)
+    return lp, rec
+
+
+def canonical_shape(g: GeneralLPBatch, *, presolve: bool = True
+                    ) -> Tuple[int, int]:
+    """(m, n) of the canonical standard-form batch ``canonicalize`` would
+    produce — the shape the work models must be evaluated at (equalities
+    and finite upper bounds grow m; free variables grow n)."""
+    _, rec = canonicalize(g, presolve=presolve, scale=False)
+    return rec.m_canonical, rec.n_canonical
+
+
+def ensure_canonical(batch, *, presolve: bool = True,
+                     scale: Optional[bool] = None):
+    """Entry-point shim: pass ``LPBatch`` through untouched; canonicalize a
+    ``GeneralLPBatch``.  Returns (LPBatch, Recovery-or-None)."""
+    if isinstance(batch, GeneralLPBatch):
+        return canonicalize(batch, presolve=presolve, scale=scale)
+    return batch, None
+
+
+def finish_result(rec, res: LPResult) -> LPResult:
+    """Entry-point shim: apply ``Recovery`` when the input was general."""
+    return res if rec is None else rec.recover(res)
+
+
+def random_general_lp_batch(rng: np.random.Generator, B: int, m: int, n: int,
+                            *, eq_frac: float = 0.2, ge_frac: float = 0.3,
+                            free_frac: float = 0.0, ranged_frac: float = 0.0,
+                            bounded: bool = True,
+                            maximize: Optional[bool] = None
+                            ) -> GeneralLPBatch:
+    """Random general-form batches built around a known interior point, for
+    the canonicalize->solve->recover property tests.
+
+    Row senses are drawn per structure (shared across the batch); row
+    bounds are placed around ``A @ x0`` so every member is feasible, and
+    with ``bounded=True`` every variable gets a finite upper bound so the
+    canonical LP is bounded.  ``free_frac`` turns a fraction of columns
+    free-below (exercising the split path; such batches may be unbounded —
+    callers compare statuses rather than assume OPTIMAL).
+    """
+    if maximize is None:
+        maximize = bool(rng.integers(2))
+    A = rng.uniform(-3.0, 3.0, size=(B, m, n))
+    A *= rng.uniform(size=(B, m, n)) < 0.6
+    x0 = rng.uniform(0.5, 2.0, size=(B, n))
+    act = np.einsum("bmn,bn->bm", A, x0)
+    sense = np.where(
+        rng.uniform(size=m) < eq_frac, EQ,
+        np.where(rng.uniform(size=m) < ge_frac / max(1e-9, 1 - eq_frac),
+                 GE, LE)).astype("<U1")
+    margin = rng.uniform(0.1, 2.0, size=(B, m))
+    rhs = np.where(sense[None, :] == EQ, act,
+                   np.where(sense[None, :] == GE, act - margin, act + margin))
+    ranges = None
+    if ranged_frac > 0:
+        # range >= the batch-max margin keeps x0 inside the two-sided row
+        ranges = np.where(rng.uniform(size=m) < ranged_frac,
+                          margin.max(axis=0) + rng.uniform(0.1, 2.0, size=m),
+                          np.nan)
+        ranges[sense == EQ] = np.nan   # keep E rows exact (simpler oracle)
+    lb = np.where(rng.uniform(size=n) < 0.5,
+                  rng.uniform(-1.0, 0.4, size=(B, n)), 0.0)
+    lb = np.minimum(lb, x0 - 0.05)
+    if free_frac > 0:
+        lb[:, rng.uniform(size=n) < free_frac] = -np.inf
+    if bounded:
+        ub = x0 + rng.uniform(0.5, 3.0, size=(B, n))
+    else:
+        ub = np.where(rng.uniform(size=n) < 0.5,
+                      x0 + rng.uniform(0.5, 3.0, size=(B, n)), np.inf)
+    c = rng.uniform(-2.0, 2.0, size=(B, n))
+    c0 = rng.uniform(-5.0, 5.0, size=B)
+    return GeneralLPBatch.from_arrays(
+        A, sense, rhs, lb=lb, ub=ub, c=c, c0=c0, maximize=maximize,
+        ranges=ranges, name=f"random_general_{m}x{n}")

@@ -1,4 +1,4 @@
-"""LP problem containers and standard-form conversion.
+"""LP problem containers: the canonical standard form every solver consumes.
 
 The paper (Gurung & Ray 2018) solves LPs in *standard form*:
 
@@ -7,7 +7,24 @@ The paper (Gurung & Ray 2018) solves LPs in *standard form*:
 
 with ``m`` constraints over ``n`` variables ("LP dimension" in the paper is
 ``n``). A batch holds ``B`` independent LPs of identical (m, n) — the paper's
-solver makes the same same-size assumption (Sec. 5).
+solver makes the same same-size assumption (Sec. 5).  ``LPBatch`` below *is*
+that canonical form, and it is all the device backends ever see.
+
+Real problems rarely arrive in standard form.  The general-form entry path
+(core/forms.py + io/mps.py) is the front door:
+
+    general = repro.io.read_mps("afiro.mps")          # GeneralLPBatch: any
+    batch   = repro.io.perturbed_batch(general, B)    # senses/bounds/min-max
+    res     = solve_batched(batch, backend="revised") # original coordinates
+
+Every ``solve_*`` entry point accepts a ``GeneralLPBatch`` directly: it is
+canonicalized on ingestion (presolve + geometric-mean scaling on by
+default; ``=``/``>=``/ranged rows and variable bounds become extra ``<=``
+rows, free variables split, minimization flips sign — equalities and upper
+bounds therefore *grow m*), the canonical ``LPBatch`` is solved on device,
+and the result is mapped back to original coordinates by the ``Recovery``
+record, so compaction, pricing, shard_map and the Pallas kernels compose
+with general problems unchanged.
 
 The simplex tableau layout follows Sec. 4.1/5.5 of the paper:
 
@@ -187,19 +204,20 @@ def build_tableau(A: np.ndarray, b: np.ndarray, c: np.ndarray):
 
 
 def extract_solution(T: np.ndarray, basis: np.ndarray, n: int):
-    """Read (x, objective) off a final tableau batch."""
+    """Read (x, objective) off a final tableau batch.
+
+    Batched scatter: structural basis entries (basis < n) write their row's
+    rhs into x, everything else lands in a dump slot that is sliced away —
+    one vectorized write instead of the old O(m) host loop over rows (a
+    legal basis never repeats a column, so the writes cannot collide)."""
     B, rows, cols = T.shape
     m = rows - 2
     rhs = T[:, :m, -1]
-    x = np.zeros((B, n), dtype=T.dtype)
-    for i in range(m):
-        sel = basis[:, i] < n
-        bs = np.where(sel, basis[:, i], 0)
-        np.put_along_axis(
-            x, bs[:, None],
-            np.where(sel, rhs[:, i], np.take_along_axis(x, bs[:, None], 1)[:, 0])[:, None],
-            axis=1,
-        )
+    sel = basis[:, :m] < n
+    target = np.where(sel, basis[:, :m], n)          # n = dump slot
+    xpad = np.zeros((B, n + 1), dtype=T.dtype)
+    xpad[np.arange(B)[:, None], target] = np.where(sel, rhs, 0.0)
+    x = xpad[:, :n]
     objective = -T[:, m, -1]
     return x, objective
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from .forms import ensure_canonical, finish_result
 from .lp import (
     BIG,
     INFEASIBLE,
@@ -70,6 +71,15 @@ def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig"):
         rhs = T[:m, -1]
         with np.errstate(divide="ignore", invalid="ignore"):
             ratios = np.where(col > tol, rhs / np.where(col > tol, col, 1.0), BIG)
+        if phase == 2:
+            # Basic artificials are pinned at zero in phase 2: a pivot whose
+            # entering column would *grow* one (negative coefficient in its
+            # row) instead kicks it out at ratio 0 — the pivot element is
+            # negative, which is legal at a zero rhs.  Without this, the
+            # degenerate artificials that equality-pair canonicalization
+            # (core/forms.py) routinely leaves basic-at-zero can silently
+            # re-relax their row during phase 2.
+            ratios = np.where((basis >= n + m) & (col < -tol), 0.0, ratios)
         l = int(np.argmin(ratios))
         if ratios[l] >= BIG / 2:
             status = UNBOUNDED if phase == 2 else ITERATION_LIMIT
@@ -92,11 +102,18 @@ def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig"):
 
 def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
                                      max_iters: int | None = None,
-                                     pricing: str = "dantzig"):
+                                     pricing: str = "dantzig",
+                                     presolve: bool = True,
+                                     scale: bool | None = None):
     """Like solve_batched_reference, but also returns per-LP phase-1
     iteration counts ``(LPResult, p1_iters)`` — the input for the
     phase-compaction executed-work models (analysis/lp_perf.py,
-    benchmarks/pivot_work.py)."""
+    benchmarks/pivot_work.py).
+
+    Accepts a ``GeneralLPBatch`` like every solver entry point: the oracle
+    then solves the canonical form and reports in original coordinates
+    (``presolve``/``scale`` control the canonicalization)."""
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     B, m, n = batch.batch, batch.m, batch.n
     rule = canonicalize_rule(pricing)
     if max_iters is None:
@@ -113,17 +130,21 @@ def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
     bad = status != OPTIMAL
     obj = np.where(bad, np.nan, obj)
     res = LPResult(x=x, objective=obj, status=status, iterations=iters)
-    return res, p1_iters
+    return finish_result(rec, res), p1_iters
 
 
 def solve_batched_reference(batch: LPBatch, tol: float = 1e-9,
                             max_iters: int | None = None,
-                            pricing: str = "dantzig") -> LPResult:
+                            pricing: str = "dantzig",
+                            presolve: bool = True,
+                            scale: bool | None = None) -> LPResult:
     """Sequentially solve every LP in the batch (float64). O(B) loop — this is
-    the 'CPU sequential' side of every speedup table."""
+    the 'CPU sequential' side of every speedup table.  Accepts general-form
+    batches (GeneralLPBatch) like every solver entry point."""
     res, _ = solve_batched_reference_detailed(batch, tol=tol,
                                               max_iters=max_iters,
-                                              pricing=pricing)
+                                              pricing=pricing,
+                                              presolve=presolve, scale=scale)
     return res
 
 

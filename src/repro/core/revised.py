@@ -75,6 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from .forms import ensure_canonical, finish_result
 from .compaction import (
     CompactionConfig,
     JaxBackend,
@@ -363,6 +364,11 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
     u = _apply_etas_fwd(u, etaR, etaV, cnt0, iota_m)
     valid_row = u > tol
     ratios = jnp.where(valid_row, xB / jnp.where(valid_row, u, 1.0), BIG)
+    # phase 2 pins basic artificials at zero (same rule as the tableau
+    # dialect's simplex_step): an entering column that would grow one leaves
+    # it at ratio 0 on a negative pivot element instead
+    pin = (phase == 2)[:, None] & (basis >= ncand) & (u < -tol)
+    ratios = jnp.where(pin, 0.0, ratios)
     l = jnp.argmin(ratios, axis=1).astype(jnp.int32)
     min_ratio = jnp.min(ratios, axis=1)
     no_row = min_ratio >= BIG / 2
@@ -453,13 +459,18 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
                           feas_tol: float | None = None,
                           max_iters: int | None = None,
                           refactor_period: int | None = None,
-                          pricing: str = "dantzig") -> LPResult:
+                          pricing: str = "dantzig",
+                          presolve: bool = True,
+                          scale: bool | None = None) -> LPResult:
     """Solve a batch of LPs with the lockstep revised simplex.
 
     Same LPBatch -> LPResult contract, status codes and defaults as
-    ``solve_batched_jax``; ``pricing`` accepts "dantzig" (full pricing) or
-    "partial" (rotating column blocks, core/pricing.py).  ``refactor_period``
-    bounds the eta file (None derives ~m/2 via `auto_refactor_period`)."""
+    ``solve_batched_jax`` — including GeneralLPBatch acceptance
+    (canonicalize on ingestion, recover on the way out); ``pricing``
+    accepts "dantzig" (full pricing) or "partial" (rotating column blocks,
+    core/pricing.py).  ``refactor_period`` bounds the eta file (None
+    derives ~m/2 via `auto_refactor_period`)."""
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
@@ -475,8 +486,9 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
         tol=float(tol), feas_tol=float(feas_tol),
         refactor_period=int(refactor_period),
         pricing=canonicalize_revised_rule(pricing))
-    return LPResult(x=np.asarray(x), objective=np.asarray(obj),
-                    status=np.asarray(status), iterations=np.asarray(iters))
+    res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
+                   status=np.asarray(status), iterations=np.asarray(iters))
+    return finish_result(rec, res)
 
 
 # ---------------------------------------------------------------------------
@@ -604,11 +616,13 @@ def solve_batched_revised_compacted(
         segment_k: Optional[int] = None,
         compact_threshold: Optional[float] = None,
         refactor_period: Optional[int] = None, pricing: str = "dantzig",
-        stats_out: Optional[List[SegmentStat]] = None) -> LPResult:
+        stats_out: Optional[List[SegmentStat]] = None,
+        presolve: bool = True, scale: Optional[bool] = None) -> LPResult:
     """Revised simplex under the active-set compaction scheduler: K-pivot
     segments, power-of-two bucket gathers of survivors (eta file, LU factors
     and basis arrays gathered alongside), refactorization after every gather.
-    Same contract as ``solve_batched_compacted``."""
+    Same contract as ``solve_batched_compacted`` (GeneralLPBatch accepted)."""
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
@@ -630,5 +644,6 @@ def solve_batched_revised_compacted(
         compact_threshold=resolve_compact_threshold(
             compact_threshold, int(segment_k)),
         pad_multiple=backend.pad_multiple)
-    return run_schedule(backend, state, orig, B, n, max_iters=int(max_iters),
-                        config=cfg, stats_out=stats_out)
+    return finish_result(rec, run_schedule(backend, state, orig, B, n,
+                                           max_iters=int(max_iters),
+                                           config=cfg, stats_out=stats_out))

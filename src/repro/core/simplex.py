@@ -73,6 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .forms import ensure_canonical, finish_result
 from .lp import (
     BIG,
     INFEASIBLE,
@@ -220,6 +221,17 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     rhs = T[:, :m, -1]
     valid = col > tol
     ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
+    # Phase 2 pins basic artificials at zero: an entering column that would
+    # grow one (negative coefficient in its row) kicks it out at ratio 0
+    # instead (negative pivot element, legal at zero rhs).  Degenerate
+    # artificials left basic by phase 1 — routine under the equality pairs
+    # core/forms.py emits — would otherwise silently re-relax their row.
+    # An artificial phase 1 accepted at a small positive value (<= feas_thr)
+    # makes this pivot set the entering variable to -rhs/|pivot| — a
+    # bounded x>=0 violation of the same order as the feasibility debt
+    # already accepted, vs. the unbounded row relaxation pinning prevents.
+    pin = (phase == 2)[:, None] & (basis >= n + m) & (col < -tol)
+    ratios = jnp.where(pin, 0.0, ratios)
     l = jnp.argmin(ratios, axis=1)
     min_ratio = jnp.min(ratios, axis=1)
     no_row = min_ratio >= BIG / 2
@@ -273,6 +285,10 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
     rhs = T[:, :m, -1]
     valid = col > tol
     ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
+    # basic artificials stay pinned at zero (see simplex_step); the basis
+    # still indexes full-tableau columns, so >= n+m identifies them here too
+    pin = (basis >= n + m) & (col < -tol)
+    ratios = jnp.where(pin, 0.0, ratios)
     l = jnp.argmin(ratios, axis=1)
     min_ratio = jnp.min(ratios, axis=1)
     no_row = min_ratio >= BIG / 2
@@ -420,7 +436,9 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
                       phase_compaction: bool = True,
                       pricing: str = "dantzig",
                       backend: str = "tableau",
-                      refactor_period: int | None = None) -> LPResult:
+                      refactor_period: int | None = None,
+                      presolve: bool = True,
+                      scale: bool | None = None) -> LPResult:
     """Solve a batch of LPs with the lockstep pure-JAX simplex.
 
     Phase-compacted by default (identical pivot sequence, ~35-50% fewer
@@ -436,13 +454,19 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     constraint data, basis-factor updates, O(m^2)+pricing per pivot;
     ``refactor_period`` bounds its eta file, ``phase_compaction`` does not
     apply).  Statuses agree across backends; pivot paths may differ in f32.
+
+    A ``GeneralLPBatch`` (core/forms.py) is accepted directly: it is
+    canonicalized on ingestion (``presolve``/``scale`` control the presolve
+    pass and geometric-mean equilibration) and the result is recovered into
+    original coordinates.
     """
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     if canonicalize_backend(backend) == "revised":
         from .revised import solve_batched_revised  # local: avoids cycle
-        return solve_batched_revised(
+        return finish_result(rec, solve_batched_revised(
             batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
             max_iters=max_iters, refactor_period=refactor_period,
-            pricing=pricing)
+            pricing=pricing))
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
@@ -457,8 +481,9 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
         A, b, c, m=m, n=n, max_iters=int(max_iters), tol=float(tol),
         feas_tol=float(feas_tol), phase_compaction=bool(phase_compaction),
         pricing=canonicalize_rule(pricing))
-    return LPResult(x=np.asarray(x), objective=np.asarray(obj),
-                    status=np.asarray(status), iterations=np.asarray(iters))
+    res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
+                   status=np.asarray(status), iterations=np.asarray(iters))
+    return finish_result(rec, res)
 
 
 def flops_per_pivot(m: int, n: int, compacted: bool = False) -> int:

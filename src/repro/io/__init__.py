@@ -1,0 +1,4 @@
+"""Problem ingestion: file formats -> GeneralLPBatch (core/forms.py)."""
+from .mps import (  # noqa: F401
+    FIXTURE_NAMES, fixture_path, perturbed_batch, read_mps, write_mps,
+)

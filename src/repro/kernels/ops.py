@@ -19,8 +19,13 @@ kernel keeps the full cost row resident in VMEM, so block-restricted pricing
 saves nothing — the rule exists for the revised backend's pricing matvec.
 
 ``backend="revised"`` (core/revised.py) currently has no Pallas kernel: the
-call falls back to the pure-JAX revised path with a warning so the
-entry-point contract stays uniform across the stack.
+call falls back to the pure-JAX revised path with a warning (fired once per
+process, not once per call) so the entry-point contract stays uniform
+across the stack.
+
+Like every solve_* entry point, a ``GeneralLPBatch`` (core/forms.py) is
+accepted directly: canonicalize on ingestion (``presolve=``/``scale=``),
+solve the canonical form in the kernel, recover into original coordinates.
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.forms import ensure_canonical, finish_result
 from repro.core.lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult,
                            canonicalize_backend, default_max_iters)
 from repro.core.compaction import (
@@ -45,6 +51,18 @@ from .simplex_tile import (
     build_padded_tableau, pick_tile_b, segment_pallas, simplex_pallas,
 )
 from .hyperbox_kernel import hyperbox_pallas
+
+
+# Fallback/degradation warnings fire once per process, not once per call:
+# batched sweeps dispatch thousands of solves and a per-call warning is pure
+# spam.  Keyed so distinct conditions still each get their one warning.
+_WARNED: set = set()
+
+
+def _warn_once(key: str, message: str) -> None:
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(message, stacklevel=3)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n"))
@@ -145,35 +163,39 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                          pricing: str = "dantzig",
                          backend: str = "tableau",
                          refactor_period: Optional[int] = None,
-                         stats_out: Optional[List[SegmentStat]] = None
-                         ) -> LPResult:
+                         stats_out: Optional[List[SegmentStat]] = None,
+                         presolve: bool = True,
+                         scale: Optional[bool] = None) -> LPResult:
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     pricing = canonicalize_rule(pricing)
     canonicalize_backend(backend)
     if backend == "revised":
-        warnings.warn(
+        _warn_once(
+            "revised-fallback",
             "solve_batched_pallas(backend='revised'): no Pallas revised "
             "kernel exists yet; falling back to the pure-JAX revised path "
-            "(core/revised.py)", stacklevel=2)
+            "(core/revised.py)")
         from repro.core.revised import (solve_batched_revised,
                                         solve_batched_revised_compacted)
         if compaction:
-            return solve_batched_revised_compacted(
+            return finish_result(rec, solve_batched_revised_compacted(
                 batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
                 max_iters=max_iters, segment_k=segment_k,
                 compact_threshold=compact_threshold,
                 refactor_period=refactor_period, pricing=pricing,
-                stats_out=stats_out)
-        return solve_batched_revised(
+                stats_out=stats_out))
+        return finish_result(rec, solve_batched_revised(
             batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
             max_iters=max_iters, refactor_period=refactor_period,
-            pricing=pricing)
+            pricing=pricing))
     if pricing == "partial":
-        warnings.warn(
+        _warn_once(
+            "partial-pricing",
             "solve_batched_pallas(pricing='partial'): the tile kernel keeps "
             "the full cost row in VMEM, so partial pricing saves nothing "
             "here; using dantzig (identical certificates). Use "
-            "backend='revised' for real block pricing.", stacklevel=2)
+            "backend='revised' for real block pricing.")
         pricing = "dantzig"
     if tile_b is None:
         tile_b = pick_tile_b(m, n, vmem_budget)
@@ -200,16 +222,18 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
             compact_threshold=resolve_compact_threshold(
                 compact_threshold, int(segment_k)),
             pad_multiple=runner.pad_multiple)
-        return run_schedule(runner, state, orig, B, n,
-                            max_iters=int(max_iters), config=cfg,
-                            stats_out=stats_out)
+        return finish_result(rec, run_schedule(runner, state, orig, B, n,
+                                               max_iters=int(max_iters),
+                                               config=cfg,
+                                               stats_out=stats_out))
 
     x, obj, status, iters = simplex_pallas(
         A, b, c, m=m, n=n, tile_b=int(tile_b), max_iters=int(max_iters),
         tol=float(tol), feas_tol=float(feas_tol), interpret=interpret,
         pricing=pricing)
-    return LPResult(x=np.asarray(x), objective=np.asarray(obj),
-                    status=np.asarray(status), iterations=np.asarray(iters))
+    res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
+                   status=np.asarray(status), iterations=np.asarray(iters))
+    return finish_result(rec, res)
 
 
 def solve_hyperbox_pallas(lo, hi, d, *, tile_b: int = 256,

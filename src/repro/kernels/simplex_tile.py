@@ -83,14 +83,18 @@ def full_dims(m: int, n: int) -> Tuple[int, int]:
     return _round_up(m + 2, 8), _round_up(n + 2 * m + 1, 128)
 
 
-def _tile_min_ratio(T, col_full, row_ids, *, m: int, tol: float):
+def _tile_min_ratio(T, col_full, row_ids, pin_rows, *, m: int, tol: float):
     """Step 2: sentinel min-ratio over the constraint rows (lane-axis argmin).
-    Returns (l, no_row)."""
+    Returns (l, no_row).  ``pin_rows`` marks rows whose basic variable is an
+    artificial pinned at zero (phase 2): when the entering column would grow
+    one (negative coefficient), that row leaves at ratio 0 instead — the
+    same escape-prevention rule as core.simplex.simplex_step."""
     C = T.shape[2]
     col = jnp.where(row_ids < m, col_full, 0.0)
     rhs = T[:, :, C - 1]                                        # (tile_b, R)
     valid = col > tol
     ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
+    ratios = jnp.where(pin_rows & (col < -tol), 0.0, ratios)
     min_ratio = jnp.min(ratios, axis=1, keepdims=True)
     l = jnp.argmin(ratios, axis=1)[:, None]                     # (tile_b, 1)
     no_row = min_ratio >= BIG / 2
@@ -187,7 +191,8 @@ def _tile_step(T, basis, w, phase, status, iters, *, m: int, n: int,
     # ---- Steps 2 + 3 --------------------------------------------------------
     onehot_e = (lane == e).astype(dtype)                        # (tile_b, C)
     col_full = jnp.sum(T * onehot_e[:, None, :], axis=2)        # (tile_b, R)
-    l, no_row = _tile_min_ratio(T, col_full, row_ids, m=m, tol=tol)
+    pin_rows = (phase == 2) & (basis[:, :R] >= n + m) & (row_ids < m)
+    l, no_row = _tile_min_ratio(T, col_full, row_ids, pin_rows, m=m, tol=tol)
 
     wants_pivot = active & ~is_opt
     unbounded = wants_pivot & no_row & (phase == 2)
@@ -226,7 +231,10 @@ def _tile_step_p2(T, basis, w, phase, status, iters, *, m: int, n: int,
 
     onehot_e = (lane == e).astype(dtype)
     col_full = jnp.sum(T * onehot_e[:, None, :], axis=2)
-    l, no_row = _tile_min_ratio(T, col_full, row_ids, m=m, tol=tol)
+    # the basis keeps full-stage column indices, so >= n+m still identifies
+    # basic artificials on the compacted tile (every LP here is phase 2)
+    pin_rows = (basis[:, :R2] >= n + m) & (row_ids < m)
+    l, no_row = _tile_min_ratio(T, col_full, row_ids, pin_rows, m=m, tol=tol)
 
     wants_pivot = active & ~is_opt
     unbounded = wants_pivot & no_row

@@ -23,8 +23,8 @@ import numpy as np
 
 def main():
     import jax
-    from repro.configs.paper_lp import WORKLOADS
-    from repro.core import LPBatch, random_lp_batch, solve_batched_reference
+    from repro.configs.paper_lp import WORKLOADS, build_batch
+    from repro.core import LPBatch, canonical_shape, solve_batched_reference
     from repro.core.distributed import solve_pjit, solve_shard_map
     from repro.launch.mesh import make_production_mesh
     from repro.analysis.hlo_cost import module_cost
@@ -42,18 +42,23 @@ def main():
     rng = np.random.default_rng(0)
 
     for wl in WORKLOADS:
-        # measure typical pivot counts on a small oracle sample
-        sample = random_lp_batch(rng, B=32, m=wl.m, n=wl.n,
-                                 feasible_start=wl.feasible_start)
+        # measure typical pivot counts on a small oracle sample (the oracle
+        # accepts fixture-backed GeneralLPBatch samples directly)
+        sample = build_batch(wl, batch=32, rng=rng)
         ref = solve_batched_reference(sample)
         mean_pivots = float(ref.iterations.mean())
 
+        # fixture workloads are lowered at their *canonical* shape — that is
+        # the tableau geometry the chips actually execute
+        m_dev, n_dev = ((wl.m, wl.n) if wl.fixture is None
+                        else canonical_shape(sample))
         batch = LPBatch(
-            A=np.zeros((wl.batch, wl.m, wl.n), np.float32),
-            b=np.zeros((wl.batch, wl.m), np.float32),
-            c=np.zeros((wl.batch, wl.n), np.float32))
+            A=np.zeros((wl.batch, m_dev, n_dev), np.float32),
+            b=np.zeros((wl.batch, m_dev), np.float32),
+            c=np.zeros((wl.batch, n_dev), np.float32))
         rec = {"workload": wl.name, "mesh": mesh_name, "chips": chips,
                "batch": wl.batch, "m": wl.m, "n": wl.n,
+               "m_device": m_dev, "n_device": n_dev,
                "mean_pivots": mean_pivots}
         for mode, solver in (("pjit", solve_pjit),
                              ("shard_map", solve_shard_map)):
@@ -62,7 +67,7 @@ def main():
                 compiled = lowered.compile()
             txt = compiled.as_text()
             cost = module_cost(txt, default_trip=mean_pivots)
-            ana = flops_per_pivot(wl.m, wl.n) * mean_pivots * wl.batch / chips
+            ana = flops_per_pivot(m_dev, n_dev) * mean_pivots * wl.batch / chips
             mem = compiled.memory_analysis()
             rec[mode] = {
                 "flops_per_dev": cost["flops"],

@@ -1,0 +1,197 @@
+* Deterministic SC50B-class staircase (50 rows x 48 cols): 8-stage
+* production/inventory model with deliberately mixed units
+* (coefficients span ~1e-3..1e3) so presolve equilibration matters
+* in float32.  Not Netlib data -- see README.md in this directory.
+NAME          SC50BLIKE
+ROWS
+ E  BAL0
+ E  EMS0
+ L  CAP0
+ G  DEM0
+ L  ENV0
+ E  BAL1
+ E  EMS1
+ L  CAP1
+ G  DEM1
+ L  ENV1
+ E  BAL2
+ E  EMS2
+ L  CAP2
+ G  DEM2
+ L  ENV2
+ E  BAL3
+ E  EMS3
+ L  CAP3
+ G  DEM3
+ L  ENV3
+ E  BAL4
+ E  EMS4
+ L  CAP4
+ G  DEM4
+ L  ENV4
+ E  BAL5
+ E  EMS5
+ L  CAP5
+ G  DEM5
+ L  ENV5
+ E  BAL6
+ E  EMS6
+ L  CAP6
+ G  DEM6
+ L  ENV6
+ E  BAL7
+ E  EMS7
+ L  CAP7
+ G  DEM7
+ L  ENV7
+ G  TOTSL
+ L  TOTPR
+ L  MW0
+ L  MW1
+ L  MW2
+ L  MW3
+ L  MW4
+ L  MW5
+ L  MW6
+ L  MW7
+ N  COST
+COLUMNS
+    P10       BAL0              0.01   EMS0              -300
+    P10       CAP0                 1   TOTPR                1
+    P10       MW0                  1   MW7                  1
+    P10       COST               1.1
+    P20       BAL0                 1   EMS0             -2000
+    P20       CAP0               120   TOTPR              100
+    P20       COST                95
+    INV0      BAL0             -0.01   BAL1      0.0316227766
+    INV0      COST              0.02
+    SL0       BAL0             -0.01   DEM0                 1
+    SL0       TOTSL                1   COST                -3
+    EM0       EMS0                 1   ENV0                 1
+    OF0       ENV0             -1000   COST                 4
+    P11       MW0                  1   BAL1      0.0316227766
+    P11       EMS1              -300   CAP1                 1
+    P11       TOTPR                1   MW1                  1
+    P11       COST              1.15
+    P21       BAL1        3.16227766   EMS1             -2000
+    P21       CAP1               120   TOTPR              100
+    P21       COST              93.5
+    INV1      BAL1      -0.0316227766   BAL2               0.1
+    INV1      COST              0.02
+    SL1       BAL1      -0.0316227766   DEM1                 1
+    SL1       TOTSL                1   COST              -2.9
+    EM1       EMS1                 1   ENV1                 1
+    OF1       ENV1             -1000   COST                 4
+    P12       MW1                  1   BAL2               0.1
+    P12       EMS2              -300   CAP2                 1
+    P12       TOTPR                1   MW2                  1
+    P12       COST               1.2
+    P22       BAL2                10   EMS2             -2000
+    P22       CAP2               120   TOTPR              100
+    P22       COST                92
+    INV2      BAL2              -0.1   BAL3       0.316227766
+    INV2      COST              0.02
+    SL2       BAL2              -0.1   DEM2                 1
+    SL2       TOTSL                1   COST              -2.8
+    EM2       EMS2                 1   ENV2                 1
+    OF2       ENV2             -1000   COST                 4
+    P13       MW2                  1   BAL3       0.316227766
+    P13       EMS3              -300   CAP3                 1
+    P13       TOTPR                1   MW3                  1
+    P13       COST              1.25
+    P23       BAL3        31.6227766   EMS3             -2000
+    P23       CAP3               120   TOTPR              100
+    P23       COST              90.5
+    INV3      BAL3      -0.316227766   BAL4                 1
+    INV3      COST              0.02
+    SL3       BAL3      -0.316227766   DEM3                 1
+    SL3       TOTSL                1   COST              -2.7
+    EM3       EMS3                 1   ENV3                 1
+    OF3       ENV3             -1000   COST                 4
+    P14       MW3                  1   BAL4                 1
+    P14       EMS4              -300   CAP4                 1
+    P14       TOTPR                1   MW4                  1
+    P14       COST               1.3
+    P24       BAL4               100   EMS4             -2000
+    P24       CAP4               120   TOTPR              100
+    P24       COST                89
+    INV4      BAL4                -1   BAL5        3.16227766
+    INV4      COST              0.02
+    SL4       BAL4                -1   DEM4                 1
+    SL4       TOTSL                1   COST              -2.6
+    EM4       EMS4                 1   ENV4                 1
+    OF4       ENV4             -1000   COST                 4
+    P15       MW4                  1   BAL5        3.16227766
+    P15       EMS5              -300   CAP5                 1
+    P15       TOTPR                1   MW5                  1
+    P15       COST              1.35
+    P25       BAL5        316.227766   EMS5             -2000
+    P25       CAP5               120   TOTPR              100
+    P25       COST              87.5
+    INV5      BAL5       -3.16227766   BAL6                10
+    INV5      COST              0.02
+    SL5       BAL5       -3.16227766   DEM5                 1
+    SL5       TOTSL                1   COST              -2.5
+    EM5       EMS5                 1   ENV5                 1
+    OF5       ENV5             -1000   COST                 4
+    P16       MW5                  1   BAL6                10
+    P16       EMS6              -300   CAP6                 1
+    P16       TOTPR                1   MW6                  1
+    P16       COST               1.4
+    P26       BAL6              1000   EMS6             -2000
+    P26       CAP6               120   TOTPR              100
+    P26       COST                86
+    INV6      BAL6               -10   BAL7        31.6227766
+    INV6      COST              0.02
+    SL6       BAL6               -10   DEM6                 1
+    SL6       TOTSL                1   COST              -2.4
+    EM6       EMS6                 1   ENV6                 1
+    OF6       ENV6             -1000   COST                 4
+    P17       MW6                  1   BAL7        31.6227766
+    P17       EMS7              -300   CAP7                 1
+    P17       TOTPR                1   MW7                  1
+    P17       COST              1.45
+    P27       BAL7        3162.27766   EMS7             -2000
+    P27       CAP7               120   TOTPR              100
+    P27       COST              84.5
+    INV7      BAL7       -31.6227766   COST              0.02
+    SL7       BAL7       -31.6227766   DEM7                 1
+    SL7       TOTSL                1   COST              -2.3
+    EM7       EMS7                 1   ENV7                 1
+    OF7       ENV7             -1000   COST                 4
+RHS
+    RHS       CAP0               260   DEM0                40
+    RHS       ENV0             25000   CAP1               270
+    RHS       DEM1                46   ENV1             25000
+    RHS       CAP2               280   DEM2                52
+    RHS       ENV2             25000   CAP3               290
+    RHS       DEM3                58   ENV3             25000
+    RHS       CAP4               300   DEM4                64
+    RHS       ENV4             25000   CAP5               310
+    RHS       DEM5                70   ENV5             25000
+    RHS       CAP6               320   DEM6                76
+    RHS       ENV6             25000   CAP7               330
+    RHS       DEM7                82   ENV7             25000
+    RHS       TOTSL              520   TOTPR             1900
+    RHS       MW0                300   MW1                300
+    RHS       MW2                300   MW3                300
+    RHS       MW4                300   MW5                300
+    RHS       MW6                300   MW7                300
+RANGES
+    RNG       DEM0                60   DEM2                68
+    RNG       DEM4                76   DEM6                84
+    RNG       TOTPR              600
+BOUNDS
+ FX BND       INV0                10
+ UP BND       INV1                40
+ UP BND       INV2                40
+ UP BND       INV3                40
+ UP BND       INV4                40
+ UP BND       INV5                40
+ UP BND       INV6                40
+ UP BND       INV7                40
+ LO BND       SL0                  2
+ MI BND       OF7       
+ UP BND       OF7                 30
+ FR BND       EM0       
+ENDATA

@@ -1,0 +1,22 @@
+* The canonical fixed-format MPS reference example (IBM MPSX manual;
+* reproduced in the format's standard documentation).  Exercises N/L/G/E
+* rows and UP/MI bounds.  Optimum: -13 at (x1, x2, x3) = (1, -7, 0).
+NAME          TESTPROB
+ROWS
+ N  COST
+ L  LIM1
+ G  LIM2
+ E  MYEQN
+COLUMNS
+    X1        COST            1.0   LIM1            1.0
+    X1        LIM2            1.0
+    X2        COST            2.0   LIM1            1.0
+    X2        MYEQN          -1.0
+    X3        COST           -1.0   MYEQN           1.0
+RHS
+    RHS1      LIM1            4.0   LIM2            1.0
+    RHS1      MYEQN           7.0
+BOUNDS
+ UP BND1      X1              4.0
+ MI BND1      X2
+ENDATA

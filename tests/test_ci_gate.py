@@ -38,16 +38,36 @@ def _workload(m=5, n=5, B=128):
     }
 
 
+def _general_row(fixture="afiro", B=32):
+    return {
+        "fixture": fixture, "B": B, "m": 27, "n": 32,
+        "m_canonical": 35, "n_canonical": 32,
+        "backends": {
+            "tableau": {"status_match_oracle_frac": 1.0,
+                        "rel_obj_err": 3e-7},
+            "revised": {"status_match_oracle_frac": 1.0,
+                        "rel_obj_err": 4e-7},
+        },
+        "scaling": {"scaled_status": 0, "scaled_iters": 17,
+                    "unscaled_status": 0, "unscaled_iters": 17,
+                    "changes_f32": fixture != "afiro"},
+    }
+
+
 @pytest.fixture
 def baseline():
     return {"benchmark": "pivot_work", "quick": False, "backends": "all",
-            "quick_workloads": [_workload()]}
+            "quick_workloads": [_workload()],
+            "general_workloads": [_general_row(),
+                                  _general_row("sc50b_like")]}
 
 
 @pytest.fixture
 def current():
     return {"benchmark": "pivot_work", "quick": True, "backends": "all",
-            "workloads": [_workload()]}
+            "workloads": [_workload()],
+            "general_workloads": [_general_row(),
+                                  _general_row("sc50b_like")]}
 
 
 def test_gate_passes_on_matching_run(baseline, current):
@@ -109,6 +129,45 @@ def test_gate_skips_backend_rows_for_tableau_only_smoke(baseline, current):
 def test_gate_fails_when_nothing_matches(baseline, current):
     current["workloads"][0]["B"] = 4096  # different workload entirely
     assert any("no workload" in f for f in bench_gate.gate(current, baseline))
+
+
+def test_gate_general_status_regression(baseline, current):
+    """Status regressions on real (fixture-backed) instances fail CI."""
+    current["general_workloads"][0]["backends"]["revised"][
+        "status_match_oracle_frac"] = 0.9
+    failures = bench_gate.gate(current, baseline)
+    assert any("status agreement" in f and "afiro" in f for f in failures)
+
+
+def test_gate_general_objective_regression(baseline, current):
+    current["general_workloads"][1]["backends"]["tableau"][
+        "rel_obj_err"] = 5e-3
+    failures = bench_gate.gate(current, baseline)
+    assert any("rel_obj_err" in f for f in failures)
+
+
+def test_gate_general_missing_row(baseline, current):
+    current["general_workloads"] = current["general_workloads"][:1]
+    failures = bench_gate.gate(current, baseline)
+    assert any("row missing" in f for f in failures)
+
+
+def test_gate_general_scaling_effect_must_persist(baseline, current):
+    # the sc50b_like baseline records a real f32 scaling effect; a smoke run
+    # where it vanishes means equilibration stopped running
+    current["general_workloads"][1]["scaling"]["changes_f32"] = False
+    failures = bench_gate.gate(current, baseline)
+    assert any("scaling" in f for f in failures)
+    # afiro's baseline has no effect, so False there is fine
+    current["general_workloads"][1]["scaling"]["changes_f32"] = True
+    current["general_workloads"][0]["scaling"]["changes_f32"] = False
+    assert bench_gate.gate(current, baseline) == []
+
+
+def test_gate_general_small_drift_tolerated(baseline, current):
+    current["general_workloads"][0]["backends"]["tableau"][
+        "status_match_oracle_frac"] = 0.99
+    assert bench_gate.gate(current, baseline) == []
 
 
 def test_gate_cli_exit_codes(tmp_path, baseline, current):

@@ -1,0 +1,210 @@
+"""MPS front end: parse the vendored fixtures, round-trip through the
+writer, expand into paper-style batches, and solve end-to-end through every
+entry point with float64-oracle certificates in original coordinates."""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (OPTIMAL, general_violation, solve_batched,
+                        solve_batched_jax, solve_batched_reference)
+from repro.io.mps import (FIXTURE_NAMES, fixture_path, perturbed_batch,
+                          read_mps, write_mps)
+
+AFIRO_OPT = -464.7531428571429       # published Netlib optimum
+TESTPROB_OPT = -13.0
+SC50B_LIKE_OPT = -2908.473039215686  # scipy/HiGHS float64 reference
+
+
+def _equal(g, g2):
+    assert np.array_equal(g.A, g2.A)
+    assert np.array_equal(g.rhs, g2.rhs)
+    assert np.array_equal(g.c, g2.c)
+    assert np.array_equal(g.c0, g2.c0)
+    assert np.array_equal(g.lb, g2.lb)
+    assert np.array_equal(g.ub, g2.ub)
+    assert np.array_equal(g.sense, g2.sense)
+    assert g.maximize == g2.maximize
+    if g.ranges is None:
+        assert g2.ranges is None or not np.isfinite(g2.ranges).any()
+    else:
+        np.testing.assert_array_equal(np.nan_to_num(g.ranges, nan=-1.0),
+                                      np.nan_to_num(g2.ranges, nan=-1.0))
+    assert g.row_names == g2.row_names
+    assert g.col_names == g2.col_names
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_afiro_structure():
+    g = read_mps(fixture_path("afiro"))
+    assert (g.m, g.n) == (27, 32)
+    assert int((g.sense == "E").sum()) == 8
+    assert int((g.sense == "L").sum()) == 19
+    assert not g.maximize
+    assert int((g.A != 0).sum()) + int((g.c != 0).sum()) == 88
+    # canonical shape matches the paper's Table-5 converted AFIRO size
+    from repro.core import canonical_shape
+    assert canonical_shape(g) == (35, 32)
+
+
+def test_parse_testprob_bounds():
+    g = read_mps(fixture_path("testprob"))
+    assert (g.m, g.n) == (3, 3)
+    j = g.col_names.index("X2")
+    assert np.isneginf(g.lb[0, j])           # MI bound
+    i = g.col_names.index("X1")
+    assert g.ub[0, i] == 4.0                 # UP bound
+
+
+def test_parse_sc50b_like_features():
+    g = read_mps(fixture_path("sc50b_like"))
+    assert (g.m, g.n) == (50, 48)
+    assert set(np.unique(g.sense)) == {"E", "G", "L"}
+    assert g.ranges is not None and np.isfinite(g.ranges).sum() == 5
+    fx = g.col_names.index("INV0")
+    assert g.lb[0, fx] == g.ub[0, fx] == 10.0        # FX
+    fr = g.col_names.index("EM0")
+    assert np.isneginf(g.lb[0, fr]) and np.isinf(g.ub[0, fr])   # FR
+    mi = g.col_names.index("OF7")
+    assert np.isneginf(g.lb[0, mi]) and g.ub[0, mi] == 30.0     # MI + UP
+
+
+def test_parse_errors():
+    import tempfile
+    with tempfile.NamedTemporaryFile("w", suffix=".mps", delete=False) as f:
+        f.write("NAME X\nROWS\n L  R1\nCOLUMNS\n    C1  BOGUS  1.0\nENDATA\n")
+        path = f.name
+    with pytest.raises(ValueError, match="no objective"):
+        read_mps(path)
+    os.unlink(path)
+
+
+# ---------------------------------------------------------------------------
+# writer round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", FIXTURE_NAMES)
+def test_roundtrip(tmp_path, name):
+    g = read_mps(fixture_path(name))
+    out = str(tmp_path / f"{name}_rt.mps")
+    write_mps(g, out)
+    _equal(g, read_mps(out))
+
+
+def test_roundtrip_preserves_empty_columns(tmp_path):
+    """A column with no nonzero A entries and zero cost must survive the
+    write/read round-trip (the writer declares it via an explicit 0.0
+    objective entry)."""
+    from repro.core import GeneralLPBatch
+    g = GeneralLPBatch.from_arrays(
+        A=[[[1.0, 0.0]]], sense=["L"], rhs=[[4.0]],
+        ub=[[np.inf, 7.0]], c=[[1.0, 0.0]], col_names=["X", "ZERO"],
+        row_names=["R1"])
+    out = str(tmp_path / "zerocol.mps")
+    write_mps(g, out)
+    g2 = read_mps(out)
+    assert g2.n == 2 and g2.col_names == ("X", "ZERO")
+    _equal(g, g2)
+
+
+def test_write_rejects_batches():
+    g = read_mps(fixture_path("testprob"))
+    with pytest.raises(ValueError, match="one instance"):
+        write_mps(perturbed_batch(g, 4), "/tmp/nope.mps")
+
+
+# ---------------------------------------------------------------------------
+# solving the fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,opt", [
+    ("afiro", AFIRO_OPT), ("testprob", TESTPROB_OPT),
+    ("sc50b_like", SC50B_LIKE_OPT),
+])
+def test_fixture_optimum_oracle(name, opt):
+    g = read_mps(fixture_path(name))
+    res = solve_batched_reference(g)
+    assert res.status[0] == OPTIMAL
+    np.testing.assert_allclose(res.objective[0], opt, rtol=1e-9)
+    assert general_violation(g, res.x)[0] < 1e-7
+
+
+@pytest.mark.parametrize("backend", ["tableau", "revised"])
+def test_fixture_f32_backends_agree(backend):
+    for name, opt in (("afiro", AFIRO_OPT), ("sc50b_like", SC50B_LIKE_OPT)):
+        g = read_mps(fixture_path(name))
+        res = solve_batched_jax(g, backend=backend)
+        assert res.status[0] == OPTIMAL, name
+        np.testing.assert_allclose(res.objective[0], opt, rtol=1e-4)
+
+
+def test_scaling_changes_f32_behavior_on_sc50b_like():
+    """The f32 accuracy demo: the badly-scaled staircase solves cleanly
+    with geometric-mean equilibration and falls apart without it."""
+    g = read_mps(fixture_path("sc50b_like"))
+    scaled = solve_batched_jax(g, scale=True)
+    raw = solve_batched_jax(g, scale=False)
+    assert scaled.status[0] == OPTIMAL
+    np.testing.assert_allclose(scaled.objective[0], SC50B_LIKE_OPT, rtol=1e-4)
+    degraded = (raw.status[0] != OPTIMAL
+                or raw.iterations[0] != scaled.iterations[0]
+                or abs(raw.objective[0] - SC50B_LIKE_OPT) > 1e-2)
+    assert degraded, "unscaled f32 solve should differ measurably"
+
+
+# ---------------------------------------------------------------------------
+# perturbed batches (the paper's batch construction)
+# ---------------------------------------------------------------------------
+
+def test_perturbed_batch_structure_and_statuses():
+    g = read_mps(fixture_path("afiro"))
+    batch = perturbed_batch(g, 32, np.random.default_rng(7))
+    assert batch.batch == 32
+    np.testing.assert_array_equal(batch.A[0], g.A[0])   # member 0 untouched
+    assert ((batch.A != 0) == (g.A[0] != 0)).all()      # sparsity preserved
+    ref = solve_batched_reference(batch)
+    assert (ref.status == OPTIMAL).mean() > 0.9
+    jx = solve_batched(batch, backend="revised", pricing="partial")
+    assert (jx.status == ref.status).mean() > 0.9
+    ok = (ref.status == OPTIMAL) & (jx.status == OPTIMAL)
+    rel = np.abs(jx.objective[ok] - ref.objective[ok]) \
+        / np.abs(ref.objective[ok])
+    assert rel.max() < 2e-3
+
+
+def test_secondary_n_rows_ignored(tmp_path):
+    """Legal MPS files may carry extra N (free) rows: the first is the
+    objective, later ones are discarded along with their COLUMNS/RHS
+    entries (real Netlib instances use them)."""
+    src = open(fixture_path("testprob")).read()
+    freed = src.replace(" N  COST\n", " N  COST\n N  FREEROW\n")
+    freed = freed.replace(
+        "    X1        COST            1.0   LIM1            1.0\n",
+        "    X1        COST            1.0   LIM1            1.0\n"
+        "    X1        FREEROW         2.0\n")
+    freed = freed.replace(
+        "    RHS1      MYEQN           7.0\n",
+        "    RHS1      MYEQN           7.0   FREEROW         9.0\n")
+    p = tmp_path / "freerows.mps"
+    p.write_text(freed)
+    g = read_mps(str(p))
+    assert (g.m, g.n) == (3, 3)
+    assert solve_batched_reference(g).objective[0] == TESTPROB_OPT
+
+
+def test_markers_warn_once_and_parse(tmp_path):
+    src = open(fixture_path("testprob")).read()
+    marked = src.replace(
+        "COLUMNS\n",
+        "COLUMNS\n    M1        'MARKER'        'INTORG'\n")
+    p = tmp_path / "marked.mps"
+    p.write_text(marked)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        g = read_mps(str(p))
+    assert any("MARKER" in str(x.message) for x in w)
+    assert solve_batched_reference(g).objective[0] == TESTPROB_OPT

@@ -223,9 +223,15 @@ def test_backend_on_distributed_paths():
 
 
 def test_backend_on_pallas_falls_back_with_warning():
+    from repro.kernels import ops
+
     rng = np.random.default_rng(29)
     batch = _mixed_batch(rng, B_each=8, m=6, n=6)
     base = solve_batched_revised(batch)
+    # fallback warnings are deduplicated once-per-process (batched sweeps
+    # would otherwise spam); reset so this test observes the first firing
+    ops._WARNED.discard("revised-fallback")
+    ops._WARNED.discard("partial-pricing")
     with pytest.warns(UserWarning, match="no Pallas revised kernel"):
         pal = solve_batched_pallas(batch, backend="revised")
     _assert_same_certificates(base, pal)
