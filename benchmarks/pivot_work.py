@@ -56,10 +56,13 @@ import time
 
 import numpy as np
 
-from repro.analysis.lp_perf import revised_pivot_flops, tableau_pivot_flops
-from repro.core import (LPBatch, random_lp_batch, revised_elements,
-                        solve_batched_compacted, solve_batched_jax,
-                        solve_batched_revised, solve_batched_revised_compacted)
+from repro.analysis.lp_perf import (pdhg_iteration_flops, revised_pivot_flops,
+                                    tableau_pivot_flops)
+from repro.core import (LPBatch, OPTIMAL, pdhg_elements, random_lp_batch,
+                        revised_elements, solve_batched_compacted,
+                        solve_batched_jax, solve_batched_pdhg,
+                        solve_batched_pdhg_compacted, solve_batched_revised,
+                        solve_batched_revised_compacted)
 from repro.core.compaction import auto_segment_k, total_elements, total_steps
 from repro.core.lp import default_max_iters
 from repro.core.pricing import PRICING_RULES
@@ -183,7 +186,7 @@ def measure_general(fixture: str, B: int = GENERAL_B, *, iters: int = 1,
         "oracle_pivots_mean": float(ref.iterations.mean()),
         "backends": {},
     }
-    engines = (("tableau", "revised") if backends == "all"
+    engines = (("tableau", "revised", "pdhg") if backends == "all"
                else (backends,))
     for backend in engines:
         res = solve_batched_jax(batch, backend=backend)
@@ -205,6 +208,46 @@ def measure_general(fixture: str, B: int = GENERAL_B, *, iters: int = 1,
                             or scaled.iterations[0] != raw.iterations[0]),
     }
     return row
+
+
+def measure_pdhg(batch: LPBatch, sched, iters: int) -> dict:
+    """The first-order engine's workload row: tolerance-based agreement
+    with the (exact) tableau engine on statuses and objectives, iteration
+    counts, honest flops per iteration, and the compaction round-trip
+    (scheduled pdhg must agree with monolithic pdhg — gathers never touch
+    an LP's own iterates).  Measured on a leading slice like the revised
+    rows (PDHG runs thousands of per-LP iterations; the slice keeps the
+    bench minutes bounded while the metrics stay per-LP)."""
+    m, n = batch.m, batch.n
+    B = batch.batch
+    B_pdhg = min(B, 128 if m < 50 else 64)
+    sub = LPBatch(A=np.asarray(batch.A)[:B_pdhg],
+                  b=np.asarray(batch.b)[:B_pdhg],
+                  c=np.asarray(batch.c)[:B_pdhg])
+    tab_status = np.asarray(sched.status)[:B_pdhg]
+    tab_obj = np.asarray(sched.objective)[:B_pdhg]
+    res = solve_batched_pdhg(sub)
+    wall = timeit(lambda: solve_batched_pdhg(sub), warmup=0, iters=iters)
+    stats = []
+    res_sched = solve_batched_pdhg_compacted(sub, stats_out=stats)
+    it = res.iterations.astype(np.int64)
+    ok = (res.status == OPTIMAL) & (tab_status == OPTIMAL)
+    rel = (np.abs(res.objective[ok] - tab_obj[ok])
+           / np.maximum(np.abs(tab_obj[ok]), 1e-12)).max() if ok.any() else 0.0
+    return {
+        "B": B_pdhg,
+        "iters_mean": float(it.mean()),
+        "iters_max": int(it.max()),
+        "flops_per_iter": pdhg_iteration_flops(m, n),
+        "elements_per_iter": pdhg_elements(m, n),
+        "elements_scheduled": int(total_elements(stats)),
+        "wall_s": wall,
+        "status_match_tableau_frac": float(
+            (res.status == tab_status).mean()),
+        "rel_obj_err_vs_tableau": float(rel),
+        "scheduled_status_match_frac": float(
+            (res_sched.status == res.status).mean()),
+    }
 
 
 def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
@@ -282,6 +325,8 @@ def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
 
     backend_rows = (measure_backends(batch, sched, segment_k, iters)
                     if backends in ("all", "revised") else {})
+    pdhg_row = (measure_pdhg(batch, sched, iters)
+                if backends in ("all", "pdhg") else {})
 
     return {
         "m": m, "n": n, "B": B, "mixed": True,
@@ -309,6 +354,7 @@ def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
         },
         "rules": rules,
         "backends": backend_rows,
+        "pdhg": pdhg_row,
         "reduction_phase_compacted": elems_lock / max(1, elems_pc),
         "reduction_scheduled": elems_lock / max(1, elems_sched),
         "reduction_steepest_edge": elems_lock / max(
@@ -341,6 +387,13 @@ def _measure_rows(sizes, B: int, quick: bool, backends: str) -> list:
                   f"(x{bb['element_reduction_vs_tableau']:.1f} fewer element "
                   f"updates) wall={bb['wall_s']:.3f}s "
                   f"statuses_match={bb['statuses_match_tableau']}")
+        if r["pdhg"]:
+            pp = r["pdhg"]
+            print(f"  backend=pdhg            iters_mean={pp['iters_mean']:8.0f} "
+                  f"status_match={pp['status_match_tableau_frac']:.3f} "
+                  f"rel_obj={pp['rel_obj_err_vs_tableau']:.1e} "
+                  f"wall={pp['wall_s']:.3f}s "
+                  f"sched_match={pp['scheduled_status_match_frac']:.3f}")
     return rows
 
 
@@ -398,11 +451,12 @@ def main() -> None:
                     help="short smoke: small sizes, B=128, 1 timing iter")
     ap.add_argument("--batch", type=int, default=4096)
     ap.add_argument("--out", type=str, default=None)
-    ap.add_argument("--backend", choices=("tableau", "revised", "all"),
+    ap.add_argument("--backend",
+                    choices=("tableau", "revised", "pdhg", "all"),
                     default="all",
                     help="which solver engines get per-backend rows "
                          "(tableau base metrics are always measured; "
-                         "'tableau' skips the revised-engine rows)")
+                         "'tableau' skips the revised and pdhg rows)")
     args = ap.parse_args()
     run(quick=args.quick, B=args.batch, out=args.out, backends=args.backend)
 

@@ -21,6 +21,14 @@ older baselines).  On every matching workload the gate fails when:
 * any revised-backend row's ``element_reduction_vs_tableau`` drops more than
   ``--rel-drop`` relative (only checked when the smoke measured backend
   rows, i.e. was not run with --backend tableau);
+* a ``pdhg`` row (the tolerance-based first-order engine) regresses:
+  status agreement with the exact tableau engine drops below
+  baseline - 0.02, the relative objective error vs the tableau exceeds
+  ``--pdhg-obj-ceiling`` (default 1e-3 — PDHG objectives are ~tol
+  accurate, not exact), mean iteration count grows more than
+  ``--rel-drop`` relative (the iteration-count regression bound: restarts
+  or step sizes silently degrading shows up here first), or the
+  compaction-scheduled pdhg solve stops agreeing with the monolithic one;
 * a ``general_workloads`` row (fixture-backed real instances through the
   MPS/canonicalization pipeline) regresses: per-backend status agreement
   with the float64 oracle drops below baseline - 0.02, relative objective
@@ -48,13 +56,15 @@ def _key(w: dict):
 
 
 def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
-         cut_slack: float = 0.02) -> list:
+         cut_slack: float = 0.02, pdhg_obj_ceiling: float = 1e-3) -> list:
     """Returns a list of human-readable failure strings (empty == pass)."""
     failures = []
     base_rows = {_key(w): w
                  for w in (baseline.get("quick_workloads")
                            or baseline.get("workloads", []))}
-    check_backends = current.get("backends", "all") in ("all", "revised")
+    mode = current.get("backends", "all")
+    check_backends = mode in ("all", "revised")
+    check_pdhg = mode in ("all", "pdhg")
     matched = 0
     for w in current.get("workloads", []):
         b = base_rows.get(_key(w))
@@ -88,6 +98,37 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
                     f"(baseline {br['pivot_cut_vs_dantzig']:.3f} "
                     f"- {rel_drop:.0%})")
 
+        # ---- first-order engine row (tolerance-based invariants) ----------
+        bp = b.get("pdhg") or {}
+        if check_pdhg and bp:
+            cp = w.get("pdhg") or {}
+            if not cp:
+                failures.append(f"{tag}: pdhg row missing from the smoke run")
+            else:
+                floor = bp["status_match_tableau_frac"] - 0.02
+                if cp["status_match_tableau_frac"] < floor:
+                    failures.append(
+                        f"{tag}: pdhg status agreement with tableau "
+                        f"{cp['status_match_tableau_frac']:.3f} < {floor:.3f}"
+                        f" (baseline {bp['status_match_tableau_frac']:.3f})")
+                if cp["rel_obj_err_vs_tableau"] > pdhg_obj_ceiling:
+                    failures.append(
+                        f"{tag}: pdhg rel_obj_err_vs_tableau "
+                        f"{cp['rel_obj_err_vs_tableau']:.2e} > "
+                        f"{pdhg_obj_ceiling:.0e}")
+                it_ceiling = bp["iters_mean"] * (1.0 + rel_drop)
+                if cp["iters_mean"] > it_ceiling:
+                    failures.append(
+                        f"{tag}: pdhg iters_mean {cp['iters_mean']:.0f} > "
+                        f"{it_ceiling:.0f} (baseline {bp['iters_mean']:.0f} "
+                        f"+ {rel_drop:.0%} — restart/step-size regression)")
+                sched_floor = bp["scheduled_status_match_frac"] - 0.02
+                if cp["scheduled_status_match_frac"] < sched_floor:
+                    failures.append(
+                        f"{tag}: pdhg compaction round-trip agreement "
+                        f"{cp['scheduled_status_match_frac']:.3f} < "
+                        f"{sched_floor:.3f}")
+
         if not check_backends:
             continue
         for name, bb in (b.get("backends") or {}).items():
@@ -116,10 +157,9 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
             "is the gate's comparison target)")
 
     # ---- general-form (fixture-backed) rows -------------------------------
-    # a per-engine smoke leg (--backend tableau|revised) measures only its
-    # own engine's general rows; the gate compares exactly what it measured
-    mode = current.get("backends", "all")
-    measured = {"tableau", "revised"} if mode == "all" else {mode}
+    # a per-engine smoke leg (--backend tableau|revised|pdhg) measures only
+    # its own engine's general rows; the gate compares what it measured
+    measured = {"tableau", "revised", "pdhg"} if mode == "all" else {mode}
     cur_gen = {(w["fixture"], w["B"]): w
                for w in current.get("general_workloads", [])}
     for bg in baseline.get("general_workloads", []):
@@ -166,13 +206,16 @@ def main(argv=None) -> int:
                     help="max tolerated relative drop per metric")
     ap.add_argument("--cut-slack", type=float, default=0.02,
                     help="absolute slack on pivot_cut_vs_dantzig floors")
+    ap.add_argument("--pdhg-obj-ceiling", type=float, default=1e-3,
+                    help="max tolerated pdhg objective error vs tableau")
     args = ap.parse_args(argv)
     with open(args.current) as f:
         current = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
     failures = gate(current, baseline, rel_drop=args.rel_drop,
-                    cut_slack=args.cut_slack)
+                    cut_slack=args.cut_slack,
+                    pdhg_obj_ceiling=args.pdhg_obj_ceiling)
     if failures:
         print("bench gate FAILED:")
         for msg in failures:

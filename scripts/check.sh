@@ -4,6 +4,7 @@
 #   scripts/check.sh                       # tier-1 pytest + tableau smoke + gate
 #   scripts/check.sh --fast                # pytest + mps-roundtrip smoke
 #   scripts/check.sh --backend revised     # suite + smoke for the revised engine
+#   scripts/check.sh --backend pdhg        # suite + smoke for the first-order engine
 #   scripts/check.sh --backend all         # suite + smoke once per backend
 #
 # The smoke also carries the general-form rows (vendored MPS fixtures through
@@ -33,9 +34,9 @@ while [[ $# -gt 0 ]]; do
   shift
 done
 case "$BACKENDS" in
-  all) BACKENDS="tableau revised" ;;
-  tableau|revised) ;;
-  *) echo "unknown backend '$BACKENDS' (tableau|revised|all)" >&2; exit 2 ;;
+  all) BACKENDS="tableau revised pdhg" ;;
+  tableau|revised|pdhg) ;;
+  *) echo "unknown backend '$BACKENDS' (tableau|revised|pdhg|all)" >&2; exit 2 ;;
 esac
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -104,6 +105,20 @@ for w in d["workloads"]:
             f"backend {name} diverged on statuses at {w['m']}x{w['n']}"
         assert bb.get("scheduled_statuses_match", True), \
             f"backend {name} diverged under compaction at {w['m']}x{w['n']}"
+    # pdhg smoke: the first-order engine is tolerance-based — statuses must
+    # agree with the exact tableau on nearly every LP, objectives to ~tol,
+    # and the compaction scheduler must not change its answers
+    pp = w.get("pdhg") or {}
+    if pp:
+        assert pp["status_match_tableau_frac"] >= 0.9, \
+            f"pdhg status agreement {pp['status_match_tableau_frac']:.2f}" \
+            f" < 0.9 at {w['m']}x{w['n']}"
+        assert pp["rel_obj_err_vs_tableau"] < 1e-3, \
+            f"pdhg rel_obj_err {pp['rel_obj_err_vs_tableau']:.2e} at " \
+            f"{w['m']}x{w['n']}"
+        assert pp["scheduled_status_match_frac"] >= 0.95, \
+            f"pdhg compaction round-trip " \
+            f"{pp['scheduled_status_match_frac']:.2f} at {w['m']}x{w['n']}"
 # general-form smoke: real fixtures through the MPS/canonicalization
 # pipeline must track the float64 oracle after recovery
 for gw in d.get("general_workloads", []):
@@ -125,6 +140,12 @@ if d["workloads"][0].get("backends"):
     print("backend smoke OK:",
           ", ".join(f"{w['m']}x{w['n']}: revised x"
                     f"{w['backends']['revised_dantzig']['element_reduction_vs_tableau']:.1f}"
+                    for w in d["workloads"]))
+if d["workloads"][0].get("pdhg"):
+    print("pdhg smoke OK:",
+          ", ".join(f"{w['m']}x{w['n']}: match "
+                    f"{w['pdhg']['status_match_tableau_frac']:.2f} "
+                    f"({w['pdhg']['iters_mean']:.0f} iters)"
                     for w in d["workloads"]))
 if d.get("general_workloads"):
     print("general-form smoke OK:",

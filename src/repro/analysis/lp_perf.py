@@ -206,6 +206,66 @@ def revised_crossover(m: int, *, partial: bool = True,
     return None
 
 
+def pdhg_iteration_flops(m: int, n: int) -> float:
+    """Honest flops of one PDHG iteration (core/pdhg.py): two (m, n)
+    matvecs (2mn flops each) plus the O(m+n) prox/extrapolation updates.
+    Each check round adds six more matvecs — KKT residuals of both the
+    current and the average iterate (4) plus the two Farkas-ray tests —
+    amortized in as 12mn/CHECK_EVERY."""
+    from repro.core.pdhg import CHECK_EVERY
+
+    return 4.0 * m * n + 6.0 * (m + n) + 12.0 * m * n / CHECK_EVERY
+
+
+def pdhg_crossover_pivots(m: int, n: int, pdhg_iters: float,
+                          *, partial: bool = True) -> dict:
+    """The headline first-order-vs-simplex comparison: how many *pivots*
+    a simplex engine may spend before a PDHG solve of ``pdhg_iters``
+    iterations is cheaper on honest flops — and, since Dantzig-style pivot
+    counts grow ~O(m+n) while PDHG's iteration count is governed by
+    conditioning rather than size, the problem scale where the first-order
+    engine takes over.
+
+    The *sequential-depth* column is the sharper story: a simplex pivot is
+    a dependent reduce -> ratio -> rank-1 chain (3 serial stages on a
+    parallel machine), while a PDHG iteration is 2 matvec stages; but each
+    simplex pivot processes O(m x n) state that cannot be split across
+    iterations, so once batch parallelism saturates the device the
+    iteration *count* is the critical path.  ``depth_ratio`` reports
+    (pivots x 3) / (iterations x 2): > 1 means the first-order engine has
+    the shorter critical path even before flops win."""
+    tab = tableau_pivot_flops(m, n, compacted=True)
+    rev = revised_pivot_flops(m, n, partial=partial)
+    it_flops = pdhg_iteration_flops(m, n)
+    total = pdhg_iters * it_flops
+    exp_pivots = float(m + n)    # Dantzig's empirical O(m+n) on this suite
+    return {
+        "pdhg_iteration_flops": it_flops,
+        "pdhg_total_flops": total,
+        "crossover_pivots_vs_tableau": total / tab,
+        "crossover_pivots_vs_revised": total / rev,
+        "expected_pivots": exp_pivots,
+        "pdhg_wins_flops_vs_tableau": bool(total < exp_pivots * tab),
+        "pdhg_wins_flops_vs_revised": bool(total < exp_pivots * rev),
+        "depth_ratio": (exp_pivots * 3.0) / max(pdhg_iters * 2.0, 1.0),
+    }
+
+
+def pdhg_crossover_size(pdhg_iters: float, *, max_m: int = 100000) -> int | None:
+    """Smallest square size m (= n) where the first-order engine undercuts
+    the phase-compacted tableau on *total* honest flops: simplex pivot
+    counts grow ~O(m+n) on this suite while restarted-PDHG iteration
+    counts are governed by conditioning, not size — so past this m the
+    per-solve flops budget flips even though a single iteration and a
+    single pivot cost nearly the same.  Returns None if the tableau wins
+    over the whole scanned range (i.e. ``pdhg_iters`` is too large)."""
+    for m in range(2, max_m + 1, max(1, max_m // 4096)):
+        if pdhg_iters * pdhg_iteration_flops(m, m) \
+                < (2.0 * m) * tableau_pivot_flops(m, m, compacted=True):
+            return m
+    return None
+
+
 def canonical_work(g, *, presolve: bool = True) -> dict:
     """Canonical-vs-original shape accounting for a general-form batch.
 
@@ -375,6 +435,22 @@ def main():
         print(f"{w['name']},{w['m']},{w['n']},{w['m_canonical']},"
               f"{w['n_canonical']},{w['tableau_flops_canonical']:.3e},"
               f"{w['revised_flops_canonical']:.3e},{w['revised_wins_flops']}")
+    print()
+    print("pdhg_crossover,m,n,iters,flops_per_iter,pivot_budget_vs_tableau,"
+          "expected_pivots,pdhg_wins  # first-order vs simplex, honest flops"
+          " (iters = typical measured restarted-PDHG counts)")
+    for (m, n, iters) in [(28, 28, 3000), (100, 100, 5000),
+                          (500, 500, 8000), (2000, 2000, 12000)]:
+        w = pdhg_crossover_pivots(m, n, iters)
+        print(f"pdhg,{m},{n},{iters},{w['pdhg_iteration_flops']:.3e},"
+              f"{w['crossover_pivots_vs_tableau']:.1f},"
+              f"{w['expected_pivots']:.0f},"
+              f"{w['pdhg_wins_flops_vs_tableau']}")
+    for iters in (3000, 10000, 30000):
+        print(f"pdhg_crossover_size(iters={iters}): m = "
+              f"{pdhg_crossover_size(iters)}  # square size where the "
+              "O(m+n) pivot count overtakes a conditioning-bound "
+              "iteration count")
 
 
 if __name__ == "__main__":

@@ -25,11 +25,12 @@ Public API:
                                            | partial
 """
 from .lp import (  # noqa: F401
-    BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED,
-    LPBatch, LPResult, STATUS_NAMES, build_tableau, default_max_iters,
+    BACKEND_REGISTRY, BACKENDS, BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL,
+    UNBOUNDED, LPBatch, LPResult, STATUS_NAMES, backend_spec, build_tableau,
+    canonicalize_backend, default_max_iters, resolve_backend,
 )
 from .forms import (  # noqa: F401
-    GeneralLPBatch, Recovery, canonical_shape, canonicalize,
+    GeneralLPBatch, Recovery, canonical_shape, canonicalize, general_kkt,
     general_violation, random_general_lp_batch,
 )
 from .pricing import ALL_PRICING, PRICING_RULES, canonicalize_rule  # noqa: F401
@@ -44,6 +45,10 @@ from .compaction import (  # noqa: F401
 from .revised import (  # noqa: F401
     auto_refactor_period, revised_elements, solve_batched_revised,
     solve_batched_revised_compacted,
+)
+from .pdhg import (  # noqa: F401
+    default_pdhg_max_iters, pdhg_elements, solve_batched_pdhg,
+    solve_batched_pdhg_compacted,
 )
 from .hyperbox import solve_hyperbox, solve_hyperbox_ref, hyperbox_as_general_lp  # noqa: F401
 from .reference import (  # noqa: F401

@@ -23,7 +23,7 @@ import numpy as np
 
 from .compaction import solve_batched_compacted
 from .forms import ensure_canonical, finish_result
-from .lp import LPBatch, LPResult, canonicalize_backend
+from .lp import LPBatch, LPResult, canonicalize_backend, resolve_backend
 from .simplex import solve_batched_jax
 
 # Conservative default budget for planning on real devices; on CPU hosts this
@@ -107,11 +107,10 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     canonicalize_backend(backend)
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     if solver is None:
-        if backend == "revised":
-            from .revised import (solve_batched_revised,
-                                  solve_batched_revised_compacted)
-            solver = (solve_batched_revised_compacted if compaction
-                      else solve_batched_revised)
+        if backend != "tableau":
+            # registry dispatch (core/lp.py BACKEND_REGISTRY): each engine
+            # owns its monolithic and compaction-scheduled entry points
+            solver = resolve_backend(backend, compacted=compaction)
         else:
             solver = (solve_batched_compacted if compaction
                       else solve_batched_jax)
@@ -169,12 +168,16 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
         # async dispatch: this returns before the device finishes; the next
         # chunk's H2D overlaps this chunk's compute (CUDA-streams analogue)
         pending.append(solver(sub, **solver_kwargs))
-    res = LPResult(
-        x=np.concatenate([np.asarray(r.x) for r in pending]),
-        objective=np.concatenate([np.asarray(r.objective) for r in pending]),
-        status=np.concatenate([np.asarray(r.status) for r in pending]),
-        iterations=np.concatenate([np.asarray(r.iterations) for r in pending]),
-    )
+
+    def cat(field):
+        vals = [getattr(r, field) for r in pending]
+        if any(v is None for v in vals):  # a chunk without a certificate
+            return None
+        return np.concatenate([np.asarray(v) for v in vals])
+
+    res = LPResult(x=cat("x"), objective=cat("objective"),
+                   status=cat("status"), iterations=cat("iterations"),
+                   y=cat("y"), z=cat("z"))
     return finish_result(rec, _unpermute(res, perm))
 
 
@@ -183,7 +186,9 @@ def _unpermute(res: LPResult, perm) -> LPResult:
         return res
     inv = np.empty_like(perm)
     inv[perm] = np.arange(len(perm))
-    return LPResult(x=np.asarray(res.x)[inv],
-                    objective=np.asarray(res.objective)[inv],
-                    status=np.asarray(res.status)[inv],
-                    iterations=np.asarray(res.iterations)[inv])
+    take = lambda a: None if a is None else np.asarray(a)[inv]  # noqa: E731
+    return LPResult(x=take(res.x),
+                    objective=take(res.objective),
+                    status=take(res.status),
+                    iterations=take(res.iterations),
+                    y=take(res.y), z=take(res.z))

@@ -43,13 +43,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from .forms import ensure_canonical, finish_result
-from .lp import ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, default_max_iters
+from .lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult,
+                 canonicalize_backend, default_max_iters, resolve_backend)
 from .pricing import canonicalize_rule, compact_weights, init_weights
 from .simplex import (
     _RUNNING,
     SimplexState,
     build_tableau_jax,
     compact_tableau,
+    extract_duals,
     extract_solution_compacted,
     extract_solution_jax,
     phase2_step,
@@ -215,11 +217,16 @@ def _compact_weights_jit(w, *, m, n):
 def _extract_jit(T, basis, status, iters, *, n, compacted):
     if compacted:
         x, obj = extract_solution_compacted(T, basis, n)
+        m = T.shape[1] - 1
     else:
         x, obj = extract_solution_jax(T, basis, n)
+        m = T.shape[1] - 2
+    y, z = extract_duals(T, m=m, n=n)
     status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
-    return x, obj, status.astype(jnp.int8), iters
+    opt = (status == OPTIMAL)[:, None]
+    return (x, obj, status.astype(jnp.int8), iters,
+            jnp.where(opt, y, jnp.nan), jnp.where(opt, z, jnp.nan))
 
 
 @jax.jit
@@ -295,11 +302,9 @@ class JaxBackend:
         return np.asarray(state.phase).reshape(-1)
 
     def extract(self, state: CompactionState, stage: str):
-        x, obj, status, iters = _extract_jit(
+        return tuple(np.asarray(o) for o in _extract_jit(
             state.T, state.basis, state.status.reshape(-1),
-            state.iters.reshape(-1), n=self.n, compacted=(stage == "p2"))
-        return (np.asarray(x), np.asarray(obj), np.asarray(status),
-                np.asarray(iters))
+            state.iters.reshape(-1), n=self.n, compacted=(stage == "p2")))
 
     def elements_per_step(self, stage: str) -> int:
         return tableau_elements(self.m, self.n, compacted=(stage == "p2"))
@@ -325,15 +330,23 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
     out_obj = np.full((B,), np.nan, np_dtype)
     out_status = np.full((B,), ITERATION_LIMIT, np.int8)
     out_iters = np.zeros((B,), np.int32)
+    # dual-certificate buffers sized lazily off the first flush (m is not a
+    # scheduler parameter; every backend now extracts a 6-tuple)
+    duals = {}
 
     def flush(state, orig, stage):
-        x, obj, status, iters = backend.extract(state, stage)
+        x, obj, status, iters, y, z = backend.extract(state, stage)
         sel = orig >= 0
         oi = orig[sel]
         out_x[oi] = x[sel]
         out_obj[oi] = obj[sel]
         out_status[oi] = status[sel]
         out_iters[oi] = iters[sel]
+        if not duals:
+            duals["y"] = np.full((B, y.shape[1]), np.nan, np_dtype)
+            duals["z"] = np.full((B, z.shape[1]), np.nan, np_dtype)
+        duals["y"][oi] = y[sel]
+        duals["z"][oi] = z[sel]
 
     def maybe_compact(state, orig, stage):
         """Returns (state, orig, status_host) — the single D2H status fetch
@@ -402,7 +415,7 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
 
     flush(state, orig, "p2")
     return LPResult(x=out_x, objective=out_obj, status=out_status,
-                    iterations=out_iters)
+                    iterations=out_iters, y=duals["y"], z=duals["z"])
 
 
 def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
@@ -412,6 +425,7 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
                             segment_k: Optional[int] = None,
                             compact_threshold: Optional[float] = None,
                             pricing: str = "dantzig",
+                            backend: str = "tableau",
                             stats_out: Optional[List[SegmentStat]] = None,
                             presolve: bool = True,
                             scale: Optional[bool] = None) -> LPResult:
@@ -427,7 +441,17 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
     derives the gather eagerness from `auto_compact_threshold` (tuned from
     the observed survivor curves).  ``stats_out`` (a list) collects
     per-segment SegmentStat records — executed work plus the observed
-    survivor curve — for benchmarks/pivot_work.py."""
+    survivor curve — for benchmarks/pivot_work.py.
+
+    ``backend`` selects the solver engine under the scheduler: "tableau"
+    (this module's JaxBackend), "revised" or "pdhg" route to the engine's
+    own compacted entry point via the core/lp.py registry."""
+    if canonicalize_backend(backend) != "tableau":
+        return resolve_backend(backend, compacted=True)(
+            batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
+            max_iters=max_iters, segment_k=segment_k,
+            compact_threshold=compact_threshold, pricing=pricing,
+            stats_out=stats_out, presolve=presolve, scale=scale)
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     if max_iters is None:

@@ -51,6 +51,9 @@ from .revised import (
     RevisedBackend, RevisedState, auto_refactor_period, solve_revised,
     segment_revised_phase1, segment_revised_phase2,
 )
+from .pdhg import (
+    PdhgBackend, PdhgState, default_pdhg_max_iters, segment_pdhg, solve_pdhg,
+)
 
 
 def _pad_batch(batch: LPBatch, multiple: int):
@@ -69,17 +72,40 @@ def _pad_batch(batch: LPBatch, multiple: int):
 def _solve_local(A, b, c, *, m, n, max_iters, tol, feas_tol,
                  pricing="dantzig", backend="tableau",
                  refactor_period=None):
-    """The shared solve body — tableau (phase-compacted two-phase) or
-    revised (basis-factor updates) — callable under shard_map (local
-    shapes) or pjit (global shapes)."""
+    """The shared solve body — tableau (phase-compacted two-phase), revised
+    (basis-factor updates) or pdhg (restarted first-order iterations) —
+    callable under shard_map (local shapes) or pjit (global shapes).  All
+    three return the same (x, obj, status, iters, y, z) 6-tuple, so the
+    sharding specs are backend-independent."""
     if backend == "revised":
         return solve_revised(
             A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
             feas_tol=feas_tol,
             refactor_period=int(refactor_period or auto_refactor_period(m, n)),
             pricing=pricing)
+    if backend == "pdhg":
+        from .pdhg import _check_pdhg_pricing
+        _check_pdhg_pricing(pricing)   # same contract as every pdhg entry
+        return solve_pdhg(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+                          feas_tol=feas_tol)
     return solve_two_phase(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
                            feas_tol=feas_tol, pricing=pricing)
+
+
+def _backend_defaults(backend: str, max_iters, tol, m: int, n: int, dtype):
+    """Per-engine loop-cap/tolerance defaults at the distributed entry
+    points (``tol=None`` resolves per engine): the first-order engine
+    needs a far larger iteration cap (cheap iterations) and interprets
+    ``tol`` as a relative KKT tolerance with its own dtype-dependent
+    default (1e-5 f32 / 1e-8 f64, matching solve_batched_pdhg); the
+    simplex engines keep the historical 1e-6 reduced-cost tolerance."""
+    if backend == "pdhg":
+        if tol is None:
+            tol = 1e-5 if dtype == jnp.float32 else 1e-8
+        return max_iters or default_pdhg_max_iters(m, n), tol
+    if tol is None:
+        tol = 1e-6
+    return max_iters or default_max_iters(m, n), tol
 
 
 
@@ -95,7 +121,7 @@ def _prep(batch: LPBatch, mesh: Mesh, dtype):
 
 
 def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
-               tol: float = 1e-6, feas_tol: float = 1e-5,
+               tol: Optional[float] = None, feas_tol: float = 1e-5,
                max_iters: Optional[int] = None, lower_only: bool = False,
                pricing: str = "dantzig", backend: str = "tableau",
                refactor_period: Optional[int] = None,
@@ -112,7 +138,7 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     canonicalize_backend(backend)
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
-    max_iters = max_iters or default_max_iters(m, n)
+    max_iters, tol = _backend_defaults(backend, max_iters, tol, m, n, dtype)
     A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
     spec = P(axes)  # batch dim sharded over every axis
     shard = NamedSharding(mesh, spec)
@@ -121,16 +147,17 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                           tol=tol, feas_tol=feas_tol, pricing=pricing,
                           backend=backend, refactor_period=refactor_period),
         in_shardings=(shard, shard, shard),
-        out_shardings=(shard, shard, shard, shard),
+        out_shardings=(shard,) * 6,
     )
     if lower_only:
         return fn.lower(jax.ShapeDtypeStruct(A.shape, A.dtype),
                         jax.ShapeDtypeStruct(b.shape, b.dtype),
                         jax.ShapeDtypeStruct(c.shape, c.dtype))
-    x, obj, status, iters = fn(A, b, c)
+    x, obj, status, iters, y, z = fn(A, b, c)
     res = LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
                    status=np.asarray(status)[:orig],
-                   iterations=np.asarray(iters)[:orig])
+                   iterations=np.asarray(iters)[:orig],
+                   y=np.asarray(y)[:orig], z=np.asarray(z)[:orig])
     return finish_result(rec, res)
 
 
@@ -232,8 +259,42 @@ class _RevisedShardMapBackend(RevisedBackend):
         return state, int(np.max(np.asarray(it)))
 
 
+class _PdhgShardMapBackend(PdhgBackend):
+    """First-order segment runners under shard_map: each chip advances its
+    local LPs through check rounds independently (every PdhgState leaf —
+    problem data, iterates, averages, restart state — is batched on axis 0,
+    so the specs are uniform), host-level survivor gathering between
+    segments.  There is no phase 1, so only the stage-2 runner is wrapped."""
+
+    def __init__(self, mesh: Mesh, m, n, tol, dtype, check_every=None):
+        kw = {} if check_every is None else {"check_every": check_every}
+        super().__init__(m, n, tol, dtype, **kw)
+        self.mesh = mesh
+        axes = tuple(mesh.axis_names)
+        self.pad_multiple = int(np.prod(mesh.devices.shape))
+        spec = P(axes)
+        state_specs = PdhgState(**{f: spec for f in PdhgState._fields})
+        ce = self.check_every
+
+        def p2(state, steps):
+            state, it = segment_pdhg(state, steps, tol=self.tol,
+                                     check_every=ce)
+            return state, it.reshape(1)
+
+        self._p2 = jax.jit(shard_map(
+            p2, mesh=mesh,
+            in_specs=(state_specs, P()),
+            out_specs=(state_specs, spec),
+            check_rep=False,
+        ))
+
+    def run_phase2(self, state, steps):
+        state, it = self._p2(state, jnp.int32(steps))
+        return state, int(np.max(np.asarray(it)))
+
+
 def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
-                    tol: float = 1e-6, feas_tol: float = 1e-5,
+                    tol: Optional[float] = None, feas_tol: float = 1e-5,
                     max_iters: Optional[int] = None, lower_only: bool = False,
                     segment_k: Optional[int] = None,
                     compact_threshold: Optional[float] = None,
@@ -256,7 +317,7 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     canonicalize_backend(backend)
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
-    max_iters = max_iters or default_max_iters(m, n)
+    max_iters, tol = _backend_defaults(backend, max_iters, tol, m, n, dtype)
 
     if segment_k is not None and lower_only:
         raise ValueError(
@@ -269,10 +330,17 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
             "segment accounting to record")
 
     if segment_k is not None:
+        budget = max_iters
         if backend == "revised":
             runner = _RevisedShardMapBackend(
                 mesh, m, n, tol, feas_tol, dtype, pricing=pricing,
                 refactor_period=refactor_period)
+        elif backend == "pdhg":
+            from .pdhg import _check_pdhg_pricing
+            _check_pdhg_pricing(pricing)
+            runner = _PdhgShardMapBackend(mesh, m, n, tol, dtype)
+            # the scheduler's step unit for pdhg is one check round
+            budget = -(-max_iters // runner.check_every)
         else:
             runner = _ShardMapBackend(mesh, m, n, tol, feas_tol, dtype,
                                       pricing=pricing)
@@ -291,7 +359,7 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                                                         segment_k),
             pad_multiple=runner.pad_multiple)
         return finish_result(rec, run_schedule(runner, state, orig, orig_B, n,
-                                               max_iters=max_iters, config=cfg,
+                                               max_iters=budget, config=cfg,
                                                stats_out=stats_out))
 
     A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
@@ -303,15 +371,16 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     fn = jax.jit(shard_map(
         local, mesh=mesh,
         in_specs=(spec, spec, spec),
-        out_specs=(spec, spec, spec, spec),
+        out_specs=(spec,) * 6,
         check_rep=False,
     ))
     if lower_only:
         return fn.lower(jax.ShapeDtypeStruct(A.shape, A.dtype),
                         jax.ShapeDtypeStruct(b.shape, b.dtype),
                         jax.ShapeDtypeStruct(c.shape, c.dtype))
-    x, obj, status, iters = fn(A, b, c)
+    x, obj, status, iters, y, z = fn(A, b, c)
     res = LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
                    status=np.asarray(status)[:orig],
-                   iterations=np.asarray(iters)[:orig])
+                   iterations=np.asarray(iters)[:orig],
+                   y=np.asarray(y)[:orig], z=np.asarray(z)[:orig])
     return finish_result(rec, res)

@@ -180,6 +180,67 @@ def general_violation(g: GeneralLPBatch, x: np.ndarray) -> np.ndarray:
                       vcol.max(axis=1, initial=0.0))
 
 
+def general_kkt(g: GeneralLPBatch, x: np.ndarray, y: np.ndarray,
+                z: Optional[np.ndarray] = None) -> dict:
+    """Full KKT check of a primal-dual pair in *original* coordinates — the
+    certificate every backend's parity tests share (the dual-side extension
+    of ``general_violation``).
+
+    ``(y, z)`` follow the ``Recovery.recover_duals`` convention
+    (``z = c - A^T y`` with the original objective; signs flip with the
+    sense).  Returns per-LP (B,) arrays:
+
+    * ``primal``          — ``general_violation`` (row + bound violations);
+    * ``stationarity``    — ||z - (c - A^T y)||_inf (0 when z is derived);
+    * ``dual_sign``       — multiplier-sign violations: a row dual pushing
+                            against a bound the row does not have, a reduced
+                            cost with the wrong sign for the variable's
+                            bound structure (free variables need z = 0);
+    * ``complementarity`` — positive multiplier x slack products: row duals
+                            against their row slack, reduced costs against
+                            their bound gaps;
+    * ``max``             — the elementwise max of all four.
+    """
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    zc = np.asarray(g.c, np.float64) - np.einsum("bmn,bm->bn", g.A, y)
+    if z is None:
+        z = zc
+        stat = np.zeros(g.batch)
+    else:
+        z = np.asarray(z, np.float64)
+        stat = np.abs(z - zc).max(axis=1, initial=0.0)
+    csign = 1.0 if g.maximize else -1.0
+    yh, zh = csign * y, csign * z            # max-form multipliers
+    lo, hi = g.row_bounds()
+    act = np.einsum("bmn,bn->bm", g.A, x)
+    hi_f, lo_f = np.isfinite(hi), np.isfinite(lo)
+    lb_f, ub_f = np.isfinite(g.lb), np.isfinite(g.ub)
+    yp, ym = np.maximum(yh, 0.0), np.maximum(-yh, 0.0)
+    zp, zm = np.maximum(zh, 0.0), np.maximum(-zh, 0.0)
+    # max form: y+ needs a finite hi to push against, y- a finite lo;
+    # z+ needs a finite ub (bound dual), z- a finite lb; free cols: z = 0.
+    dual_sign = np.maximum(
+        np.maximum(np.where(~hi_f, yp, 0.0), np.where(~lo_f, ym, 0.0))
+        .max(axis=1, initial=0.0),
+        np.maximum(np.where(~ub_f, zp, 0.0), np.where(~lb_f, zm, 0.0))
+        .max(axis=1, initial=0.0))
+    compl = np.maximum(
+        np.maximum(yp * np.where(hi_f, np.maximum(hi - act, 0.0), 0.0),
+                   ym * np.where(lo_f, np.maximum(act - lo, 0.0), 0.0))
+        .max(axis=1, initial=0.0),
+        np.maximum(zp * np.where(ub_f, np.maximum(g.ub - x, 0.0), 0.0),
+                   zm * np.where(lb_f, np.maximum(x - g.lb, 0.0), 0.0))
+        .max(axis=1, initial=0.0))
+    primal = general_violation(g, x)
+    return {
+        "primal": primal, "stationarity": stat, "dual_sign": dual_sign,
+        "complementarity": compl,
+        "max": np.maximum(np.maximum(primal, stat),
+                          np.maximum(dual_sign, compl)),
+    }
+
+
 def _pow2(s: np.ndarray) -> np.ndarray:
     """Snap positive scales to the nearest power of two (mantissa-exact
     scaling: equilibration then changes exponents only)."""
@@ -214,7 +275,8 @@ def _equilibrate(A: np.ndarray, iters: int = 2):
 @dataclasses.dataclass(frozen=True)
 class Recovery:
     """Invertible record of everything ``canonicalize`` did, sufficient to
-    report an ``LPResult`` in original coordinates."""
+    report an ``LPResult`` in original coordinates — primal solution *and*
+    dual certificate (row duals + reduced costs)."""
 
     general: GeneralLPBatch
     kept: np.ndarray           # (nk,) original column indices that survived
@@ -226,6 +288,12 @@ class Recovery:
     row_scale: Optional[np.ndarray]  # (B, m_canonical) or None
     m_canonical: int
     n_canonical: int
+    # dual bookkeeping: which original rows survived presolve, and which
+    # canonical row blocks they produced (canonical rows are ordered
+    # [hi_rows | lo_rows | ub_cols] by construction)
+    rows: np.ndarray = None      # (mk,) original row indices that survived
+    hi_rows: np.ndarray = None   # indices into ``rows``: A x <= hi rows
+    lo_rows: np.ndarray = None   # indices into ``rows``: -A x <= -lo rows
 
     def recover_x(self, x_can: np.ndarray) -> np.ndarray:
         """Canonical solution (B, n_canonical) -> original x (B, n)."""
@@ -241,20 +309,58 @@ class Recovery:
         x[:, self.kept] = y
         return x
 
+    def recover_duals(self, y_can: np.ndarray):
+        """Canonical row duals (B, m_canonical) -> original-coordinate
+        ``(y, z)``.
+
+        Canonical rows were emitted as [A x <= hi | -A x <= -lo | ub rows]
+        over the presolve-surviving rows, so the original row dual is the
+        unscaled hi-multiplier minus the lo-multiplier (E/ranged rows carry
+        both); ub-row multipliers are *bound* duals and are deliberately
+        folded into the reduced costs instead.  Convention: the returned
+        pair satisfies ``z = c - A^T y`` with the **original** objective
+        vector — for minimization this is the standard (HiGHS/scipy) sign
+        convention (y <= 0 on active <=-rows, z >= 0 at active lower
+        bounds); maximization flips every sign.  Presolve-dropped rows get
+        dual 0; presolve-dropped columns still get a meaningful reduced
+        cost because ``z`` is recomputed from the full original data."""
+        g = self.general
+        B, m = g.batch, g.m
+        y_can = np.asarray(y_can, np.float64)
+        if self.row_scale is not None:
+            y_can = y_can * self.row_scale
+        nh, nl = len(self.hi_rows), len(self.lo_rows)
+        y_kept = np.zeros((B, len(self.rows)))
+        y_kept[:, self.hi_rows] += y_can[:, :nh]
+        y_kept[:, self.lo_rows] -= y_can[:, nh:nh + nl]
+        y_max = np.zeros((B, m))
+        y_max[:, self.rows] = y_kept          # canonical-max-form duals
+        csign = 1.0 if g.maximize else -1.0
+        y = csign * y_max
+        z = np.asarray(g.c, np.float64) - np.einsum("bmn,bm->bn", g.A, y)
+        return y, z
+
     def recover(self, res: LPResult) -> LPResult:
         """Map a canonical LPResult back to the original problem: original
         coordinates, original objective sense/constant, presolve status
         overrides applied.  The objective is recomputed as ``c.x + c0`` in
         original coordinates (NaN for non-optimal statuses, matching the
-        solver convention)."""
+        solver convention); the dual certificate, when the backend produced
+        one, is mapped through ``recover_duals`` under the same NaN mask."""
         x = self.recover_x(np.asarray(res.x))
         status = np.asarray(res.status).copy()
         ov = self.status_override >= 0
         status[ov] = self.status_override[ov].astype(status.dtype)
         obj = self.general.objective_value(x)
-        obj = np.where(status == OPTIMAL, obj, np.nan)
+        opt = status == OPTIMAL
+        obj = np.where(opt, obj, np.nan)
+        y = z = None
+        if res.y is not None:
+            y, z = self.recover_duals(np.where(np.isnan(res.y), 0.0, res.y))
+            y = np.where(opt[:, None], y, np.nan)
+            z = np.where(opt[:, None], z, np.nan)
         return LPResult(x=x, objective=obj, status=status,
-                        iterations=np.asarray(res.iterations))
+                        iterations=np.asarray(res.iterations), y=y, z=z)
 
 
 def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
@@ -403,7 +509,8 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
     rec = Recovery(general=g, kept=kept, baseline=baseline, shift=shift,
                    free=free, status_override=status_override,
                    col_scale=col_scale, row_scale=row_scale,
-                   m_canonical=m_can, n_canonical=n_can)
+                   m_canonical=m_can, n_canonical=n_can,
+                   rows=rows, hi_rows=hi_rows, lo_rows=lo_rows)
     return lp, rec
 
 

@@ -40,6 +40,35 @@ Keeping the artificial block allocated for *every* row (not only rows with
 b_i < 0) is what gives every LP in the batch an identical static shape — the
 JAX/TPU analogue of the paper's same-size batching requirement.
 
+Choosing a backend
+------------------
+
+Every ``solve_*`` entry point takes ``backend=`` (validated against
+``BACKEND_REGISTRY`` below); the three engines trade exactness against
+per-iteration parallel depth:
+
+* ``"tableau"`` (default, core/simplex.py) — the paper's dense simplex.
+  **Exact** statuses/vertex solutions in O(m+n) pivots; each pivot is a
+  rank-1 update over the whole (m+2)x(n+2m+1) tableau.  Wins on
+  small/medium dense square-ish LPs (the paper's Tables 2-4 regime).
+* ``"revised"`` (core/revised.py) — exact simplex on basis factors:
+  O(m^2) + pricing per pivot against immutable data.  Wins when the
+  canonical shape is wide (n >> m) or sparse — the paper's Netlib regime
+  (see analysis.lp_perf.revised_crossover).
+* ``"pdhg"`` (core/pdhg.py) — restarted primal-dual hybrid gradient
+  (PDLP-style first-order method).  **Tolerance-based**: OPTIMAL means the
+  KKT residuals (primal/dual feasibility + duality gap) dropped below
+  ``tol``; solutions are interior-accurate rather than vertex-exact, and
+  every iteration is one batched matvec pair — no pivoting, no sequential
+  ratio test.  Wins when LPs are large enough that per-pivot sequential
+  depth dominates (analysis.lp_perf.pdhg_crossover locates the frontier),
+  and it natively emits the primal-dual certificate every backend now
+  reports (``LPResult.y``/``z``).
+
+``backend_spec(name).exact`` distinguishes the two certificate semantics;
+tolerance-based backends must be compared against oracles at ``tol``, not
+bitwise.
+
 Once phase 1 certifies feasibility, the artificial block and the phase-1
 objective row are dead weight; the device solvers drop them with a one-shot
 *phase compaction* (core/simplex.py) and finish phase 2 on the
@@ -70,18 +99,85 @@ STATUS_NAMES = {
 # with a conditional.
 BIG = 1e30
 
-# Solver engines selectable via ``backend=`` on every solve_* entry point:
-# "tableau" — dense tableaux, rank-1 pivot updates (core/simplex.py);
-# "revised" — immutable data, basis-factor updates (core/revised.py).
-BACKENDS = ("tableau", "revised")
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Capabilities + lazy entry points of one solver engine.
+
+    The registry below is the single source of truth for ``backend=``
+    dispatch: every ``solve_*`` entry point validates names against it and
+    routes through ``resolve_backend`` instead of special-casing strings,
+    and warning paths (e.g. the Pallas fallback) consult the capability
+    flags instead of hardcoding engine names.
+    """
+
+    name: str
+    exact: bool                # pivot-exact simplex certificates (statuses
+                               # from exact ratio tests) vs tolerance-based
+                               # convergence (PDHG: OPTIMAL means KKT
+                               # residuals <= tol, objectives are approximate)
+    supports_pallas: bool      # has a dedicated Pallas tile kernel
+    supports_compaction: bool  # composes with the active-set scheduler
+    solve: str                 # "module:attr" entry points, imported lazily
+    solve_compacted: str       # (the engine modules import this module, so
+    solve_local: str           # the registry cannot import them eagerly)
+
+
+BACKEND_REGISTRY = {
+    # dense tableaux, rank-1 pivot updates (core/simplex.py)
+    "tableau": BackendSpec(
+        name="tableau", exact=True, supports_pallas=True,
+        supports_compaction=True,
+        solve="repro.core.simplex:solve_batched_jax",
+        solve_compacted="repro.core.compaction:solve_batched_compacted",
+        solve_local="repro.core.simplex:solve_two_phase"),
+    # immutable data, basis-factor updates (core/revised.py)
+    "revised": BackendSpec(
+        name="revised", exact=True, supports_pallas=False,
+        supports_compaction=True,
+        solve="repro.core.revised:solve_batched_revised",
+        solve_compacted="repro.core.revised:solve_batched_revised_compacted",
+        solve_local="repro.core.revised:solve_revised"),
+    # restarted primal-dual hybrid gradient, matrix-free first-order
+    # iterations with tolerance-based KKT convergence (core/pdhg.py)
+    "pdhg": BackendSpec(
+        name="pdhg", exact=False, supports_pallas=True,
+        supports_compaction=True,
+        solve="repro.core.pdhg:solve_batched_pdhg",
+        solve_compacted="repro.core.pdhg:solve_batched_pdhg_compacted",
+        solve_local="repro.core.pdhg:solve_pdhg"),
+}
+
+# Back-compat tuple (older call sites iterate it for error messages).
+BACKENDS = tuple(BACKEND_REGISTRY)
 
 
 def canonicalize_backend(backend: str) -> str:
     """Validate a solver-engine name (shared by every ``backend=`` kwarg)."""
-    if backend not in BACKENDS:
+    if backend not in BACKEND_REGISTRY:
         raise ValueError(
             f"unknown backend {backend!r}; expected one of {BACKENDS}")
     return backend
+
+
+def backend_spec(backend: str) -> BackendSpec:
+    """The registry record for a (validated) engine name."""
+    return BACKEND_REGISTRY[canonicalize_backend(backend)]
+
+
+def resolve_backend(backend: str, *, compacted: bool = False,
+                    local: bool = False):
+    """Late-bound engine entry point: the monolithic batched solver, the
+    compaction-scheduled variant, or the traceable pjit/shard_map body.
+    Importing lazily keeps the registry cycle-free (engine modules import
+    this module)."""
+    import importlib
+
+    spec = backend_spec(backend)
+    ref = (spec.solve_local if local
+           else spec.solve_compacted if compacted else spec.solve)
+    module, attr = ref.split(":")
+    return getattr(importlib.import_module(module), attr)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,12 +241,28 @@ class LPBatch:
 
 @dataclasses.dataclass(frozen=True)
 class LPResult:
-    """Solver output for a batch: per-LP solution, objective, status, iters."""
+    """Solver output for a batch: per-LP solution, objective, status, iters,
+    and (when the backend provides them) the dual certificate.
+
+    ``y``/``z`` are the backend-independent dual certificate, populated at
+    OPTIMAL and NaN elsewhere (None when a path cannot produce duals, e.g.
+    the Pallas tableau segment path pre-extraction):
+
+    * ``y`` (B, m) — row duals.  Canonical batches report the duals of
+      ``max c.x s.t. Ax <= b, x >= 0`` (y >= 0, strong duality b.y = c.x);
+      general batches report original-coordinate row duals under the
+      convention ``z = c - A^T y`` with the *original* objective vector, so
+      signs follow the problem sense (see forms.Recovery.recover_duals).
+    * ``z`` (B, n) — reduced costs ``c - A^T y``; complementary slackness
+      pairs them with active bounds (forms.general_kkt is the checker).
+    """
 
     x: np.ndarray          # (B, n)
     objective: np.ndarray  # (B,)
     status: np.ndarray     # (B,) int8  — see status codes above
     iterations: np.ndarray  # (B,) int32
+    y: np.ndarray | None = None   # (B, m) row duals (see above)
+    z: np.ndarray | None = None   # (B, n) reduced costs
 
     def summary(self) -> str:
         status = np.asarray(self.status)

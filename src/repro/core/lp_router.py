@@ -50,7 +50,7 @@ def expert_capacity_lp(demand: jax.Array, total_slots: float, c_max: float):
         d,
     ], axis=1)
     c = d + 1e-3  # maximize demand-weighted allocation; epsilon breaks ties
-    x, obj, status, iters = _solve_core(
+    x, obj, status, iters, _, _ = _solve_core(
         A, b, c, m=m, n=E, max_iters=8 * (m + E) + 50, tol=1e-6, feas_tol=1e-5)
     # Fall back to uniform capacity for (numerically) unsolved groups.
     uniform = jnp.minimum(float(total_slots) / E, float(c_max))

@@ -1,0 +1,586 @@
+"""Batched restarted PDHG — a first-order LP engine beside the two simplexes.
+
+The paper's simplex-per-LP design wins on small/medium batched LPs, but its
+scaling story (Sec. 6) stalls where per-pivot *sequential depth* dominates:
+every pivot is a reduction -> ratio test -> rank-1 update chain that cannot
+be parallelized across iterations.  GPU LP work has since moved to
+first-order methods — PDLP / cuPDLP-style **restarted primal-dual hybrid
+gradient** — whose iteration is nothing but matvecs: embarrassingly batched,
+no pivoting, no basis state, tolerance-based convergence.  This module is
+that solver family for the repo's canonical batches:
+
+    maximize c.x   s.t.   A x <= b,  x >= 0        (core/lp.py standard form)
+
+with dual  min b.y  s.t.  A^T y >= c,  y >= 0.  One PDHG iteration is
+
+    x+ = max(0, x + tau * (c - A^T y))             # primal gradient + proj
+    y+ = max(0, y + sigma * (A (2 x+ - x) - b))    # dual ascent on extrapolant
+
+i.e. exactly one (B, m, n) einsum pair per iteration over the whole batch.
+
+The four PDLP ingredients, batched:
+
+* **Diagonal preconditioning** — a few Ruiz (inf-norm) equilibration sweeps
+  per LP; residuals and certificates are reported in *unscaled* space via
+  elementwise unscaling (no second copy of A needed).
+* **Step sizes from ||A||_2** — batched power iteration on A^T A estimates
+  the per-LP spectral norm; tau * sigma = (0.9 / ||A||)^2 guarantees
+  convergence, and the primal weight omega = sqrt(||c|| / ||b||) balances
+  the primal/dual step split (tau = eta/omega, sigma = eta*omega).
+* **KKT-residual restarts** — the iterate average since the last restart is
+  evaluated alongside the current iterate every ``check_every`` iterations;
+  when the better of the two ("candidate") decays the KKT residual enough
+  (RESTART_SUFFICIENT) the solve restarts from the candidate.  Restarting
+  to averages is what upgrades PDHG's O(1/k) ergodic rate to the linear
+  rate observed on LPs (sharpness), and it is per-LP: each batch member
+  restarts on its own schedule.
+* **Per-LP convergence + certificates** — OPTIMAL when max(primal
+  infeasibility, dual infeasibility, duality gap) <= tol in relative terms.
+  Divergence is classified by testing the normalized iterate as an
+  approximate Farkas ray: y >= 0 with A^T y >= -eps and b.y < 0 certifies
+  INFEASIBLE, x >= 0 with A x <= eps and c.x > 0 certifies UNBOUNDED —
+  both checked in unscaled space, both the *exact* Farkas conditions up to
+  tolerance.  ``max_iters`` exhaustion reports ITERATION_LIMIT.
+
+Unlike the simplex engines this convergence is **tolerance-based**
+(``backend_spec("pdhg").exact is False``): statuses agree with the exact
+oracles at the configured tolerance, objectives to ~tol relative, and the
+returned point is interior-accurate rather than a vertex.  What PDHG gives
+back is the **primal-dual certificate for free**: ``LPResult.y`` (row
+duals) and ``LPResult.z`` (reduced costs c - A^T y) are the iterates
+themselves, the same certificate the simplex backends now derive from the
+final basis — backend-uniform, and mapped to original coordinates by
+``forms.Recovery.recover_duals`` for general batches.
+
+Composition mirrors the other engines: ``solve_pdhg`` is the traceable body
+(pjit/shard_map), ``solve_batched_pdhg`` the jitted entry,
+``solve_batched_pdhg_compacted`` runs check-rounds as scheduler segments so
+converged LPs retire into power-of-two buckets (PDHG's per-LP iteration
+counts spread far wider than simplex pivot counts — mean/max ratios of
+5-20x are routine — so active-set compaction pays off *harder* here), and
+kernels/pdhg_tile.py holds the whole-solve Pallas tile kernel (fused
+matvec + prox + restart check in VMEM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .forms import ensure_canonical, finish_result
+from .lp import (
+    INFEASIBLE,
+    ITERATION_LIMIT,
+    OPTIMAL,
+    UNBOUNDED,
+    LPBatch,
+    LPResult,
+)
+
+_RUNNING = -1
+
+# Restart policy (PDLP-style, on the KKT residual of the restart candidate
+# relative to the residual at the last restart): restart on *sufficient*
+# decay, on *necessary* decay once the candidate has started regressing
+# (oscillation), and artificially once the running average is much older
+# than the last restart interval (stale-average guard).
+RESTART_SUFFICIENT = 0.2
+RESTART_NECESSARY = 0.9
+# Adaptive primal weight (PDLP): at each restart, omega moves halfway (in
+# log space) toward the observed dual/primal displacement ratio — the
+# decisive ingredient on ill-conditioned dense instances (the paper's
+# Sec.-6 random class goes from ~80% to 100% oracle status parity).
+OMEGA_SMOOTHING = 0.5
+OMEGA_MIN, OMEGA_MAX = 1e-4, 1e4
+# Ruiz equilibration sweeps / power-iteration steps at setup.
+RUIZ_ITERS = 10
+POWER_ITERS = 40
+# Safety factor on the spectral-norm bound: tau*sigma*||A||^2 = 0.9^2 < 1.
+STEP_SAFETY = 0.9
+# Convergence is checked (and restarts considered) every this many
+# iterations; iteration counts are therefore quantized to it.
+CHECK_EVERY = 16
+# Farkas-ray classification: relative certificate tolerance, and the minimum
+# normalized iterate magnitude before a ray is even considered (bounded
+# convergent iterates stay small; diverging rays cross it immediately).
+CERT_TOL = 1e-4
+RAY_MIN_NORM = 1.0
+
+
+def default_pdhg_max_iters(m: int, n: int) -> int:
+    """Iteration cap for the first-order engine.  PDHG needs thousands of
+    (cheap) iterations where simplex needs tens of (expensive) pivots; the
+    cap only bounds the lockstep loop on pathological members (sized so the
+    paper's ill-conditioned Sec.-6 random class converges with margin)."""
+    return 200 * (m + n) + 30000
+
+
+def pdhg_elements(m: int, n: int) -> int:
+    """State elements touched per PDHG iteration (the executed-work unit of
+    benchmarks/pivot_work.py): the two matvecs read the (m, n) data twice
+    and write the four length-m/n vectors."""
+    return 2 * m * n + 2 * (m + n)
+
+
+class PdhgState(NamedTuple):
+    """Resumable solver state; every leaf keeps the batch on axis 0 so the
+    compaction scheduler's generic gathers apply unchanged.  The problem
+    data rides in the state (like RevisedState's ``Abar``) because segment
+    boundaries must be able to gather it alongside the iterates."""
+    A: jax.Array        # (B, m, n) Ruiz-scaled data
+    b: jax.Array        # (B, m) scaled rhs
+    c: jax.Array        # (B, n) scaled objective
+    rsc: jax.Array      # (B, m) row scales (residual unscaling)
+    csc: jax.Array      # (B, n) col scales
+    eta: jax.Array      # (B, 1) base step: tau*sig = eta^2 <= 1/||A||^2
+    omega: jax.Array    # (B, 1) primal weight: tau = eta/omega, sig = eta*omega
+    binf: jax.Array     # (B,) unscaled ||b||_inf (relative residual floor)
+    cinf: jax.Array     # (B,) unscaled ||c||_inf
+    x: jax.Array        # (B, n) primal iterate (scaled space)
+    y: jax.Array        # (B, m) dual iterate (scaled space)
+    xs: jax.Array       # (B, n) running primal sum since last restart
+    ys: jax.Array       # (B, m) running dual sum
+    xr: jax.Array       # (B, n) last-restart anchor (primal-weight update)
+    yr: jax.Array       # (B, m) last-restart anchor
+    cnt: jax.Array      # (B,) iterations in the running average
+    last_res: jax.Array  # (B,) KKT residual at the last restart
+    prev_res: jax.Array  # (B,) candidate residual at the previous check
+    phase: jax.Array    # (B,) int32 — constant 2 (no phase 1; lets the
+                        #  compaction scheduler's stage-1 pass no-op)
+    status: jax.Array   # (B,) int32 — _RUNNING until terminal
+    iters: jax.Array    # (B,) int32
+
+
+# ---------------------------------------------------------------------------
+# Setup: equilibration + step sizes
+# ---------------------------------------------------------------------------
+
+def ruiz_equilibrate(A: jax.Array, iters: int = RUIZ_ITERS):
+    """Batched Ruiz (inf-norm) equilibration: returns (r, s) with
+    r[:, :, None] * A * s[:, None, :] having rows/cols of ~unit inf-norm.
+    All-zero rows/columns keep scale 1."""
+    B, m, n = A.shape
+    r = jnp.ones((B, m), A.dtype)
+    s = jnp.ones((B, n), A.dtype)
+
+    def body(_, rs):
+        r, s = rs
+        W = jnp.abs(A) * r[:, :, None] * s[:, None, :]
+        rn = W.max(axis=2)
+        r = r / jnp.sqrt(jnp.where(rn > 0, rn, 1.0))
+        W = jnp.abs(A) * r[:, :, None] * s[:, None, :]
+        cn = W.max(axis=1)
+        s = s / jnp.sqrt(jnp.where(cn > 0, cn, 1.0))
+        return r, s
+
+    return jax.lax.fori_loop(0, iters, body, (r, s))
+
+
+def power_sigma_max(A: jax.Array, iters: int = POWER_ITERS) -> jax.Array:
+    """Batched power iteration on A^T A: per-LP spectral-norm estimate
+    ||A||_2 (floored away from zero for all-zero members)."""
+    B, m, n = A.shape
+    v = jnp.full((B, n), 1.0 / np.sqrt(n), A.dtype)
+
+    def body(_, v):
+        w = jnp.einsum("bmn,bm->bn", A, jnp.einsum("bmn,bn->bm", A, v))
+        nw = jnp.linalg.norm(w, axis=1, keepdims=True)
+        return w / jnp.where(nw > 0, nw, 1.0)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return jnp.maximum(jnp.linalg.norm(jnp.einsum("bmn,bn->bm", A, v),
+                                       axis=1), 1e-12)
+
+
+def init_pdhg_state(A, b, c) -> PdhgState:
+    """Equilibrate, estimate step sizes, and seed the zero iterate."""
+    B, m, n = A.shape
+    dtype = A.dtype
+    binf = jnp.abs(b).max(axis=1)
+    cinf = jnp.abs(c).max(axis=1)
+    r, s = ruiz_equilibrate(A)
+    As = A * r[:, :, None] * s[:, None, :]
+    bs = b * r
+    cs = c * s
+    eta = STEP_SAFETY / power_sigma_max(As)
+    nc = jnp.linalg.norm(cs, axis=1)
+    nb = jnp.linalg.norm(bs, axis=1)
+    omega = jnp.sqrt(jnp.where((nc > 0) & (nb > 0),
+                               nc / jnp.maximum(nb, 1e-12), 1.0))
+    omega = jnp.clip(omega, OMEGA_MIN, OMEGA_MAX)
+    return PdhgState(
+        A=As, b=bs, c=cs, rsc=r, csc=s,
+        eta=eta[:, None].astype(dtype),
+        omega=omega[:, None].astype(dtype),
+        binf=binf, cinf=cinf,
+        x=jnp.zeros((B, n), dtype), y=jnp.zeros((B, m), dtype),
+        xs=jnp.zeros((B, n), dtype), ys=jnp.zeros((B, m), dtype),
+        xr=jnp.zeros((B, n), dtype), yr=jnp.zeros((B, m), dtype),
+        cnt=jnp.zeros((B,), dtype),
+        last_res=jnp.full((B,), jnp.inf, dtype),
+        prev_res=jnp.full((B,), jnp.inf, dtype),
+        phase=jnp.full((B,), 2, jnp.int32),
+        status=jnp.full((B,), _RUNNING, jnp.int32),
+        iters=jnp.zeros((B,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Residuals + certificates
+# ---------------------------------------------------------------------------
+
+def kkt_residuals(s: PdhgState, x, y):
+    """Relative KKT residuals of a (scaled-space) point, reported for the
+    *unscaled* problem: primal infeasibility, dual infeasibility, duality
+    gap.  Unscaling is elementwise — A itself is only touched through the
+    two scaled matvecs."""
+    ax = jnp.einsum("bmn,bn->bm", s.A, x)
+    aty = jnp.einsum("bmn,bm->bn", s.A, y)
+    rp = (jnp.maximum(ax - s.b, 0.0) / s.rsc).max(axis=1) / (1.0 + s.binf)
+    rd = (jnp.maximum(s.c - aty, 0.0) / s.csc).max(axis=1) / (1.0 + s.cinf)
+    pobj = jnp.einsum("bn,bn->b", s.c, x)
+    dobj = jnp.einsum("bm,bm->b", s.b, y)
+    gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
+    return jnp.maximum(jnp.maximum(rp, rd), gap)
+
+
+def _ray_certificates(s: PdhgState, active):
+    """Approximate Farkas-ray classification of diverging iterates.
+
+    Works on the unscaled rays (y_u = r * y / ||.||, x_u = s * x / ||.||,
+    both elementwise rescales of scaled matvecs):
+      INFEASIBLE <- y_u >= 0, A^T y_u >= -eps, b.y_u < -eps
+      UNBOUNDED  <- x_u >= 0, A x_u <= eps,  c.x_u > eps
+    Bounded (convergent) iterates stay below RAY_MIN_NORM in normalized
+    magnitude and are never classified."""
+    # dual ray -> primal infeasibility
+    yinf = jnp.abs(s.y * s.rsc).max(axis=1)
+    yh = s.y / jnp.maximum(yinf, 1e-12)[:, None]
+    aty_u = jnp.einsum("bmn,bm->bn", s.A, yh) / s.csc    # A0^T (r yh)
+    by_u = jnp.einsum("bm,bm->b", s.b, yh)               # b0 . (r yh)
+    ray_scale = 1.0 + s.binf + s.cinf
+    infeas = active & (yinf > RAY_MIN_NORM) \
+        & (aty_u.min(axis=1) >= -CERT_TOL * ray_scale) \
+        & (by_u <= -CERT_TOL * ray_scale)
+    # primal ray -> unboundedness
+    xinf = jnp.abs(s.x * s.csc).max(axis=1)
+    xh = s.x / jnp.maximum(xinf, 1e-12)[:, None]
+    ax_u = jnp.einsum("bmn,bn->bm", s.A, xh) / s.rsc
+    cx_u = jnp.einsum("bn,bn->b", s.c, xh)
+    unbounded = active & (xinf > RAY_MIN_NORM) \
+        & (ax_u.max(axis=1) <= CERT_TOL * ray_scale) \
+        & (cx_u >= CERT_TOL * ray_scale)
+    return infeas, unbounded
+
+
+# ---------------------------------------------------------------------------
+# The solver: fused iteration rounds + check/restart
+# ---------------------------------------------------------------------------
+
+def pdhg_round(s: PdhgState, *, tol: float,
+               check_every: int = CHECK_EVERY) -> PdhgState:
+    """``check_every`` fused PDHG iterations followed by one convergence /
+    restart / certificate check — the scheduler-visible unit of work (one
+    "round").  Terminal LPs perform masked no-ops, exactly like the
+    simplex engines' lockstep steps."""
+    active0 = s.status == _RUNNING
+    act = active0[:, None]
+    tau = s.eta / s.omega
+    sig = s.eta * s.omega
+
+    def body(_, carry):
+        x, y, xs, ys, cnt = carry
+        aty = jnp.einsum("bmn,bm->bn", s.A, y)
+        xn = jnp.maximum(x + tau * (s.c - aty), 0.0)
+        ax2 = jnp.einsum("bmn,bn->bm", s.A, 2.0 * xn - x)
+        yn = jnp.maximum(y + sig * (ax2 - s.b), 0.0)
+        x = jnp.where(act, xn, x)
+        y = jnp.where(act, yn, y)
+        return (x, y, xs + jnp.where(act, x, 0.0),
+                ys + jnp.where(act, y, 0.0), cnt + active0)
+
+    x, y, xs, ys, cnt = jax.lax.fori_loop(
+        0, check_every, body, (s.x, s.y, s.xs, s.ys, s.cnt))
+    s = s._replace(x=x, y=y, xs=xs, ys=ys, cnt=cnt,
+                   iters=s.iters + check_every * active0)
+
+    # ---- check: candidate = better of current iterate and running average --
+    cc = jnp.maximum(s.cnt, 1.0)[:, None]
+    xa, ya = s.xs / cc, s.ys / cc
+    res_cur = kkt_residuals(s, s.x, s.y)
+    res_avg = kkt_residuals(s, xa, ya)
+    use_avg = res_avg < res_cur
+    res = jnp.where(use_avg, res_avg, res_cur)
+    xc = jnp.where(use_avg[:, None], xa, s.x)
+    yc = jnp.where(use_avg[:, None], ya, s.y)
+
+    converged = active0 & (res <= tol)
+    # PDLP-style restarts: sufficient decay, or necessary decay once the
+    # candidate has started regressing (the average has peaked)
+    restart = (res <= RESTART_SUFFICIENT * s.last_res) \
+        | ((res <= RESTART_NECESSARY * s.last_res) & (res > s.prev_res))
+    restart = active0 & ~converged & restart
+    adopt = (converged | restart)[:, None]
+    x = jnp.where(adopt, xc, s.x)
+    y = jnp.where(adopt, yc, s.y)
+    xs = jnp.where(restart[:, None], 0.0, s.xs)
+    ys = jnp.where(restart[:, None], 0.0, s.ys)
+    cnt = jnp.where(restart, 0.0, s.cnt)
+    last_res = jnp.where(restart, res, s.last_res)
+    prev_res = jnp.where(restart, jnp.inf, res)
+
+    # adaptive primal weight: at a restart, move omega (log-space, smoothed)
+    # toward the dual/primal displacement ratio since the previous restart
+    dx = jnp.linalg.norm(xc - s.xr, axis=1)
+    dy = jnp.linalg.norm(yc - s.yr, axis=1)
+    can_adapt = restart & (dx > 1e-10) & (dy > 1e-10)
+    om = s.omega[:, 0]
+    om_new = jnp.exp(OMEGA_SMOOTHING
+                     * jnp.log(jnp.maximum(dy, 1e-12)
+                               / jnp.maximum(dx, 1e-12))
+                     + (1.0 - OMEGA_SMOOTHING) * jnp.log(om))
+    omega = jnp.where(can_adapt, jnp.clip(om_new, OMEGA_MIN, OMEGA_MAX),
+                      om)[:, None]
+    xr = jnp.where(restart[:, None], xc, s.xr)
+    yr = jnp.where(restart[:, None], yc, s.yr)
+
+    infeas, unbounded = _ray_certificates(s, active0 & ~converged)
+    status = jnp.where(converged, OPTIMAL, s.status)
+    status = jnp.where(infeas, INFEASIBLE, status)
+    status = jnp.where(unbounded, UNBOUNDED, status)
+    return s._replace(x=x, y=y, xs=xs, ys=ys, xr=xr, yr=yr, cnt=cnt,
+                      last_res=last_res, prev_res=prev_res, omega=omega,
+                      status=status)
+
+
+def extract_pdhg(s: PdhgState):
+    """(x, obj, status, iters, y, z) in *unscaled* canonical coordinates.
+    ``z = c - A^T y`` is the reduced-cost certificate; objective and duals
+    are NaN off-OPTIMAL, matching the solver convention."""
+    x = s.x * s.csc
+    y = s.y * s.rsc
+    obj = jnp.einsum("bn,bn->b", s.c, s.x)      # == c0 . x_unscaled
+    z = s.c / s.csc - jnp.einsum("bmn,bm->bn", s.A, s.y) / s.csc
+    status = jnp.where(s.status == _RUNNING, ITERATION_LIMIT, s.status)
+    opt = (status == OPTIMAL)
+    obj = jnp.where(opt, obj, jnp.nan)
+    y = jnp.where(opt[:, None], y, jnp.nan)
+    z = jnp.where(opt[:, None], z, jnp.nan)
+    return x, obj, status.astype(jnp.int8), s.iters, y, z
+
+
+def solve_pdhg(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
+               feas_tol: float = 0.0, check_every: int = CHECK_EVERY):
+    """Traceable whole-solve body (shared by jit, pjit and shard_map):
+    setup + one while_loop over check rounds.  ``feas_tol`` is accepted for
+    entry-point uniformity but unused (PDHG has no phase 1 — feasibility is
+    part of the KKT residual)."""
+    del feas_tol
+    state = init_pdhg_state(A, b, c)
+    rounds = -(-int(max_iters) // int(check_every))
+
+    def cond(carry):
+        s, it = carry
+        return jnp.any(s.status == _RUNNING) & (it < rounds)
+
+    def body(carry):
+        s, it = carry
+        return pdhg_round(s, tol=tol, check_every=check_every), it + 1
+
+    state, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return extract_pdhg(state)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
+                                             "check_every"))
+def _solve_pdhg_core(A, b, c, *, m, n, max_iters, tol, check_every):
+    return solve_pdhg(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+                      check_every=check_every)
+
+
+def _check_pdhg_pricing(pricing: str) -> None:
+    if pricing != "dantzig":
+        raise ValueError(
+            f"pricing rule {pricing!r} is a simplex concept; the pdhg "
+            "backend has no pivot selection (every iteration touches every "
+            "column).  Use the default pricing with backend='pdhg'.")
+
+
+def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
+                       tol: float | None = None,
+                       feas_tol: float | None = None,
+                       max_iters: int | None = None,
+                       check_every: int = CHECK_EVERY,
+                       pricing: str = "dantzig",
+                       presolve: bool = True,
+                       scale: bool | None = None) -> LPResult:
+    """Solve a batch with the restarted-PDHG first-order engine.
+
+    Same LPBatch -> LPResult contract and GeneralLPBatch acceptance as
+    every solver entry point.  Differences from the simplex engines:
+
+    * ``tol`` is the *relative KKT tolerance* (primal/dual infeasibility
+      and duality gap); OPTIMAL is tolerance-based, objectives are accurate
+      to ~tol relative.  Default 1e-5 (f32) / 1e-8 (f64).
+    * ``iterations`` counts PDHG iterations (quantized to ``check_every``)
+      — typically 10^2-10^4, not comparable to pivot counts (see
+      analysis.lp_perf.pdhg_crossover for the honest flops comparison).
+    * ``LPResult.y``/``z`` are the native primal-dual certificate.
+    """
+    _check_pdhg_pricing(pricing)
+    del feas_tol
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
+    m, n = batch.m, batch.n
+    if max_iters is None:
+        max_iters = default_pdhg_max_iters(m, n)
+    if tol is None:
+        tol = 1e-5 if dtype == jnp.float32 else 1e-8
+    x, obj, status, iters, y, z = _solve_pdhg_core(
+        jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
+        jnp.asarray(batch.c, dtype), m=m, n=n, max_iters=int(max_iters),
+        tol=float(tol), check_every=int(check_every))
+    res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
+                   status=np.asarray(status), iterations=np.asarray(iters),
+                   y=np.asarray(y), z=np.asarray(z))
+    return finish_result(rec, res)
+
+
+# ---------------------------------------------------------------------------
+# Active-set compaction integration
+# ---------------------------------------------------------------------------
+
+def segment_pdhg(state: PdhgState, steps, *, tol: float,
+                 check_every: int = CHECK_EVERY):
+    """Run up to ``steps`` check rounds; stops early once every LP is
+    terminal (stage-2 contract of core.compaction.run_schedule)."""
+    def cond(carry):
+        s, it = carry
+        return jnp.any(s.status == _RUNNING) & (it < steps)
+
+    def body(carry):
+        s, it = carry
+        return pdhg_round(s, tol=tol, check_every=check_every), it + 1
+
+    return jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+
+
+_segment_pdhg_jit = jax.jit(segment_pdhg,
+                            static_argnames=("tol", "check_every"))
+
+
+@jax.jit
+def _extract_pdhg_jit(state: PdhgState):
+    return extract_pdhg(state)
+
+
+class PdhgBackend:
+    """Compaction-scheduler backend for the first-order engine.
+
+    The scheduler's unit of work ("step") is one check round of
+    ``check_every`` PDHG iterations; there is no phase 1 (``phase`` is
+    constant 2, so stage-1 no-ops) and no column compaction.  PDHG's
+    iteration-count spread is far wider than simplex pivots' — easy LPs
+    converge in a few hundred iterations while conditioning stragglers run
+    thousands — which is exactly the distribution the power-of-two bucket
+    ladder was built to exploit."""
+
+    pad_multiple = 1
+
+    def __init__(self, m: int, n: int, tol: float, dtype,
+                 check_every: int = CHECK_EVERY):
+        self.m, self.n = m, n
+        self.tol = float(tol)
+        self.dtype = dtype
+        self.check_every = int(check_every)
+
+    def init(self, A, b, c) -> PdhgState:
+        return init_pdhg_state(A, b, c)
+
+    def run_phase1(self, state, steps):
+        return state, 0          # no phase 1: stage 1 is a no-op
+
+    def run_phase2(self, state, steps):
+        state, it = _segment_pdhg_jit(state, jnp.int32(steps), tol=self.tol,
+                                      check_every=self.check_every)
+        return state, int(it)
+
+    def compact_columns(self, state: PdhgState) -> PdhgState:
+        return state             # nothing to drop: data is already minimal
+
+    def limit_phase1(self, state: PdhgState) -> PdhgState:
+        return state             # no LP is ever in phase 1
+
+    def deactivate(self, state: PdhgState, valid) -> PdhgState:
+        valid = jnp.asarray(np.asarray(valid).reshape(-1))
+        status = jnp.where(valid, state.status, ITERATION_LIMIT)
+        return state._replace(status=status.astype(state.status.dtype))
+
+    def take(self, state: PdhgState, idx) -> PdhgState:
+        idx = jnp.asarray(idx)
+        return jax.tree_util.tree_map(lambda a: a[idx], state)
+
+    def status_host(self, state) -> np.ndarray:
+        return np.asarray(state.status).reshape(-1)
+
+    def phase_host(self, state) -> np.ndarray:
+        return np.asarray(state.phase).reshape(-1)
+
+    def extract(self, state: PdhgState, stage: str):
+        out = _extract_pdhg_jit(state)
+        return tuple(np.asarray(o) for o in out)
+
+    def elements_per_step(self, stage: str) -> int:
+        return self.check_every * pdhg_elements(self.m, self.n)
+
+
+def solve_batched_pdhg_compacted(
+        batch: LPBatch, *, dtype=jnp.float32, tol: Optional[float] = None,
+        feas_tol: Optional[float] = None, max_iters: Optional[int] = None,
+        segment_k: Optional[int] = None,
+        compact_threshold: Optional[float] = None,
+        check_every: int = CHECK_EVERY, pricing: str = "dantzig",
+        stats_out: Optional[List] = None,
+        presolve: bool = True, scale: Optional[bool] = None) -> LPResult:
+    """Restarted PDHG under the active-set compaction scheduler: K-round
+    segments, power-of-two bucket gathers of still-running LPs (problem
+    data, iterates, averages and restart state gathered alongside).  Same
+    contract as ``solve_batched_compacted``.
+
+    Reproducibility: gathers never change an LP's own iterates, but the
+    segment runner is a *different compilation* of the same rounds than
+    the monolithic while_loop — XLA fuses the f32 matvecs differently, so
+    the restart trajectories (and the tol-satisfying points they stop at)
+    drift to ~tol: statuses agree, objectives to ~1e-3 relative (cf. the
+    revised backend's batch-decomposition note)."""
+    from .compaction import (CompactionConfig, resolve_compact_threshold,
+                             run_schedule)
+
+    _check_pdhg_pricing(pricing)
+    del feas_tol
+    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
+    m, n = batch.m, batch.n
+    if max_iters is None:
+        max_iters = default_pdhg_max_iters(m, n)
+    if tol is None:
+        tol = 1e-5 if dtype == jnp.float32 else 1e-8
+    rounds = -(-int(max_iters) // int(check_every))
+    if segment_k is None:
+        # a handful of compaction checkpoints across the expected solve,
+        # mirroring auto_segment_k's ~1/64-of-cap heuristic in round units
+        segment_k = max(4, rounds // 64)
+    backend = PdhgBackend(m, n, tol, dtype, check_every=check_every)
+    state = backend.init(jnp.asarray(batch.A, dtype),
+                         jnp.asarray(batch.b, dtype),
+                         jnp.asarray(batch.c, dtype))
+    B = batch.batch
+    orig = np.arange(B, dtype=np.int64)
+    cfg = CompactionConfig(
+        segment_k=int(segment_k),
+        compact_threshold=resolve_compact_threshold(compact_threshold,
+                                                    int(segment_k)),
+        pad_multiple=backend.pad_multiple)
+    return finish_result(rec, run_schedule(backend, state, orig, B, n,
+                                           max_iters=rounds, config=cfg,
+                                           stats_out=stats_out))

@@ -126,10 +126,17 @@ def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
         status[k], iters[k], p1_iters[k] = _solve_single(
             T[k], basis[k], n, m, tol, max_iters, rule=rule)
     x, obj = extract_solution(T, basis, n)
-    # non-optimal LPs report NaN objective to make misuse loud
+    # dual certificate off the final tableau (see simplex.extract_duals):
+    # slack-column reduced costs are -y, structural entries are z = c - y.A
+    y = -T[:, m, n:n + m]
+    z = T[:, m, :n]
+    # non-optimal LPs report NaN objective/duals to make misuse loud
     bad = status != OPTIMAL
     obj = np.where(bad, np.nan, obj)
-    res = LPResult(x=x, objective=obj, status=status, iterations=iters)
+    y = np.where(bad[:, None], np.nan, y)
+    z = np.where(bad[:, None], np.nan, z)
+    res = LPResult(x=x, objective=obj, status=status, iterations=iters,
+                   y=y, z=z)
     return finish_result(rec, res), p1_iters
 
 

@@ -417,6 +417,34 @@ def extract_solution_revised(state: RevisedState, n: int):
     return x, obj
 
 
+def extract_duals_revised(state: RevisedState, n: int):
+    """Dual certificate ``y = c_B B^-1`` off the final basis factors: one
+    extra BTRAN (phase-2 costs), then the candidate pricing matvec for the
+    structural reduced costs — the revised-simplex analogue of reading the
+    tableau's objective row (simplex.extract_duals).
+
+    The BTRAN solves against the *sign-adjusted* rows; the slack diagonal
+    of ``Abar`` carries exactly that sign, so ``y = sign * y_scaled``
+    reports the canonical-row duals (same convention as the tableau
+    backend).  Returns (y (B, m), z (B, n))."""
+    m = state.xB.shape[1]
+    ncand = state.cvec.shape[1]
+    iota_m = jnp.arange(m, dtype=jnp.int32)
+    cB = jnp.where(state.basis < ncand,
+                   jnp.take_along_axis(
+                       state.cvec, jnp.minimum(state.basis, ncand - 1),
+                       axis=1),
+                   0.0)
+    y_s = _apply_etas_rev(cB, state.etaR, state.etaV, state.cnt[0], iota_m)
+    y_s = _lu_solve_t(state.lu, state.perm_inv, y_s)
+    idx = jnp.arange(m)
+    sign = state.Abar[:, idx, n + idx]          # slack diagonal = row sign
+    y = sign * y_s
+    z = state.cvec[:, :n] - jnp.einsum("bm,bmn->bn", y_s,
+                                       state.Abar[:, :, :n])
+    return y, z
+
+
 def solve_revised(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
                   feas_tol: float, refactor_period: int,
                   pricing: str = "dantzig"):
@@ -440,8 +468,12 @@ def solve_revised(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
     state, _ = lax.while_loop(cond, body, (state, jnp.int32(0)))
     status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
     x, obj = extract_solution_revised(state, n)
+    y, z = extract_duals_revised(state, n)
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
-    return x, obj, status.astype(jnp.int8), state.iters
+    opt = (status == OPTIMAL)[:, None]
+    y = jnp.where(opt, y, jnp.nan)
+    z = jnp.where(opt, z, jnp.nan)
+    return x, obj, status.astype(jnp.int8), state.iters, y, z
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
@@ -480,14 +512,15 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
         tol = 1e-6 if dtype == jnp.float32 else 1e-9
     if feas_tol is None:
         feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
-    x, obj, status, iters = _solve_revised_core(
+    x, obj, status, iters, y, z = _solve_revised_core(
         jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
         jnp.asarray(batch.c, dtype), m=m, n=n, max_iters=int(max_iters),
         tol=float(tol), feas_tol=float(feas_tol),
         refactor_period=int(refactor_period),
         pricing=canonicalize_revised_rule(pricing))
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
-                   status=np.asarray(status), iterations=np.asarray(iters))
+                   status=np.asarray(status), iterations=np.asarray(iters),
+                   y=np.asarray(y), z=np.asarray(z))
     return finish_result(rec, res)
 
 
@@ -550,10 +583,13 @@ def _refactor_state_jit(state: RevisedState) -> RevisedState:
 @functools.partial(jax.jit, static_argnames=("n",))
 def _extract_revised_jit(state: RevisedState, *, n: int):
     x, obj = extract_solution_revised(state, n)
+    y, z = extract_duals_revised(state, n)
     status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT,
                        state.status)
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
-    return x, obj, status.astype(jnp.int8), state.iters
+    opt = (status == OPTIMAL)[:, None]
+    return (x, obj, status.astype(jnp.int8), state.iters,
+            jnp.where(opt, y, jnp.nan), jnp.where(opt, z, jnp.nan))
 
 
 class RevisedBackend(JaxBackend):
@@ -600,9 +636,8 @@ class RevisedBackend(JaxBackend):
         return _refactor_state_jit(gathered)
 
     def extract(self, state: RevisedState, stage: str):
-        x, obj, status, iters = _extract_revised_jit(state, n=self.n)
-        return (np.asarray(x), np.asarray(obj), np.asarray(status),
-                np.asarray(iters))
+        return tuple(np.asarray(o)
+                     for o in _extract_revised_jit(state, n=self.n))
 
     def elements_per_step(self, stage: str) -> int:
         return revised_elements(self.m, self.n,

@@ -84,6 +84,7 @@ from .lp import (
     LPResult,
     canonicalize_backend,
     default_max_iters,
+    resolve_backend,
 )
 from .pricing import (
     canonicalize_rule,
@@ -348,6 +349,27 @@ def extract_solution_compacted(T: jax.Array, basis: jax.Array, n: int):
     return x, objective
 
 
+def extract_duals(T: jax.Array, *, m: int, n: int):
+    """Dual certificate off a final tableau (full or phase-compacted — both
+    keep structural columns 0..n-1 and slack columns n..n+m-1 in row m).
+
+    The phase-2 objective row holds the reduced costs ``c - y.A``; the
+    slack column j = n+i has original cost 0 and (sign-adjusted) column
+    ``sign_i e_i``, so its entry is ``-y_i`` irrespective of the row's
+    phase-1 sign flip: ``y = c_B B^-1`` falls out of the tableau for free.
+    Returns (y, z) with y (B, m) the canonical row duals (>= 0 at
+    optimality) and z (B, n) the structural reduced costs (<= 0)."""
+    y = -T[:, m, n:n + m]
+    z = T[:, m, :n]
+    return y, z
+
+
+def _mask_duals(y, z, status):
+    """Duals are a certificate of optimality only: NaN elsewhere."""
+    opt = (status == OPTIMAL)[:, None]
+    return jnp.where(opt, y, jnp.nan), jnp.where(opt, z, jnp.nan)
+
+
 def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
                     feas_tol: float, phase_compaction: bool = True,
                     pricing: str = "dantzig"):
@@ -388,6 +410,7 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
         state = jax.lax.while_loop(cond, body1, state)
         status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
         x, obj = extract_solution_jax(state.T, state.basis, n)
+        y, z = extract_duals(state.T, m=m, n=n)
     else:
         # ---- loop 1: full tableau, until every LP has left phase 1 ---------
         def cond1(s: SimplexState):
@@ -415,9 +438,11 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
         state = jax.lax.while_loop(cond2, body2, state)
         status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
         x, obj = extract_solution_compacted(state.T, state.basis, n)
+        y, z = extract_duals(state.T, m=m, n=n)
 
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
-    return x, obj, status.astype(jnp.int8), state.iters
+    y, z = _mask_duals(y, z, status)
+    return x, obj, status.astype(jnp.int8), state.iters, y, z
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
@@ -461,12 +486,16 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     original coordinates.
     """
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
-    if canonicalize_backend(backend) == "revised":
-        from .revised import solve_batched_revised  # local: avoids cycle
-        return finish_result(rec, solve_batched_revised(
-            batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
-            max_iters=max_iters, refactor_period=refactor_period,
-            pricing=pricing))
+    if canonicalize_backend(backend) != "tableau":
+        # registry dispatch (core/lp.py BACKEND_REGISTRY): the engine
+        # modules own their extra kwargs; only the revised engine takes a
+        # refactor_period
+        solver = resolve_backend(backend)
+        kwargs = dict(dtype=dtype, tol=tol, feas_tol=feas_tol,
+                      max_iters=max_iters, pricing=pricing)
+        if backend == "revised":
+            kwargs["refactor_period"] = refactor_period
+        return finish_result(rec, solver(batch, **kwargs))
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
@@ -477,12 +506,13 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     A = jnp.asarray(batch.A, dtype=dtype)
     b = jnp.asarray(batch.b, dtype=dtype)
     c = jnp.asarray(batch.c, dtype=dtype)
-    x, obj, status, iters = _solve_core(
+    x, obj, status, iters, y, z = _solve_core(
         A, b, c, m=m, n=n, max_iters=int(max_iters), tol=float(tol),
         feas_tol=float(feas_tol), phase_compaction=bool(phase_compaction),
         pricing=canonicalize_rule(pricing))
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
-                   status=np.asarray(status), iterations=np.asarray(iters))
+                   status=np.asarray(status), iterations=np.asarray(iters),
+                   y=np.asarray(y), z=np.asarray(z))
     return finish_result(rec, res)
 
 

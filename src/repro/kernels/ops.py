@@ -18,10 +18,16 @@ dantzig | steepest_edge | devex) on both the whole-solve and segment paths.
 kernel keeps the full cost row resident in VMEM, so block-restricted pricing
 saves nothing — the rule exists for the revised backend's pricing matvec.
 
-``backend="revised"`` (core/revised.py) currently has no Pallas kernel: the
-call falls back to the pure-JAX revised path with a warning (fired once per
-process, not once per call) so the entry-point contract stays uniform
-across the stack.
+``backend=`` dispatch follows the core/lp.py registry:
+``backend="pdhg"`` (core/pdhg.py) runs the whole-solve first-order tile
+kernel (kernels/pdhg_tile.py — fused matvec + prox + restart check in
+VMEM); with ``compaction=True`` its segments run the pure-JAX rounds under
+the scheduler (warned once — there is no pdhg segment kernel yet).
+``backend="revised"`` (core/revised.py) has no Pallas kernel
+(``backend_spec("revised").supports_pallas is False``): the call falls
+back to the pure-JAX revised path with a warning (fired once per process,
+not once per call) so the entry-point contract stays uniform across the
+stack.
 
 Like every solve_* entry point, a ``GeneralLPBatch`` (core/forms.py) is
 accepted directly: canonicalize on ingestion (``presolve=``/``scale=``),
@@ -39,7 +45,7 @@ import numpy as np
 
 from repro.core.forms import ensure_canonical, finish_result
 from repro.core.lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult,
-                           canonicalize_backend, default_max_iters)
+                           backend_spec, default_max_iters)
 from repro.core.compaction import (
     CompactionConfig, CompactionState, JaxBackend, SegmentStat, auto_segment_k,
     resolve_compact_threshold, run_schedule,
@@ -88,9 +94,15 @@ def _extract_padded_jit(T, basis, status, iters, *, m, n):
     rhs = T[:, :, C - 1]
     x = scatter_solution(rhs, basis[:, :rows], n)
     obj = -T[:, m, C - 1]
+    # dual certificate off the padded tableau (structural + slack columns
+    # keep their unpadded positions; see core.simplex.extract_duals)
+    y = -T[:, m, n:n + m]
+    z = T[:, m, :n]
     status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
-    return x, obj, status.astype(jnp.int8), iters
+    opt = (status == OPTIMAL)[:, None]
+    return (x, obj, status.astype(jnp.int8), iters,
+            jnp.where(opt, y, jnp.nan), jnp.where(opt, z, jnp.nan))
 
 
 class PallasBackend(JaxBackend):
@@ -143,17 +155,15 @@ class PallasBackend(JaxBackend):
             T=_compact_padded_jit(state.T, m=self.m, n=self.n), w=w)
 
     def extract(self, state: CompactionState, stage: str):
-        x, obj, status, iters = _extract_padded_jit(
+        return tuple(np.asarray(o) for o in _extract_padded_jit(
             state.T, state.basis, state.status.reshape(-1),
-            state.iters.reshape(-1), m=self.m, n=self.n)
-        return (np.asarray(x), np.asarray(obj), np.asarray(status),
-                np.asarray(iters))
+            state.iters.reshape(-1), m=self.m, n=self.n))
 
 
 def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                          tile_b: Optional[int] = None,
                          max_iters: Optional[int] = None,
-                         tol: float = 1e-6,
+                         tol: Optional[float] = None,
                          feas_tol: float = 1e-5,
                          vmem_budget: int = 8 * 2 ** 20,
                          interpret: bool = True,
@@ -169,26 +179,60 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     pricing = canonicalize_rule(pricing)
-    canonicalize_backend(backend)
-    if backend == "revised":
+    spec = backend_spec(backend)
+    if not spec.supports_pallas:
+        # registry-driven fallback (currently: the revised engine) — the
+        # entry-point contract stays uniform across the stack
         _warn_once(
-            "revised-fallback",
-            "solve_batched_pallas(backend='revised'): no Pallas revised "
-            "kernel exists yet; falling back to the pure-JAX revised path "
-            "(core/revised.py)")
-        from repro.core.revised import (solve_batched_revised,
-                                        solve_batched_revised_compacted)
+            f"{backend}-fallback",
+            f"solve_batched_pallas(backend={backend!r}): no Pallas "
+            f"{backend} kernel exists yet; falling back to the pure-JAX "
+            f"path (see core/lp.py BACKEND_REGISTRY)")
+        from repro.core.lp import resolve_backend
+        kwargs = dict(dtype=dtype, tol=tol, feas_tol=feas_tol,
+                      max_iters=max_iters, pricing=pricing)
+        if backend == "revised":
+            kwargs["refactor_period"] = refactor_period
         if compaction:
-            return finish_result(rec, solve_batched_revised_compacted(
-                batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
-                max_iters=max_iters, segment_k=segment_k,
-                compact_threshold=compact_threshold,
-                refactor_period=refactor_period, pricing=pricing,
+            kwargs.update(segment_k=segment_k,
+                          compact_threshold=compact_threshold,
+                          stats_out=stats_out)
+        return finish_result(rec, resolve_backend(
+            backend, compacted=compaction)(batch, **kwargs))
+    if backend == "pdhg":
+        from repro.core.pdhg import _check_pdhg_pricing
+        _check_pdhg_pricing(pricing)
+        if compaction:
+            # the scheduler's pdhg segments run the pure-JAX rounds (no
+            # segment kernel yet — the whole-solve kernel is the Pallas
+            # surface); results are identical, only the executor differs
+            _warn_once(
+                "pdhg-segment-jax",
+                "solve_batched_pallas(backend='pdhg', compaction=True): "
+                "pdhg segments run the pure-JAX rounds under the "
+                "compaction scheduler (the whole-solve tile kernel has no "
+                "segment variant yet)")
+            from repro.core.pdhg import solve_batched_pdhg_compacted
+            return finish_result(rec, solve_batched_pdhg_compacted(
+                batch, dtype=dtype, tol=tol, max_iters=max_iters,
+                segment_k=segment_k, compact_threshold=compact_threshold,
                 stats_out=stats_out))
-        return finish_result(rec, solve_batched_revised(
-            batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
-            max_iters=max_iters, refactor_period=refactor_period,
-            pricing=pricing))
+        from repro.core.pdhg import default_pdhg_max_iters
+        from .pdhg_tile import pdhg_pallas, pick_pdhg_tile_b
+        if tol is None:
+            tol = 1e-5 if dtype == jnp.float32 else 1e-8
+        if max_iters is None:
+            max_iters = default_pdhg_max_iters(m, n)
+        if tile_b is None:
+            tile_b = pick_pdhg_tile_b(m, n, vmem_budget)
+        x, obj, status, iters, y, z = pdhg_pallas(
+            jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
+            jnp.asarray(batch.c, dtype), m=m, n=n, tile_b=int(tile_b),
+            max_iters=int(max_iters), tol=float(tol), interpret=interpret)
+        return finish_result(rec, LPResult(
+            x=np.asarray(x), objective=np.asarray(obj),
+            status=np.asarray(status), iterations=np.asarray(iters),
+            y=np.asarray(y), z=np.asarray(z)))
     if pricing == "partial":
         _warn_once(
             "partial-pricing",
@@ -197,6 +241,8 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
             "here; using dantzig (identical certificates). Use "
             "backend='revised' for real block pricing.")
         pricing = "dantzig"
+    if tol is None:
+        tol = 1e-6 if dtype == jnp.float32 else 1e-9
     if tile_b is None:
         tile_b = pick_tile_b(m, n, vmem_budget)
     if max_iters is None:
@@ -227,12 +273,13 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                                                config=cfg,
                                                stats_out=stats_out))
 
-    x, obj, status, iters = simplex_pallas(
+    x, obj, status, iters, y, z = simplex_pallas(
         A, b, c, m=m, n=n, tile_b=int(tile_b), max_iters=int(max_iters),
         tol=float(tol), feas_tol=float(feas_tol), interpret=interpret,
         pricing=pricing)
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
-                   status=np.asarray(status), iterations=np.asarray(iters))
+                   status=np.asarray(status), iterations=np.asarray(iters),
+                   y=np.asarray(y), z=np.asarray(z))
     return finish_result(rec, res)
 
 

@@ -1,0 +1,312 @@
+"""Pallas TPU kernel: whole-solve batched restarted PDHG over VMEM tiles.
+
+The simplex tile kernel (kernels/simplex_tile.py) keeps a *mutating*
+tableau resident in VMEM; the PDHG tile keeps the **immutable** problem
+data resident and mutates only the small iterate vectors — the same
+VMEM-residency upgrade over HBM-looping XLA, applied to the first-order
+engine (core/pdhg.py):
+
+* one grid step per tile of ``tile_b`` LPs; the tile's (tile_b, M, N)
+  constraint block, both iterate pairs, the running averages and the
+  restart bookkeeping all live in VMEM for the entire solve — zero HBM
+  traffic between iterations, solutions + certificates out at the end.
+* the two matvecs per iteration are broadcast-FMA + axis reductions
+  (``sum(A * x[:, None, :], axis=2)`` / ``sum(A * y[:, :, None], axis=1)``)
+  — the VPU formulation the simplex tiles already use; no gathers, no
+  scatters, no pivoting.
+* the whole restart machinery — candidate selection between current and
+  average iterate, sufficient/necessary decay tests, adaptive primal
+  weight — is fused into the same loop: "fused matvec + prox + restart
+  check in VMEM".
+* per-tile early exit: the outer while_loop stops the moment every LP in
+  the tile is terminal, so a tile of easy LPs hands its time to later
+  tiles (grid steps execute sequentially per core).
+
+Setup (Ruiz equilibration + power-iteration step sizes, core/pdhg.py) runs
+as ordinary jitted JAX on the host side of the pallas_call — it is a
+once-per-solve cost and keeping it outside the kernel lets the kernel
+treat (A, b, c, scales, steps) as pure inputs.
+
+Layout: A is (tile_b, M, N) with M = round8(m), N = round128(n); length-n
+vectors ride as (tile_b, N) lane rows, length-m vectors as (tile_b, M)
+rows (same convention as the simplex tile's ``basis``).  Zero padding is
+inert by construction: padded rows/columns have A = 0, b = 0, c = 0 and
+unit scales, so iterates, residuals and Farkas certificates never see
+them; padded batch slots are all-zero LPs that converge on their first
+check.  Validated under ``interpret=True`` like the simplex tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.lp import INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED
+from repro.core.pdhg import (
+    CERT_TOL,
+    CHECK_EVERY,
+    OMEGA_MAX,
+    OMEGA_MIN,
+    OMEGA_SMOOTHING,
+    RAY_MIN_NORM,
+    RESTART_NECESSARY,
+    RESTART_SUFFICIENT,
+    init_pdhg_state,
+)
+
+_RUNNING = -1
+
+
+def _round_up(v: int, k: int) -> int:
+    return (v + k - 1) // k * k
+
+
+def pdhg_dims(m: int, n: int):
+    """(M, N) of the padded tile: rows to a sublane multiple, the minor
+    (lane) axis to 128."""
+    return _round_up(m, 8), _round_up(n, 128)
+
+
+def pick_pdhg_tile_b(m: int, n: int, vmem_budget: int = 8 * 2 ** 20,
+                     dtype_size: int = 4) -> int:
+    """Tile batch so the working set fits VMEM: the (M, N) data block plus
+    ~8 length-N and ~8 length-M live vectors per LP."""
+    M, N = pdhg_dims(m, n)
+    per_lp = (M * N + 8 * N + 8 * M + 16) * dtype_size
+    tile = max(1, vmem_budget // per_lp)
+    if tile >= 8:
+        tile = tile // 8 * 8
+    return max(1, min(tile, 512))
+
+
+def _mv(A, x):
+    """(tile_b, M, N) @ (tile_b, N) -> (tile_b, M) as broadcast-FMA + lane
+    reduction (VPU formulation; padded columns contribute zero)."""
+    return jnp.sum(A * x[:, None, :], axis=2)
+
+
+def _mtv(A, y):
+    """(tile_b, M, N)^T @ (tile_b, M) -> (tile_b, N) via the sublane axis."""
+    return jnp.sum(A * y[:, :, None], axis=1)
+
+
+def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
+                 binf_ref, cinf_ref,
+                 x_out, obj_out, status_out, iters_out, y_out, z_out,
+                 *, tol: float, max_rounds: int, check_every: int):
+    """Whole-solve kernel: rounds of ``check_every`` fused PDHG iterations
+    + one in-VMEM convergence/restart/certificate check, mirroring
+    core.pdhg.pdhg_round exactly (same constants, same candidate rule,
+    same adaptive primal weight), until every LP in the tile is terminal."""
+    A = A_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    r = r_ref[...]
+    s = s_ref[...]
+    eta = eta_ref[...]          # (tile_b, 1)
+    om0 = om_ref[...]
+    binf = binf_ref[...]
+    cinf = cinf_ref[...]
+    tile_b, M, N = A.shape
+    dtype = A.dtype
+
+    zeros_n = jnp.zeros((tile_b, N), dtype)
+    zeros_m = jnp.zeros((tile_b, M), dtype)
+    inf1 = jnp.full((tile_b, 1), jnp.inf, dtype)
+
+    def kkt(x, y):
+        ax = _mv(A, x)
+        aty = _mtv(A, y)
+        rp = jnp.max(jnp.maximum(ax - b, 0.0) / r, axis=1, keepdims=True) \
+            / (1.0 + binf)
+        rd = jnp.max(jnp.maximum(c - aty, 0.0) / s, axis=1, keepdims=True) \
+            / (1.0 + cinf)
+        pobj = jnp.sum(c * x, axis=1, keepdims=True)
+        dobj = jnp.sum(b * y, axis=1, keepdims=True)
+        gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
+        return jnp.maximum(jnp.maximum(rp, rd), gap)
+
+    def cond(carry):
+        it = carry[0]
+        status = carry[11]
+        return jnp.any(status == _RUNNING) & (it < max_rounds)
+
+    def body(carry):
+        (it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
+         iters) = carry
+        active = status == _RUNNING          # (tile_b, 1)
+        tau = eta / om
+        sig = eta * om
+
+        def step(_, st):
+            x, y, xs, ys, cnt = st
+            aty = _mtv(A, y)
+            xn = jnp.maximum(x + tau * (c - aty), 0.0)
+            ax2 = _mv(A, 2.0 * xn - x)
+            yn = jnp.maximum(y + sig * (ax2 - b), 0.0)
+            x = jnp.where(active, xn, x)
+            y = jnp.where(active, yn, y)
+            return (x, y, xs + jnp.where(active, x, 0.0),
+                    ys + jnp.where(active, y, 0.0),
+                    cnt + active.astype(dtype))
+
+        x, y, xs, ys, cnt = jax.lax.fori_loop(
+            0, check_every, step, (x, y, xs, ys, cnt))
+        iters = iters + check_every * active.astype(jnp.int32)
+
+        cc = jnp.maximum(cnt, 1.0)
+        xa, ya = xs / cc, ys / cc
+        res_cur = kkt(x, y)
+        res_avg = kkt(xa, ya)
+        use_avg = res_avg < res_cur
+        res = jnp.where(use_avg, res_avg, res_cur)
+        xc = jnp.where(use_avg, xa, x)
+        yc = jnp.where(use_avg, ya, y)
+
+        converged = active & (res <= tol)
+
+        # Farkas-ray classification (core.pdhg._ray_certificates, inlined)
+        # on the PRE-adoption iterates — exactly the vectors pdhg_round
+        # tests, so kernel and pure-JAX paths classify on the same round
+        test = active & ~converged
+        ray_scale = 1.0 + binf + cinf
+        yinf = jnp.max(jnp.abs(y * r), axis=1, keepdims=True)
+        yh = y / jnp.maximum(yinf, 1e-12)
+        aty_u = _mtv(A, yh) / s
+        by_u = jnp.sum(b * yh, axis=1, keepdims=True)
+        infeas = test & (yinf > RAY_MIN_NORM) \
+            & (jnp.min(aty_u, axis=1, keepdims=True)
+               >= -CERT_TOL * ray_scale) \
+            & (by_u <= -CERT_TOL * ray_scale)
+        xinf = jnp.max(jnp.abs(x * s), axis=1, keepdims=True)
+        xh = x / jnp.maximum(xinf, 1e-12)
+        ax_u = _mv(A, xh) / r
+        cx_u = jnp.sum(c * xh, axis=1, keepdims=True)
+        unbounded = test & (xinf > RAY_MIN_NORM) \
+            & (jnp.max(ax_u, axis=1, keepdims=True)
+               <= CERT_TOL * ray_scale) \
+            & (cx_u >= CERT_TOL * ray_scale)
+
+        restart = (res <= RESTART_SUFFICIENT * last) \
+            | ((res <= RESTART_NECESSARY * last) & (res > prev))
+        restart = active & ~converged & restart
+        adopt = converged | restart
+        x = jnp.where(adopt, xc, x)
+        y = jnp.where(adopt, yc, y)
+        xs = jnp.where(restart, 0.0, xs)
+        ys = jnp.where(restart, 0.0, ys)
+        cnt = jnp.where(restart, 0.0, cnt)
+        last = jnp.where(restart, res, last)
+        prev = jnp.where(restart, jnp.inf, res)
+
+        # adaptive primal weight (core/pdhg.py OMEGA_* constants)
+        dx = jnp.sqrt(jnp.sum((xc - xr) ** 2, axis=1, keepdims=True))
+        dy = jnp.sqrt(jnp.sum((yc - yr) ** 2, axis=1, keepdims=True))
+        can = restart & (dx > 1e-10) & (dy > 1e-10)
+        om_new = jnp.exp(OMEGA_SMOOTHING
+                         * jnp.log(jnp.maximum(dy, 1e-12)
+                                   / jnp.maximum(dx, 1e-12))
+                         + (1.0 - OMEGA_SMOOTHING) * jnp.log(om))
+        om = jnp.where(can, jnp.clip(om_new, OMEGA_MIN, OMEGA_MAX), om)
+        xr = jnp.where(restart, xc, xr)
+        yr = jnp.where(restart, yc, yr)
+
+        status = jnp.where(converged, OPTIMAL, status)
+        status = jnp.where(infeas, INFEASIBLE, status)
+        status = jnp.where(unbounded, UNBOUNDED, status)
+        return (it + 1, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
+                iters)
+
+    init = (jnp.int32(0), zeros_n, zeros_m, zeros_n, zeros_m, zeros_n,
+            zeros_m, jnp.zeros((tile_b, 1), dtype), inf1, inf1, om0,
+            jnp.full((tile_b, 1), _RUNNING, jnp.int32),
+            jnp.zeros((tile_b, 1), jnp.int32))
+    (_, x, y, _, _, _, _, _, _, _, _, status, iters) = jax.lax.while_loop(
+        cond, body, init)
+    status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
+
+    # extraction in unscaled coordinates (+ NaN masks off-OPTIMAL)
+    opt = status == OPTIMAL
+    obj = jnp.sum(c * x, axis=1, keepdims=True)
+    z = (c - _mtv(A, y)) / s
+    x_out[...] = x * s
+    obj_out[...] = jnp.where(opt, obj, jnp.nan)
+    status_out[...] = status
+    iters_out[...] = iters
+    y_out[...] = jnp.where(opt, y * r, jnp.nan)
+    z_out[...] = jnp.where(opt, z, jnp.nan)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "n", "tile_b", "max_iters", "tol", "check_every",
+                     "interpret"))
+def pdhg_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
+                tol: float, check_every: int = CHECK_EVERY,
+                interpret: bool = True):
+    """Solve the batch with the whole-solve PDHG tile kernel.  Returns
+    (x, obj, status, iters, y, z) for the original (unpadded) batch —
+    the same 6-tuple contract as every solve body."""
+    B = A.shape[0]
+    dtype = A.dtype
+    # setup outside the kernel: equilibration + step sizes (jitted JAX)
+    s0 = init_pdhg_state(A, b, c)
+    M, N = pdhg_dims(m, n)
+    B_pad = _round_up(B, tile_b)
+
+    def pad(a, rows, fill=0.0):
+        out = jnp.full((B_pad, rows), fill, dtype)
+        return out.at[:B, :a.shape[1]].set(a)
+
+    Ap = jnp.zeros((B_pad, M, N), dtype).at[:B, :m, :n].set(s0.A)
+    bp = pad(s0.b, M)
+    cp = pad(s0.c, N)
+    rp = pad(s0.rsc, M, 1.0)
+    sp = pad(s0.csc, N, 1.0)
+    etap = pad(s0.eta, 1, 1.0)
+    omp = pad(s0.omega, 1, 1.0)
+    binfp = pad(s0.binf[:, None], 1)
+    cinfp = pad(s0.cinf[:, None], 1)
+
+    grid = (B_pad // tile_b,)
+    rounds = -(-int(max_iters) // int(check_every))
+    kernel = functools.partial(_pdhg_kernel, tol=float(tol),
+                               max_rounds=rounds,
+                               check_every=int(check_every))
+    vec = lambda i: (i, 0)  # noqa: E731
+    x, obj, status, iters, y, z = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, M, N), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, M), vec),
+            pl.BlockSpec((tile_b, N), vec),
+            pl.BlockSpec((tile_b, M), vec),
+            pl.BlockSpec((tile_b, N), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, N), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, M), vec),
+            pl.BlockSpec((tile_b, N), vec),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B_pad, N), dtype),
+            jax.ShapeDtypeStruct((B_pad, 1), dtype),
+            jax.ShapeDtypeStruct((B_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B_pad, M), dtype),
+            jax.ShapeDtypeStruct((B_pad, N), dtype),
+        ],
+        interpret=interpret,
+    )(Ap, bp, cp, rp, sp, etap, omp, binfp, cinfp)
+    return (x[:B, :n], obj[:B, 0], status[:B, 0].astype(jnp.int8),
+            iters[:B, 0], y[:B, :m], z[:B, :n])

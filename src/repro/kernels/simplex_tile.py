@@ -279,9 +279,13 @@ def _init_tile_weights(T, row_ids, *, m: int, rule: str):
     return jnp.ones(T.shape[:1] + (T.shape[2],), T.dtype)
 
 
-def _extract_tile(T2, basis, status, *, m: int, n: int, n_pad: int):
+def _extract_tile(T2, basis, status, *, m: int, n: int, n_pad: int,
+                  m_pad: int):
     """In-kernel solution extraction from the compacted tile: only
-    (x, obj) leave VMEM — the paper's "D2H-res" transfer shape."""
+    (x, obj) and the dual certificate leave VMEM — the paper's "D2H-res"
+    transfer shape.  The phase-2 objective row holds the certificate for
+    free (see core.simplex.extract_duals): slack entries are -y, structural
+    entries are the reduced costs z; both are NaN off-OPTIMAL."""
     tile_b, R2, C2 = T2.shape
     rhs = T2[:, :, C2 - 1]                                     # (tile_b, R2)
     b2 = basis[:, :R2]
@@ -289,12 +293,20 @@ def _extract_tile(T2, basis, status, *, m: int, n: int, n_pad: int):
     hit = (b2[:, :, None] == xcols) & (b2[:, :, None] < n)
     x = jnp.sum(jnp.where(hit, rhs[:, :, None], 0.0), axis=1)
     obj = -T2[:, m, C2 - 1][:, None]
-    obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
-    return x, obj
+    opt = status == OPTIMAL
+    obj = jnp.where(opt, obj, jnp.nan)
+    y = jnp.concatenate(
+        [-T2[:, m, n:n + m], jnp.zeros((tile_b, m_pad - m), T2.dtype)],
+        axis=1)
+    z = jnp.concatenate(
+        [T2[:, m, :n], jnp.zeros((tile_b, n_pad - n), T2.dtype)], axis=1)
+    y = jnp.where(opt, y, jnp.nan)
+    z = jnp.where(opt, z, jnp.nan)
+    return x, obj, y, z
 
 
 def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref,
-                    x_ref, obj_ref, status_ref, iters_ref,
+                    x_ref, obj_ref, status_ref, iters_ref, y_ref, z_ref,
                     *, m: int, n: int, tol: float, max_iters: int,
                     rule: str = "dantzig"):
     """Whole-solve kernel: loop 1 (combined step, full tile) -> in-register
@@ -350,11 +362,14 @@ def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref,
         cond2, body2, (T2, basis, w2, phase, status, iters, it1))
     status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
 
-    x, obj = _extract_tile(T2, basis, status, m=m, n=n, n_pad=x_ref.shape[1])
+    x, obj, y, z = _extract_tile(T2, basis, status, m=m, n=n,
+                                 n_pad=x_ref.shape[1], m_pad=y_ref.shape[1])
     x_ref[...] = x
     obj_ref[...] = obj
     status_ref[...] = status
     iters_ref[...] = iters
+    y_ref[...] = y
+    z_ref[...] = z
 
 
 def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, phase_ref, thr_ref,
@@ -533,10 +548,11 @@ def simplex_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
     B_pad = T.shape[0]
     grid = (B_pad // tile_b,)
     n_pad = _round_up(n, 128)
+    m_pad = _round_up(m, 8)
 
     kernel = functools.partial(_simplex_kernel, m=m, n=n, tol=tol,
                                max_iters=max_iters, rule=pricing)
-    x, obj, status, iters = pl.pallas_call(
+    x, obj, status, iters, y, z = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -550,14 +566,18 @@ def simplex_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
             pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
             pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
             pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, m_pad), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, n_pad), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B_pad, n_pad), A.dtype),
             jax.ShapeDtypeStruct((B_pad, 1), A.dtype),
             jax.ShapeDtypeStruct((B_pad, 1), jnp.int32),
             jax.ShapeDtypeStruct((B_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B_pad, m_pad), A.dtype),
+            jax.ShapeDtypeStruct((B_pad, n_pad), A.dtype),
         ],
         interpret=interpret,
     )(T, basis, phase, thr)
     return (x[:B, :n], obj[:B, 0], status[:B, 0].astype(jnp.int8),
-            iters[:B, 0])
+            iters[:B, 0], y[:B, :m], z[:B, :n])
