@@ -39,6 +39,13 @@ ill-scaled SC50B-class staircase from failing to solving).  These rows are
 identical in --quick and full runs so scripts/bench_gate.py can gate status
 regressions on real instances.
 
+A ``sparse_workloads`` section A/Bs the shared-pattern sparse PDHG engine
+(core/sparse.py) against the dense one on the staircase fixtures: the same
+canonical LPs, one COO pattern across the batch, statuses/objectives
+required to agree (same algorithm — only the matvecs change), and the
+per-iteration element traffic recorded as the dense/sparse ratio
+(~1/density) that scripts/bench_gate.py holds a floor under.
+
 Results land in ``BENCH_pivot_work.json`` next to this file so future PRs
 have a perf trajectory to beat; a ``quick_workloads`` section re-runs the
 --quick configuration (B=128) so scripts/bench_gate.py can diff a CI smoke
@@ -76,6 +83,7 @@ except ImportError:  # pragma: no cover
 SIZES = ((5, 5), (10, 10), (28, 28), (50, 50), (100, 100))
 QUICK_SIZES = ((5, 5), (28, 28))
 GENERAL_FIXTURES = ("afiro", "sc50b_like")
+SPARSE_FIXTURES = ("sc50b_like", "sc205_like")   # staircases: shared pattern
 GENERAL_B = 32      # same in --quick and full runs: the gate matches on it
 
 
@@ -208,6 +216,51 @@ def measure_general(fixture: str, B: int = GENERAL_B, *, iters: int = 1,
                             or scaled.iterations[0] != raw.iterations[0]),
     }
     return row
+
+
+def measure_sparse(fixture: str, B: int = GENERAL_B, *, iters: int = 1,
+                   seed: int = 0) -> dict:
+    """Shared-pattern sparse PDHG vs the dense engine on one staircase
+    fixture batch: identical canonical LPs (one COO pattern shared across
+    the batch, per-LP values), so statuses and objectives must agree up to
+    float-sum association — the measurable difference is per-iteration
+    element traffic, which the sparse path pays in nnz instead of m*n."""
+    from repro.analysis.lp_perf import sparse_pdhg_iteration_flops
+    from repro.core import (SparseLPBatch, canonicalize,
+                            solve_batched_pdhg_sparse, sparse_pdhg_elements)
+    from repro.io.mps import fixture_path, perturbed_batch, read_mps
+
+    g = read_mps(fixture_path(fixture))
+    gb = perturbed_batch(g, B, np.random.default_rng(seed))
+    batch, _ = canonicalize(gb)
+    sp = SparseLPBatch.from_dense(batch)
+    m, n, nnz = sp.m, sp.n, sp.nnz
+    dense = solve_batched_pdhg(batch)
+    t_dense = timeit(lambda: solve_batched_pdhg(batch), warmup=0, iters=iters)
+    sparse = solve_batched_pdhg_sparse(sp)
+    t_sparse = timeit(lambda: solve_batched_pdhg_sparse(sp), warmup=0,
+                      iters=iters)
+    ok = (np.asarray(dense.status) == OPTIMAL) \
+        & (np.asarray(sparse.status) == OPTIMAL)
+    rel = (np.abs(sparse.objective[ok] - dense.objective[ok])
+           / np.maximum(np.abs(dense.objective[ok]), 1e-12)).max() \
+        if ok.any() else 0.0
+    return {
+        "fixture": fixture, "B": B, "m": m, "n": n, "nnz": nnz,
+        "density": nnz / max(1, m * n),
+        "elements_per_iter_dense": pdhg_elements(m, n),
+        "elements_per_iter_sparse": sparse_pdhg_elements(nnz, m, n),
+        "element_traffic_ratio":
+            pdhg_elements(m, n) / sparse_pdhg_elements(nnz, m, n),
+        "flops_per_iter_sparse": sparse_pdhg_iteration_flops(nnz, m, n),
+        "iters_mean_dense": float(dense.iterations.astype(np.int64).mean()),
+        "iters_mean_sparse": float(sparse.iterations.astype(np.int64).mean()),
+        "status_match_dense_frac": float(
+            (np.asarray(sparse.status) == np.asarray(dense.status)).mean()),
+        "rel_obj_err_vs_dense": float(rel),
+        "wall_s_dense": t_dense,
+        "wall_s_sparse": t_sparse,
+    }
 
 
 def measure_pdhg(batch: LPBatch, sched, iters: int) -> dict:
@@ -430,6 +483,21 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
                   f"err={v['rel_obj_err']:.1e}"
                   for k, v in r["backends"].items())
               + f"  scaling_changes_f32={r['scaling']['changes_f32']}")
+    sparse_rows = []
+    if backends in ("all", "pdhg"):
+        print("-- sparse_workloads (shared-pattern PDHG, bench_gate "
+              "baseline) --")
+        for fixture in SPARSE_FIXTURES:
+            r = measure_sparse(fixture)
+            sparse_rows.append(r)
+            print(f"sparse {r['fixture']} B={r['B']}: canonical "
+                  f"{r['m']}x{r['n']} nnz={r['nnz']} "
+                  f"(density {r['density']:.3f}) "
+                  f"traffic x{r['element_traffic_ratio']:.1f} "
+                  f"status_match={r['status_match_dense_frac']:.3f} "
+                  f"rel_obj={r['rel_obj_err_vs_dense']:.1e} "
+                  f"wall dense={r['wall_s_dense']:.3f}s "
+                  f"sparse={r['wall_s_sparse']:.3f}s")
     result = {
         "benchmark": "pivot_work",
         "quick": quick,
@@ -438,6 +506,7 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
         "workloads": rows,
         "quick_workloads": quick_rows,
         "general_workloads": general_rows,
+        "sparse_workloads": sparse_rows,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

@@ -29,6 +29,15 @@ older baselines).  On every matching workload the gate fails when:
   ``--rel-drop`` relative (the iteration-count regression bound: restarts
   or step sizes silently degrading shows up here first), or the
   compaction-scheduled pdhg solve stops agreeing with the monolithic one;
+* a ``sparse_workloads`` row (shared-pattern sparse PDHG vs the dense
+  engine on the staircase fixtures, core/sparse.py) regresses:
+  sparse-vs-dense status agreement drops below baseline - 0.02, the
+  relative objective gap vs the dense engine exceeds 2e-3 (same algorithm,
+  different float-sum association), the per-iteration element-traffic
+  ratio (dense/sparse, ~1/density — the tentpole's "stop paying for
+  structural zeros" number) drops more than ``--rel-drop`` relative, or
+  the sparse iteration count grows more than ``--rel-drop`` relative to
+  the dense engine's on the same workload;
 * a ``general_workloads`` row (fixture-backed real instances through the
   MPS/canonicalization pipeline) regresses: per-backend status agreement
   with the float64 oracle drops below baseline - 0.02, relative objective
@@ -192,6 +201,42 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
                 f"{tag}: presolve-scaling f32 effect disappeared (baseline "
                 "recorded a scaled-vs-unscaled difference; the smoke run "
                 "shows none — the equilibration pass likely stopped running)")
+
+    # ---- shared-pattern sparse rows (dense-vs-sparse PDHG invariants) -----
+    if check_pdhg:
+        cur_sp = {(w["fixture"], w["B"]): w
+                  for w in current.get("sparse_workloads", [])}
+        for bs in baseline.get("sparse_workloads", []):
+            key = (bs["fixture"], bs["B"])
+            tag = f"sparse {bs['fixture']} B={bs['B']}"
+            cs = cur_sp.get(key)
+            if cs is None:
+                failures.append(f"{tag}: row missing from the smoke run")
+                continue
+            floor = bs["status_match_dense_frac"] - 0.02
+            if cs["status_match_dense_frac"] < floor:
+                failures.append(
+                    f"{tag}: sparse-vs-dense status agreement "
+                    f"{cs['status_match_dense_frac']:.3f} < {floor:.3f} "
+                    f"(baseline {bs['status_match_dense_frac']:.3f})")
+            if cs["rel_obj_err_vs_dense"] > 2e-3:
+                failures.append(
+                    f"{tag}: sparse rel_obj_err_vs_dense "
+                    f"{cs['rel_obj_err_vs_dense']:.2e} > 2e-3")
+            ratio_floor = bs["element_traffic_ratio"] * (1.0 - rel_drop)
+            if cs["element_traffic_ratio"] < ratio_floor:
+                failures.append(
+                    f"{tag}: element_traffic_ratio "
+                    f"{cs['element_traffic_ratio']:.2f} < {ratio_floor:.2f} "
+                    f"(baseline {bs['element_traffic_ratio']:.2f} "
+                    f"- {rel_drop:.0%} — sparse traffic stopped scaling "
+                    "with nnz)")
+            it_ceiling = max(cs["iters_mean_dense"], 1.0) * (1.0 + rel_drop)
+            if cs["iters_mean_sparse"] > it_ceiling:
+                failures.append(
+                    f"{tag}: sparse iters_mean {cs['iters_mean_sparse']:.0f}"
+                    f" > {it_ceiling:.0f} (dense engine on the same "
+                    "workload — the sparse matvecs changed the trajectory)")
     return failures
 
 

@@ -8,7 +8,9 @@
 #   scripts/check.sh --backend all         # suite + smoke once per backend
 #
 # The smoke also carries the general-form rows (vendored MPS fixtures through
-# canonicalize -> solve -> recover vs the float64 oracle) and the fast path
+# canonicalize -> solve -> recover vs the float64 oracle), the shared-pattern
+# sparse rows on the pdhg/all legs (sparse-vs-dense PDHG agreement on the
+# staircase fixtures + the nnz-scaled traffic ratio), and the fast path
 # an mps-roundtrip check (parse fixtures, write, re-parse, assert equal).
 #
 # Per backend the smoke run writes /tmp/pivot_work_smoke_<backend>.json
@@ -119,6 +121,20 @@ for w in d["workloads"]:
         assert pp["scheduled_status_match_frac"] >= 0.95, \
             f"pdhg compaction round-trip " \
             f"{pp['scheduled_status_match_frac']:.2f} at {w['m']}x{w['n']}"
+# sparse smoke (pdhg/all legs): the shared-pattern sparse engine must
+# agree with the dense engine on the staircase fixtures — same algorithm,
+# the matvecs just pay nnz instead of m*n — and the recorded traffic
+# ratio must show it actually did (dense/sparse elements ~ 1/density)
+for sw in d.get("sparse_workloads", []):
+    assert sw["status_match_dense_frac"] >= 0.95, \
+        f"sparse {sw['fixture']}: sparse-vs-dense status agreement " \
+        f"{sw['status_match_dense_frac']:.2f} < 0.95"
+    assert sw["rel_obj_err_vs_dense"] < 2e-3, \
+        f"sparse {sw['fixture']}: rel_obj_err_vs_dense " \
+        f"{sw['rel_obj_err_vs_dense']:.2e}"
+    assert sw["element_traffic_ratio"] > 2.0, \
+        f"sparse {sw['fixture']}: element traffic ratio " \
+        f"{sw['element_traffic_ratio']:.2f} — not scaling with nnz"
 # general-form smoke: real fixtures through the MPS/canonicalization
 # pipeline must track the float64 oracle after recovery
 for gw in d.get("general_workloads", []):
@@ -152,6 +168,11 @@ if d.get("general_workloads"):
           ", ".join(f"{gw['fixture']} ({gw['m_canonical']}x"
                     f"{gw['n_canonical']} canonical)"
                     for gw in d["general_workloads"]))
+if d.get("sparse_workloads"):
+    print("sparse smoke OK:",
+          ", ".join(f"{sw['fixture']} (nnz={sw['nnz']}, traffic "
+                    f"x{sw['element_traffic_ratio']:.1f})"
+                    for sw in d["sparse_workloads"]))
 EOF
 
   echo "== bench-regression gate (backend=$backend) =="

@@ -41,15 +41,30 @@ kernel, producing the numbers cited in EXPERIMENTS.md §Perf:
                            it wins everywhere because the (m, n+2m) data
                            block is immutable.
 9. canonical shapes      — general-form problems (core/forms.py) are solved
-                           at their *canonical* shape: equalities and
-                           finite upper bounds grow m, free variables grow
-                           n, presolve shrinks both.  `canonical_work`
-                           re-evaluates every per-pivot model at the
-                           canonical (m, n) — the revised-vs-tableau
-                           crossover must be judged there, not at the
-                           original shape (a square-looking Netlib
-                           instance with many equalities canonicalizes
-                           tall, which is tableau-hostile).
+                           at their *canonical* shape: equalities grow m,
+                           free variables grow n, presolve shrinks both.
+                           `canonical_work` re-evaluates every per-pivot
+                           model at the canonical (m, n) — the
+                           revised-vs-tableau crossover must be judged
+                           there, not at the original shape (a
+                           square-looking Netlib instance with many
+                           equalities canonicalizes tall, which is
+                           tableau-hostile).  Finite upper bounds are
+                           handled *natively* by the bounded ratio test
+                           (no rows); `canonical_work` also reports the
+                           counterfactual ``bound_rows=True`` shape and
+                           the element/flops ratio the row encoding would
+                           have cost — the tentpole's "stop paying for
+                           upper-bound rows" number.
+10. sparsity             — shared-pattern sparse batches (core/sparse.py)
+                           replace the PDHG matvecs' 2mn flops with 2nnz:
+                           `sparse_matvec_flops` / `sparse_pdhg_iteration_
+                           flops` are the density-aware twins of the dense
+                           models, and `sparse_pdhg_speedup` is the
+                           dense/sparse flops ratio (~1/density for
+                           matvec-dominated shapes) that
+                           benchmarks/pivot_work.py cross-checks against
+                           measured element counts.
 
   PYTHONPATH=src python -m repro.analysis.lp_perf
 """
@@ -217,6 +232,31 @@ def pdhg_iteration_flops(m: int, n: int) -> float:
     return 4.0 * m * n + 6.0 * (m + n) + 12.0 * m * n / CHECK_EVERY
 
 
+def sparse_matvec_flops(nnz: int) -> float:
+    """Honest flops of one shared-pattern sparse matvec (core/sparse.py):
+    one multiply + one scatter-add per stored nonzero.  The dense
+    counterpart is 2mn — the ratio is exactly the density."""
+    return 2.0 * nnz
+
+
+def sparse_pdhg_iteration_flops(nnz: int, m: int, n: int) -> float:
+    """Density-aware twin of `pdhg_iteration_flops`: two sparse matvecs per
+    iteration plus the O(m + n) prox/extrapolation updates, with the six
+    check-round matvecs amortized in — every 2mn replaced by 2nnz, the
+    vector work unchanged (it never depended on the pattern)."""
+    from repro.core.pdhg import CHECK_EVERY
+
+    return 2.0 * sparse_matvec_flops(nnz) + 6.0 * (m + n) \
+        + 6.0 * sparse_matvec_flops(nnz) / CHECK_EVERY
+
+
+def sparse_pdhg_speedup(m: int, n: int, nnz: int) -> float:
+    """Dense/sparse flops ratio for one PDHG iteration at this pattern:
+    -> ~1/density while the matvecs dominate, degrading toward 1 as the
+    O(m + n) vector work takes over on very sparse or very small shapes."""
+    return pdhg_iteration_flops(m, n) / sparse_pdhg_iteration_flops(nnz, m, n)
+
+
 def pdhg_crossover_pivots(m: int, n: int, pdhg_iters: float,
                           *, partial: bool = True) -> dict:
     """The headline first-order-vs-simplex comparison: how many *pivots*
@@ -280,14 +320,23 @@ def canonical_work(g, *, presolve: bool = True) -> dict:
     from repro.core.forms import canonical_shape
 
     mc, nc = canonical_shape(g, presolve=presolve)
+    mr, nr = canonical_shape(g, presolve=presolve, bound_rows=True)
     tab_flops = tableau_pivot_flops(mc, nc, compacted=True)
     rev_flops = revised_pivot_flops(mc, nc, partial=True)
+    el_native = tableau_elements(mc, nc, compacted=True)
+    el_rows = tableau_elements(mr, nr, compacted=True)
     return {
         "name": g.name, "m": g.m, "n": g.n,
         "m_canonical": mc, "n_canonical": nc,
         "row_growth": mc / max(1, g.m), "col_growth": nc / max(1, g.n),
-        "tableau_elements_canonical": tableau_elements(mc, nc,
-                                                       compacted=True),
+        # counterfactual: finite ubs encoded as x_j <= u_j rows instead of
+        # the bounded ratio test — what every per-pivot model would pay
+        "m_bound_rows": mr, "n_bound_rows": nr,
+        "bound_rows_added": mr - mc,
+        "bound_row_element_ratio": el_rows / el_native,
+        "bound_row_flops_ratio":
+            tableau_pivot_flops(mr, nr, compacted=True) / tab_flops,
+        "tableau_elements_canonical": el_native,
         "revised_elements_canonical": revised_elements(mc, nc, partial=True),
         "tableau_flops_canonical": tab_flops,
         "revised_flops_canonical": rev_flops,
@@ -427,14 +476,30 @@ def main():
               f"{revised_elements(m, n, partial=True):.3e},"
               f"{revised_crossover(m)}")
     print()
-    print("fixture,m,n,m_canonical,n_canonical,tableau_flops,revised_flops,"
-          "revised_wins  # general-form instances at canonical shape")
+    print("fixture,m,n,m_canonical,n_canonical,m_bound_rows,"
+          "bound_row_element_ratio,tableau_flops,revised_flops,"
+          "revised_wins  # general-form instances at canonical shape; "
+          "bound_row_* = cost of encoding ubs as rows instead of natively")
     from repro.io.mps import FIXTURE_NAMES, fixture_path, read_mps
     for name in FIXTURE_NAMES:
-        w = canonical_work(read_mps(fixture_path(name)))
+        g = read_mps(fixture_path(name))
+        w = canonical_work(g)
         print(f"{w['name']},{w['m']},{w['n']},{w['m_canonical']},"
-              f"{w['n_canonical']},{w['tableau_flops_canonical']:.3e},"
+              f"{w['n_canonical']},{w['m_bound_rows']},"
+              f"{w['bound_row_element_ratio']:.2f},"
+              f"{w['tableau_flops_canonical']:.3e},"
               f"{w['revised_flops_canonical']:.3e},{w['revised_wins_flops']}")
+    print()
+    print("sparse_pdhg,fixture,m,n,nnz,density,dense_iter_flops,"
+          "sparse_iter_flops,speedup  # shared-pattern matvecs vs dense")
+    for name in FIXTURE_NAMES:
+        g = read_mps(fixture_path(name))
+        nnz = int((np.asarray(g.A[0]) != 0).sum())
+        print(f"sparse_pdhg,{name},{g.m},{g.n},{nnz},"
+              f"{nnz / max(1, g.m * g.n):.4f},"
+              f"{pdhg_iteration_flops(g.m, g.n):.3e},"
+              f"{sparse_pdhg_iteration_flops(nnz, g.m, g.n):.3e},"
+              f"{sparse_pdhg_speedup(g.m, g.n, nnz):.2f}")
     print()
     print("pdhg_crossover,m,n,iters,flops_per_iter,pivot_budget_vs_tableau,"
           "expected_pivots,pdhg_wins  # first-order vs simplex, honest flops"

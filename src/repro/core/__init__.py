@@ -16,6 +16,11 @@ Public API:
                                            solve_* is the same engine)
     solve_batched_compacted              — active-set compaction scheduler
     solve_batched                        — HBM-aware chunked driver (Alg. 1)
+    SparseLPBatch, solve_batched_pdhg_sparse
+                                         — shared-pattern sparse batches:
+                                           one COO pattern across the batch,
+                                           (B, nnz) values; PDHG matvecs
+                                           scale with nnz, not m*n
     solve_hyperbox                       — box-LP closed form (Sec. 5.6)
     solve_pjit / solve_shard_map         — multi-chip batch-parallel solvers
     expert_capacity_lp                   — MoE integration (LP router)
@@ -49,6 +54,10 @@ from .revised import (  # noqa: F401
 from .pdhg import (  # noqa: F401
     default_pdhg_max_iters, pdhg_elements, solve_batched_pdhg,
     solve_batched_pdhg_compacted,
+)
+from .sparse import (  # noqa: F401
+    SparseLPBatch, solve_batched_pdhg_sparse, sparse_matvecs,
+    sparse_pdhg_elements,
 )
 from .hyperbox import solve_hyperbox, solve_hyperbox_ref, hyperbox_as_general_lp  # noqa: F401
 from .reference import (  # noqa: F401

@@ -153,7 +153,9 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
         perm = np.argsort(difficulty_proxy(batch), kind="stable")
         batch = LPBatch(A=np.asarray(batch.A)[perm],
                         b=np.asarray(batch.b)[perm],
-                        c=np.asarray(batch.c)[perm])
+                        c=np.asarray(batch.c)[perm],
+                        ub=None if batch.ub is None
+                        else np.asarray(batch.ub)[perm])
     if chunk_size is None:
         chunk_size = max_chunk_size(batch, device_bytes, n_devices)
     if chunk_size >= B:
@@ -164,7 +166,8 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     pending = []
     for i in range(n_chunks):
         s, e = i * chunk_size, min((i + 1) * chunk_size, B)
-        sub = LPBatch(A=batch.A[s:e], b=batch.b[s:e], c=batch.c[s:e])
+        sub = LPBatch(A=batch.A[s:e], b=batch.b[s:e], c=batch.c[s:e],
+                      ub=None if batch.ub is None else batch.ub[s:e])
         # async dispatch: this returns before the device finishes; the next
         # chunk's H2D overlaps this chunk's compute (CUDA-streams analogue)
         pending.append(solver(sub, **solver_kwargs))

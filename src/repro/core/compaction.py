@@ -70,6 +70,8 @@ class CompactionState(NamedTuple):
     iters: jax.Array
     w: jax.Array       # (B, C) pricing weights (core/pricing.py); gathered
                        # across segment boundaries like every other leaf
+    flip: jax.Array    # (B, n) bool complement flags (bounded variables)
+    ub: jax.Array      # (B, n) upper bounds (+inf = unbounded)
     thr: jax.Array     # per-LP phase-1 feasibility threshold
 
 
@@ -168,10 +170,11 @@ def segment_phase1(state: CompactionState, steps, *, m: int, n: int,
     def body(carry):
         s, it = carry
         ns = simplex_step(
-            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w, it),
+            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w,
+                         s.flip, s.ub, it),
             n=n, m=m, tol=tol, feas_thr=s.thr, rule=rule)
         return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
-                               ns.w, s.thr), it + 1
+                               ns.w, ns.flip, ns.ub, s.thr), it + 1
 
     state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, it
@@ -188,10 +191,11 @@ def segment_phase2(state: CompactionState, steps, *, m: int, n: int,
     def body(carry):
         s, it = carry
         ns = phase2_step(
-            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w, it),
+            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w,
+                         s.flip, s.ub, it),
             n=n, m=m, tol=tol, rule=rule)
         return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
-                               ns.w, s.thr), it + 1
+                               ns.w, ns.flip, ns.ub, s.thr), it + 1
 
     state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, it
@@ -214,14 +218,14 @@ def _compact_weights_jit(w, *, m, n):
 
 
 @functools.partial(jax.jit, static_argnames=("n", "compacted"))
-def _extract_jit(T, basis, status, iters, *, n, compacted):
+def _extract_jit(T, basis, status, iters, flip, ub, *, n, compacted):
     if compacted:
-        x, obj = extract_solution_compacted(T, basis, n)
+        x, obj = extract_solution_compacted(T, basis, n, flip=flip, ub=ub)
         m = T.shape[1] - 1
     else:
-        x, obj = extract_solution_jax(T, basis, n)
+        x, obj = extract_solution_jax(T, basis, n, flip=flip, ub=ub)
         m = T.shape[1] - 2
-    y, z = extract_duals(T, m=m, n=n)
+    y, z = extract_duals(T, m=m, n=n, flip=flip)
     status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
     opt = (status == OPTIMAL)[:, None]
@@ -246,9 +250,13 @@ class JaxBackend:
         self.dtype = dtype
         self.rule = canonicalize_rule(pricing)
 
-    def init(self, A, b, c) -> CompactionState:
+    def init(self, A, b, c, ub=None) -> CompactionState:
         T, basis, phase = build_tableau_jax(A, b, c)
         B = T.shape[0]
+        if ub is None:
+            ub = jnp.full((B, self.n), jnp.inf, dtype=T.dtype)
+        else:
+            ub = jnp.asarray(ub, dtype=T.dtype)
         thr = self.feas_tol * jnp.maximum(1.0, T[:, self.m + 1, -1])
         # dantzig never reads weights: carry a (B, 1) stub so segments and
         # bucket gathers don't move a dead (B, C) array
@@ -257,7 +265,8 @@ class JaxBackend:
         return CompactionState(
             T=T, basis=basis, phase=phase,
             status=jnp.full((B,), _RUNNING, jnp.int32),
-            iters=jnp.zeros((B,), jnp.int32), w=w, thr=thr)
+            iters=jnp.zeros((B,), jnp.int32), w=w,
+            flip=jnp.zeros((B, self.n), dtype=bool), ub=ub, thr=thr)
 
     def run_phase1(self, state, steps):
         state, it = _segment_phase1_jit(state, jnp.int32(steps), m=self.m,
@@ -304,7 +313,8 @@ class JaxBackend:
     def extract(self, state: CompactionState, stage: str):
         return tuple(np.asarray(o) for o in _extract_jit(
             state.T, state.basis, state.status.reshape(-1),
-            state.iters.reshape(-1), n=self.n, compacted=(stage == "p2")))
+            state.iters.reshape(-1), state.flip, state.ub,
+            n=self.n, compacted=(stage == "p2")))
 
     def elements_per_step(self, stage: str) -> int:
         return tableau_elements(self.m, self.n, compacted=(stage == "p2"))
@@ -465,7 +475,8 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
     backend = JaxBackend(m, n, tol, feas_tol, dtype, pricing=pricing)
     state = backend.init(jnp.asarray(batch.A, dtype),
                          jnp.asarray(batch.b, dtype),
-                         jnp.asarray(batch.c, dtype))
+                         jnp.asarray(batch.c, dtype),
+                         ub=jnp.asarray(batch.upper_bounds(), dtype))
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
     cfg = CompactionConfig(

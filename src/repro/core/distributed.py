@@ -66,10 +66,13 @@ def _pad_batch(batch: LPBatch, multiple: int):
     A = np.concatenate([batch.A, np.tile(np.eye(batch.m, batch.n)[None], (pad, 1, 1))])
     b = np.concatenate([batch.b, np.ones((pad, batch.m))])
     c = np.concatenate([batch.c, np.zeros((pad, batch.n))])
-    return LPBatch(A=A, b=b, c=c), B
+    ub = None
+    if batch.ub is not None:
+        ub = np.concatenate([batch.ub, np.full((pad, batch.n), np.inf)])
+    return LPBatch(A=A, b=b, c=c, ub=ub), B
 
 
-def _solve_local(A, b, c, *, m, n, max_iters, tol, feas_tol,
+def _solve_local(A, b, c, ub, *, m, n, max_iters, tol, feas_tol,
                  pricing="dantzig", backend="tableau",
                  refactor_period=None):
     """The shared solve body — tableau (phase-compacted two-phase), revised
@@ -79,16 +82,16 @@ def _solve_local(A, b, c, *, m, n, max_iters, tol, feas_tol,
     sharding specs are backend-independent."""
     if backend == "revised":
         return solve_revised(
-            A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+            A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
             feas_tol=feas_tol,
             refactor_period=int(refactor_period or auto_refactor_period(m, n)),
             pricing=pricing)
     if backend == "pdhg":
         from .pdhg import _check_pdhg_pricing
         _check_pdhg_pricing(pricing)   # same contract as every pdhg entry
-        return solve_pdhg(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+        return solve_pdhg(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                           feas_tol=feas_tol)
-    return solve_two_phase(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+    return solve_two_phase(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                            feas_tol=feas_tol, pricing=pricing)
 
 
@@ -117,7 +120,8 @@ def _prep(batch: LPBatch, mesh: Mesh, dtype):
     A = jnp.asarray(padded.A, dtype)
     b = jnp.asarray(padded.b, dtype)
     c = jnp.asarray(padded.c, dtype)
-    return A, b, c, axes, orig, padded
+    ub = jnp.asarray(padded.upper_bounds(), dtype)
+    return A, b, c, ub, axes, orig, padded
 
 
 def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
@@ -139,21 +143,22 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     max_iters, tol = _backend_defaults(backend, max_iters, tol, m, n, dtype)
-    A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
+    A, b, c, ub, axes, orig, _ = _prep(batch, mesh, dtype)
     spec = P(axes)  # batch dim sharded over every axis
     shard = NamedSharding(mesh, spec)
     fn = jax.jit(
         functools.partial(_solve_local, m=m, n=n, max_iters=max_iters,
                           tol=tol, feas_tol=feas_tol, pricing=pricing,
                           backend=backend, refactor_period=refactor_period),
-        in_shardings=(shard, shard, shard),
+        in_shardings=(shard, shard, shard, shard),
         out_shardings=(shard,) * 6,
     )
     if lower_only:
         return fn.lower(jax.ShapeDtypeStruct(A.shape, A.dtype),
                         jax.ShapeDtypeStruct(b.shape, b.dtype),
-                        jax.ShapeDtypeStruct(c.shape, c.dtype))
-    x, obj, status, iters, y, z = fn(A, b, c)
+                        jax.ShapeDtypeStruct(c.shape, c.dtype),
+                        jax.ShapeDtypeStruct(ub.shape, ub.dtype))
+    x, obj, status, iters, y, z = fn(A, b, c, ub)
     res = LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
                    status=np.asarray(status)[:orig],
                    iterations=np.asarray(iters)[:orig],
@@ -173,9 +178,8 @@ class _ShardMapBackend(JaxBackend):
         axes = tuple(mesh.axis_names)
         self.pad_multiple = int(np.prod(mesh.devices.shape))
         spec = P(axes)
-        state_specs = CompactionState(T=spec, basis=spec, phase=spec,
-                                      status=spec, iters=spec, w=spec,
-                                      thr=spec)
+        state_specs = CompactionState(
+            **{f: spec for f in CompactionState._fields})
         rule = self.rule
 
         def p1(state, steps):
@@ -347,7 +351,8 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
         padded, orig_B = _pad_batch(batch, runner.pad_multiple)
         state = runner.init(jnp.asarray(padded.A, dtype),
                             jnp.asarray(padded.b, dtype),
-                            jnp.asarray(padded.c, dtype))
+                            jnp.asarray(padded.c, dtype),
+                            ub=jnp.asarray(padded.upper_bounds(), dtype))
         B_pad = padded.batch
         orig = np.concatenate(
             [np.arange(orig_B), np.full(B_pad - orig_B, -1)]).astype(np.int64)
@@ -362,7 +367,7 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                                                max_iters=budget, config=cfg,
                                                stats_out=stats_out))
 
-    A, b, c, axes, orig, _ = _prep(batch, mesh, dtype)
+    A, b, c, ub, axes, orig, _ = _prep(batch, mesh, dtype)
     spec = P(axes)
 
     local = functools.partial(_solve_local, m=m, n=n, max_iters=max_iters,
@@ -370,15 +375,16 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                               backend=backend, refactor_period=refactor_period)
     fn = jax.jit(shard_map(
         local, mesh=mesh,
-        in_specs=(spec, spec, spec),
+        in_specs=(spec, spec, spec, spec),
         out_specs=(spec,) * 6,
         check_rep=False,
     ))
     if lower_only:
         return fn.lower(jax.ShapeDtypeStruct(A.shape, A.dtype),
                         jax.ShapeDtypeStruct(b.shape, b.dtype),
-                        jax.ShapeDtypeStruct(c.shape, c.dtype))
-    x, obj, status, iters, y, z = fn(A, b, c)
+                        jax.ShapeDtypeStruct(c.shape, c.dtype),
+                        jax.ShapeDtypeStruct(ub.shape, ub.dtype))
+    x, obj, status, iters, y, z = fn(A, b, c, ub)
     res = LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
                    status=np.asarray(status)[:orig],
                    iterations=np.asarray(iters)[:orig],

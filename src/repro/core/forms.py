@@ -15,9 +15,14 @@ core/lp.py).  This module is the bridge:
    removal (with per-LP infeasibility detection folded into ``Recovery``);
 2. **bound handling**: finite lower bounds are shifted out
    (``y = x - lb``), free variables (``lb = -inf``) are split into
-   ``y+ - y-`` column pairs, finite upper bounds become extra rows;
+   ``y+ - y-`` column pairs, finite upper bounds become the canonical
+   batch's *native* ``LPBatch.ub`` vector (every engine runs the
+   bounded-variable ratio test against it) — except bounds on split free
+   columns, which still need a row (a bound on ``y+ - y-`` is not a
+   column bound), and everything when ``bound_rows=True`` (the legacy
+   one-dense-row-per-bound encoding, kept as an A/B reference);
 3. **row senses**: ``>=`` rows are negated, ``=`` and ranged rows become a
-   ``<=`` pair — equalities and upper bounds *grow m*, which is why the
+   ``<=`` pair — equalities *grow m*, which is why the
    revised-vs-tableau work models (analysis/lp_perf.py) must be evaluated
    on canonical shapes;
 4. **scaling** (on by default): geometric-mean row/column equilibration of
@@ -290,7 +295,9 @@ class Recovery:
     n_canonical: int
     # dual bookkeeping: which original rows survived presolve, and which
     # canonical row blocks they produced (canonical rows are ordered
-    # [hi_rows | lo_rows | ub_cols] by construction)
+    # [hi_rows | lo_rows | row-encoded ub rows] by construction; native
+    # ``LPBatch.ub`` bounds emit no rows, their multipliers surface as
+    # reduced costs, which ``recover_duals`` recomputes anyway)
     rows: np.ndarray = None      # (mk,) original row indices that survived
     hi_rows: np.ndarray = None   # indices into ``rows``: A x <= hi rows
     lo_rows: np.ndarray = None   # indices into ``rows``: -A x <= -lo rows
@@ -365,12 +372,19 @@ class Recovery:
 
 def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
                  scale: Optional[bool] = None,
-                 feas_tol: float = 1e-9) -> Tuple[LPBatch, Recovery]:
+                 feas_tol: float = 1e-9,
+                 bound_rows: bool = False) -> Tuple[LPBatch, Recovery]:
     """General form -> the paper's standard form (see module docstring).
 
     ``scale=None`` follows ``presolve`` (equilibration is part of the
     default presolve pass); pass ``scale=False`` to canonicalize without
     touching the numbers — useful for A/B-ing f32 behavior.
+
+    ``bound_rows=True`` restores the legacy encoding of finite upper
+    bounds as one dense ``x_j <= ub_j`` row each; the default routes them
+    into the canonical batch's native ``LPBatch.ub`` vector (zero extra
+    rows).  Bounds on split free columns always stay rows — a bound on
+    ``y+ - y-`` is not a column bound.
     """
     if scale is None:
         scale = presolve
@@ -442,7 +456,14 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
         raise ValueError(
             "upper-bound finiteness must be batch-uniform per column: the "
             "canonical batch needs one static shape")
-    ub_cols = np.flatnonzero(ub_fin.all(axis=0)) if B else np.array([], int)
+    bounded_cols = np.flatnonzero(ub_fin.all(axis=0)) if B else np.array([], int)
+    # native bounds by default; row encoding for free (split) columns and,
+    # under bound_rows=True, for everything
+    if bound_rows:
+        ub_cols = bounded_cols
+    else:
+        ub_cols = bounded_cols[free[bounded_cols]]
+    native_cols = np.setdiff1d(bounded_cols, ub_cols)
 
     nk = len(kept)
     nf = int(free.sum())
@@ -482,6 +503,11 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
             A_can[:, i, nk + free_slot[j]] = -1.0
         b_can[:, i] = ub_shifted[:, j]
     c_can = ck if nf == 0 else np.concatenate([ck, -ck[:, free]], axis=1)
+    # native upper bounds: a (B, n_can) vector instead of rows (split
+    # negative parts are unbounded above)
+    ub_can = np.full((B, n_can), np.inf)
+    if len(native_cols):
+        ub_can[:, native_cols] = ub_shifted[:, native_cols]
 
     # Degenerate shells: presolve can empty the canonical problem entirely
     # (every row redundant and/or every column substituted).  The solvers
@@ -493,6 +519,7 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
         n_can = 1
         A_can = np.zeros((B, m_can, 1))
         c_can = np.zeros((B, 1))
+        ub_can = np.full((B, 1), np.inf)
     if m_can == 0:
         m_can = 1
         A_can = np.zeros((B, 1, n_can))
@@ -504,8 +531,10 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
         A_can = A_can * row_scale[:, :, None] * col_scale[:, None, :]
         b_can = b_can * row_scale
         c_can = c_can * col_scale
+        # the solver variable is x_s = x / col_scale, so bounds scale too
+        ub_can = ub_can / col_scale
 
-    lp = LPBatch(A=A_can, b=b_can, c=c_can)
+    lp = LPBatch.from_arrays(A_can, b_can, c_can, ub=ub_can)
     rec = Recovery(general=g, kept=kept, baseline=baseline, shift=shift,
                    free=free, status_override=status_override,
                    col_scale=col_scale, row_scale=row_scale,
@@ -514,21 +543,62 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
     return lp, rec
 
 
-def canonical_shape(g: GeneralLPBatch, *, presolve: bool = True
-                    ) -> Tuple[int, int]:
+def canonical_shape(g: GeneralLPBatch, *, presolve: bool = True,
+                    bound_rows: bool = False) -> Tuple[int, int]:
     """(m, n) of the canonical standard-form batch ``canonicalize`` would
     produce — the shape the work models must be evaluated at (equalities
-    and finite upper bounds grow m; free variables grow n)."""
-    _, rec = canonicalize(g, presolve=presolve, scale=False)
-    return rec.m_canonical, rec.n_canonical
+    grow m; free variables grow n; finite upper bounds grow m only under
+    ``bound_rows=True`` or on free columns).
+
+    Computed *analytically* from the bound/row finiteness masks — the
+    presolve keep/drop masks and the shift-invariance of finiteness pin
+    the shape down without materializing (or equilibrating) the canonical
+    arrays, so per-workload callers (work models, launch/dryrun_lp.py)
+    stop paying the full O(B*m*n) ``canonicalize``."""
+    B, m, n = g.batch, g.m, g.n
+    lo, hi = g.row_bounds()
+    A = np.asarray(g.A, np.float64)
+    csign = 1.0 if g.maximize else -1.0
+    cmax = csign * np.asarray(g.c, np.float64)
+    lb = np.asarray(g.lb, np.float64)
+    ub = np.asarray(g.ub, np.float64)
+
+    keep_col = np.ones(n, bool)
+    keep_row = np.ones(m, bool)
+    if presolve:
+        # same keep/drop masks as canonicalize's presolve pass
+        fixed = (lb == ub).all(axis=0) & np.isfinite(lb).all(axis=0)
+        empty = (A == 0.0).all(axis=(0, 1)) & ~fixed
+        val = np.where(cmax > 0, ub,
+                       np.where(cmax < 0, lb,
+                                np.where(np.isfinite(lb), lb, ub)))
+        droppable = empty & np.isfinite(val).all(axis=0)
+        keep_col &= ~(fixed | droppable)
+        keep_row &= ~(A[:, :, keep_col] == 0.0).all(axis=(0, 2))
+
+    kept = np.flatnonzero(keep_col)
+    rows = np.flatnonzero(keep_row)
+    # the lower-bound shift subtracts a finite contribution everywhere, so
+    # row-bound and upper-bound *finiteness* are shift-invariant
+    free = ~np.isfinite(lb[:, kept]).all(axis=0)
+    nk = len(kept)
+    n_can = nk + int(free.sum())
+    ub_fin = np.isfinite(ub[:, kept]).all(axis=0)
+    n_ub_rows = int(ub_fin.sum()) if bound_rows else int((ub_fin & free).sum())
+    m_can = (int(np.isfinite(hi[:, rows]).all(axis=0).sum())
+             + int(np.isfinite(lo[:, rows]).all(axis=0).sum())
+             + n_ub_rows)
+    return max(m_can, 1), max(n_can, 1)
 
 
 def ensure_canonical(batch, *, presolve: bool = True,
-                     scale: Optional[bool] = None):
+                     scale: Optional[bool] = None,
+                     bound_rows: bool = False):
     """Entry-point shim: pass ``LPBatch`` through untouched; canonicalize a
     ``GeneralLPBatch``.  Returns (LPBatch, Recovery-or-None)."""
     if isinstance(batch, GeneralLPBatch):
-        return canonicalize(batch, presolve=presolve, scale=scale)
+        return canonicalize(batch, presolve=presolve, scale=scale,
+                            bound_rows=bound_rows)
     return batch, None
 
 

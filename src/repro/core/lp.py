@@ -19,12 +19,17 @@ Real problems rarely arrive in standard form.  The general-form entry path
 
 Every ``solve_*`` entry point accepts a ``GeneralLPBatch`` directly: it is
 canonicalized on ingestion (presolve + geometric-mean scaling on by
-default; ``=``/``>=``/ranged rows and variable bounds become extra ``<=``
-rows, free variables split, minimization flips sign — equalities and upper
-bounds therefore *grow m*), the canonical ``LPBatch`` is solved on device,
-and the result is mapped back to original coordinates by the ``Recovery``
-record, so compaction, pricing, shard_map and the Pallas kernels compose
-with general problems unchanged.
+default; ``=``/``>=``/ranged rows become a ``<=`` pair, free variables
+split, minimization flips sign — equalities therefore *grow m*), the
+canonical ``LPBatch`` is solved on device, and the result is mapped back
+to original coordinates by the ``Recovery`` record, so compaction,
+pricing, shard_map and the Pallas kernels compose with general problems
+unchanged.  Finite variable upper bounds are *native*: ``LPBatch.ub``
+carries a per-column bound vector (``0 <= x <= ub``, +inf = unbounded)
+and every engine runs the bounded-variable ratio test against it — a
+finite bound costs zero extra rows instead of one dense row each (the
+``bound_rows=True`` escape hatch in ``canonicalize`` restores the old
+row encoding for A/B comparisons).
 
 The simplex tableau layout follows Sec. 4.1/5.5 of the paper:
 
@@ -64,6 +69,28 @@ per-iteration parallel depth:
   depth dominates (analysis.lp_perf.pdhg_crossover locates the frontier),
   and it natively emits the primal-dual certificate every backend now
   reports (``LPResult.y``/``z``).
+
+Two orthogonal capabilities cut across the engines:
+
+* **Bounds** — all three engines take ``LPBatch.ub`` natively: the simplex
+  engines run the bounded-variable ratio test (an entering column may hit
+  its own upper bound and *flip* — an O(1) bookkeeping move instead of a
+  pivot), PDHG clips its primal prox step into ``[0, ub]``.  Prefer native
+  bounds (the ``canonicalize`` default) whenever upper bounds exist: a
+  finite bound as a row costs a dense (n+2m)-wide tableau row *and* a
+  pivot to activate, as a native bound it costs nothing per iteration.
+  Row encoding (``bound_rows=True``) only remains useful as an A/B
+  reference and for bounds on free (split) columns.
+* **Sparsity** — backends with ``supports_sparse`` (currently ``pdhg``)
+  also accept a ``SparseLPBatch`` (core/sparse.py): one sparsity pattern
+  shared across the batch with per-LP values, the shape
+  ``io.mps.perturbed_batch`` produces.  Sparse PDHG replaces the dense
+  (B, m, n) einsum pair with gather/scatter matvecs, so the per-iteration
+  cost scales with ``nnz`` instead of ``m*n`` — it wins whenever density
+  is below ~50% and dominates at Netlib-like 1-2% density
+  (``analysis.lp_perf.sparse_matvec_flops`` quantifies the ratio).  The
+  pivot-exact simplex engines stay dense: their tableaux fill in after a
+  handful of pivots regardless of input sparsity.
 
 ``backend_spec(name).exact`` distinguishes the two certificate semantics;
 tolerance-based backends must be compared against oracles at ``tol``, not
@@ -121,6 +148,8 @@ class BackendSpec:
     solve: str                 # "module:attr" entry points, imported lazily
     solve_compacted: str       # (the engine modules import this module, so
     solve_local: str           # the registry cannot import them eagerly)
+    supports_sparse: bool = False  # accepts SparseLPBatch (shared-pattern
+    solve_sparse: str = ""         # sparse matvecs) via solve_sparse
 
 
 BACKEND_REGISTRY = {
@@ -139,13 +168,17 @@ BACKEND_REGISTRY = {
         solve_compacted="repro.core.revised:solve_batched_revised_compacted",
         solve_local="repro.core.revised:solve_revised"),
     # restarted primal-dual hybrid gradient, matrix-free first-order
-    # iterations with tolerance-based KKT convergence (core/pdhg.py)
+    # iterations with tolerance-based KKT convergence (core/pdhg.py);
+    # the only engine whose per-iteration work is a pure matvec pair,
+    # hence the only one where shared-pattern sparsity pays (core/sparse.py)
     "pdhg": BackendSpec(
         name="pdhg", exact=False, supports_pallas=True,
         supports_compaction=True,
         solve="repro.core.pdhg:solve_batched_pdhg",
         solve_compacted="repro.core.pdhg:solve_batched_pdhg_compacted",
-        solve_local="repro.core.pdhg:solve_pdhg"),
+        solve_local="repro.core.pdhg:solve_pdhg",
+        supports_sparse=True,
+        solve_sparse="repro.core.sparse:solve_batched_pdhg_sparse"),
 }
 
 # Back-compat tuple (older call sites iterate it for error messages).
@@ -166,16 +199,25 @@ def backend_spec(backend: str) -> BackendSpec:
 
 
 def resolve_backend(backend: str, *, compacted: bool = False,
-                    local: bool = False):
+                    local: bool = False, sparse: bool = False):
     """Late-bound engine entry point: the monolithic batched solver, the
-    compaction-scheduled variant, or the traceable pjit/shard_map body.
-    Importing lazily keeps the registry cycle-free (engine modules import
-    this module)."""
+    compaction-scheduled variant, the traceable pjit/shard_map body, or
+    (``sparse=True``) the shared-pattern sparse solver for backends whose
+    spec advertises ``supports_sparse``.  Importing lazily keeps the
+    registry cycle-free (engine modules import this module)."""
     import importlib
 
     spec = backend_spec(backend)
-    ref = (spec.solve_local if local
-           else spec.solve_compacted if compacted else spec.solve)
+    if sparse:
+        if not spec.supports_sparse:
+            raise ValueError(
+                f"backend {backend!r} has no sparse entry point; "
+                "sparse-capable backends: "
+                f"{[s.name for s in BACKEND_REGISTRY.values() if s.supports_sparse]}")
+        ref = spec.solve_sparse
+    else:
+        ref = (spec.solve_local if local
+               else spec.solve_compacted if compacted else spec.solve)
     module, attr = ref.split(":")
     return getattr(importlib.import_module(module), attr)
 
@@ -185,11 +227,17 @@ class LPBatch:
     """A batch of B independent LPs of identical shape (m constraints, n vars).
 
     Arrays may be NumPy or JAX; shapes are (B, m, n), (B, m), (B, n).
+
+    ``ub`` (optional, (B, n)) are native variable upper bounds: the problem
+    becomes ``max c.x s.t. Ax <= b, 0 <= x <= ub`` with +inf marking
+    unbounded columns.  ``ub=None`` means all +inf (the paper's original
+    standard form); every engine treats the two identically.
     """
 
     A: np.ndarray
     b: np.ndarray
     c: np.ndarray
+    ub: np.ndarray | None = None
 
     @property
     def batch(self) -> int:
@@ -203,19 +251,38 @@ class LPBatch:
     def n(self) -> int:
         return self.A.shape[2]
 
+    def upper_bounds(self) -> np.ndarray:
+        """The (B, n) bound vector with ``None`` materialized as all +inf —
+        what the engines consume (their bounded ratio tests degenerate to
+        the classic unbounded test on +inf entries)."""
+        if self.ub is None:
+            return np.full((self.batch, self.n), np.inf, np.float64)
+        return np.asarray(self.ub)
+
     @staticmethod
-    def from_arrays(A, b, c) -> "LPBatch":
+    def from_arrays(A, b, c, ub=None) -> "LPBatch":
         A = np.asarray(A)
         b = np.asarray(b)
         c = np.asarray(c)
         if A.ndim == 2:  # single LP convenience
             A, b, c = A[None], b[None], c[None]
+            if ub is not None and np.asarray(ub).ndim == 1:
+                ub = np.asarray(ub)[None]
         B, m, n = A.shape
         if b.shape != (B, m) or c.shape != (B, n):
             raise ValueError(
                 f"inconsistent LP batch shapes: A={A.shape} b={b.shape} c={c.shape}"
             )
-        return LPBatch(A=A, b=b, c=c)
+        if ub is not None:
+            ub = np.asarray(ub, np.float64)
+            if ub.shape != (B, n):
+                raise ValueError(
+                    f"inconsistent ub shape: expected {(B, n)}, got {ub.shape}")
+            if (ub < 0).any():
+                raise ValueError("ub must be >= 0 (the canonical lower bound)")
+            if not np.isfinite(ub).any():
+                ub = None  # all +inf is the unbounded case
+        return LPBatch(A=A, b=b, c=c, ub=ub)
 
     def tableau_shape(self) -> Tuple[int, int]:
         """(rows, cols) of the per-LP simplex tableau (incl. both obj rows)."""
@@ -315,13 +382,22 @@ def build_tableau(A: np.ndarray, b: np.ndarray, c: np.ndarray):
     return T, basis, neg.any(axis=1)
 
 
-def extract_solution(T: np.ndarray, basis: np.ndarray, n: int):
+def extract_solution(T: np.ndarray, basis: np.ndarray, n: int,
+                     ub: np.ndarray | None = None,
+                     flip: np.ndarray | None = None):
     """Read (x, objective) off a final tableau batch.
 
     Batched scatter: structural basis entries (basis < n) write their row's
     rhs into x, everything else lands in a dump slot that is sliced away —
     one vectorized write instead of the old O(m) host loop over rows (a
-    legal basis never repeats a column, so the writes cannot collide)."""
+    legal basis never repeats a column, so the writes cannot collide).
+
+    With the bounded-variable method, columns whose ``flip`` flag is set
+    are stored *complemented* (x' = ub - x): a flipped basic column reads
+    ``ub - rhs``, a flipped nonbasic column sits at its upper bound.  The
+    objective row's rhs already tracks the true objective through every
+    flip (the complement substitution updates it), so ``-T[m, -1]`` is
+    unchanged."""
     B, rows, cols = T.shape
     m = rows - 2
     rhs = T[:, :m, -1]
@@ -330,6 +406,9 @@ def extract_solution(T: np.ndarray, basis: np.ndarray, n: int):
     xpad = np.zeros((B, n + 1), dtype=T.dtype)
     xpad[np.arange(B)[:, None], target] = np.where(sel, rhs, 0.0)
     x = xpad[:, :n]
+    if flip is not None and flip.any():
+        # flipped basic: ub - rhs; flipped nonbasic: ub - 0 = ub
+        x = np.where(flip[:, :n], np.asarray(ub, dtype=T.dtype) - x, x)
     objective = -T[:, m, -1]
     return x, objective
 

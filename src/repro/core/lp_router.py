@@ -37,21 +37,18 @@ def expert_capacity_lp(demand: jax.Array, total_slots: float, c_max: float):
     """
     G, E = demand.shape
     d = jax.lax.stop_gradient(demand.astype(jnp.float32))
-    # constraints: [sum_e x <= total_slots] + [x_e <= c_max]*E + [x_e <= d_e]*E
-    m = 1 + 2 * E
-    A = jnp.concatenate([
-        jnp.ones((G, 1, E), jnp.float32),
-        jnp.tile(jnp.eye(E, dtype=jnp.float32)[None], (G, 1, 1)),
-        jnp.tile(jnp.eye(E, dtype=jnp.float32)[None], (G, 1, 1)),
-    ], axis=1)
-    b = jnp.concatenate([
-        jnp.full((G, 1), float(total_slots), jnp.float32),
-        jnp.full((G, E), float(c_max), jnp.float32),
-        d,
-    ], axis=1)
+    # One real constraint: sum_e x <= total_slots.  The per-expert ceilings
+    # (x_e <= c_max, x_e <= d_e) fold into native variable upper bounds
+    # ub_e = min(c_max, d_e) — the bounded ratio test handles them at zero
+    # row cost, shrinking the tableau from (1+2E) x E to 1 x E.
+    m = 1
+    A = jnp.ones((G, 1, E), jnp.float32)
+    b = jnp.full((G, 1), float(total_slots), jnp.float32)
+    ub = jnp.minimum(jnp.full((G, E), float(c_max), jnp.float32), d)
     c = d + 1e-3  # maximize demand-weighted allocation; epsilon breaks ties
     x, obj, status, iters, _, _ = _solve_core(
-        A, b, c, m=m, n=E, max_iters=8 * (m + E) + 50, tol=1e-6, feas_tol=1e-5)
+        A, b, c, ub, m=m, n=E, max_iters=8 * (m + E) + 50, tol=1e-6,
+        feas_tol=1e-5)
     # Fall back to uniform capacity for (numerically) unsolved groups.
     uniform = jnp.minimum(float(total_slots) / E, float(c_max))
     x = jnp.where((status == OPTIMAL)[:, None], x, uniform)

@@ -9,14 +9,20 @@ gradient** — whose iteration is nothing but matvecs: embarrassingly batched,
 no pivoting, no basis state, tolerance-based convergence.  This module is
 that solver family for the repo's canonical batches:
 
-    maximize c.x   s.t.   A x <= b,  x >= 0        (core/lp.py standard form)
+    maximize c.x   s.t.   A x <= b,  0 <= x <= u   (core/lp.py standard form;
+                                                    u may be +inf columnwise)
 
-with dual  min b.y  s.t.  A^T y >= c,  y >= 0.  One PDHG iteration is
+with dual  min b.y + u.w  s.t.  A^T y + w >= c,  y, w >= 0.  One PDHG
+iteration is
 
-    x+ = max(0, x + tau * (c - A^T y))             # primal gradient + proj
+    x+ = clip(x + tau * (c - A^T y), 0, u)         # primal gradient + prox
     y+ = max(0, y + sigma * (A (2 x+ - x) - b))    # dual ascent on extrapolant
 
-i.e. exactly one (B, m, n) einsum pair per iteration over the whole batch.
+i.e. exactly one (B, m, n) einsum pair per iteration over the whole batch —
+native bounds cost one clip, never an extra row.  The matvecs themselves are
+injectable (``Matvecs``): core/sparse.py swaps in shared-pattern scatter-add
+matvecs so structurally sparse batches pay O(nnz) instead of O(m*n) per
+iteration with the identical round/restart/certificate logic.
 
 The four PDLP ingredients, batched:
 
@@ -130,11 +136,16 @@ class PdhgState(NamedTuple):
     compaction scheduler's generic gathers apply unchanged.  The problem
     data rides in the state (like RevisedState's ``Abar``) because segment
     boundaries must be able to gather it alongside the iterates."""
-    A: jax.Array        # (B, m, n) Ruiz-scaled data
+    A: jax.Array        # (B, m, n) Ruiz-scaled data — or, under a sparse
+                        #  matvec pair (core/sparse.py), the (B, nnz) scaled
+                        #  value array of the shared pattern
     b: jax.Array        # (B, m) scaled rhs
     c: jax.Array        # (B, n) scaled objective
     rsc: jax.Array      # (B, m) row scales (residual unscaling)
     csc: jax.Array      # (B, n) col scales
+    ub: jax.Array       # (B, n) scaled upper bounds (+inf = unbounded); the
+                        #  prox step clips to [0, ub], so x <= ub holds
+                        #  exactly at every iterate
     eta: jax.Array      # (B, 1) base step: tau*sig = eta^2 <= 1/||A||^2
     omega: jax.Array    # (B, 1) primal weight: tau = eta/omega, sig = eta*omega
     binf: jax.Array     # (B,) unscaled ||b||_inf (relative residual floor)
@@ -152,6 +163,24 @@ class PdhgState(NamedTuple):
                         #  compaction scheduler's stage-1 pass no-op)
     status: jax.Array   # (B,) int32 — _RUNNING until terminal
     iters: jax.Array    # (B,) int32
+
+
+# ---------------------------------------------------------------------------
+# Matvec abstraction: the whole engine touches A only through Ax / A^T y
+# ---------------------------------------------------------------------------
+
+class Matvecs(NamedTuple):
+    """The two matvecs PDHG is made of, as injectable closures.  ``data`` is
+    whatever PdhgState.A holds — the dense (B, m, n) array here, a (B, nnz)
+    shared-pattern value array in core/sparse.py — so one iteration/check/
+    certificate implementation serves both storage formats."""
+    ax: object    # (data, x: (B, n)) -> (B, m)
+    aty: object   # (data, y: (B, m)) -> (B, n)
+
+
+DENSE_MV = Matvecs(
+    ax=lambda A, x: jnp.einsum("bmn,bn->bm", A, x),
+    aty=lambda A, y: jnp.einsum("bmn,bm->bn", A, y))
 
 
 # ---------------------------------------------------------------------------
@@ -195,8 +224,10 @@ def power_sigma_max(A: jax.Array, iters: int = POWER_ITERS) -> jax.Array:
                                        axis=1), 1e-12)
 
 
-def init_pdhg_state(A, b, c) -> PdhgState:
-    """Equilibrate, estimate step sizes, and seed the zero iterate."""
+def init_pdhg_state(A, b, c, ub=None) -> PdhgState:
+    """Equilibrate, estimate step sizes, and seed the zero iterate.  ``ub``
+    (unscaled, +inf = unbounded) is carried into scaled space as ub / csc
+    since x_unscaled = x_scaled * csc."""
     B, m, n = A.shape
     dtype = A.dtype
     binf = jnp.abs(b).max(axis=1)
@@ -205,6 +236,10 @@ def init_pdhg_state(A, b, c) -> PdhgState:
     As = A * r[:, :, None] * s[:, None, :]
     bs = b * r
     cs = c * s
+    if ub is None:
+        ubs = jnp.full((B, n), jnp.inf, dtype)
+    else:
+        ubs = (jnp.asarray(ub, dtype) / s).astype(dtype)
     eta = STEP_SAFETY / power_sigma_max(As)
     nc = jnp.linalg.norm(cs, axis=1)
     nb = jnp.linalg.norm(bs, axis=1)
@@ -212,7 +247,7 @@ def init_pdhg_state(A, b, c) -> PdhgState:
                                nc / jnp.maximum(nb, 1e-12), 1.0))
     omega = jnp.clip(omega, OMEGA_MIN, OMEGA_MAX)
     return PdhgState(
-        A=As, b=bs, c=cs, rsc=r, csc=s,
+        A=As, b=bs, c=cs, rsc=r, csc=s, ub=ubs,
         eta=eta[:, None].astype(dtype),
         omega=omega[:, None].astype(dtype),
         binf=binf, cinf=cinf,
@@ -231,43 +266,69 @@ def init_pdhg_state(A, b, c) -> PdhgState:
 # Residuals + certificates
 # ---------------------------------------------------------------------------
 
-def kkt_residuals(s: PdhgState, x, y):
+def kkt_residuals(s: PdhgState, x, y, mv: Matvecs = DENSE_MV):
     """Relative KKT residuals of a (scaled-space) point, reported for the
     *unscaled* problem: primal infeasibility, dual infeasibility, duality
     gap.  Unscaling is elementwise — A itself is only touched through the
-    two scaled matvecs."""
-    ax = jnp.einsum("bmn,bn->bm", s.A, x)
-    aty = jnp.einsum("bmn,bm->bn", s.A, y)
+    two scaled matvecs.
+
+    Bounded columns (finite ub) shift from the dual-infeasibility term to
+    the dual objective: the dual of max c.x s.t. Ax <= b, 0 <= x <= u is
+    min b.y + u.w s.t. A^T y + w >= c with w >= 0, so any positive reduced
+    cost on a bounded column is absorbed by w_j = (c - A^T y)_j+ (at the
+    price u_j * w_j in the gap) instead of counting as infeasibility."""
+    ax = mv.ax(s.A, x)
+    aty = mv.aty(s.A, y)
     rp = (jnp.maximum(ax - s.b, 0.0) / s.rsc).max(axis=1) / (1.0 + s.binf)
-    rd = (jnp.maximum(s.c - aty, 0.0) / s.csc).max(axis=1) / (1.0 + s.cinf)
+    zc = jnp.maximum(s.c - aty, 0.0)
+    fin = jnp.isfinite(s.ub)
+    rd = (jnp.where(fin, 0.0, zc) / s.csc).max(axis=1) / (1.0 + s.cinf)
     pobj = jnp.einsum("bn,bn->b", s.c, x)
-    dobj = jnp.einsum("bm,bm->b", s.b, y)
+    # scaled dots equal unscaled dots; u0_j * w0_j = ub_scaled_j * zc_j
+    dobj = jnp.einsum("bm,bm->b", s.b, y) \
+        + (jnp.where(fin, s.ub, 0.0) * zc).sum(axis=1)
     gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
     return jnp.maximum(jnp.maximum(rp, rd), gap)
 
 
-def _ray_certificates(s: PdhgState, active):
+def _ray_certificates(s: PdhgState, active, mv: Matvecs = DENSE_MV):
     """Approximate Farkas-ray classification of diverging iterates.
 
     Works on the unscaled rays (y_u = r * y / ||.||, x_u = s * x / ||.||,
     both elementwise rescales of scaled matvecs):
-      INFEASIBLE <- y_u >= 0, A^T y_u >= -eps, b.y_u < -eps
-      UNBOUNDED  <- x_u >= 0, A x_u <= eps,  c.x_u > eps
+      INFEASIBLE <- y_u >= 0, A^T y_u >= -eps (unbounded cols),
+                    b.y_u + sum_fin u_j (A^T y_u)_j^- < -eps
+      UNBOUNDED  <- x_u >= 0 supported on unbounded cols, A x_u <= eps,
+                    c.x_u > eps
+    Finite upper bounds relax the dual ray (the slack w_j = (A^T y_u)_j^-
+    is admissible on bounded columns at cost u_j w_j) and restrict the
+    primal ray: a recession direction of {Ax <= b, 0 <= x <= u} cannot
+    move a bounded coordinate, so the candidate ray is the iterate
+    *projected onto the unbounded columns* (bounded components sit at
+    finite values <= u and are not part of any divergence).
     Bounded (convergent) iterates stay below RAY_MIN_NORM in normalized
     magnitude and are never classified."""
+    fin = jnp.isfinite(s.ub)
+    ubm = jnp.where(fin, s.ub, 0.0)
     # dual ray -> primal infeasibility
     yinf = jnp.abs(s.y * s.rsc).max(axis=1)
     yh = s.y / jnp.maximum(yinf, 1e-12)[:, None]
-    aty_u = jnp.einsum("bmn,bm->bn", s.A, yh) / s.csc    # A0^T (r yh)
+    aty_s = mv.aty(s.A, yh)
+    aty_u = aty_s / s.csc                                # A0^T (r yh)
     by_u = jnp.einsum("bm,bm->b", s.b, yh)               # b0 . (r yh)
+    # u0_j * max(0, -(A0^T yh)_j) = ub_scaled_j * max(0, -aty_scaled_j)
+    uw = (ubm * jnp.maximum(-aty_s, 0.0)).sum(axis=1)
     ray_scale = 1.0 + s.binf + s.cinf
     infeas = active & (yinf > RAY_MIN_NORM) \
-        & (aty_u.min(axis=1) >= -CERT_TOL * ray_scale) \
-        & (by_u <= -CERT_TOL * ray_scale)
-    # primal ray -> unboundedness
-    xinf = jnp.abs(s.x * s.csc).max(axis=1)
-    xh = s.x / jnp.maximum(xinf, 1e-12)[:, None]
-    ax_u = jnp.einsum("bmn,bn->bm", s.A, xh) / s.rsc
+        & (jnp.where(fin, jnp.inf, aty_u).min(axis=1)
+           >= -CERT_TOL * ray_scale) \
+        & (by_u + uw <= -CERT_TOL * ray_scale)
+    # primal ray -> unboundedness (supported on unbounded columns only; an
+    # all-bounded LP has xinf == 0 and is never classified here)
+    xray = jnp.where(fin, 0.0, s.x)
+    xinf = jnp.abs(xray * s.csc).max(axis=1)
+    xh = xray / jnp.maximum(xinf, 1e-12)[:, None]
+    ax_u = mv.ax(s.A, xh) / s.rsc
     cx_u = jnp.einsum("bn,bn->b", s.c, xh)
     unbounded = active & (xinf > RAY_MIN_NORM) \
         & (ax_u.max(axis=1) <= CERT_TOL * ray_scale) \
@@ -280,7 +341,8 @@ def _ray_certificates(s: PdhgState, active):
 # ---------------------------------------------------------------------------
 
 def pdhg_round(s: PdhgState, *, tol: float,
-               check_every: int = CHECK_EVERY) -> PdhgState:
+               check_every: int = CHECK_EVERY,
+               mv: Matvecs = DENSE_MV) -> PdhgState:
     """``check_every`` fused PDHG iterations followed by one convergence /
     restart / certificate check — the scheduler-visible unit of work (one
     "round").  Terminal LPs perform masked no-ops, exactly like the
@@ -292,9 +354,10 @@ def pdhg_round(s: PdhgState, *, tol: float,
 
     def body(_, carry):
         x, y, xs, ys, cnt = carry
-        aty = jnp.einsum("bmn,bm->bn", s.A, y)
-        xn = jnp.maximum(x + tau * (s.c - aty), 0.0)
-        ax2 = jnp.einsum("bmn,bn->bm", s.A, 2.0 * xn - x)
+        aty = mv.aty(s.A, y)
+        # the prox of [0, ub] indicator: clip (ub = +inf reduces to max)
+        xn = jnp.clip(x + tau * (s.c - aty), 0.0, s.ub)
+        ax2 = mv.ax(s.A, 2.0 * xn - x)
         yn = jnp.maximum(y + sig * (ax2 - s.b), 0.0)
         x = jnp.where(act, xn, x)
         y = jnp.where(act, yn, y)
@@ -309,8 +372,8 @@ def pdhg_round(s: PdhgState, *, tol: float,
     # ---- check: candidate = better of current iterate and running average --
     cc = jnp.maximum(s.cnt, 1.0)[:, None]
     xa, ya = s.xs / cc, s.ys / cc
-    res_cur = kkt_residuals(s, s.x, s.y)
-    res_avg = kkt_residuals(s, xa, ya)
+    res_cur = kkt_residuals(s, s.x, s.y, mv)
+    res_avg = kkt_residuals(s, xa, ya, mv)
     use_avg = res_avg < res_cur
     res = jnp.where(use_avg, res_avg, res_cur)
     xc = jnp.where(use_avg[:, None], xa, s.x)
@@ -346,7 +409,7 @@ def pdhg_round(s: PdhgState, *, tol: float,
     xr = jnp.where(restart[:, None], xc, s.xr)
     yr = jnp.where(restart[:, None], yc, s.yr)
 
-    infeas, unbounded = _ray_certificates(s, active0 & ~converged)
+    infeas, unbounded = _ray_certificates(s, active0 & ~converged, mv)
     status = jnp.where(converged, OPTIMAL, s.status)
     status = jnp.where(infeas, INFEASIBLE, status)
     status = jnp.where(unbounded, UNBOUNDED, status)
@@ -355,14 +418,14 @@ def pdhg_round(s: PdhgState, *, tol: float,
                       status=status)
 
 
-def extract_pdhg(s: PdhgState):
+def extract_pdhg(s: PdhgState, mv: Matvecs = DENSE_MV):
     """(x, obj, status, iters, y, z) in *unscaled* canonical coordinates.
     ``z = c - A^T y`` is the reduced-cost certificate; objective and duals
     are NaN off-OPTIMAL, matching the solver convention."""
     x = s.x * s.csc
     y = s.y * s.rsc
     obj = jnp.einsum("bn,bn->b", s.c, s.x)      # == c0 . x_unscaled
-    z = s.c / s.csc - jnp.einsum("bmn,bm->bn", s.A, s.y) / s.csc
+    z = s.c / s.csc - mv.aty(s.A, s.y) / s.csc
     status = jnp.where(s.status == _RUNNING, ITERATION_LIMIT, s.status)
     opt = (status == OPTIMAL)
     obj = jnp.where(opt, obj, jnp.nan)
@@ -371,14 +434,15 @@ def extract_pdhg(s: PdhgState):
     return x, obj, status.astype(jnp.int8), s.iters, y, z
 
 
-def solve_pdhg(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
-               feas_tol: float = 0.0, check_every: int = CHECK_EVERY):
+def solve_pdhg(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
+               tol: float, feas_tol: float = 0.0,
+               check_every: int = CHECK_EVERY):
     """Traceable whole-solve body (shared by jit, pjit and shard_map):
     setup + one while_loop over check rounds.  ``feas_tol`` is accepted for
     entry-point uniformity but unused (PDHG has no phase 1 — feasibility is
     part of the KKT residual)."""
     del feas_tol
-    state = init_pdhg_state(A, b, c)
+    state = init_pdhg_state(A, b, c, ub)
     rounds = -(-int(max_iters) // int(check_every))
 
     def cond(carry):
@@ -395,8 +459,8 @@ def solve_pdhg(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
                                              "check_every"))
-def _solve_pdhg_core(A, b, c, *, m, n, max_iters, tol, check_every):
-    return solve_pdhg(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+def _solve_pdhg_core(A, b, c, ub, *, m, n, max_iters, tol, check_every):
+    return solve_pdhg(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                       check_every=check_every)
 
 
@@ -439,7 +503,9 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
         tol = 1e-5 if dtype == jnp.float32 else 1e-8
     x, obj, status, iters, y, z = _solve_pdhg_core(
         jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
-        jnp.asarray(batch.c, dtype), m=m, n=n, max_iters=int(max_iters),
+        jnp.asarray(batch.c, dtype),
+        jnp.asarray(batch.upper_bounds(), dtype),
+        m=m, n=n, max_iters=int(max_iters),
         tol=float(tol), check_every=int(check_every))
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
                    status=np.asarray(status), iterations=np.asarray(iters),
@@ -495,8 +561,8 @@ class PdhgBackend:
         self.dtype = dtype
         self.check_every = int(check_every)
 
-    def init(self, A, b, c) -> PdhgState:
-        return init_pdhg_state(A, b, c)
+    def init(self, A, b, c, ub=None) -> PdhgState:
+        return init_pdhg_state(A, b, c, ub)
 
     def run_phase1(self, state, steps):
         return state, 0          # no phase 1: stage 1 is a no-op
@@ -573,7 +639,8 @@ def solve_batched_pdhg_compacted(
     backend = PdhgBackend(m, n, tol, dtype, check_every=check_every)
     state = backend.init(jnp.asarray(batch.A, dtype),
                          jnp.asarray(batch.b, dtype),
-                         jnp.asarray(batch.c, dtype))
+                         jnp.asarray(batch.c, dtype),
+                         ub=jnp.asarray(batch.upper_bounds(), dtype))
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
     cfg = CompactionConfig(

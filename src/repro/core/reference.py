@@ -34,18 +34,34 @@ from .pricing import (
 )
 
 
-def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig"):
+def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig", ub=None,
+                  flip=None):
     """Solve one LP in-place on its (m+2, cols) float64 tableau.
 
     Returns (status, iters, p1_iters): ``p1_iters`` counts the iterations
     consumed before phase 2 began (phase-1 pivots plus the transition check)
     — the input to the phase-compaction executed-work models in
-    analysis/lp_perf.py and benchmarks/pivot_work.py."""
+    analysis/lp_perf.py and benchmarks/pivot_work.py.
+
+    ``ub`` ((n,) or None) enables the bounded-variable method ``0 <= x <=
+    ub``: columns are stored *complemented* (x' = ub - x) whenever their
+    ``flip`` flag is set, so every nonbasic variable sits at 0 and the
+    classic sentinel min-ratio applies unchanged.  The ratio test gains two
+    cases: a basic variable may hit its own upper bound (its row is
+    complemented before the pivot, making the pivot element positive), and
+    the entering variable may hit its bound first — a *bound flip* that
+    costs one column negation + rhs update instead of a pivot (counted as
+    an iteration; pricing weights are untouched — column negation is
+    norm-invariant for the d^2/w scores).  With all-+inf ``ub`` every new
+    branch is dead and the classic method runs bitwise-unchanged."""
     cols = T.shape[1]
     allowed = np.zeros(cols, dtype=bool)
     allowed[: n + m] = True  # artificials and rhs never enter
     feas_thr = 1e-8 * max(1.0, T[m + 1, -1])  # relative, matches JAX backend
     weights = init_weights_np(rule, T, m)
+    bounded = ub is not None and np.isfinite(ub).any()
+    if flip is None:
+        flip = np.zeros(n, dtype=bool)
     phase = 1
     iters = 0
     p1_iters = 0
@@ -71,6 +87,15 @@ def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig"):
         rhs = T[:m, -1]
         with np.errstate(divide="ignore", invalid="ignore"):
             ratios = np.where(col > tol, rhs / np.where(col > tol, col, 1.0), BIG)
+        if bounded:
+            # a *decreasing* basic variable never binds, but an increasing
+            # one (col < 0) may hit its own finite upper bound at
+            # (ub_B - rhs) / (-col) — complement-and-pivot when it wins
+            ubB = np.where(basis < n, ub[np.minimum(basis, n - 1)], np.inf)
+            hit_ub = (col < -tol) & np.isfinite(ubB)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ub_ratio = (ubB - rhs) / np.where(hit_ub, -col, 1.0)
+            ratios = np.where(hit_ub, ub_ratio, ratios)
         if phase == 2:
             # Basic artificials are pinned at zero in phase 2: a pivot whose
             # entering column would *grow* one (negative coefficient in its
@@ -81,9 +106,27 @@ def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig"):
             # re-relax their row during phase 2.
             ratios = np.where((basis >= n + m) & (col < -tol), 0.0, ratios)
         l = int(np.argmin(ratios))
+        t_e = ub[e] if bounded and e < n else np.inf
+        if t_e < ratios[l]:
+            # bound flip: the entering variable hits its own upper bound
+            # before any basic variable binds — complement it in place
+            T[:, -1] -= t_e * T[:, e]
+            T[:, e] = -T[:, e]
+            flip[e] = ~flip[e]
+            iters += 1
+            continue
         if ratios[l] >= BIG / 2:
             status = UNBOUNDED if phase == 2 else ITERATION_LIMIT
             break
+        if bounded and T[l, e] < 0 and basis[l] < n:
+            # leaving basic hits its *upper* bound: complement its (unit)
+            # column — negate row l, rhs_l -> ub_l - rhs_l — which makes
+            # the pivot element positive and the pivot classic
+            jl = int(basis[l])
+            T[l] = -T[l]
+            T[l, -1] += ub[jl]
+            T[l, jl] = 1.0
+            flip[jl] = ~flip[jl]
         pe = T[l, e]
         pivrow = T[l] / pe
         factor = T[:, e].copy()
@@ -119,17 +162,21 @@ def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
     if max_iters is None:
         max_iters = default_max_iters(m, n)
     T, basis, _ = build_tableau(batch.A, batch.b, batch.c)
+    ub = None if batch.ub is None else np.asarray(batch.ub, np.float64)
+    flip = np.zeros((B, n), dtype=bool)
     status = np.zeros(B, dtype=np.int8)
     iters = np.zeros(B, dtype=np.int32)
     p1_iters = np.zeros(B, dtype=np.int32)
     for k in range(B):
         status[k], iters[k], p1_iters[k] = _solve_single(
-            T[k], basis[k], n, m, tol, max_iters, rule=rule)
-    x, obj = extract_solution(T, basis, n)
+            T[k], basis[k], n, m, tol, max_iters, rule=rule,
+            ub=None if ub is None else ub[k], flip=flip[k])
+    x, obj = extract_solution(T, basis, n, ub=ub, flip=flip)
     # dual certificate off the final tableau (see simplex.extract_duals):
     # slack-column reduced costs are -y, structural entries are z = c - y.A
+    # (flipped columns are complemented, so their stored entry is -z)
     y = -T[:, m, n:n + m]
-    z = T[:, m, :n]
+    z = np.where(flip, -T[:, m, :n], T[:, m, :n])
     # non-optimal LPs report NaN objective/duals to make misuse loud
     bad = status != OPTIMAL
     obj = np.where(bad, np.nan, obj)

@@ -161,10 +161,14 @@ class RevisedState(NamedTuple):
     etaV: jax.Array      # (B, K, m) — eta columns
     cnt: jax.Array       # (B,) int32 — live etas (uniform; array-shaped so
                          #  compaction gathers treat it like every leaf)
+    onub: jax.Array      # (B, n) bool — nonbasic structural parked at its
+                         #  *upper* bound (reduced-cost sign is flagged, the
+                         #  immutable columns are never complemented)
+    ub: jax.Array        # (B, n) upper bounds (+inf = unbounded)
     thr: jax.Array       # (B,) phase-1 feasibility threshold
 
 
-def build_revised_state(A: jax.Array, b: jax.Array, c: jax.Array, *,
+def build_revised_state(A: jax.Array, b: jax.Array, c: jax.Array, ub=None, *,
                         feas_tol: float, refactor_period: int) -> RevisedState:
     """Initial state: tableau column layout (structurals | slacks |
     artificials), sign-adjusted rows, identity starting basis => LU of I."""
@@ -191,6 +195,10 @@ def build_revised_state(A: jax.Array, b: jax.Array, c: jax.Array, *,
     eye = jnp.broadcast_to(jnp.eye(m, dtype=dtype), (B, m, m))
     iota = jnp.broadcast_to(idx.astype(jnp.int32), (B, m))
     K = int(refactor_period)
+    if ub is None:
+        ub = jnp.full((B, n), jnp.inf, dtype=dtype)
+    else:
+        ub = jnp.asarray(ub, dtype=dtype)
     return RevisedState(
         Abar=Abar, cvec=cvec, xB=bbar, basis=basis, phase=phase,
         status=jnp.full((B,), _RUNNING, jnp.int32),
@@ -198,7 +206,8 @@ def build_revised_state(A: jax.Array, b: jax.Array, c: jax.Array, *,
         lu=eye, perm=iota, perm_inv=iota,
         etaR=jnp.zeros((B, K), jnp.int32),
         etaV=jnp.zeros((B, K, m), dtype),
-        cnt=jnp.zeros((B,), jnp.int32), thr=thr)
+        cnt=jnp.zeros((B,), jnp.int32),
+        onub=jnp.zeros((B, n), dtype=bool), ub=ub, thr=thr)
 
 
 # ---------------------------------------------------------------------------
@@ -272,12 +281,14 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
     eta-append — the Step 1-3 structure of simplex_step re-expressed on the
     basis factorization instead of the tableau."""
     (Abar, cvec, xB, basis, phase, status, iters, lu, perm, perm_inv,
-     etaR, etaV, cnt, thr) = state
+     etaR, etaV, cnt, onub, ub, thr) = state
     B = xB.shape[0]
     K = int(refactor_period)
     iota_m = jnp.arange(m, dtype=jnp.int32)
     ncand = n + m
     active = status == _RUNNING
+    # nonbasic-at-upper flags over all candidates (slacks never flip: ub=inf)
+    onub_pad = jnp.concatenate([onub, jnp.zeros((B, m), bool)], axis=1)
 
     # ---- periodic refactorization (eta file full) --------------------------
     def do_refac(_):
@@ -314,8 +325,12 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
     basis_mask_val = jnp.where(basis < ncand, -BIG, BIG)  # BIG => no-op min
 
     def price_full(_):
+        # improvement score: d_j entering from the lower bound, -d_j from the
+        # upper bound (an at-upper variable improves by *decreasing*, which
+        # pays off when its reduced cost is positive)
         d = jnp.where(in_p2, cvec, 0.0) - jnp.einsum(
             "bm,bmn->bn", y, Abar[:, :, :ncand])
+        d = jnp.where(onub_pad, -d, d)
         return d.at[bidx[:, None], basis_safe].min(basis_mask_val)
 
     if rule == "partial":
@@ -328,8 +343,10 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
         cblk = jnp.where(in_p2, jnp.take_along_axis(cvec, cols_safe, axis=1),
                          0.0)
         in_basis = (cols_safe[:, :, None] == basis[:, None, :]).any(axis=2)
+        onub_blk = jnp.take_along_axis(onub_pad, cols_safe, axis=1)
+        d_raw = cblk - jnp.einsum("bm,bmc->bc", y, Ablk)
         d_blk = jnp.where(valid & ~in_basis,
-                          cblk - jnp.einsum("bm,bmc->bc", y, Ablk), -BIG)
+                          jnp.where(onub_blk, -d_raw, d_raw), -BIG)
         blk_max = jnp.max(d_blk, axis=1)
         e_blk = jnp.take_along_axis(
             cols_safe, jnp.argmax(d_blk, axis=1)[:, None], axis=1)[:, 0]
@@ -359,39 +376,79 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
     p2_done = active & (phase == 2) & is_opt
 
     # ---- Step 2: FTRAN + sentinel min-ratio --------------------------------
+    # the entering variable moves *down* from its upper bound when flagged:
+    # the basic response to a unit move along the edge is -dir * u
     a_e = jnp.take_along_axis(Abar, e[:, None, None], axis=2)[:, :, 0]
     u = _lu_solve(lu, perm, a_e)
     u = _apply_etas_fwd(u, etaR, etaV, cnt0, iota_m)
-    valid_row = u > tol
-    ratios = jnp.where(valid_row, xB / jnp.where(valid_row, u, 1.0), BIG)
+    onub_e = jnp.take_along_axis(onub_pad, e[:, None], axis=1)[:, 0]
+    dir_e = jnp.where(onub_e, -1.0, 1.0).astype(xB.dtype)
+    ucol = dir_e[:, None] * u
+    valid_row = ucol > tol
+    ratios = jnp.where(valid_row, xB / jnp.where(valid_row, ucol, 1.0), BIG)
+    # a basic variable the move drives *up* (ucol < 0) may hit its own
+    # finite upper bound (slacks/artificials: ub = +inf, never binds)
+    ubB = jnp.where(basis < n,
+                    jnp.take_along_axis(ub, jnp.minimum(basis, n - 1),
+                                        axis=1),
+                    jnp.inf).astype(xB.dtype)
+    hit_ub = (ucol < -tol) & jnp.isfinite(ubB)
+    ratios = jnp.where(hit_ub,
+                       (ubB - xB) / jnp.where(hit_ub, -ucol, 1.0), ratios)
     # phase 2 pins basic artificials at zero (same rule as the tableau
     # dialect's simplex_step): an entering column that would grow one leaves
     # it at ratio 0 on a negative pivot element instead
-    pin = (phase == 2)[:, None] & (basis >= ncand) & (u < -tol)
+    pin = (phase == 2)[:, None] & (basis >= ncand) & (ucol < -tol)
     ratios = jnp.where(pin, 0.0, ratios)
     l = jnp.argmin(ratios, axis=1).astype(jnp.int32)
     min_ratio = jnp.min(ratios, axis=1)
     no_row = min_ratio >= BIG / 2
 
     wants_pivot = active & ~is_opt
-    unbounded = wants_pivot & no_row & (phase == 2)
-    stuck = wants_pivot & no_row & (phase == 1)
-    do_pivot = wants_pivot & ~no_row
+    # entering variable's own bound: travel of ub_e parks it at the opposite
+    # bound with no basis change (a bound flip; strict < is the tie-break
+    # shared with the oracle and the tableau dialect)
+    t_e = jnp.where(e < n,
+                    jnp.take_along_axis(ub, jnp.minimum(e, n - 1)[:, None],
+                                        axis=1)[:, 0],
+                    jnp.inf).astype(xB.dtype)
+    do_flip = wants_pivot & (t_e < min_ratio)
+    unbounded = wants_pivot & no_row & ~do_flip & (phase == 2)
+    stuck = wants_pivot & no_row & ~do_flip & (phase == 1)
+    do_pivot = wants_pivot & ~no_row & ~do_flip
 
-    # ---- Step 3: O(m) update — x_B and one eta column ----------------------
+    # ---- Step 3: O(m) update — x_B, bound flags and one eta column ---------
     ul = jnp.take_along_axis(u, l[:, None], axis=1)[:, 0]
     ul_safe = jnp.where(do_pivot, ul, 1.0)
-    theta = jnp.where(do_pivot, min_ratio, 0.0)
+    move = do_flip | do_pivot
+    theta = jnp.where(do_flip, t_e, jnp.where(do_pivot, min_ratio, 0.0))
     is_l = iota_m[None, :] == l[:, None]
-    xB_new = jnp.where(is_l, theta[:, None], xB - theta[:, None] * u)
-    xB = jnp.where(do_pivot[:, None], xB_new, xB)
+    # entering variable's post-pivot value: theta above its departing bound
+    enter_val = jnp.where(onub_e, t_e - min_ratio, min_ratio)
+    xB_new = jnp.where(is_l & do_pivot[:, None], enter_val[:, None],
+                       xB - theta[:, None] * ucol)
+    xB = jnp.where(move[:, None], xB_new, xB)
+
+    # bound-flag bookkeeping: a flip toggles the entering flag; a pivot
+    # clears it (the variable is basic now) and marks the leaving variable
+    # at-upper when the min ratio came from its upper-bound row
+    col_n = jnp.arange(n, dtype=jnp.int32)
+    is_e_n = col_n[None, :] == e[:, None]
+    onub = onub ^ (do_flip[:, None] & is_e_n)
+    onub = onub & ~(do_pivot[:, None] & is_e_n)
+    jl = jnp.take_along_axis(basis, l[:, None], axis=1)[:, 0]
+    hit_l = jnp.take_along_axis(hit_ub, l[:, None], axis=1)[:, 0]
+    leave_up = do_pivot & hit_l & (jl < n)
+    onub = onub | (leave_up[:, None]
+                   & (col_n[None, :] == jl[:, None]))
 
     r_eta = jnp.where(do_pivot, l, 0)
     eta = jnp.where(do_pivot[:, None], -u / ul_safe[:, None], 0.0)
     eta = jnp.where(iota_m[None, :] == r_eta[:, None],
                     jnp.where(do_pivot, 1.0 / ul_safe, 1.0)[:, None], eta)
-    etaR = lax.dynamic_update_slice(etaR, r_eta[:, None], (0, cnt0))
-    etaV = lax.dynamic_update_slice(etaV, eta[:, None, :], (0, cnt0, 0))
+    zero = jnp.int32(0)
+    etaR = lax.dynamic_update_slice(etaR, r_eta[:, None], (zero, cnt0))
+    etaV = lax.dynamic_update_slice(etaV, eta[:, None, :], (zero, cnt0, zero))
     # non-pivoting LPs got an identity eta; skip the slot when nobody pivots
     cnt = cnt + jnp.any(do_pivot).astype(jnp.int32)
 
@@ -404,16 +461,20 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
     phase = jnp.where(to_phase2, 2, phase)
     iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
     return RevisedState(Abar, cvec, xB, basis, phase, status, iters,
-                        lu, perm, perm_inv, etaR, etaV, cnt, thr)
+                        lu, perm, perm_inv, etaR, etaV, cnt, onub, ub, thr)
 
 
 def extract_solution_revised(state: RevisedState, n: int):
-    """(x, objective) off the basic solution — no tableau to read."""
+    """(x, objective) off the basic solution — no tableau to read.  Nonbasic
+    structurals parked at their upper bound contribute ``ub_j`` to both."""
     x = scatter_solution(state.xB, state.basis, n)
     ncand = state.cvec.shape[1]
     cb = jnp.take_along_axis(state.cvec,
                              jnp.minimum(state.basis, ncand - 1), axis=1)
     obj = jnp.where(state.basis < n, cb * state.xB, 0.0).sum(axis=1)
+    at_ub = jnp.where(state.onub, state.ub.astype(x.dtype), 0.0)
+    x = x + at_ub
+    obj = obj + (state.cvec[:, :n] * at_ub).sum(axis=1)
     return x, obj
 
 
@@ -445,14 +506,14 @@ def extract_duals_revised(state: RevisedState, n: int):
     return y, z
 
 
-def solve_revised(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
-                  feas_tol: float, refactor_period: int,
+def solve_revised(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
+                  tol: float, feas_tol: float, refactor_period: int,
                   pricing: str = "dantzig"):
     """Traceable whole-solve body (shared by jit, pjit and shard_map): one
     while_loop, per-LP phase switch inside the step (the revised method has
     no dead tableau columns, so there is nothing to phase-compact)."""
     rule = canonicalize_revised_rule(pricing)
-    state = build_revised_state(A, b, c, feas_tol=feas_tol,
+    state = build_revised_state(A, b, c, ub, feas_tol=feas_tol,
                                 refactor_period=refactor_period)
 
     def cond(carry):
@@ -479,9 +540,9 @@ def solve_revised(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
                                              "feas_tol", "refactor_period",
                                              "pricing"))
-def _solve_revised_core(A, b, c, *, m, n, max_iters, tol, feas_tol,
+def _solve_revised_core(A, b, c, ub, *, m, n, max_iters, tol, feas_tol,
                         refactor_period, pricing):
-    return solve_revised(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+    return solve_revised(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                          feas_tol=feas_tol, refactor_period=refactor_period,
                          pricing=pricing)
 
@@ -514,7 +575,9 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
         feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
     x, obj, status, iters, y, z = _solve_revised_core(
         jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
-        jnp.asarray(batch.c, dtype), m=m, n=n, max_iters=int(max_iters),
+        jnp.asarray(batch.c, dtype),
+        jnp.asarray(batch.upper_bounds(), dtype),
+        m=m, n=n, max_iters=int(max_iters),
         tol=float(tol), feas_tol=float(feas_tol),
         refactor_period=int(refactor_period),
         pricing=canonicalize_revised_rule(pricing))
@@ -610,8 +673,8 @@ class RevisedBackend(JaxBackend):
         self.refactor_period = int(refactor_period
                                    or auto_refactor_period(m, n))
 
-    def init(self, A, b, c) -> RevisedState:
-        return build_revised_state(A, b, c, feas_tol=self.feas_tol,
+    def init(self, A, b, c, ub=None) -> RevisedState:
+        return build_revised_state(A, b, c, ub, feas_tol=self.feas_tol,
                                    refactor_period=self.refactor_period)
 
     def run_phase1(self, state, steps):
@@ -671,7 +734,8 @@ def solve_batched_revised_compacted(
                              refactor_period=refactor_period)
     state = backend.init(jnp.asarray(batch.A, dtype),
                          jnp.asarray(batch.b, dtype),
-                         jnp.asarray(batch.c, dtype))
+                         jnp.asarray(batch.c, dtype),
+                         ub=jnp.asarray(batch.upper_bounds(), dtype))
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
     cfg = CompactionConfig(

@@ -105,6 +105,10 @@ class SimplexState(NamedTuple):
     iters: jax.Array    # (B,) int32
     w: jax.Array        # (B, C) pricing weights (see core/pricing.py;
                         #  carried-but-unread under the dantzig rule)
+    flip: jax.Array     # (B, n) bool — structural column stored complemented
+                        #  (x' = ub - x); all-False when ub is all +inf
+    ub: jax.Array       # (B, n) upper bounds (+inf = unbounded); structural
+                        #  columns only, so column compaction never slices it
     it: jax.Array       # () int32 loop-local iteration counter
 
 
@@ -112,6 +116,7 @@ class _StepConsts(NamedTuple):
     col_ok: np.ndarray    # (C,) bool — columns allowed to enter
     rows_iota: np.ndarray  # (rows,) int32 — for the pivot-row replacement
     row_m: np.ndarray     # (m,) int32 — for the basis update
+    col_n: np.ndarray     # (n,) int32 — for the flip-flag scatter
 
 
 @functools.lru_cache(maxsize=None)
@@ -123,6 +128,7 @@ def _step_consts(rows: int, m: int, n: int, C: int) -> _StepConsts:
         col_ok=np.arange(C) < n + m,  # artificials + rhs never enter
         rows_iota=np.arange(rows, dtype=np.int32),
         row_m=np.arange(m, dtype=np.int32),
+        col_n=np.arange(n, dtype=np.int32),
     )
 
 
@@ -184,6 +190,71 @@ def _pivot_update(T, w, basis, factor, pivrow_raw, pe, e, l, do_pivot,
     return T_out, w
 
 
+def _bounded_ratios(ratios, col, rhs, basis, ub, *, n, tol):
+    """Case (b) of the bounded-variable ratio test: a basic variable the
+    entering column drives *up* (col < 0) may hit its own finite upper
+    bound at ``(ub_B - rhs) / (-col)`` — slacks/artificials (basis >= n)
+    have ub = +inf, so with all-+inf bounds this is the identity."""
+    ubB = jnp.where(basis < n,
+                    jnp.take_along_axis(ub, jnp.minimum(basis, n - 1), axis=1),
+                    jnp.inf)
+    hit = (col < -tol) & jnp.isfinite(ubB)
+    return jnp.where(hit, (ubB - rhs) / jnp.where(hit, -col, 1.0), ratios)
+
+
+def _bound_moves(T, flip, ub, basis, factor, pivrow_raw, pe, e, l,
+                 wants_pivot, no_row, min_ratio, consts, *, n):
+    """Resolve the two bounded-variable moves of one lockstep step.
+
+    * **Entering-bound flip** (``ub_e < min_ratio``): the entering variable
+      hits its own upper bound before any basic variable binds.  Complement
+      it in place — ``rhs -= ub_e * col`` on every row (objective rows
+      included, which keeps ``-T[m, -1]`` the true objective) and negate
+      the column — no pivot, no weight update (column negation is
+      norm-invariant for the d^2/w pricing scores).
+    * **Leaving-at-upper complement**: the min ratio came from a basic
+      variable hitting *its* bound (negative pivot element on a structural
+      basic).  Its tableau column is a unit vector, so complementing it
+      reduces to rewriting the pivot row: negate it, ``rhs_l -> ub_l -
+      rhs_l``, restore the +1 basic entry — the pivot element turns
+      positive and the rank-1 update proceeds classically.
+
+    Returns ``(T, flip, pivrow_raw, pe, do_flip, do_pivot)``; with all-+inf
+    ``ub`` both masks are all-False and every write is a masked identity.
+    """
+    B = T.shape[0]
+    dtype = T.dtype
+    ub_e = jnp.where(e < n,
+                     jnp.take_along_axis(ub, jnp.minimum(e, n - 1)[:, None],
+                                         axis=1)[:, 0],
+                     jnp.inf).astype(dtype)
+    do_flip = wants_pivot & (ub_e < min_ratio)
+    do_pivot = wants_pivot & ~no_row & ~do_flip
+
+    bidx = jnp.arange(B)
+    is_e = consts.col_n[None, :] == e[:, None]           # (B, n)
+    ub_e_term = jnp.where(do_flip, ub_e, 0.0).astype(dtype)
+    T = T.at[:, :, -1].add(-ub_e_term[:, None] * factor)
+    sign_e = jnp.where(do_flip, -1.0, 1.0).astype(dtype)
+    T = T.at[bidx[:, None], consts.rows_iota[None, :], e[:, None]].multiply(
+        sign_e[:, None])
+    flip = flip ^ (do_flip[:, None] & is_e)
+
+    jl = jnp.take_along_axis(basis, l[:, None], axis=1)[:, 0]
+    need_comp = do_pivot & (pe < 0) & (jl < n)
+    ub_jl = jnp.take_along_axis(ub, jnp.minimum(jl, n - 1)[:, None],
+                                axis=1)[:, 0].astype(dtype)
+    is_jl_full = (jnp.arange(T.shape[2], dtype=jnp.int32)[None, :]
+                  == jl[:, None])                        # (B, C)
+    comp_row = -pivrow_raw
+    comp_row = comp_row.at[:, -1].add(jnp.where(need_comp, ub_jl, 0.0))
+    comp_row = jnp.where(is_jl_full, 1.0, comp_row)
+    pivrow_raw = jnp.where(need_comp[:, None], comp_row, pivrow_raw)
+    pe = jnp.where(need_comp, -pe, pe)
+    flip = flip ^ (need_comp[:, None] & is_jl_full[:, :n])
+    return T, flip, pivrow_raw, pe, do_flip, do_pivot
+
+
 def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
                  feas_thr, rule: str = "dantzig") -> SimplexState:
     """One lockstep pivot across the whole batch (masked for inactive LPs),
@@ -197,7 +268,7 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     the paper's argmax bit-for-bit; steepest_edge/devex score candidates by
     d_j^2 / weight using the weights carried in ``state.w``.
     """
-    T, basis, phase, status, iters, w, it = state
+    T, basis, phase, status, iters, w, flip, ub, it = state
     B, rows, C = T.shape
     consts = _step_consts(rows, m, n, C)
     active = status == _RUNNING
@@ -222,6 +293,7 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     rhs = T[:, :m, -1]
     valid = col > tol
     ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
+    ratios = _bounded_ratios(ratios, col, rhs, basis, ub, n=n, tol=tol)
     # Phase 2 pins basic artificials at zero: an entering column that would
     # grow one (negative coefficient in its row) kicks it out at ratio 0
     # instead (negative pivot element, legal at zero rhs).  Degenerate
@@ -238,13 +310,15 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     no_row = min_ratio >= BIG / 2
 
     wants_pivot = active & ~is_opt
-    unbounded = wants_pivot & no_row & (phase == 2)
-    stuck = wants_pivot & no_row & (phase == 1)  # numerically impossible path
-    do_pivot = wants_pivot & ~no_row
 
-    # ---- Step 3: rank-1 pivot update (+ fused pricing-weight recurrence) ---
+    # ---- Step 3: bound moves + rank-1 pivot update (+ fused weights) -------
     pivrow_raw = jnp.take_along_axis(T, l[:, None, None], axis=1)[:, 0, :]
     pe = jnp.take_along_axis(col, l[:, None], axis=1)[:, 0]
+    T, flip, pivrow_raw, pe, do_flip, do_pivot = _bound_moves(
+        T, flip, ub, basis, factor, pivrow_raw, pe, e, l,
+        wants_pivot, no_row, min_ratio, consts, n=n)
+    unbounded = wants_pivot & no_row & ~do_flip & (phase == 2)
+    stuck = wants_pivot & no_row & ~do_flip & (phase == 1)  # numerically impossible path
     T, w = _pivot_update(T, w, basis, factor, pivrow_raw, pe, e, l, do_pivot,
                          consts.rows_iota, m=m, n=n, rule=rule)
     basis = jnp.where(do_pivot[:, None] & (consts.row_m[None, :] == l[:, None]),
@@ -256,7 +330,7 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     status = jnp.where(p2_done, OPTIMAL, status)
     phase = jnp.where(to_phase2, 2, phase)
     iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
-    return SimplexState(T, basis, phase, status, iters, w, it + 1)
+    return SimplexState(T, basis, phase, status, iters, w, flip, ub, it + 1)
 
 
 def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
@@ -269,7 +343,7 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
     pivots `simplex_step` would — at (m+1)(n+m+1)/((m+2)(n+2m+1)) of the
     per-pivot FLOPs/bytes.  ``rule`` selects the pricing engine exactly as in
     `simplex_step`; ``state.w`` is the phase-compacted weight vector."""
-    T, basis, phase, status, iters, w, it = state
+    T, basis, phase, status, iters, w, flip, ub, it = state
     B, rows, C = T.shape          # rows == m + 1, C == n + m + 1
     consts = _step_consts(rows, m, n, C)
     active = (status == _RUNNING) & (phase == 2)
@@ -286,6 +360,7 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
     rhs = T[:, :m, -1]
     valid = col > tol
     ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
+    ratios = _bounded_ratios(ratios, col, rhs, basis, ub, n=n, tol=tol)
     # basic artificials stay pinned at zero (see simplex_step); the basis
     # still indexes full-tableau columns, so >= n+m identifies them here too
     pin = (basis >= n + m) & (col < -tol)
@@ -295,11 +370,13 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
     no_row = min_ratio >= BIG / 2
 
     wants_pivot = active & ~is_opt
-    unbounded = wants_pivot & no_row
-    do_pivot = wants_pivot & ~no_row
 
     pivrow_raw = jnp.take_along_axis(T, l[:, None, None], axis=1)[:, 0, :]
     pe = jnp.take_along_axis(col, l[:, None], axis=1)[:, 0]
+    T, flip, pivrow_raw, pe, do_flip, do_pivot = _bound_moves(
+        T, flip, ub, basis, factor, pivrow_raw, pe, e, l,
+        wants_pivot, no_row, min_ratio, consts, n=n)
+    unbounded = wants_pivot & no_row & ~do_flip
     T, w = _pivot_update(T, w, basis, factor, pivrow_raw, pe, e, l, do_pivot,
                          consts.rows_iota, m=m, n=n, rule=rule)
     basis = jnp.where(do_pivot[:, None] & (consts.row_m[None, :] == l[:, None]),
@@ -308,7 +385,7 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
     status = jnp.where(unbounded, UNBOUNDED, status)
     status = jnp.where(p2_done, OPTIMAL, status)
     iters = iters + (active & ~p2_done).astype(jnp.int32)
-    return SimplexState(T, basis, phase, status, iters, w, it + 1)
+    return SimplexState(T, basis, phase, status, iters, w, flip, ub, it + 1)
 
 
 def compact_tableau(T: jax.Array, *, m: int, n: int) -> jax.Array:
@@ -333,23 +410,36 @@ def scatter_solution(rhs: jax.Array, basis: jax.Array, n: int) -> jax.Array:
     return x.at[jnp.arange(B)[:, None], safe].add(contrib)
 
 
-def extract_solution_jax(T: jax.Array, basis: jax.Array, n: int):
+def _unflip_solution(x, flip, ub):
+    """Map complemented coordinates back: x = ub - x' on flipped columns
+    (covers both flipped basics — ub - rhs — and flipped nonbasics at 0,
+    which sit at their upper bound)."""
+    if flip is None:
+        return x
+    return jnp.where(flip, ub.astype(x.dtype) - x, x)
+
+
+def extract_solution_jax(T: jax.Array, basis: jax.Array, n: int,
+                         flip=None, ub=None):
     """Read (x, objective) off **full** (rows = m+2) tableaux."""
     m = T.shape[1] - 2
     x = scatter_solution(T[:, :m, -1], basis[:, :m], n)
+    x = _unflip_solution(x, flip, ub)
     objective = -T[:, m, -1]
     return x, objective
 
 
-def extract_solution_compacted(T: jax.Array, basis: jax.Array, n: int):
+def extract_solution_compacted(T: jax.Array, basis: jax.Array, n: int,
+                               flip=None, ub=None):
     """Read (x, objective) off **phase-compacted** (rows = m+1) tableaux."""
     m = T.shape[1] - 1
     x = scatter_solution(T[:, :m, -1], basis[:, :m], n)
+    x = _unflip_solution(x, flip, ub)
     objective = -T[:, m, -1]
     return x, objective
 
 
-def extract_duals(T: jax.Array, *, m: int, n: int):
+def extract_duals(T: jax.Array, *, m: int, n: int, flip=None):
     """Dual certificate off a final tableau (full or phase-compacted — both
     keep structural columns 0..n-1 and slack columns n..n+m-1 in row m).
 
@@ -357,10 +447,14 @@ def extract_duals(T: jax.Array, *, m: int, n: int):
     slack column j = n+i has original cost 0 and (sign-adjusted) column
     ``sign_i e_i``, so its entry is ``-y_i`` irrespective of the row's
     phase-1 sign flip: ``y = c_B B^-1`` falls out of the tableau for free.
-    Returns (y, z) with y (B, m) the canonical row duals (>= 0 at
-    optimality) and z (B, n) the structural reduced costs (<= 0)."""
+    Flipped structural columns are stored complemented, so their entry is
+    ``-z_j``; ``flip`` undoes the sign.  Returns (y, z) with y (B, m) the
+    canonical row duals (>= 0 at optimality) and z (B, n) the structural
+    reduced costs (<= 0 at lower bound, >= 0 at upper bound)."""
     y = -T[:, m, n:n + m]
     z = T[:, m, :n]
+    if flip is not None:
+        z = jnp.where(flip, -z, z)
     return y, z
 
 
@@ -370,8 +464,8 @@ def _mask_duals(y, z, status):
     return jnp.where(opt, y, jnp.nan), jnp.where(opt, z, jnp.nan)
 
 
-def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
-                    feas_tol: float, phase_compaction: bool = True,
+def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
+                    tol: float, feas_tol: float, phase_compaction: bool = True,
                     pricing: str = "dantzig"):
     """Traceable two-phase solve body, shared by jit (`_solve_core`), pjit and
     shard_map (core/distributed.py).
@@ -388,6 +482,10 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
     rule = canonicalize_rule(pricing)
     T, basis, phase = build_tableau_jax(A, b, c)
     B = T.shape[0]
+    if ub is None:
+        ub = jnp.full((B, n), jnp.inf, dtype=T.dtype)
+    else:
+        ub = jnp.asarray(ub, dtype=T.dtype)
     # Phase-1 feasibility threshold is *relative* to the initial infeasibility
     # mass (f32 tableaux accumulate O(scale * eps) error through pivots).
     feas_thr = feas_tol * jnp.maximum(1.0, T[:, m + 1, -1])
@@ -396,6 +494,8 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
         status=jnp.full((B,), _RUNNING, jnp.int32),
         iters=jnp.zeros((B,), jnp.int32),
         w=init_weights(rule, T, m),
+        flip=jnp.zeros((B, n), dtype=bool),
+        ub=ub,
         it=jnp.array(0, jnp.int32),
     )
 
@@ -409,8 +509,9 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
 
         state = jax.lax.while_loop(cond, body1, state)
         status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
-        x, obj = extract_solution_jax(state.T, state.basis, n)
-        y, z = extract_duals(state.T, m=m, n=n)
+        x, obj = extract_solution_jax(state.T, state.basis, n,
+                                      flip=state.flip, ub=state.ub)
+        y, z = extract_duals(state.T, m=m, n=n, flip=state.flip)
     else:
         # ---- loop 1: full tableau, until every LP has left phase 1 ---------
         def cond1(s: SimplexState):
@@ -427,6 +528,7 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
             T=compact_tableau(state.T, m=m, n=n), basis=state.basis,
             phase=state.phase, status=status, iters=state.iters,
             w=compact_weights(state.w, m=m, n=n),
+            flip=state.flip, ub=state.ub,
             it=state.it)
 
         def cond2(s: SimplexState):
@@ -437,8 +539,9 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
 
         state = jax.lax.while_loop(cond2, body2, state)
         status = jnp.where(state.status == _RUNNING, ITERATION_LIMIT, state.status)
-        x, obj = extract_solution_compacted(state.T, state.basis, n)
-        y, z = extract_duals(state.T, m=m, n=n)
+        x, obj = extract_solution_compacted(state.T, state.basis, n,
+                                            flip=state.flip, ub=state.ub)
+        y, z = extract_duals(state.T, m=m, n=n, flip=state.flip)
 
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
     y, z = _mask_duals(y, z, status)
@@ -448,10 +551,10 @@ def solve_two_phase(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
                                              "feas_tol", "phase_compaction",
                                              "pricing"))
-def _solve_core(A, b, c, *, m: int, n: int, max_iters: int, tol: float,
+def _solve_core(A, b, c, ub, *, m: int, n: int, max_iters: int, tol: float,
                 feas_tol: float, phase_compaction: bool = True,
                 pricing: str = "dantzig"):
-    return solve_two_phase(A, b, c, m=m, n=n, max_iters=max_iters, tol=tol,
+    return solve_two_phase(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                            feas_tol=feas_tol, phase_compaction=phase_compaction,
                            pricing=pricing)
 
@@ -506,8 +609,9 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     A = jnp.asarray(batch.A, dtype=dtype)
     b = jnp.asarray(batch.b, dtype=dtype)
     c = jnp.asarray(batch.c, dtype=dtype)
+    ub = jnp.asarray(batch.upper_bounds(), dtype=dtype)
     x, obj, status, iters, y, z = _solve_core(
-        A, b, c, m=m, n=n, max_iters=int(max_iters), tol=float(tol),
+        A, b, c, ub, m=m, n=n, max_iters=int(max_iters), tol=float(tol),
         feas_tol=float(feas_tol), phase_compaction=bool(phase_compaction),
         pricing=canonicalize_rule(pricing))
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),

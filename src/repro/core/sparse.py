@@ -1,0 +1,302 @@
+"""Shared-pattern sparse batches + the sparse first-order solver.
+
+The paper's batching premise — B LPs of *identical shape* solved in lockstep
+— extends one level deeper for the workloads that actually motivate batching
+(``io.mps.perturbed_batch``: one Netlib-style instance, B perturbations):
+every batch member shares a single **sparsity pattern** and differs only in
+its nonzero *values*.  Netlib-like LPs are 1-2% dense, so the dense
+``(B, m, n)`` einsum pair that powers core/pdhg.py spends ~98% of its reads
+on structural zeros.
+
+``SparseLPBatch`` stores that workload natively: one ``(nnz,)`` coordinate
+pattern (rows, cols) shared across the batch and a ``(B, nnz)`` value array.
+The two PDHG matvecs become a gather + segment-scatter pair
+
+    (A x)_i   = sum over k with rows[k] == i of  vals[:, k] * x[:, cols[k]]
+    (A^T y)_j = sum over k with cols[k] == j of  vals[:, k] * y[:, rows[k]]
+
+so per-iteration element traffic is ``2*nnz + 2*(m+n)`` instead of
+``2*m*n + 2*(m+n)`` (see ``analysis.lp_perf.sparse_matvec_flops``).  The
+pattern is a *compile-time constant* (NumPy indices baked into the jitted
+computation), which is exactly what the shared-pattern restriction buys:
+one compilation serves the whole batch, gathers vectorize over B.
+
+Everything downstream of the matvecs — Ruiz equilibration, power-iteration
+step sizes, the fused round/restart/certificate logic, extraction — is the
+*same code* as the dense engine: core/pdhg.py touches A only through an
+injectable ``Matvecs`` pair, and this module supplies the sparse pair.
+Statuses/objectives therefore agree with dense PDHG to working precision
+(the sums merely associate differently).
+
+Only the first-order engine has a sparse entry point
+(``backend_spec("pdhg").supports_sparse``): the simplex engines' tableaux
+and basis factors fill in after a handful of pivots regardless of input
+sparsity, so they stay dense by design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lp import LPBatch, LPResult
+from .pdhg import (
+    CHECK_EVERY,
+    OMEGA_MAX,
+    OMEGA_MIN,
+    POWER_ITERS,
+    RUIZ_ITERS,
+    STEP_SAFETY,
+    Matvecs,
+    PdhgState,
+    _check_pdhg_pricing,
+    _RUNNING,
+    default_pdhg_max_iters,
+    extract_pdhg,
+    pdhg_round,
+)
+
+
+def sparse_pdhg_elements(nnz: int, m: int, n: int) -> int:
+    """State elements touched per sparse PDHG iteration: the two matvecs
+    read the (B, nnz) values twice and write the four length-m/n vectors —
+    the sparse counterpart of ``pdhg.pdhg_elements``."""
+    return 2 * nnz + 2 * (m + n)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLPBatch:
+    """B LPs ``max c.x s.t. Ax <= b, 0 <= x <= ub`` sharing one sparsity
+    pattern: COO coordinates ``(rows, cols)`` of length nnz (host NumPy —
+    they become compile-time gather indices) and per-LP values ``(B, nnz)``.
+
+    The batch is in **canonical form** by construction (inequality rows,
+    nonnegative variables, optional native upper bounds); build one from an
+    already-canonical dense ``LPBatch`` via ``from_dense``."""
+
+    rows: np.ndarray            # (nnz,) int32 row coordinate of each entry
+    cols: np.ndarray            # (nnz,) int32 col coordinate
+    vals: np.ndarray            # (B, nnz) per-LP values
+    b: np.ndarray               # (B, m)
+    c: np.ndarray               # (B, n)
+    m: int
+    n: int
+    ub: Optional[np.ndarray] = None   # (B, n) or None (all +inf)
+
+    @property
+    def batch(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def nnz(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def density(self) -> float:
+        return self.nnz / float(self.m * self.n)
+
+    def upper_bounds(self) -> np.ndarray:
+        if self.ub is None:
+            return np.full((self.batch, self.n), np.inf)
+        return np.asarray(self.ub)
+
+    @staticmethod
+    def from_dense(batch: LPBatch, tol: float = 0.0) -> "SparseLPBatch":
+        """Extract the shared pattern as the union of per-LP nonzeros
+        (entries with |A| > tol in *any* member).  Members where a pattern
+        entry happens to be zero simply carry a zero value — the pattern is
+        shared, the values are not."""
+        A = np.asarray(batch.A)
+        mask = (np.abs(A) > tol).any(axis=0)
+        rows, cols = np.nonzero(mask)
+        return SparseLPBatch(
+            rows=rows.astype(np.int32), cols=cols.astype(np.int32),
+            vals=np.ascontiguousarray(A[:, rows, cols]),
+            b=np.asarray(batch.b), c=np.asarray(batch.c),
+            m=batch.m, n=batch.n, ub=batch.ub)
+
+    def to_dense(self) -> LPBatch:
+        """Materialize the dense ``(B, m, n)`` batch (A/B reference)."""
+        A = np.zeros((self.batch, self.m, self.n), self.vals.dtype)
+        A[:, self.rows, self.cols] = self.vals
+        return LPBatch.from_arrays(A, self.b, self.c, ub=self.ub)
+
+
+def sparse_matvecs(rows, cols, m: int, n: int) -> Matvecs:
+    """The shared-pattern matvec pair as a ``pdhg.Matvecs`` closure over
+    the (host-constant) pattern.  ``data`` is the (B, nnz) value array."""
+    rows = jnp.asarray(np.asarray(rows, np.int32))
+    cols = jnp.asarray(np.asarray(cols, np.int32))
+
+    def ax(vals, x):
+        B = vals.shape[0]
+        prod = vals * x[:, cols]
+        return jnp.zeros((B, m), vals.dtype).at[:, rows].add(prod)
+
+    def aty(vals, y):
+        B = vals.shape[0]
+        prod = vals * y[:, rows]
+        return jnp.zeros((B, n), vals.dtype).at[:, cols].add(prod)
+
+    return Matvecs(ax=ax, aty=aty)
+
+
+def _ruiz_equilibrate_sparse(vals, rows, cols, m: int, n: int,
+                             iters: int = RUIZ_ITERS):
+    """Sparse twin of ``pdhg.ruiz_equilibrate``: row/col inf-norms via
+    segment scatter-max over the pattern.  Empty rows/columns keep scale 1
+    (their scattered max stays 0, exactly the dense all-zero case)."""
+    B = vals.shape[0]
+    av = jnp.abs(vals)
+    r = jnp.ones((B, m), vals.dtype)
+    s = jnp.ones((B, n), vals.dtype)
+
+    def body(_, rs):
+        r, s = rs
+        W = av * r[:, rows] * s[:, cols]
+        rn = jnp.zeros((B, m), vals.dtype).at[:, rows].max(W)
+        r = r / jnp.sqrt(jnp.where(rn > 0, rn, 1.0))
+        W = av * r[:, rows] * s[:, cols]
+        cn = jnp.zeros((B, n), vals.dtype).at[:, cols].max(W)
+        s = s / jnp.sqrt(jnp.where(cn > 0, cn, 1.0))
+        return r, s
+
+    return jax.lax.fori_loop(0, iters, body, (r, s))
+
+
+def _power_sigma_max_mv(vals, mv: Matvecs, n: int,
+                        iters: int = POWER_ITERS) -> jax.Array:
+    """``pdhg.power_sigma_max`` through the injectable matvecs."""
+    B = vals.shape[0]
+    v = jnp.full((B, n), 1.0 / np.sqrt(n), vals.dtype)
+
+    def body(_, v):
+        w = mv.aty(vals, mv.ax(vals, v))
+        nw = jnp.linalg.norm(w, axis=1, keepdims=True)
+        return w / jnp.where(nw > 0, nw, 1.0)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return jnp.maximum(jnp.linalg.norm(mv.ax(vals, v), axis=1), 1e-12)
+
+
+def init_pdhg_state_sparse(vals, b, c, ub, rows, cols, m: int, n: int,
+                           mv: Matvecs) -> PdhgState:
+    """Sparse twin of ``pdhg.init_pdhg_state``: identical state layout with
+    ``PdhgState.A`` holding the (B, nnz) *scaled value array* — every
+    downstream consumer touches it only through ``mv``."""
+    B = vals.shape[0]
+    dtype = vals.dtype
+    binf = jnp.abs(b).max(axis=1)
+    cinf = jnp.abs(c).max(axis=1)
+    r, s = _ruiz_equilibrate_sparse(vals, rows, cols, m, n)
+    vs = vals * r[:, rows] * s[:, cols]
+    bs = b * r
+    cs = c * s
+    if ub is None:
+        ubs = jnp.full((B, n), jnp.inf, dtype)
+    else:
+        ubs = (jnp.asarray(ub, dtype) / s).astype(dtype)
+    eta = STEP_SAFETY / _power_sigma_max_mv(vs, mv, n)
+    nc = jnp.linalg.norm(cs, axis=1)
+    nb = jnp.linalg.norm(bs, axis=1)
+    omega = jnp.sqrt(jnp.where((nc > 0) & (nb > 0),
+                               nc / jnp.maximum(nb, 1e-12), 1.0))
+    omega = jnp.clip(omega, OMEGA_MIN, OMEGA_MAX)
+    return PdhgState(
+        A=vs, b=bs, c=cs, rsc=r, csc=s, ub=ubs,
+        eta=eta[:, None].astype(dtype),
+        omega=omega[:, None].astype(dtype),
+        binf=binf, cinf=cinf,
+        x=jnp.zeros((B, n), dtype), y=jnp.zeros((B, m), dtype),
+        xs=jnp.zeros((B, n), dtype), ys=jnp.zeros((B, m), dtype),
+        xr=jnp.zeros((B, n), dtype), yr=jnp.zeros((B, m), dtype),
+        cnt=jnp.zeros((B,), dtype),
+        last_res=jnp.full((B,), jnp.inf, dtype),
+        prev_res=jnp.full((B,), jnp.inf, dtype),
+        phase=jnp.full((B,), 2, jnp.int32),
+        status=jnp.full((B,), _RUNNING, jnp.int32),
+        iters=jnp.zeros((B,), jnp.int32))
+
+
+# One jitted whole-solve per pattern: the coordinates are baked into the
+# computation as constants, so the cache key is the pattern (plus shape).
+# Re-solving perturbed batches of the same instance — the intended workload
+# — hits both this cache and jit's own.
+_CORE_CACHE: dict = {}
+
+
+def _sparse_core(rows: np.ndarray, cols: np.ndarray, m: int, n: int):
+    key = (rows.tobytes(), cols.tobytes(), m, n)
+    core = _CORE_CACHE.get(key)
+    if core is not None:
+        return core
+    mv = sparse_matvecs(rows, cols, m, n)
+    r_idx = np.asarray(rows, np.int32)
+    c_idx = np.asarray(cols, np.int32)
+
+    @functools.partial(jax.jit,
+                       static_argnames=("max_iters", "tol", "check_every"))
+    def core(vals, b, c, ub, *, max_iters, tol, check_every):
+        state = init_pdhg_state_sparse(vals, b, c, ub, r_idx, c_idx,
+                                       m, n, mv)
+        rounds = -(-int(max_iters) // int(check_every))
+
+        def cond(carry):
+            s, it = carry
+            return jnp.any(s.status == _RUNNING) & (it < rounds)
+
+        def body(carry):
+            s, it = carry
+            return (pdhg_round(s, tol=tol, check_every=check_every, mv=mv),
+                    it + 1)
+
+        state, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+        return extract_pdhg(state, mv)
+
+    _CORE_CACHE[key] = core
+    return core
+
+
+def solve_batched_pdhg_sparse(batch: SparseLPBatch, *, dtype=jnp.float32,
+                              tol: Optional[float] = None,
+                              feas_tol: Optional[float] = None,
+                              max_iters: Optional[int] = None,
+                              check_every: int = CHECK_EVERY,
+                              pricing: str = "dantzig") -> LPResult:
+    """Restarted PDHG over a shared-pattern sparse batch — the
+    ``resolve_backend("pdhg", sparse=True)`` entry point.
+
+    Same tolerance semantics and LPResult contract as
+    ``pdhg.solve_batched_pdhg`` (statuses at ``tol``, native primal-dual
+    certificate in ``y``/``z``); per-iteration element traffic is
+    ``sparse_pdhg_elements(nnz, m, n)`` instead of the dense
+    ``pdhg_elements(m, n)``.  Accepts ``SparseLPBatch`` only — for dense
+    batches use the dense entry point, or ``SparseLPBatch.from_dense``
+    when the pattern is genuinely shared and sparse."""
+    if not isinstance(batch, SparseLPBatch):
+        raise TypeError(
+            "solve_batched_pdhg_sparse takes a SparseLPBatch; wrap a "
+            "canonical dense batch with SparseLPBatch.from_dense(batch) "
+            "or call the dense solver")
+    _check_pdhg_pricing(pricing)
+    del feas_tol
+    m, n = batch.m, batch.n
+    if max_iters is None:
+        max_iters = default_pdhg_max_iters(m, n)
+    if tol is None:
+        tol = 1e-5 if dtype == jnp.float32 else 1e-8
+    core = _sparse_core(np.asarray(batch.rows, np.int32),
+                        np.asarray(batch.cols, np.int32), m, n)
+    x, obj, status, iters, y, z = core(
+        jnp.asarray(batch.vals, dtype), jnp.asarray(batch.b, dtype),
+        jnp.asarray(batch.c, dtype),
+        jnp.asarray(batch.upper_bounds(), dtype),
+        max_iters=int(max_iters), tol=float(tol),
+        check_every=int(check_every))
+    return LPResult(x=np.asarray(x), objective=np.asarray(obj),
+                    status=np.asarray(status), iterations=np.asarray(iters),
+                    y=np.asarray(y), z=np.asarray(z))

@@ -33,7 +33,7 @@ _FIXTURE_DIR = os.path.join(
 
 # The vendored general-form instances (tests/fixtures/README.md has the
 # provenance notes).  Benchmarks and configs address them by these names.
-FIXTURE_NAMES = ("afiro", "sc50b_like", "testprob")
+FIXTURE_NAMES = ("afiro", "sc50b_like", "sc205_like", "testprob")
 
 
 def fixture_path(name: str) -> str:

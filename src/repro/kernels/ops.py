@@ -53,8 +53,9 @@ from repro.core.compaction import (
 from repro.core.pricing import canonicalize_rule
 from repro.core.simplex import _RUNNING, scatter_solution
 from .simplex_tile import (
-    _compact_tile, _compact_tile_weights, _init_tile_weights,
-    build_padded_tableau, pick_tile_b, segment_pallas, simplex_pallas,
+    _compact_tile, _compact_tile_lane, _compact_tile_weights,
+    _init_tile_weights, build_padded_tableau, pick_tile_b, segment_pallas,
+    simplex_pallas,
 )
 from .hyperbox_kernel import hyperbox_pallas
 
@@ -81,6 +82,11 @@ def _compact_padded_weights_jit(w, *, m, n):
     return _compact_tile_weights(w, m=m, n=n)
 
 
+@functools.partial(jax.jit, static_argnames=("fill", "m", "n"))
+def _compact_padded_lane_jit(v, *, fill, m, n):
+    return _compact_tile_lane(v, fill, m=m, n=n)
+
+
 @functools.partial(jax.jit, static_argnames=("m", "rule"))
 def _init_padded_weights_jit(T, *, m, rule):
     row_ids = jax.lax.broadcasted_iota(jnp.int32, T.shape[:2], 1)
@@ -88,16 +94,19 @@ def _init_padded_weights_jit(T, *, m, rule):
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n"))
-def _extract_padded_jit(T, basis, status, iters, *, m, n):
+def _extract_padded_jit(T, basis, status, iters, flip, ub, *, m, n):
     C = T.shape[2]
     rows = T.shape[1]
     rhs = T[:, :, C - 1]
     x = scatter_solution(rhs, basis[:, :rows], n)
+    # complemented structural lanes store ub - x; nonbasic-at-upper reads ub
+    flip_x = flip[:, :n] != 0
+    x = jnp.where(flip_x, ub[:, :n] - x, x)
     obj = -T[:, m, C - 1]
     # dual certificate off the padded tableau (structural + slack columns
     # keep their unpadded positions; see core.simplex.extract_duals)
     y = -T[:, m, n:n + m]
-    z = T[:, m, :n]
+    z = jnp.where(flip_x, -T[:, m, :n], T[:, m, :n])
     status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
     opt = (status == OPTIMAL)[:, None]
@@ -119,27 +128,32 @@ class PallasBackend(JaxBackend):
         self.interpret = bool(interpret)
         self.pad_multiple = self.tile_b
 
-    def init(self, A, b, c) -> CompactionState:
-        T, basis, phase, thr, _, _ = build_padded_tableau(
-            A, b, c, self.tile_b, feas_tol=self.feas_tol)
+    def init(self, A, b, c, ub=None) -> CompactionState:
+        T, basis, phase, thr, ub_lane, _, _ = build_padded_tableau(
+            A, b, c, self.tile_b, feas_tol=self.feas_tol, ub=ub)
         B_pad = T.shape[0]
         # dantzig never reads weights: a (B, 1) stub keeps the segment
         # kernels from streaming a dead (B, C) lane row through HBM
         w = (jnp.ones((B_pad, 1), T.dtype) if self.rule in ("dantzig", "partial")
              else _init_padded_weights_jit(T, m=self.m, rule=self.rule))
+        # flip parity and bound lane rows ride the state so bucket gathers
+        # keep them aligned with their tableaux (ub is kernel-read-only)
         return CompactionState(
             T=T, basis=basis, phase=phase,
             status=jnp.full((B_pad, 1), _RUNNING, jnp.int32),
-            iters=jnp.zeros((B_pad, 1), jnp.int32), w=w, thr=thr)
+            iters=jnp.zeros((B_pad, 1), jnp.int32), w=w,
+            flip=jnp.zeros((B_pad, T.shape[2]), jnp.int32), ub=ub_lane,
+            thr=thr)
 
     def _run(self, state: CompactionState, steps: int, stage: str):
-        T, basis, w, phase, status, iters, it = segment_pallas(
-            jnp.int32(steps), state.T, state.basis, state.w, state.phase,
-            state.thr, state.status, state.iters, stage=stage, m=self.m,
-            n=self.n, tile_b=self.tile_b, tol=self.tol,
-            interpret=self.interpret, pricing=self.rule)
+        T, basis, w, flip, phase, status, iters, it = segment_pallas(
+            jnp.int32(steps), state.T, state.basis, state.w, state.flip,
+            state.ub, state.phase, state.thr, state.status, state.iters,
+            stage=stage, m=self.m, n=self.n, tile_b=self.tile_b,
+            tol=self.tol, interpret=self.interpret, pricing=self.rule)
         new = CompactionState(T=T, basis=basis, phase=phase, status=status,
-                              iters=iters, w=w, thr=state.thr)
+                              iters=iters, w=w, flip=flip, ub=state.ub,
+                              thr=state.thr)
         return new, int(np.max(np.asarray(it)))
 
     def run_phase1(self, state, steps):
@@ -152,12 +166,17 @@ class PallasBackend(JaxBackend):
         w = (state.w if self.rule in ("dantzig", "partial")
              else _compact_padded_weights_jit(state.w, m=self.m, n=self.n))
         return state._replace(
-            T=_compact_padded_jit(state.T, m=self.m, n=self.n), w=w)
+            T=_compact_padded_jit(state.T, m=self.m, n=self.n), w=w,
+            flip=_compact_padded_lane_jit(state.flip, fill=0, m=self.m,
+                                          n=self.n),
+            ub=_compact_padded_lane_jit(state.ub, fill=float("inf"),
+                                        m=self.m, n=self.n))
 
     def extract(self, state: CompactionState, stage: str):
         return tuple(np.asarray(o) for o in _extract_padded_jit(
             state.T, state.basis, state.status.reshape(-1),
-            state.iters.reshape(-1), m=self.m, n=self.n))
+            state.iters.reshape(-1), state.flip, state.ub,
+            m=self.m, n=self.n))
 
 
 def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
@@ -227,7 +246,9 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
             tile_b = pick_pdhg_tile_b(m, n, vmem_budget)
         x, obj, status, iters, y, z = pdhg_pallas(
             jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
-            jnp.asarray(batch.c, dtype), m=m, n=n, tile_b=int(tile_b),
+            jnp.asarray(batch.c, dtype),
+            jnp.asarray(batch.upper_bounds(), dtype),
+            m=m, n=n, tile_b=int(tile_b),
             max_iters=int(max_iters), tol=float(tol), interpret=interpret)
         return finish_result(rec, LPResult(
             x=np.asarray(x), objective=np.asarray(obj),
@@ -252,12 +273,13 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
     A = jnp.asarray(batch.A, dtype)
     b = jnp.asarray(batch.b, dtype)
     c = jnp.asarray(batch.c, dtype)
+    ub = jnp.asarray(batch.upper_bounds(), dtype)
 
     if compaction:
         runner = PallasBackend(m, n, tol, feas_tol, tile_b,
                                interpret=interpret, dtype=dtype,
                                pricing=pricing)
-        state = runner.init(A, b, c)
+        state = runner.init(A, b, c, ub=ub)
         B = batch.batch
         B_pad = state.T.shape[0]
         orig = np.concatenate(
@@ -274,7 +296,7 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                                                stats_out=stats_out))
 
     x, obj, status, iters, y, z = simplex_pallas(
-        A, b, c, m=m, n=n, tile_b=int(tile_b), max_iters=int(max_iters),
+        A, b, c, ub, m=m, n=n, tile_b=int(tile_b), max_iters=int(max_iters),
         tol=float(tol), feas_tol=float(feas_tol), interpret=interpret,
         pricing=pricing)
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),

@@ -29,9 +29,13 @@ treat (A, b, c, scales, steps) as pure inputs.
 
 Layout: A is (tile_b, M, N) with M = round8(m), N = round128(n); length-n
 vectors ride as (tile_b, N) lane rows, length-m vectors as (tile_b, M)
-rows (same convention as the simplex tile's ``basis``).  Zero padding is
-inert by construction: padded rows/columns have A = 0, b = 0, c = 0 and
-unit scales, so iterates, residuals and Farkas certificates never see
+rows (same convention as the simplex tile's ``basis``).  Upper bounds are
+one more (tile_b, N) lane row (scaled, +inf on free and padded lanes):
+the prox clips to [0, ub], bounded columns move their reduced cost into
+the dual objective, and the Farkas rays get the bounded-column
+relaxation/projection — all mirroring core/pdhg.py exactly.  Zero padding
+is inert by construction: padded rows/columns have A = 0, b = 0, c = 0
+and unit scales, so iterates, residuals and Farkas certificates never see
 them; padded batch slots are all-zero LPs that converge on their first
 check.  Validated under ``interpret=True`` like the simplex tiles.
 """
@@ -93,7 +97,7 @@ def _mtv(A, y):
 
 
 def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
-                 binf_ref, cinf_ref,
+                 binf_ref, cinf_ref, ub_ref,
                  x_out, obj_out, status_out, iters_out, y_out, z_out,
                  *, tol: float, max_rounds: int, check_every: int):
     """Whole-solve kernel: rounds of ``check_every`` fused PDHG iterations
@@ -109,8 +113,11 @@ def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
     om0 = om_ref[...]
     binf = binf_ref[...]
     cinf = cinf_ref[...]
+    ub = ub_ref[...]            # (tile_b, N) scaled upper bounds, +inf free
     tile_b, M, N = A.shape
     dtype = A.dtype
+    fin = jnp.isfinite(ub)
+    ubm = jnp.where(fin, ub, 0.0)
 
     zeros_n = jnp.zeros((tile_b, N), dtype)
     zeros_m = jnp.zeros((tile_b, M), dtype)
@@ -121,10 +128,14 @@ def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
         aty = _mtv(A, y)
         rp = jnp.max(jnp.maximum(ax - b, 0.0) / r, axis=1, keepdims=True) \
             / (1.0 + binf)
-        rd = jnp.max(jnp.maximum(c - aty, 0.0) / s, axis=1, keepdims=True) \
+        # bounded columns: positive reduced cost is absorbed by the bound
+        # dual w_j = (c - A^T y)_j+ (core.pdhg.kkt_residuals)
+        zc = jnp.maximum(c - aty, 0.0)
+        rd = jnp.max(jnp.where(fin, 0.0, zc) / s, axis=1, keepdims=True) \
             / (1.0 + cinf)
         pobj = jnp.sum(c * x, axis=1, keepdims=True)
-        dobj = jnp.sum(b * y, axis=1, keepdims=True)
+        dobj = jnp.sum(b * y, axis=1, keepdims=True) \
+            + jnp.sum(ubm * zc, axis=1, keepdims=True)
         gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
         return jnp.maximum(jnp.maximum(rp, rd), gap)
 
@@ -143,7 +154,8 @@ def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
         def step(_, st):
             x, y, xs, ys, cnt = st
             aty = _mtv(A, y)
-            xn = jnp.maximum(x + tau * (c - aty), 0.0)
+            # prox of the [0, ub] indicator: clip (ub = +inf -> max)
+            xn = jnp.clip(x + tau * (c - aty), 0.0, ub)
             ax2 = _mv(A, 2.0 * xn - x)
             yn = jnp.maximum(y + sig * (ax2 - b), 0.0)
             x = jnp.where(active, xn, x)
@@ -174,14 +186,21 @@ def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
         ray_scale = 1.0 + binf + cinf
         yinf = jnp.max(jnp.abs(y * r), axis=1, keepdims=True)
         yh = y / jnp.maximum(yinf, 1e-12)
-        aty_u = _mtv(A, yh) / s
+        aty_s = _mtv(A, yh)
+        aty_u = aty_s / s
         by_u = jnp.sum(b * yh, axis=1, keepdims=True)
+        # bounded columns relax the dual ray at cost u_j (A^T yh)_j^-
+        uw = jnp.sum(ubm * jnp.maximum(-aty_s, 0.0), axis=1, keepdims=True)
         infeas = test & (yinf > RAY_MIN_NORM) \
-            & (jnp.min(aty_u, axis=1, keepdims=True)
+            & (jnp.min(jnp.where(fin, jnp.inf, aty_u), axis=1,
+                       keepdims=True)
                >= -CERT_TOL * ray_scale) \
-            & (by_u <= -CERT_TOL * ray_scale)
-        xinf = jnp.max(jnp.abs(x * s), axis=1, keepdims=True)
-        xh = x / jnp.maximum(xinf, 1e-12)
+            & (by_u + uw <= -CERT_TOL * ray_scale)
+        # primal ray projected onto unbounded columns (bounded coordinates
+        # cannot recede; an all-bounded LP has xinf == 0, never classified)
+        xray = jnp.where(fin, 0.0, x)
+        xinf = jnp.max(jnp.abs(xray * s), axis=1, keepdims=True)
+        xh = xray / jnp.maximum(xinf, 1e-12)
         ax_u = _mv(A, xh) / r
         cx_u = jnp.sum(c * xh, axis=1, keepdims=True)
         unbounded = test & (xinf > RAY_MIN_NORM) \
@@ -243,16 +262,17 @@ def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
     jax.jit,
     static_argnames=("m", "n", "tile_b", "max_iters", "tol", "check_every",
                      "interpret"))
-def pdhg_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
-                tol: float, check_every: int = CHECK_EVERY,
+def pdhg_pallas(A, b, c, ub=None, *, m: int, n: int, tile_b: int,
+                max_iters: int, tol: float, check_every: int = CHECK_EVERY,
                 interpret: bool = True):
     """Solve the batch with the whole-solve PDHG tile kernel.  Returns
     (x, obj, status, iters, y, z) for the original (unpadded) batch —
-    the same 6-tuple contract as every solve body."""
+    the same 6-tuple contract as every solve body.  ``ub`` is an optional
+    (B, n) array of upper bounds (+inf = free above)."""
     B = A.shape[0]
     dtype = A.dtype
     # setup outside the kernel: equilibration + step sizes (jitted JAX)
-    s0 = init_pdhg_state(A, b, c)
+    s0 = init_pdhg_state(A, b, c, ub)
     M, N = pdhg_dims(m, n)
     B_pad = _round_up(B, tile_b)
 
@@ -269,6 +289,8 @@ def pdhg_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
     omp = pad(s0.omega, 1, 1.0)
     binfp = pad(s0.binf[:, None], 1)
     cinfp = pad(s0.cinf[:, None], 1)
+    # padded lanes carry +inf (A = c = 0 there, so iterates stay 0 anyway)
+    ubp = pad(s0.ub, N, jnp.inf)
 
     grid = (B_pad // tile_b,)
     rounds = -(-int(max_iters) // int(check_every))
@@ -289,6 +311,7 @@ def pdhg_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
+            pl.BlockSpec((tile_b, N), vec),
         ],
         out_specs=[
             pl.BlockSpec((tile_b, N), vec),
@@ -307,6 +330,6 @@ def pdhg_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
             jax.ShapeDtypeStruct((B_pad, N), dtype),
         ],
         interpret=interpret,
-    )(Ap, bp, cp, rp, sp, etap, omp, binfp, cinfp)
+    )(Ap, bp, cp, rp, sp, etap, omp, binfp, cinfp, ubp)
     return (x[:B, :n], obj[:B, 0], status[:B, 0].astype(jnp.int8),
             iters[:B, 0], y[:B, :m], z[:B, :n])

@@ -13,10 +13,11 @@ from repro.core.simplex import solve_batched_jax
 from repro.core.hyperbox import solve_hyperbox
 
 
-def simplex_ref(A, b, c, *, max_iters: int, tol: float = 1e-6):
+def simplex_ref(A, b, c, ub=None, *, max_iters: int, tol: float = 1e-6):
     """Returns (x, obj, status, iters) matching kernels.simplex_tile output."""
     import numpy as np
-    batch = LPBatch(A=np.asarray(A), b=np.asarray(b), c=np.asarray(c))
+    batch = LPBatch(A=np.asarray(A), b=np.asarray(b), c=np.asarray(c),
+                    ub=None if ub is None else np.asarray(ub))
     res = solve_batched_jax(batch, max_iters=max_iters, tol=tol)
     return res.x, res.objective, res.status, res.iterations
 

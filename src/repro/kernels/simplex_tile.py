@@ -83,22 +83,35 @@ def full_dims(m: int, n: int) -> Tuple[int, int]:
     return _round_up(m + 2, 8), _round_up(n + 2 * m + 1, 128)
 
 
-def _tile_min_ratio(T, col_full, row_ids, pin_rows, *, m: int, tol: float):
+def _tile_min_ratio(T, col_full, row_ids, pin_rows, basis, ub, lane,
+                    *, m: int, tol: float):
     """Step 2: sentinel min-ratio over the constraint rows (lane-axis argmin).
-    Returns (l, no_row).  ``pin_rows`` marks rows whose basic variable is an
-    artificial pinned at zero (phase 2): when the entering column would grow
-    one (negative coefficient), that row leaves at ratio 0 instead — the
-    same escape-prevention rule as core.simplex.simplex_step."""
+    Returns (l, no_row, min_ratio).  ``pin_rows`` marks rows whose basic
+    variable is an artificial pinned at zero (phase 2): when the entering
+    column would grow one (negative coefficient), that row leaves at ratio 0
+    instead — the same escape-prevention rule as core.simplex.simplex_step.
+
+    Bounded case (b) rides in between (mirrors core.simplex._bounded_ratios):
+    a basic variable the entering column drives *up* (col < -tol) binds at
+    its own finite upper bound at ``(ub_B - rhs) / (-col)``.  ``ub`` is the
+    (tile_b, C) lane row with +inf on every non-structural lane, so the
+    basic bound is a min-select over the basis one-hot (min, not sum —
+    inf * 0 poisons a sum) and all-+inf bounds reduce to the classic test."""
     C = T.shape[2]
     col = jnp.where(row_ids < m, col_full, 0.0)
     rhs = T[:, :, C - 1]                                        # (tile_b, R)
     valid = col > tol
     ratios = jnp.where(valid, rhs / jnp.where(valid, col, 1.0), BIG)
+    b_rows = basis[:, :row_ids.shape[1]]
+    hitb = lane[:, None, :] == b_rows[:, :, None]       # (tile_b, R, C)
+    ubB = jnp.min(jnp.where(hitb, ub[:, None, :], jnp.inf), axis=2)
+    hit = (col < -tol) & jnp.isfinite(ubB)
+    ratios = jnp.where(hit, (ubB - rhs) / jnp.where(hit, -col, 1.0), ratios)
     ratios = jnp.where(pin_rows & (col < -tol), 0.0, ratios)
     min_ratio = jnp.min(ratios, axis=1, keepdims=True)
     l = jnp.argmin(ratios, axis=1)[:, None]                     # (tile_b, 1)
     no_row = min_ratio >= BIG / 2
-    return l, no_row
+    return l, no_row, min_ratio
 
 
 def _tile_select(masked_cost, w, *, rule: str, tol: float):
@@ -116,20 +129,67 @@ def _tile_select(masked_cost, w, *, rule: str, tol: float):
     return e, max_cost
 
 
-def _tile_pivot(T, basis, w, col_full, row_ids, lane, e, l, do_pivot,
-                *, m: int, n: int, rule: str):
+def _tile_flip(T, flip, ub, lane, col_full, e, t_e, wants_pivot, no_row,
+               min_ratio):
+    """Entering-bound flip (core.simplex._bound_moves, first move) on the
+    lane-padded tile: when the entering variable hits its own finite upper
+    bound before any basic variable binds (``t_e < min_ratio``), complement
+    it in place — ``rhs -= t_e * col`` on every row (objective rows
+    included) and negate the column — no pivot, no weight update (column
+    negation is norm-invariant for the d^2/w pricing scores).  ``flip`` is
+    the (tile_b, C) 0/1 complement-parity lane row."""
+    C = T.shape[2]
+    dtype = T.dtype
+    do_flip = wants_pivot & (t_e < min_ratio)
+    do_pivot = wants_pivot & ~no_row & ~do_flip
+    is_rhs = (lane == C - 1).astype(dtype)                      # (tile_b, C)
+    ub_e_term = jnp.where(do_flip, t_e, 0.0)
+    T = T - (ub_e_term * col_full)[:, :, None] * is_rhs[:, None, :]
+    flip_e = do_flip & (lane == e)
+    sign = jnp.where(flip_e, -1.0, 1.0).astype(dtype)
+    T = T * sign[:, None, :]
+    flip = flip ^ flip_e.astype(flip.dtype)
+    return T, flip, do_flip, do_pivot
+
+
+def _tile_pivot(T, basis, w, flip, ub, col_full, row_ids, lane, e, l,
+                do_pivot, *, m: int, n: int, rule: str):
     """Step 3: rank-1 pivot update + basis update, shared by the full and
     compacted tile steps (one copy keeps them bit-for-bit in sync with each
     other and with the pure-JAX `_pivot_update`).  The pricing-weight
     recurrence is fused here exactly as in the pure-JAX path: steepest-edge
     recomputes exact gammas off the live updated tile, devex applies its
     O(C) multiplicative update (with the non-priceable-column pin — see
-    core.pricing.update_weights), dantzig passes weights through untouched."""
+    core.pricing.update_weights), dantzig passes weights through untouched.
+
+    Leaving-at-upper complement (core.simplex._bound_moves, second move):
+    a negative pivot element on a structural basic means the min ratio came
+    from that variable hitting *its* upper bound.  Its tableau column is a
+    unit vector, so complementing it reduces to rewriting the extracted
+    pivot row — negate it, ``rhs_l -> ub_l - rhs_l``, restore the +1 basic
+    entry — after which the pivot element is positive and the rank-1
+    update proceeds classically."""
     dtype = T.dtype
+    C = T.shape[2]
     is_l = row_ids == l                                         # (tile_b, R)
     pe = jnp.sum(col_full * is_l.astype(dtype), axis=1, keepdims=True)
+    pivrow_raw = jnp.sum(T * is_l.astype(dtype)[:, :, None], axis=1)
+
+    jl = jnp.sum(jnp.where(is_l & (row_ids < m), basis[:, :row_ids.shape[1]],
+                           0), axis=1, keepdims=True)           # (tile_b, 1)
+    need_comp = do_pivot & (pe < 0) & (jl < n)
+    is_jl = lane == jl                                          # (tile_b, C)
+    ub_jl = jnp.min(jnp.where(is_jl, ub, jnp.inf), axis=1, keepdims=True)
+    comp_row = -pivrow_raw
+    comp_row = comp_row + (jnp.where(need_comp, ub_jl, 0.0)
+                           * (lane == C - 1).astype(dtype))
+    comp_row = jnp.where(is_jl, 1.0, comp_row)
+    pivrow_raw = jnp.where(need_comp, comp_row, pivrow_raw)
+    pe = jnp.where(need_comp, -pe, pe)
+    flip = flip ^ (need_comp & is_jl).astype(flip.dtype)
+
     pe_safe = jnp.where(do_pivot, pe, 1.0)
-    pivrow = jnp.sum(T * is_l.astype(dtype)[:, :, None], axis=1) / pe_safe
+    pivrow = pivrow_raw / pe_safe
     T_new = T - col_full[:, :, None] * pivrow[:, None, :]
     # replace (not re-add) the pivot row — matches the NumPy oracle
     T_new = jnp.where(is_l[:, :, None], pivrow[:, None, :], T_new)
@@ -160,10 +220,10 @@ def _tile_pivot(T, basis, w, col_full, row_ids, lane, e, l, do_pivot,
     basis_rows = jax.lax.broadcasted_iota(jnp.int32, basis.shape, 1)
     basis = jnp.where(do_pivot & (basis_rows == l) & (basis_rows < m),
                       e.astype(jnp.int32), basis)
-    return T, basis, w
+    return T, basis, w, flip
 
 
-def _tile_step(T, basis, w, phase, status, iters, *, m: int, n: int,
+def _tile_step(T, basis, w, flip, ub, phase, status, iters, *, m: int, n: int,
                tol: float, thr, rule: str = "dantzig"):
     """One combined two-phase pivot across the (tile_b, R, C) tile.
     Broadcast/reduce formulation (no einsum) so every op lowers to
@@ -192,15 +252,18 @@ def _tile_step(T, basis, w, phase, status, iters, *, m: int, n: int,
     onehot_e = (lane == e).astype(dtype)                        # (tile_b, C)
     col_full = jnp.sum(T * onehot_e[:, None, :], axis=2)        # (tile_b, R)
     pin_rows = (phase == 2) & (basis[:, :R] >= n + m) & (row_ids < m)
-    l, no_row = _tile_min_ratio(T, col_full, row_ids, pin_rows, m=m, tol=tol)
+    l, no_row, min_ratio = _tile_min_ratio(T, col_full, row_ids, pin_rows,
+                                           basis, ub, lane, m=m, tol=tol)
 
     wants_pivot = active & ~is_opt
-    unbounded = wants_pivot & no_row & (phase == 2)
-    stuck = wants_pivot & no_row & (phase == 1)
-    do_pivot = wants_pivot & ~no_row
+    t_e = jnp.min(jnp.where(lane == e, ub, jnp.inf), axis=1, keepdims=True)
+    T, flip, do_flip, do_pivot = _tile_flip(
+        T, flip, ub, lane, col_full, e, t_e, wants_pivot, no_row, min_ratio)
+    unbounded = wants_pivot & no_row & ~do_flip & (phase == 2)
+    stuck = wants_pivot & no_row & ~do_flip & (phase == 1)
 
-    T, basis, w = _tile_pivot(T, basis, w, col_full, row_ids, lane, e, l,
-                              do_pivot, m=m, n=n, rule=rule)
+    T, basis, w, flip = _tile_pivot(T, basis, w, flip, ub, col_full, row_ids,
+                                    lane, e, l, do_pivot, m=m, n=n, rule=rule)
 
     status = jnp.where(infeasible, INFEASIBLE, status)
     status = jnp.where(unbounded, UNBOUNDED, status)
@@ -208,11 +271,11 @@ def _tile_step(T, basis, w, phase, status, iters, *, m: int, n: int,
     status = jnp.where(p2_done, OPTIMAL, status)
     phase = jnp.where(to_phase2, 2, phase)
     iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
-    return T, basis, w, phase, status, iters
+    return T, basis, w, flip, phase, status, iters
 
 
-def _tile_step_p2(T, basis, w, phase, status, iters, *, m: int, n: int,
-                  tol: float, rule: str = "dantzig"):
+def _tile_step_p2(T, basis, w, flip, ub, phase, status, iters, *, m: int,
+                  n: int, tol: float, rule: str = "dantzig"):
     """One phase-2 pivot on the **compacted** (tile_b, R2, C2) tile: no
     artificial columns, no phase-1 row, no phase bookkeeping."""
     tile_b, R2, C2 = T.shape
@@ -234,19 +297,22 @@ def _tile_step_p2(T, basis, w, phase, status, iters, *, m: int, n: int,
     # the basis keeps full-stage column indices, so >= n+m still identifies
     # basic artificials on the compacted tile (every LP here is phase 2)
     pin_rows = (basis[:, :R2] >= n + m) & (row_ids < m)
-    l, no_row = _tile_min_ratio(T, col_full, row_ids, pin_rows, m=m, tol=tol)
+    l, no_row, min_ratio = _tile_min_ratio(T, col_full, row_ids, pin_rows,
+                                           basis, ub, lane, m=m, tol=tol)
 
     wants_pivot = active & ~is_opt
-    unbounded = wants_pivot & no_row
-    do_pivot = wants_pivot & ~no_row
+    t_e = jnp.min(jnp.where(lane == e, ub, jnp.inf), axis=1, keepdims=True)
+    T, flip, do_flip, do_pivot = _tile_flip(
+        T, flip, ub, lane, col_full, e, t_e, wants_pivot, no_row, min_ratio)
+    unbounded = wants_pivot & no_row & ~do_flip
 
-    T, basis, w = _tile_pivot(T, basis, w, col_full, row_ids, lane, e, l,
-                              do_pivot, m=m, n=n, rule=rule)
+    T, basis, w, flip = _tile_pivot(T, basis, w, flip, ub, col_full, row_ids,
+                                    lane, e, l, do_pivot, m=m, n=n, rule=rule)
 
     status = jnp.where(unbounded, UNBOUNDED, status)
     status = jnp.where(p2_done, OPTIMAL, status)
     iters = iters + (active & ~p2_done).astype(jnp.int32)
-    return T, basis, w, phase, status, iters
+    return T, basis, w, flip, phase, status, iters
 
 
 def _compact_tile(T, *, m: int, n: int):
@@ -270,6 +336,14 @@ def _compact_tile_weights(w, *, m: int, n: int):
     return w2.at[:, :n + m].set(w[:, :n + m])
 
 
+def _compact_tile_lane(v, fill, *, m: int, n: int):
+    """Phase compaction of a generic lane row (bound vector: fill=+inf,
+    flip parity: fill=0): (B, C) -> (B, C2) keeping the n+m live lanes."""
+    _, C2 = compacted_dims(m, n)
+    v2 = jnp.full(v.shape[:1] + (C2,), fill, v.dtype)
+    return v2.at[:, :n + m].set(v[:, :n + m])
+
+
 def _init_tile_weights(T, row_ids, *, m: int, rule: str):
     """In-VMEM weight init (mirrors core.pricing.init_weights on the padded
     layout): exact gammas for steepest_edge, ones otherwise."""
@@ -279,19 +353,26 @@ def _init_tile_weights(T, row_ids, *, m: int, rule: str):
     return jnp.ones(T.shape[:1] + (T.shape[2],), T.dtype)
 
 
-def _extract_tile(T2, basis, status, *, m: int, n: int, n_pad: int,
+def _extract_tile(T2, basis, status, flip, ub, *, m: int, n: int, n_pad: int,
                   m_pad: int):
     """In-kernel solution extraction from the compacted tile: only
     (x, obj) and the dual certificate leave VMEM — the paper's "D2H-res"
     transfer shape.  The phase-2 objective row holds the certificate for
     free (see core.simplex.extract_duals): slack entries are -y, structural
-    entries are the reduced costs z; both are NaN off-OPTIMAL."""
+    entries are the reduced costs z; both are NaN off-OPTIMAL.
+
+    Flipped (complemented) structural lanes store ``ub - x``: map the
+    primal back with ``x = ub - x_stored`` (a nonbasic-at-upper variable
+    stores 0 and reads back ub) and negate the reduced cost, whose flagged
+    sign means "profitable to *decrease* off the bound"."""
     tile_b, R2, C2 = T2.shape
     rhs = T2[:, :, C2 - 1]                                     # (tile_b, R2)
     b2 = basis[:, :R2]
     xcols = jax.lax.broadcasted_iota(jnp.int32, (tile_b, R2, n_pad), 2)
     hit = (b2[:, :, None] == xcols) & (b2[:, :, None] < n)
     x = jnp.sum(jnp.where(hit, rhs[:, :, None], 0.0), axis=1)
+    flip_x = flip[:, :n_pad] != 0
+    x = jnp.where(flip_x, ub[:, :n_pad] - x, x)
     obj = -T2[:, m, C2 - 1][:, None]
     opt = status == OPTIMAL
     obj = jnp.where(opt, obj, jnp.nan)
@@ -300,69 +381,76 @@ def _extract_tile(T2, basis, status, *, m: int, n: int, n_pad: int,
         axis=1)
     z = jnp.concatenate(
         [T2[:, m, :n], jnp.zeros((tile_b, n_pad - n), T2.dtype)], axis=1)
+    z = jnp.where(flip_x, -z, z)
     y = jnp.where(opt, y, jnp.nan)
     z = jnp.where(opt, z, jnp.nan)
     return x, obj, y, z
 
 
-def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref,
+def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref, ub_ref,
                     x_ref, obj_ref, status_ref, iters_ref, y_ref, z_ref,
                     *, m: int, n: int, tol: float, max_iters: int,
                     rule: str = "dantzig"):
     """Whole-solve kernel: loop 1 (combined step, full tile) -> in-register
     phase compaction -> loop 2 (phase-2 step, compacted tile) -> extraction.
     The loops share one ``max_iters`` budget (loop 2 resumes loop 1's step
-    counter), mirroring core.simplex.solve_two_phase.  Pricing weights are
-    initialized and carried entirely in VMEM — selecting a smarter rule
-    changes zero HBM traffic."""
+    counter), mirroring core.simplex.solve_two_phase.  Pricing weights and
+    the bound-flip parity row are initialized and carried entirely in VMEM —
+    selecting a smarter rule or adding variable bounds changes zero extra
+    HBM traffic beyond the (tile_b, C) bound lane row itself."""
     T = T_ref[...]
     basis = basis_ref[...]
     phase = phase_ref[...]
     thr = thr_ref[...]
-    tile_b, R, _ = T.shape
+    ub = ub_ref[...]
+    tile_b, R, C = T.shape
     status = jnp.full((tile_b, 1), _RUNNING, jnp.int32)
     iters = jnp.zeros((tile_b, 1), jnp.int32)
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_b, R), 1)
     w = _init_tile_weights(T, row_ids, m=m, rule=rule)
+    flip = jnp.zeros((tile_b, C), jnp.int32)
 
     # ---- loop 1: full tile until no LP in the tile still needs phase 1 -----
     def cond1(state):
-        T, basis, w, phase, status, iters, it = state
+        T, basis, w, flip, phase, status, iters, it = state
         pending = (status == _RUNNING) & (phase == 1)
         return jnp.any(pending) & (it < max_iters)
 
     def body1(state):
-        T, basis, w, phase, status, iters, it = state
-        T, basis, w, phase, status, iters = _tile_step(
-            T, basis, w, phase, status, iters, m=m, n=n, tol=tol, thr=thr,
-            rule=rule)
-        return T, basis, w, phase, status, iters, it + 1
+        T, basis, w, flip, phase, status, iters, it = state
+        T, basis, w, flip, phase, status, iters = _tile_step(
+            T, basis, w, flip, ub, phase, status, iters, m=m, n=n, tol=tol,
+            thr=thr, rule=rule)
+        return T, basis, w, flip, phase, status, iters, it + 1
 
-    T, basis, w, phase, status, iters, it1 = jax.lax.while_loop(
-        cond1, body1, (T, basis, w, phase, status, iters, jnp.int32(0)))
+    T, basis, w, flip, phase, status, iters, it1 = jax.lax.while_loop(
+        cond1, body1,
+        (T, basis, w, flip, phase, status, iters, jnp.int32(0)))
     status = jnp.where((status == _RUNNING) & (phase == 1), ITERATION_LIMIT,
                        status)
 
     # ---- phase compaction + loop 2 on the small tile ------------------------
     T2 = _compact_tile(T, m=m, n=n)
     w2 = _compact_tile_weights(w, m=m, n=n)
+    flip2 = _compact_tile_lane(flip, 0, m=m, n=n)
+    ub2 = _compact_tile_lane(ub, jnp.inf, m=m, n=n)
 
     def cond2(state):
-        T2, basis, w2, phase, status, iters, it = state
+        T2, basis, w2, flip2, phase, status, iters, it = state
         return jnp.any(status == _RUNNING) & (it < max_iters)
 
     def body2(state):
-        T2, basis, w2, phase, status, iters, it = state
-        T2, basis, w2, phase, status, iters = _tile_step_p2(
-            T2, basis, w2, phase, status, iters, m=m, n=n, tol=tol,
-            rule=rule)
-        return T2, basis, w2, phase, status, iters, it + 1
+        T2, basis, w2, flip2, phase, status, iters, it = state
+        T2, basis, w2, flip2, phase, status, iters = _tile_step_p2(
+            T2, basis, w2, flip2, ub2, phase, status, iters, m=m, n=n,
+            tol=tol, rule=rule)
+        return T2, basis, w2, flip2, phase, status, iters, it + 1
 
-    T2, basis, w2, phase, status, iters, _ = jax.lax.while_loop(
-        cond2, body2, (T2, basis, w2, phase, status, iters, it1))
+    T2, basis, w2, flip2, phase, status, iters, _ = jax.lax.while_loop(
+        cond2, body2, (T2, basis, w2, flip2, phase, status, iters, it1))
     status = jnp.where(status == _RUNNING, ITERATION_LIMIT, status)
 
-    x, obj, y, z = _extract_tile(T2, basis, status, m=m, n=n,
+    x, obj, y, z = _extract_tile(T2, basis, status, flip2, ub2, m=m, n=n,
                                  n_pad=x_ref.shape[1], m_pad=y_ref.shape[1])
     x_ref[...] = x
     obj_ref[...] = obj
@@ -372,19 +460,22 @@ def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref,
     z_ref[...] = z
 
 
-def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, phase_ref, thr_ref,
-                    status_ref, iters_ref,
-                    T_out, basis_out, w_out, phase_out, status_out, iters_out,
-                    it_out, *, stage: str, m: int, n: int, tol: float,
-                    rule: str = "dantzig"):
+def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, flip_ref, ub_ref,
+                    phase_ref, thr_ref, status_ref, iters_ref,
+                    T_out, basis_out, w_out, flip_out, phase_out, status_out,
+                    iters_out, it_out, *, stage: str, m: int, n: int,
+                    tol: float, rule: str = "dantzig"):
     """Resumable K-pivot segment for the compaction scheduler: state in,
-    state out (pricing weights included, so bucket gathers between segments
-    preserve the rule's recurrence), step bound read from a scalar input
-    (no recompile per K)."""
+    state out (pricing weights and the bound-flip parity row included, so
+    bucket gathers between segments preserve the rule's recurrence and the
+    complement bookkeeping), step bound read from a scalar input (no
+    recompile per K).  The bound lane row is read-only (input, no output)."""
     steps = steps_ref[0, 0]
     T = T_ref[...]
     basis = basis_ref[...]
     w = w_ref[...]
+    flip = flip_ref[...]
+    ub = ub_ref[...]
     phase = phase_ref[...]
     thr = thr_ref[...]
     status = status_ref[...]
@@ -393,34 +484,35 @@ def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, phase_ref, thr_ref,
 
     if stage == "p1":
         def cond(state):
-            T, basis, w, phase, status, iters, it = state
+            T, basis, w, flip, phase, status, iters, it = state
             pending = (status == _RUNNING) & (phase == 1)
             return jnp.any(pending) & (it < steps)
 
         def body(state):
-            T, basis, w, phase, status, iters, it = state
-            T, basis, w, phase, status, iters = _tile_step(
-                T, basis, w, phase, status, iters, m=m, n=n, tol=tol,
-                thr=thr, rule=rule)
-            return T, basis, w, phase, status, iters, it + 1
+            T, basis, w, flip, phase, status, iters, it = state
+            T, basis, w, flip, phase, status, iters = _tile_step(
+                T, basis, w, flip, ub, phase, status, iters, m=m, n=n,
+                tol=tol, thr=thr, rule=rule)
+            return T, basis, w, flip, phase, status, iters, it + 1
     else:
         def cond(state):
-            T, basis, w, phase, status, iters, it = state
+            T, basis, w, flip, phase, status, iters, it = state
             return jnp.any(status == _RUNNING) & (it < steps)
 
         def body(state):
-            T, basis, w, phase, status, iters, it = state
-            T, basis, w, phase, status, iters = _tile_step_p2(
-                T, basis, w, phase, status, iters, m=m, n=n, tol=tol,
-                rule=rule)
-            return T, basis, w, phase, status, iters, it + 1
+            T, basis, w, flip, phase, status, iters, it = state
+            T, basis, w, flip, phase, status, iters = _tile_step_p2(
+                T, basis, w, flip, ub, phase, status, iters, m=m, n=n,
+                tol=tol, rule=rule)
+            return T, basis, w, flip, phase, status, iters, it + 1
 
-    T, basis, w, phase, status, iters, it = jax.lax.while_loop(
-        cond, body, (T, basis, w, phase, status, iters, jnp.int32(0)))
+    T, basis, w, flip, phase, status, iters, it = jax.lax.while_loop(
+        cond, body, (T, basis, w, flip, phase, status, iters, jnp.int32(0)))
 
     T_out[...] = T
     basis_out[...] = basis
     w_out[...] = w
+    flip_out[...] = flip
     phase_out[...] = phase
     status_out[...] = status
     iters_out[...] = iters
@@ -431,16 +523,19 @@ def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, phase_ref, thr_ref,
     jax.jit,
     static_argnames=("stage", "m", "n", "tile_b", "tol", "interpret",
                      "pricing"))
-def segment_pallas(steps, T, basis, w, phase, thr, status, iters, *,
+def segment_pallas(steps, T, basis, w, flip, ub, phase, thr, status, iters, *,
                    stage: str, m: int, n: int, tile_b: int, tol: float,
                    interpret: bool = True, pricing: str = "dantzig"):
     """Run one scheduler segment (<= ``steps`` pivots) over all tiles.
-    Returns (T, basis, w, phase, status, iters, it) with ``it`` the per-tile
-    executed step count broadcast over the tile's rows."""
+    Returns (T, basis, w, flip, phase, status, iters, it) with ``it`` the
+    per-tile executed step count broadcast over the tile's rows.  ``ub`` is
+    carried by the scheduler's state (gathered across bucket shrinks) but is
+    read-only inside the kernel."""
     B, R_, C_ = T.shape
     grid = (B // tile_b,)
     Rb = basis.shape[1]
     Cw = w.shape[1]
+    Cl = flip.shape[1]
     steps_arr = jnp.full((1, 1), steps, jnp.int32)
     kernel = functools.partial(_segment_kernel, stage=stage, m=m, n=n,
                                tol=float(tol), rule=pricing)
@@ -453,6 +548,8 @@ def segment_pallas(steps, T, basis, w, phase, thr, status, iters, *,
             pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
             pl.BlockSpec((tile_b, Rb), vec),
             pl.BlockSpec((tile_b, Cw), vec),
+            pl.BlockSpec((tile_b, Cl), vec),
+            pl.BlockSpec((tile_b, Cl), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
@@ -462,6 +559,7 @@ def segment_pallas(steps, T, basis, w, phase, thr, status, iters, *,
             pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
             pl.BlockSpec((tile_b, Rb), vec),
             pl.BlockSpec((tile_b, Cw), vec),
+            pl.BlockSpec((tile_b, Cl), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
             pl.BlockSpec((tile_b, 1), vec),
@@ -471,13 +569,14 @@ def segment_pallas(steps, T, basis, w, phase, thr, status, iters, *,
             jax.ShapeDtypeStruct((B, R_, C_), T.dtype),
             jax.ShapeDtypeStruct((B, Rb), jnp.int32),
             jax.ShapeDtypeStruct((B, Cw), T.dtype),
+            jax.ShapeDtypeStruct((B, Cl), jnp.int32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(steps_arr, T, basis, w, phase, thr, status, iters)
+    )(steps_arr, T, basis, w, flip, ub, phase, thr, status, iters)
 
 
 def pick_tile_b(m: int, n: int, vmem_budget: int = 8 * 2 ** 20,
@@ -497,11 +596,14 @@ def pick_tile_b(m: int, n: int, vmem_budget: int = 8 * 2 ** 20,
 
 
 def build_padded_tableau(A: jax.Array, b: jax.Array, c: jax.Array,
-                         tile_b: int, feas_tol: float = 1e-5
+                         tile_b: int, feas_tol: float = 1e-5, ub=None
                          ) -> Tuple[jax.Array, jax.Array, jax.Array,
-                                    jax.Array, int, int]:
+                                    jax.Array, jax.Array, int, int]:
     """Build (B_pad, R, C) tableaux with RHS in the last padded column,
-    plus basis/phase/threshold, padded so B divides into tiles."""
+    plus basis/phase/threshold and the (B_pad, C) upper-bound lane row
+    (finite entries on structural lanes, +inf everywhere else — slack,
+    artificial, RHS and padding lanes can never flip), padded so B divides
+    into tiles."""
     B, m, n = A.shape
     dtype = A.dtype
     R, C = full_dims(m, n)
@@ -529,22 +631,27 @@ def build_padded_tableau(A: jax.Array, b: jax.Array, c: jax.Array,
     # terminate OPTIMAL on the first check and never pivot.
     thr = jnp.zeros((B_pad, 1), dtype)
     thr = thr.at[:B, 0].set(feas_tol * jnp.maximum(1.0, T[:B, m + 1, C - 1]))
-    return T, basis, phase, thr, R, C
+    ub_lane = jnp.full((B_pad, C), jnp.inf, dtype)
+    if ub is not None:
+        ub_lane = ub_lane.at[:B, :n].set(jnp.asarray(ub, dtype))
+    return T, basis, phase, thr, ub_lane, R, C
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("m", "n", "tile_b", "max_iters", "tol", "feas_tol",
                      "interpret", "pricing"))
-def simplex_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
-                   tol: float = 1e-6, feas_tol: float = 1e-5,
+def simplex_pallas(A, b, c, ub=None, *, m: int, n: int, tile_b: int,
+                   max_iters: int, tol: float = 1e-6, feas_tol: float = 1e-5,
                    interpret: bool = True, pricing: str = "dantzig"):
     """Solve the batch with the phase-compacted Pallas tile kernel. Returns
     (x, obj, status, iters) for the original (unpadded) batch.  ``pricing``
-    selects the entering-column rule (core/pricing.py)."""
+    selects the entering-column rule (core/pricing.py); ``ub`` adds native
+    variable upper bounds (handled by the in-VMEM bounded ratio test, never
+    as extra rows)."""
     B = A.shape[0]
-    T, basis, phase, thr, R, C = build_padded_tableau(A, b, c, tile_b,
-                                                      feas_tol=feas_tol)
+    T, basis, phase, thr, ub_lane, R, C = build_padded_tableau(
+        A, b, c, tile_b, feas_tol=feas_tol, ub=ub)
     B_pad = T.shape[0]
     grid = (B_pad // tile_b,)
     n_pad = _round_up(n, 128)
@@ -560,6 +667,7 @@ def simplex_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
             pl.BlockSpec((tile_b, R), lambda i: (i, 0)),
             pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
             pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, C), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((tile_b, n_pad), lambda i: (i, 0)),
@@ -578,6 +686,6 @@ def simplex_pallas(A, b, c, *, m: int, n: int, tile_b: int, max_iters: int,
             jax.ShapeDtypeStruct((B_pad, n_pad), A.dtype),
         ],
         interpret=interpret,
-    )(T, basis, phase, thr)
+    )(T, basis, phase, thr, ub_lane)
     return (x[:B, :n], obj[:B, 0], status[:B, 0].astype(jnp.int8),
             iters[:B, 0], y[:B, :m], z[:B, :n])

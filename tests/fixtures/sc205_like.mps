@@ -1,0 +1,962 @@
+* Deterministic SC205-class staircase (204 rows x 160 cols, 758 nnz,
+* ~2.3% density): 40-stage production/inventory model, every coefficient
+* a closed-form function of the stage index.  All 160 columns carry
+* finite UP bounds so the native-bound canonical form (246 x 159) stays
+* ~40% smaller than the bound-row encoding (405 x 159).  Mixed row units
+* (1e-2..1e2) keep float32 equilibration relevant.  Not Netlib data --
+* see README.md in this directory.
+NAME          SC205LIKE
+ROWS
+ E  BAL0
+ L  CAP0
+ G  DEM0
+ L  EMS0
+ L  RMP0
+ E  BAL1
+ L  CAP1
+ G  DEM1
+ L  EMS1
+ L  RMP1
+ E  BAL2
+ L  CAP2
+ G  DEM2
+ L  EMS2
+ L  RMP2
+ E  BAL3
+ L  CAP3
+ G  DEM3
+ L  EMS3
+ L  RMP3
+ E  BAL4
+ L  CAP4
+ G  DEM4
+ L  EMS4
+ L  RMP4
+ E  BAL5
+ L  CAP5
+ G  DEM5
+ L  EMS5
+ L  RMP5
+ E  BAL6
+ L  CAP6
+ G  DEM6
+ L  EMS6
+ L  RMP6
+ E  BAL7
+ L  CAP7
+ G  DEM7
+ L  EMS7
+ L  RMP7
+ E  BAL8
+ L  CAP8
+ G  DEM8
+ L  EMS8
+ L  RMP8
+ E  BAL9
+ L  CAP9
+ G  DEM9
+ L  EMS9
+ L  RMP9
+ E  BAL10
+ L  CAP10
+ G  DEM10
+ L  EMS10
+ L  RMP10
+ E  BAL11
+ L  CAP11
+ G  DEM11
+ L  EMS11
+ L  RMP11
+ E  BAL12
+ L  CAP12
+ G  DEM12
+ L  EMS12
+ L  RMP12
+ E  BAL13
+ L  CAP13
+ G  DEM13
+ L  EMS13
+ L  RMP13
+ E  BAL14
+ L  CAP14
+ G  DEM14
+ L  EMS14
+ L  RMP14
+ E  BAL15
+ L  CAP15
+ G  DEM15
+ L  EMS15
+ L  RMP15
+ E  BAL16
+ L  CAP16
+ G  DEM16
+ L  EMS16
+ L  RMP16
+ E  BAL17
+ L  CAP17
+ G  DEM17
+ L  EMS17
+ L  RMP17
+ E  BAL18
+ L  CAP18
+ G  DEM18
+ L  EMS18
+ L  RMP18
+ E  BAL19
+ L  CAP19
+ G  DEM19
+ L  EMS19
+ L  RMP19
+ E  BAL20
+ L  CAP20
+ G  DEM20
+ L  EMS20
+ L  RMP20
+ E  BAL21
+ L  CAP21
+ G  DEM21
+ L  EMS21
+ L  RMP21
+ E  BAL22
+ L  CAP22
+ G  DEM22
+ L  EMS22
+ L  RMP22
+ E  BAL23
+ L  CAP23
+ G  DEM23
+ L  EMS23
+ L  RMP23
+ E  BAL24
+ L  CAP24
+ G  DEM24
+ L  EMS24
+ L  RMP24
+ E  BAL25
+ L  CAP25
+ G  DEM25
+ L  EMS25
+ L  RMP25
+ E  BAL26
+ L  CAP26
+ G  DEM26
+ L  EMS26
+ L  RMP26
+ E  BAL27
+ L  CAP27
+ G  DEM27
+ L  EMS27
+ L  RMP27
+ E  BAL28
+ L  CAP28
+ G  DEM28
+ L  EMS28
+ L  RMP28
+ E  BAL29
+ L  CAP29
+ G  DEM29
+ L  EMS29
+ L  RMP29
+ E  BAL30
+ L  CAP30
+ G  DEM30
+ L  EMS30
+ L  RMP30
+ E  BAL31
+ L  CAP31
+ G  DEM31
+ L  EMS31
+ L  RMP31
+ E  BAL32
+ L  CAP32
+ G  DEM32
+ L  EMS32
+ L  RMP32
+ E  BAL33
+ L  CAP33
+ G  DEM33
+ L  EMS33
+ L  RMP33
+ E  BAL34
+ L  CAP34
+ G  DEM34
+ L  EMS34
+ L  RMP34
+ E  BAL35
+ L  CAP35
+ G  DEM35
+ L  EMS35
+ L  RMP35
+ E  BAL36
+ L  CAP36
+ G  DEM36
+ L  EMS36
+ L  RMP36
+ E  BAL37
+ L  CAP37
+ G  DEM37
+ L  EMS37
+ L  RMP37
+ E  BAL38
+ L  CAP38
+ G  DEM38
+ L  EMS38
+ L  RMP38
+ E  BAL39
+ L  CAP39
+ G  DEM39
+ L  EMS39
+ L  RMP39
+ L  TOTPR
+ L  TOTSL
+ L  TOTEM
+ G  TOTIN
+ N  COST
+COLUMNS
+    P1S0      BAL0                0.01   CAP0                   1
+    P1S0      DEM0                   1   EMS0                  30
+    P1S0      RMP0                   1   RMP1                  -1
+    P1S0      TOTPR                  1   COST                   2
+    P2S0      BAL0               0.009   CAP0                 1.2
+    P2S0      DEM0                   1   EMS0                  10
+    P2S0      TOTEM                0.1   COST                 2.5
+    IVS0      BAL0               -0.01   EMS0                   1
+    IVS0      BAL1               0.095   TOTIN                  1
+    IVS0      COST                 0.3
+    UNS0      BAL0                0.01   DEM0                   1
+    UNS0      TOTSL                  1   COST                  50
+    P1S1      BAL1                 0.1   CAP1                   1
+    P1S1      DEM1                   1   EMS1                3.05
+    P1S1      RMP1                   1   RMP2                  -1
+    P1S1      TOTPR                  1   COST                2.01
+    P2S1      BAL1              0.0902   CAP1                 1.2
+    P2S1      DEM1                   1   EMS1                1.03
+    P2S1      TOTEM                0.1   COST                2.49
+    IVS1      BAL1                -0.1   EMS1                 0.1
+    IVS1      BAL2                0.95   TOTIN                  1
+    IVS1      COST                 0.3
+    UNS1      BAL1                 0.1   DEM1                   1
+    UNS1      TOTSL                  1   COST                  50
+    P1S2      BAL2                   1   CAP2                   1
+    P1S2      DEM2                   1   EMS2                0.31
+    P1S2      RMP2                   1   RMP3                  -1
+    P1S2      TOTPR                  1   COST                2.02
+    P2S2      BAL2               0.904   CAP2                 1.2
+    P2S2      DEM2                   1   EMS2               0.106
+    P2S2      TOTEM                0.1   COST                2.48
+    IVS2      BAL2                  -1   EMS2                0.01
+    IVS2      BAL3                 9.5   TOTIN                  1
+    IVS2      COST                 0.3
+    UNS2      BAL2                   1   DEM2                   1
+    UNS2      TOTSL                  1   COST                  50
+    P1S3      BAL3                  10   CAP3                   1
+    P1S3      DEM3                   1   EMS3                31.5
+    P1S3      RMP3                   1   RMP4                  -1
+    P1S3      TOTPR                  1   COST                2.03
+    P2S3      BAL3                9.06   CAP3                 1.2
+    P2S3      DEM3                   1   EMS3                10.9
+    P2S3      TOTEM                0.1   COST                2.47
+    IVS3      BAL3                 -10   EMS3                   1
+    IVS3      BAL4                  95   TOTIN                  1
+    IVS3      COST                 0.3
+    UNS3      BAL3                  10   DEM3                   1
+    UNS3      TOTSL                  1   COST                  50
+    P1S4      BAL4                 100   CAP4                   1
+    P1S4      DEM4                   1   EMS4                 3.2
+    P1S4      RMP4                   1   RMP5                  -1
+    P1S4      TOTPR                  1   COST                2.04
+    P2S4      BAL4                90.8   CAP4                 1.2
+    P2S4      DEM4                   1   EMS4                1.12
+    P2S4      TOTEM                0.1   COST                2.46
+    IVS4      BAL4                -100   EMS4                 0.1
+    IVS4      BAL5              0.0095   TOTIN                  1
+    IVS4      COST                 0.3
+    UNS4      BAL4                 100   DEM4                   1
+    UNS4      TOTSL                  1   COST                  50
+    P1S5      BAL5                0.01   CAP5                   1
+    P1S5      DEM5                   1   EMS5               0.325
+    P1S5      RMP5                   1   RMP6                  -1
+    P1S5      TOTPR                  1   COST                2.05
+    P2S5      BAL5              0.0091   CAP5                 1.2
+    P2S5      DEM5                   1   EMS5               0.115
+    P2S5      TOTEM                0.1   COST                2.45
+    IVS5      BAL5               -0.01   EMS5                0.01
+    IVS5      BAL6               0.095   TOTIN                  1
+    IVS5      COST                 0.3
+    UNS5      BAL5                0.01   DEM5                   1
+    UNS5      TOTSL                  1   COST                  50
+    P1S6      BAL6                 0.1   CAP6                   1
+    P1S6      DEM6                   1   EMS6                  33
+    P1S6      RMP6                   1   RMP7                  -1
+    P1S6      TOTPR                  1   COST                2.06
+    P2S6      BAL6              0.0912   CAP6                 1.2
+    P2S6      DEM6                   1   EMS6                11.8
+    P2S6      TOTEM                0.1   COST                2.44
+    IVS6      BAL6                -0.1   EMS6                   1
+    IVS6      BAL7                0.95   TOTIN                  1
+    IVS6      COST                 0.3
+    UNS6      BAL6                 0.1   DEM6                   1
+    UNS6      TOTSL                  1   COST                  50
+    P1S7      BAL7                   1   CAP7                   1
+    P1S7      DEM7                   1   EMS7                3.35
+    P1S7      RMP7                   1   RMP8                  -1
+    P1S7      TOTPR                  1   COST                2.07
+    P2S7      BAL7               0.914   CAP7                 1.2
+    P2S7      DEM7                   1   EMS7                1.21
+    P2S7      TOTEM                0.1   COST                2.43
+    IVS7      BAL7                  -1   EMS7                 0.1
+    IVS7      BAL8                 9.5   TOTIN                  1
+    IVS7      COST                 0.3
+    UNS7      BAL7                   1   DEM7                   1
+    UNS7      TOTSL                  1   COST                  50
+    P1S8      BAL8                  10   CAP8                   1
+    P1S8      DEM8                   1   EMS8                0.34
+    P1S8      RMP8                   1   RMP9                  -1
+    P1S8      TOTPR                  1   COST                2.08
+    P2S8      BAL8                9.16   CAP8                 1.2
+    P2S8      DEM8                   1   EMS8               0.124
+    P2S8      TOTEM                0.1   COST                2.42
+    IVS8      BAL8                 -10   EMS8                0.01
+    IVS8      BAL9                  95   TOTIN                  1
+    IVS8      COST                 0.3
+    UNS8      BAL8                  10   DEM8                   1
+    UNS8      TOTSL                  1   COST                  50
+    P1S9      BAL9                 100   CAP9                   1
+    P1S9      DEM9                   1   EMS9                34.5
+    P1S9      RMP9                   1   RMP10                 -1
+    P1S9      TOTPR                  1   COST                2.09
+    P2S9      BAL9                91.8   CAP9                 1.2
+    P2S9      DEM9                   1   EMS9                12.7
+    P2S9      TOTEM                0.1   COST                2.41
+    IVS9      BAL9                -100   EMS9                   1
+    IVS9      BAL10             0.0095   TOTIN                  1
+    IVS9      COST                 0.3
+    UNS9      BAL9                 100   DEM9                   1
+    UNS9      TOTSL                  1   COST                  50
+    P1S10     BAL10               0.01   CAP10                  1
+    P1S10     DEM10                  1   EMS10                3.5
+    P1S10     RMP10                  1   RMP11                 -1
+    P1S10     TOTPR                  1   COST                 2.1
+    P2S10     BAL10             0.0092   CAP10                1.2
+    P2S10     DEM10                  1   EMS10                1.3
+    P2S10     TOTEM                0.1   COST                 2.4
+    IVS10     BAL10              -0.01   EMS10                0.1
+    IVS10     BAL11              0.095   TOTIN                  1
+    IVS10     COST                 0.3
+    UNS10     BAL10               0.01   DEM10                  1
+    UNS10     TOTSL                  1   COST                  50
+    P1S11     BAL11                0.1   CAP11                  1
+    P1S11     DEM11                  1   EMS11              0.355
+    P1S11     RMP11                  1   RMP12                 -1
+    P1S11     TOTPR                  1   COST                2.11
+    P2S11     BAL11             0.0922   CAP11                1.2
+    P2S11     DEM11                  1   EMS11              0.133
+    P2S11     TOTEM                0.1   COST                2.39
+    IVS11     BAL11               -0.1   EMS11               0.01
+    IVS11     BAL12               0.95   TOTIN                  1
+    IVS11     COST                 0.3
+    UNS11     BAL11                0.1   DEM11                  1
+    UNS11     TOTSL                  1   COST                  50
+    P1S12     BAL12                  1   CAP12                  1
+    P1S12     DEM12                  1   EMS12                 36
+    P1S12     RMP12                  1   RMP13                 -1
+    P1S12     TOTPR                  1   COST                2.12
+    P2S12     BAL12              0.924   CAP12                1.2
+    P2S12     DEM12                  1   EMS12               13.6
+    P2S12     TOTEM                0.1   COST                2.38
+    IVS12     BAL12                 -1   EMS12                  1
+    IVS12     BAL13                9.5   TOTIN                  1
+    IVS12     COST                 0.3
+    UNS12     BAL12                  1   DEM12                  1
+    UNS12     TOTSL                  1   COST                  50
+    P1S13     BAL13                 10   CAP13                  1
+    P1S13     DEM13                  1   EMS13               3.65
+    P1S13     RMP13                  1   RMP14                 -1
+    P1S13     TOTPR                  1   COST                2.13
+    P2S13     BAL13               9.26   CAP13                1.2
+    P2S13     DEM13                  1   EMS13               1.39
+    P2S13     TOTEM                0.1   COST                2.37
+    IVS13     BAL13                -10   EMS13                0.1
+    IVS13     BAL14                 95   TOTIN                  1
+    IVS13     COST                 0.3
+    UNS13     BAL13                 10   DEM13                  1
+    UNS13     TOTSL                  1   COST                  50
+    P1S14     BAL14                100   CAP14                  1
+    P1S14     DEM14                  1   EMS14               0.37
+    P1S14     RMP14                  1   RMP15                 -1
+    P1S14     TOTPR                  1   COST                2.14
+    P2S14     BAL14               92.8   CAP14                1.2
+    P2S14     DEM14                  1   EMS14              0.142
+    P2S14     TOTEM                0.1   COST                2.36
+    IVS14     BAL14               -100   EMS14               0.01
+    IVS14     BAL15             0.0095   TOTIN                  1
+    IVS14     COST                 0.3
+    UNS14     BAL14                100   DEM14                  1
+    UNS14     TOTSL                  1   COST                  50
+    P1S15     BAL15               0.01   CAP15                  1
+    P1S15     DEM15                  1   EMS15               37.5
+    P1S15     RMP15                  1   RMP16                 -1
+    P1S15     TOTPR                  1   COST                2.15
+    P2S15     BAL15             0.0093   CAP15                1.2
+    P2S15     DEM15                  1   EMS15               14.5
+    P2S15     TOTEM                0.1   COST                2.35
+    IVS15     BAL15              -0.01   EMS15                  1
+    IVS15     BAL16              0.095   TOTIN                  1
+    IVS15     COST                 0.3
+    UNS15     BAL15               0.01   DEM15                  1
+    UNS15     TOTSL                  1   COST                  50
+    P1S16     BAL16                0.1   CAP16                  1
+    P1S16     DEM16                  1   EMS16                3.8
+    P1S16     RMP16                  1   RMP17                 -1
+    P1S16     TOTPR                  1   COST                2.16
+    P2S16     BAL16             0.0932   CAP16                1.2
+    P2S16     DEM16                  1   EMS16               1.48
+    P2S16     TOTEM                0.1   COST                2.34
+    IVS16     BAL16               -0.1   EMS16                0.1
+    IVS16     BAL17               0.95   TOTIN                  1
+    IVS16     COST                 0.3
+    UNS16     BAL16                0.1   DEM16                  1
+    UNS16     TOTSL                  1   COST                  50
+    P1S17     BAL17                  1   CAP17                  1
+    P1S17     DEM17                  1   EMS17              0.385
+    P1S17     RMP17                  1   RMP18                 -1
+    P1S17     TOTPR                  1   COST                2.17
+    P2S17     BAL17              0.934   CAP17                1.2
+    P2S17     DEM17                  1   EMS17              0.151
+    P2S17     TOTEM                0.1   COST                2.33
+    IVS17     BAL17                 -1   EMS17               0.01
+    IVS17     BAL18                9.5   TOTIN                  1
+    IVS17     COST                 0.3
+    UNS17     BAL17                  1   DEM17                  1
+    UNS17     TOTSL                  1   COST                  50
+    P1S18     BAL18                 10   CAP18                  1
+    P1S18     DEM18                  1   EMS18                 39
+    P1S18     RMP18                  1   RMP19                 -1
+    P1S18     TOTPR                  1   COST                2.18
+    P2S18     BAL18               9.36   CAP18                1.2
+    P2S18     DEM18                  1   EMS18               15.4
+    P2S18     TOTEM                0.1   COST                2.32
+    IVS18     BAL18                -10   EMS18                  1
+    IVS18     BAL19                 95   TOTIN                  1
+    IVS18     COST                 0.3
+    UNS18     BAL18                 10   DEM18                  1
+    UNS18     TOTSL                  1   COST                  50
+    P1S19     BAL19                100   CAP19                  1
+    P1S19     DEM19                  1   EMS19               3.95
+    P1S19     RMP19                  1   RMP20                 -1
+    P1S19     TOTPR                  1   COST                2.19
+    P2S19     BAL19               93.8   CAP19                1.2
+    P2S19     DEM19                  1   EMS19               1.57
+    P2S19     TOTEM                0.1   COST                2.31
+    IVS19     BAL19               -100   EMS19                0.1
+    IVS19     BAL20             0.0095   TOTIN                  1
+    IVS19     COST                 0.3
+    UNS19     BAL19                100   DEM19                  1
+    UNS19     TOTSL                  1   COST                  50
+    P1S20     BAL20               0.01   CAP20                  1
+    P1S20     DEM20                  1   EMS20                0.4
+    P1S20     RMP20                  1   RMP21                 -1
+    P1S20     TOTPR                  1   COST                 2.2
+    P2S20     BAL20             0.0094   CAP20                1.2
+    P2S20     DEM20                  1   EMS20               0.16
+    P2S20     TOTEM                0.1   COST                 2.3
+    IVS20     BAL20              -0.01   EMS20               0.01
+    IVS20     BAL21              0.095   TOTIN                  1
+    IVS20     COST                 0.3
+    UNS20     BAL20               0.01   DEM20                  1
+    UNS20     TOTSL                  1   COST                  50
+    P1S21     BAL21                0.1   CAP21                  1
+    P1S21     DEM21                  1   EMS21               40.5
+    P1S21     RMP21                  1   RMP22                 -1
+    P1S21     TOTPR                  1   COST                2.21
+    P2S21     BAL21             0.0942   CAP21                1.2
+    P2S21     DEM21                  1   EMS21               16.3
+    P2S21     TOTEM                0.1   COST                2.29
+    IVS21     BAL21               -0.1   EMS21                  1
+    IVS21     BAL22               0.95   TOTIN                  1
+    IVS21     COST                 0.3
+    UNS21     BAL21                0.1   DEM21                  1
+    UNS21     TOTSL                  1   COST                  50
+    P1S22     BAL22                  1   CAP22                  1
+    P1S22     DEM22                  1   EMS22                4.1
+    P1S22     RMP22                  1   RMP23                 -1
+    P1S22     TOTPR                  1   COST                2.22
+    P2S22     BAL22              0.944   CAP22                1.2
+    P2S22     DEM22                  1   EMS22               1.66
+    P2S22     TOTEM                0.1   COST                2.28
+    IVS22     BAL22                 -1   EMS22                0.1
+    IVS22     BAL23                9.5   TOTIN                  1
+    IVS22     COST                 0.3
+    UNS22     BAL22                  1   DEM22                  1
+    UNS22     TOTSL                  1   COST                  50
+    P1S23     BAL23                 10   CAP23                  1
+    P1S23     DEM23                  1   EMS23              0.415
+    P1S23     RMP23                  1   RMP24                 -1
+    P1S23     TOTPR                  1   COST                2.23
+    P2S23     BAL23               9.46   CAP23                1.2
+    P2S23     DEM23                  1   EMS23              0.169
+    P2S23     TOTEM                0.1   COST                2.27
+    IVS23     BAL23                -10   EMS23               0.01
+    IVS23     BAL24                 95   TOTIN                  1
+    IVS23     COST                 0.3
+    UNS23     BAL23                 10   DEM23                  1
+    UNS23     TOTSL                  1   COST                  50
+    P1S24     BAL24                100   CAP24                  1
+    P1S24     DEM24                  1   EMS24                 42
+    P1S24     RMP24                  1   RMP25                 -1
+    P1S24     TOTPR                  1   COST                2.24
+    P2S24     BAL24               94.8   CAP24                1.2
+    P2S24     DEM24                  1   EMS24               17.2
+    P2S24     TOTEM                0.1   COST                2.26
+    IVS24     BAL24               -100   EMS24                  1
+    IVS24     BAL25             0.0095   TOTIN                  1
+    IVS24     COST                 0.3
+    UNS24     BAL24                100   DEM24                  1
+    UNS24     TOTSL                  1   COST                  50
+    P1S25     BAL25               0.01   CAP25                  1
+    P1S25     DEM25                  1   EMS25               4.25
+    P1S25     RMP25                  1   RMP26                 -1
+    P1S25     TOTPR                  1   COST                2.25
+    P2S25     BAL25             0.0095   CAP25                1.2
+    P2S25     DEM25                  1   EMS25               1.75
+    P2S25     TOTEM                0.1   COST                2.25
+    IVS25     BAL25              -0.01   EMS25                0.1
+    IVS25     BAL26              0.095   TOTIN                  1
+    IVS25     COST                 0.3
+    UNS25     BAL25               0.01   DEM25                  1
+    UNS25     TOTSL                  1   COST                  50
+    P1S26     BAL26                0.1   CAP26                  1
+    P1S26     DEM26                  1   EMS26               0.43
+    P1S26     RMP26                  1   RMP27                 -1
+    P1S26     TOTPR                  1   COST                2.26
+    P2S26     BAL26             0.0952   CAP26                1.2
+    P2S26     DEM26                  1   EMS26              0.178
+    P2S26     TOTEM                0.1   COST                2.24
+    IVS26     BAL26               -0.1   EMS26               0.01
+    IVS26     BAL27               0.95   TOTIN                  1
+    IVS26     COST                 0.3
+    UNS26     BAL26                0.1   DEM26                  1
+    UNS26     TOTSL                  1   COST                  50
+    P1S27     BAL27                  1   CAP27                  1
+    P1S27     DEM27                  1   EMS27               43.5
+    P1S27     RMP27                  1   RMP28                 -1
+    P1S27     TOTPR                  1   COST                2.27
+    P2S27     BAL27              0.954   CAP27                1.2
+    P2S27     DEM27                  1   EMS27               18.1
+    P2S27     TOTEM                0.1   COST                2.23
+    IVS27     BAL27                 -1   EMS27                  1
+    IVS27     BAL28                9.5   TOTIN                  1
+    IVS27     COST                 0.3
+    UNS27     BAL27                  1   DEM27                  1
+    UNS27     TOTSL                  1   COST                  50
+    P1S28     BAL28                 10   CAP28                  1
+    P1S28     DEM28                  1   EMS28                4.4
+    P1S28     RMP28                  1   RMP29                 -1
+    P1S28     TOTPR                  1   COST                2.28
+    P2S28     BAL28               9.56   CAP28                1.2
+    P2S28     DEM28                  1   EMS28               1.84
+    P2S28     TOTEM                0.1   COST                2.22
+    IVS28     BAL28                -10   EMS28                0.1
+    IVS28     BAL29                 95   TOTIN                  1
+    IVS28     COST                 0.3
+    UNS28     BAL28                 10   DEM28                  1
+    UNS28     TOTSL                  1   COST                  50
+    P1S29     BAL29                100   CAP29                  1
+    P1S29     DEM29                  1   EMS29              0.445
+    P1S29     RMP29                  1   RMP30                 -1
+    P1S29     TOTPR                  1   COST                2.29
+    P2S29     BAL29               95.8   CAP29                1.2
+    P2S29     DEM29                  1   EMS29              0.187
+    P2S29     TOTEM                0.1   COST                2.21
+    IVS29     BAL29               -100   EMS29               0.01
+    IVS29     BAL30             0.0095   TOTIN                  1
+    IVS29     COST                 0.3
+    UNS29     BAL29                100   DEM29                  1
+    UNS29     TOTSL                  1   COST                  50
+    P1S30     BAL30               0.01   CAP30                  1
+    P1S30     DEM30                  1   EMS30                 45
+    P1S30     RMP30                  1   RMP31                 -1
+    P1S30     TOTPR                  1   COST                 2.3
+    P2S30     BAL30             0.0096   CAP30                1.2
+    P2S30     DEM30                  1   EMS30                 19
+    P2S30     TOTEM                0.1   COST                 2.2
+    IVS30     BAL30              -0.01   EMS30                  1
+    IVS30     BAL31              0.095   TOTIN                  1
+    IVS30     COST                 0.3
+    UNS30     BAL30               0.01   DEM30                  1
+    UNS30     TOTSL                  1   COST                  50
+    P1S31     BAL31                0.1   CAP31                  1
+    P1S31     DEM31                  1   EMS31               4.55
+    P1S31     RMP31                  1   RMP32                 -1
+    P1S31     TOTPR                  1   COST                2.31
+    P2S31     BAL31             0.0962   CAP31                1.2
+    P2S31     DEM31                  1   EMS31               1.93
+    P2S31     TOTEM                0.1   COST                2.19
+    IVS31     BAL31               -0.1   EMS31                0.1
+    IVS31     BAL32               0.95   TOTIN                  1
+    IVS31     COST                 0.3
+    UNS31     BAL31                0.1   DEM31                  1
+    UNS31     TOTSL                  1   COST                  50
+    P1S32     BAL32                  1   CAP32                  1
+    P1S32     DEM32                  1   EMS32               0.46
+    P1S32     RMP32                  1   RMP33                 -1
+    P1S32     TOTPR                  1   COST                2.32
+    P2S32     BAL32              0.964   CAP32                1.2
+    P2S32     DEM32                  1   EMS32              0.196
+    P2S32     TOTEM                0.1   COST                2.18
+    IVS32     BAL32                 -1   EMS32               0.01
+    IVS32     BAL33                9.5   TOTIN                  1
+    IVS32     COST                 0.3
+    UNS32     BAL32                  1   DEM32                  1
+    UNS32     TOTSL                  1   COST                  50
+    P1S33     BAL33                 10   CAP33                  1
+    P1S33     DEM33                  1   EMS33               46.5
+    P1S33     RMP33                  1   RMP34                 -1
+    P1S33     TOTPR                  1   COST                2.33
+    P2S33     BAL33               9.66   CAP33                1.2
+    P2S33     DEM33                  1   EMS33               19.9
+    P2S33     TOTEM                0.1   COST                2.17
+    IVS33     BAL33                -10   EMS33                  1
+    IVS33     BAL34                 95   TOTIN                  1
+    IVS33     COST                 0.3
+    UNS33     BAL33                 10   DEM33                  1
+    UNS33     TOTSL                  1   COST                  50
+    P1S34     BAL34                100   CAP34                  1
+    P1S34     DEM34                  1   EMS34                4.7
+    P1S34     RMP34                  1   RMP35                 -1
+    P1S34     TOTPR                  1   COST                2.34
+    P2S34     BAL34               96.8   CAP34                1.2
+    P2S34     DEM34                  1   EMS34               2.02
+    P2S34     TOTEM                0.1   COST                2.16
+    IVS34     BAL34               -100   EMS34                0.1
+    IVS34     BAL35             0.0095   TOTIN                  1
+    IVS34     COST                 0.3
+    UNS34     BAL34                100   DEM34                  1
+    UNS34     TOTSL                  1   COST                  50
+    P1S35     BAL35               0.01   CAP35                  1
+    P1S35     DEM35                  1   EMS35              0.475
+    P1S35     RMP35                  1   RMP36                 -1
+    P1S35     TOTPR                  1   COST                2.35
+    P2S35     BAL35             0.0097   CAP35                1.2
+    P2S35     DEM35                  1   EMS35              0.205
+    P2S35     TOTEM                0.1   COST                2.15
+    IVS35     BAL35              -0.01   EMS35               0.01
+    IVS35     BAL36              0.095   TOTIN                  1
+    IVS35     COST                 0.3
+    UNS35     BAL35               0.01   DEM35                  1
+    UNS35     TOTSL                  1   COST                  50
+    P1S36     BAL36                0.1   CAP36                  1
+    P1S36     DEM36                  1   EMS36                 48
+    P1S36     RMP36                  1   RMP37                 -1
+    P1S36     TOTPR                  1   COST                2.36
+    P2S36     BAL36             0.0972   CAP36                1.2
+    P2S36     DEM36                  1   EMS36               20.8
+    P2S36     TOTEM                0.1   COST                2.14
+    IVS36     BAL36               -0.1   EMS36                  1
+    IVS36     BAL37               0.95   TOTIN                  1
+    IVS36     COST                 0.3
+    UNS36     BAL36                0.1   DEM36                  1
+    UNS36     TOTSL                  1   COST                  50
+    P1S37     BAL37                  1   CAP37                  1
+    P1S37     DEM37                  1   EMS37               4.85
+    P1S37     RMP37                  1   RMP38                 -1
+    P1S37     TOTPR                  1   COST                2.37
+    P2S37     BAL37              0.974   CAP37                1.2
+    P2S37     DEM37                  1   EMS37               2.11
+    P2S37     TOTEM                0.1   COST                2.13
+    IVS37     BAL37                 -1   EMS37                0.1
+    IVS37     BAL38                9.5   TOTIN                  1
+    IVS37     COST                 0.3
+    UNS37     BAL37                  1   DEM37                  1
+    UNS37     TOTSL                  1   COST                  50
+    P1S38     BAL38                 10   CAP38                  1
+    P1S38     DEM38                  1   EMS38               0.49
+    P1S38     RMP38                  1   RMP39                 -1
+    P1S38     TOTPR                  1   COST                2.38
+    P2S38     BAL38               9.76   CAP38                1.2
+    P2S38     DEM38                  1   EMS38              0.214
+    P2S38     TOTEM                0.1   COST                2.12
+    IVS38     BAL38                -10   EMS38               0.01
+    IVS38     BAL39                 95   TOTIN                  1
+    IVS38     COST                 0.3
+    UNS38     BAL38                 10   DEM38                  1
+    UNS38     TOTSL                  1   COST                  50
+    P1S39     BAL39                100   CAP39                  1
+    P1S39     DEM39                  1   EMS39               49.5
+    P1S39     RMP39                  1   TOTPR                  1
+    P1S39     COST                2.39
+    P2S39     BAL39               97.8   CAP39                1.2
+    P2S39     DEM39                  1   EMS39               21.7
+    P2S39     TOTEM                0.1   COST                2.11
+    IVS39     BAL39               -100   EMS39                  1
+    IVS39     TOTIN                  1   COST                 0.3
+    UNS39     BAL39                100   DEM39                  1
+    UNS39     TOTSL                  1   COST                  50
+RHS
+    RHS       BAL0                 0.1   CAP0                  18
+    RHS       DEM0                   6   EMS0                 600
+    RHS       RMP0                   6   BAL1               1.125
+    RHS       CAP1                  19   DEM1                6.75
+    RHS       EMS1                  61   RMP1                   6
+    RHS       BAL2                12.5   CAP2                  20
+    RHS       DEM2                 7.5   EMS2                 6.2
+    RHS       RMP2                   6   BAL3               137.5
+    RHS       CAP3                  21   DEM3                8.25
+    RHS       EMS3                 630   RMP3                   6
+    RHS       BAL4                1500   CAP4                  22
+    RHS       DEM4                   9   EMS4                  64
+    RHS       RMP4                   6   BAL5              0.1625
+    RHS       CAP5                  18   DEM5                9.75
+    RHS       EMS5                 6.5   RMP5                   6
+    RHS       BAL6                1.75   CAP6                  19
+    RHS       DEM6                10.5   EMS6                 660
+    RHS       RMP6                   6   BAL7               11.75
+    RHS       CAP7                  20   DEM7                7.05
+    RHS       EMS7                  67   RMP7                   6
+    RHS       BAL8                 130   CAP8                  21
+    RHS       DEM8                 7.8   EMS8                 6.8
+    RHS       RMP8                   6   BAL9                1425
+    RHS       CAP9                  22   DEM9                8.55
+    RHS       EMS9                 690   RMP9                   6
+    RHS       BAL10              0.155   CAP10                 18
+    RHS       DEM10                9.3   EMS10                 70
+    RHS       RMP10                  6   BAL11              1.675
+    RHS       CAP11                 19   DEM11              10.05
+    RHS       EMS11                7.1   RMP11                  6
+    RHS       BAL12                 18   CAP12                 20
+    RHS       DEM12               10.8   EMS12                720
+    RHS       RMP12                  6   BAL13              192.5
+    RHS       CAP13                 21   DEM13              11.55
+    RHS       EMS13                 73   RMP13                  6
+    RHS       BAL14               1350   CAP14                 22
+    RHS       DEM14                8.1   EMS14                7.4
+    RHS       RMP14                  6   BAL15             0.1475
+    RHS       CAP15                 18   DEM15               8.85
+    RHS       EMS15                750   RMP15                  6
+    RHS       BAL16                1.6   CAP16                 19
+    RHS       DEM16                9.6   EMS16                 76
+    RHS       RMP16                  6   BAL17              17.25
+    RHS       CAP17                 20   DEM17              10.35
+    RHS       EMS17                7.7   RMP17                  6
+    RHS       BAL18                185   CAP18                 21
+    RHS       DEM18               11.1   EMS18                780
+    RHS       RMP18                  6   BAL19               1975
+    RHS       CAP19                 22   DEM19              11.85
+    RHS       EMS19                 79   RMP19                  6
+    RHS       BAL20               0.21   CAP20                 18
+    RHS       DEM20               12.6   EMS20                  8
+    RHS       RMP20                  6   BAL21              1.525
+    RHS       CAP21                 19   DEM21               9.15
+    RHS       EMS21                810   RMP21                  6
+    RHS       BAL22               16.5   CAP22                 20
+    RHS       DEM22                9.9   EMS22                 82
+    RHS       RMP22                  6   BAL23              177.5
+    RHS       CAP23                 21   DEM23              10.65
+    RHS       EMS23                8.3   RMP23                  6
+    RHS       BAL24               1900   CAP24                 22
+    RHS       DEM24               11.4   EMS24                840
+    RHS       RMP24                  6   BAL25             0.2025
+    RHS       CAP25                 18   DEM25              12.15
+    RHS       EMS25                 85   RMP25                  6
+    RHS       BAL26               2.15   CAP26                 19
+    RHS       DEM26               12.9   EMS26                8.6
+    RHS       RMP26                  6   BAL27              22.75
+    RHS       CAP27                 20   DEM27              13.65
+    RHS       EMS27                870   RMP27                  6
+    RHS       BAL28                170   CAP28                 21
+    RHS       DEM28               10.2   EMS28                 88
+    RHS       RMP28                  6   BAL29               1825
+    RHS       CAP29                 22   DEM29              10.95
+    RHS       EMS29                8.9   RMP29                  6
+    RHS       BAL30              0.195   CAP30                 18
+    RHS       DEM30               11.7   EMS30                900
+    RHS       RMP30                  6   BAL31              2.075
+    RHS       CAP31                 19   DEM31              12.45
+    RHS       EMS31                 91   RMP31                  6
+    RHS       BAL32                 22   CAP32                 20
+    RHS       DEM32               13.2   EMS32                9.2
+    RHS       RMP32                  6   BAL33              232.5
+    RHS       CAP33                 21   DEM33              13.95
+    RHS       EMS33                930   RMP33                  6
+    RHS       BAL34               2450   CAP34                 22
+    RHS       DEM34               14.7   EMS34                 94
+    RHS       RMP34                  6   BAL35             0.1875
+    RHS       CAP35                 18   DEM35              11.25
+    RHS       EMS35                9.5   RMP35                  6
+    RHS       BAL36                  2   CAP36                 19
+    RHS       DEM36                 12   EMS36                960
+    RHS       RMP36                  6   BAL37              21.25
+    RHS       CAP37                 20   DEM37              12.75
+    RHS       EMS37                 97   RMP37                  6
+    RHS       BAL38                225   CAP38                 21
+    RHS       DEM38               13.5   EMS38                9.8
+    RHS       RMP38                  6   BAL39               2375
+    RHS       CAP39                 22   DEM39              14.25
+    RHS       EMS39                990   RMP39                  6
+    RHS       TOTPR                300   TOTSL                426
+    RHS       TOTEM                100   TOTIN                  5
+RANGES
+    RNG       DEM3                   5   TOTIN                 40
+BOUNDS
+ UP BND       P1S0                  15
+ UP BND       P2S0                  12
+ UP BND       IVS0                   8
+ UP BND       UNS0                  10
+ UP BND       P1S1                  15
+ UP BND       P2S1                  12
+ UP BND       IVS1                   8
+ UP BND       UNS1               11.25
+ UP BND       P1S2                  15
+ UP BND       P2S2                  12
+ UP BND       IVS2                   8
+ UP BND       UNS2                12.5
+ UP BND       P1S3                  15
+ UP BND       P2S3                  12
+ UP BND       IVS3                   8
+ UP BND       UNS3               13.75
+ UP BND       P1S4                  15
+ UP BND       P2S4                  12
+ UP BND       IVS4                   8
+ UP BND       UNS4                  15
+ UP BND       P1S5                  15
+ UP BND       P2S5                  12
+ LO BND       IVS5                   1
+ UP BND       IVS5                   8
+ UP BND       UNS5               16.25
+ UP BND       P1S6                  15
+ UP BND       P2S6                  12
+ UP BND       IVS6                   8
+ UP BND       UNS6                17.5
+ UP BND       P1S7                  15
+ UP BND       P2S7                  12
+ UP BND       IVS7                   8
+ UP BND       UNS7               11.75
+ UP BND       P1S8                  15
+ UP BND       P2S8                  12
+ UP BND       IVS8                   8
+ UP BND       UNS8                  13
+ UP BND       P1S9                  15
+ UP BND       P2S9                  12
+ UP BND       IVS9                   8
+ UP BND       UNS9               14.25
+ UP BND       P1S10                 15
+ UP BND       P2S10                 12
+ UP BND       IVS10                  8
+ UP BND       UNS10               15.5
+ UP BND       P1S11                 15
+ UP BND       P2S11                 12
+ UP BND       IVS11                  8
+ UP BND       UNS11              16.75
+ UP BND       P1S12                 15
+ UP BND       P2S12                 12
+ UP BND       IVS12                  8
+ UP BND       UNS12                 18
+ UP BND       P1S13                 15
+ UP BND       P2S13                 12
+ UP BND       IVS13                  8
+ UP BND       UNS13              19.25
+ UP BND       P1S14                 15
+ UP BND       P2S14                 12
+ UP BND       IVS14                  8
+ UP BND       UNS14               13.5
+ UP BND       P1S15                 15
+ UP BND       P2S15                 12
+ UP BND       IVS15                  8
+ UP BND       UNS15              14.75
+ UP BND       P1S16                 15
+ UP BND       P2S16                 12
+ UP BND       IVS16                  8
+ UP BND       UNS16                 16
+ UP BND       P1S17                 15
+ UP BND       P2S17                 12
+ UP BND       IVS17                  8
+ UP BND       UNS17              17.25
+ UP BND       P1S18                 15
+ UP BND       P2S18                 12
+ UP BND       IVS18                  8
+ UP BND       UNS18               18.5
+ UP BND       P1S19                 15
+ UP BND       P2S19                 12
+ UP BND       IVS19                  8
+ UP BND       UNS19              19.75
+ UP BND       P1S20                 15
+ UP BND       P2S20                 12
+ UP BND       IVS20                  8
+ UP BND       UNS20                 21
+ UP BND       P1S21                 15
+ UP BND       P2S21                 12
+ UP BND       IVS21                  8
+ UP BND       UNS21              15.25
+ UP BND       P1S22                 15
+ UP BND       P2S22                 12
+ UP BND       IVS22                  8
+ UP BND       UNS22               16.5
+ UP BND       P1S23                 15
+ UP BND       P2S23                 12
+ UP BND       IVS23                  8
+ UP BND       UNS23              17.75
+ UP BND       P1S24                 15
+ UP BND       P2S24                 12
+ UP BND       IVS24                  8
+ UP BND       UNS24                 19
+ UP BND       P1S25                 15
+ UP BND       P2S25                 12
+ UP BND       IVS25                  8
+ UP BND       UNS25              20.25
+ UP BND       P1S26                 15
+ UP BND       P2S26                 12
+ UP BND       IVS26                  8
+ UP BND       UNS26               21.5
+ UP BND       P1S27                 15
+ UP BND       P2S27                 12
+ UP BND       IVS27                  8
+ UP BND       UNS27              22.75
+ UP BND       P1S28                 15
+ UP BND       P2S28                 12
+ UP BND       IVS28                  8
+ UP BND       UNS28                 17
+ UP BND       P1S29                 15
+ UP BND       P2S29                 12
+ UP BND       IVS29                  8
+ UP BND       UNS29              18.25
+ UP BND       P1S30                 15
+ UP BND       P2S30                 12
+ UP BND       IVS30                  8
+ UP BND       UNS30               19.5
+ UP BND       P1S31                 15
+ UP BND       P2S31                 12
+ UP BND       IVS31                  8
+ UP BND       UNS31              20.75
+ UP BND       P1S32                 15
+ UP BND       P2S32                 12
+ UP BND       IVS32                  8
+ UP BND       UNS32                 22
+ UP BND       P1S33                 15
+ UP BND       P2S33                 12
+ UP BND       IVS33                  8
+ UP BND       UNS33              23.25
+ UP BND       P1S34                 15
+ UP BND       P2S34                 12
+ UP BND       IVS34                  8
+ UP BND       UNS34               24.5
+ UP BND       P1S35                 15
+ UP BND       P2S35                 12
+ UP BND       IVS35                  8
+ UP BND       UNS35              18.75
+ UP BND       P1S36                 15
+ UP BND       P2S36                 12
+ UP BND       IVS36                  8
+ UP BND       UNS36                 20
+ UP BND       P1S37                 15
+ UP BND       P2S37                 12
+ UP BND       IVS37                  8
+ UP BND       UNS37              21.25
+ UP BND       P1S38                 15
+ UP BND       P2S38                 12
+ UP BND       IVS38                  8
+ UP BND       UNS38               22.5
+ UP BND       P1S39                 15
+ UP BND       P2S39                 12
+ FX BND       IVS39                  2
+ UP BND       UNS39              23.75
+ENDATA

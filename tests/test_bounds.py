@@ -1,0 +1,205 @@
+"""Native variable upper bounds: degenerate flip cases and consistency of
+the bounded ratio test against the explicit bound-row encoding.
+
+The bounded simplex never materializes ``x_j <= u_j`` as rows: the ratio
+test lets the entering variable hit its own bound (a "flip": the column is
+complemented in place, no pivot), and a basic variable leaving at its upper
+bound complements the leaving row.  These tests pin down the degenerate
+corners of that bookkeeping and the invariant that the compact encoding
+solves the *same* LP as the row encoding on every engine and pricing rule.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (INFEASIBLE, LPBatch, OPTIMAL,
+                        canonical_shape, solve_batched_jax,
+                        solve_batched_reference, solve_batched_revised)
+from repro.core.forms import GeneralLPBatch
+
+RNG = np.random.default_rng(11)
+PRICING = ("dantzig", "steepest_edge", "devex")
+
+
+def _engines(pricing):
+    yield "tableau", lambda b: solve_batched_jax(b, pricing=pricing)
+    # the revised engine prices without the dense tableau: dantzig/partial
+    rule = pricing if pricing in ("dantzig", "partial") else "partial"
+    yield "revised", lambda b: solve_batched_revised(b, pricing=rule)
+
+
+def _with_bound_rows(batch: LPBatch) -> LPBatch:
+    """Re-encode finite upper bounds as explicit ``x_j <= u_j`` rows."""
+    A, b, c = batch.A, batch.b, batch.c
+    ub = batch.upper_bounds()
+    B, m, n = A.shape
+    fin = np.isfinite(ub).any(axis=0)
+    eye = np.eye(n)[fin]
+    rows = np.broadcast_to(eye, (B,) + eye.shape)
+    return LPBatch.from_arrays(
+        np.concatenate([A, rows], axis=1),
+        np.concatenate([b, np.where(np.isfinite(ub[:, fin]),
+                                    ub[:, fin], 1e30)], axis=1), c)
+
+
+# ---------------------------------------------------------------------------
+# degenerate flips
+# ---------------------------------------------------------------------------
+
+def test_all_at_upper_optimum():
+    """Slack rows only: the optimum puts *every* variable at its upper
+    bound, so the whole solve is flips (no pivots ever become binding)."""
+    B, m, n = 4, 3, 5
+    A = np.abs(RNG.uniform(0.1, 1.0, size=(B, m, n)))
+    ub = RNG.uniform(0.5, 2.0, size=(B, n))
+    b = np.einsum("bmn,bn->bm", A, ub) + 1.0       # rows never bind
+    c = RNG.uniform(0.5, 2.0, size=(B, n))          # all costs improve
+    batch = LPBatch.from_arrays(A, b, c, ub=ub)
+    want = np.einsum("bn,bn->b", c, ub)
+    ref = solve_batched_reference(batch)
+    assert (ref.status == OPTIMAL).all()
+    np.testing.assert_allclose(ref.objective, want, rtol=1e-12)
+    np.testing.assert_allclose(ref.x, ub, rtol=1e-12)
+    for pricing in PRICING:
+        for name, solve in _engines(pricing):
+            res = solve(batch)
+            assert (res.status == OPTIMAL).all(), (name, pricing)
+            np.testing.assert_allclose(res.objective, want, rtol=1e-4,
+                                       err_msg=f"{name}/{pricing}")
+
+
+def test_zero_upper_bound_degenerate_flip():
+    """A zero upper bound on an attractive column: the flip happens at
+    ratio t_e = 0 (pure bookkeeping, zero objective progress).  The solver
+    must take it without cycling and optimize over the remaining column."""
+    A = np.array([[[1.0, 1.0]]])
+    b = np.array([[1.0]])
+    c = np.array([[2.0, 1.0]])                      # x1 looks best but ub=0
+    ub = np.array([[0.0, np.inf]])
+    batch = LPBatch.from_arrays(A, b, c, ub=ub)
+    ref = solve_batched_reference(batch)
+    assert ref.status[0] == OPTIMAL
+    np.testing.assert_allclose(ref.objective[0], 1.0, rtol=1e-12)
+    np.testing.assert_allclose(ref.x[0], [0.0, 1.0], atol=1e-12)
+    for pricing in PRICING:
+        for name, solve in _engines(pricing):
+            res = solve(batch)
+            assert res.status[0] == OPTIMAL, (name, pricing)
+            np.testing.assert_allclose(res.objective[0], 1.0, rtol=1e-5)
+
+
+def test_degenerate_row_beats_flip():
+    """A zero-rhs binding row makes min_ratio = 0 < t_e: the pivot (not the
+    flip) must win — the strict ``t_e < min_ratio`` rule breaks the tie
+    toward the row, matching the row-encoded pivot order."""
+    A = np.array([[[1.0, -1.0], [1.0, 1.0]]])
+    b = np.array([[0.0, 4.0]])
+    c = np.array([[1.0, 0.0]])
+    ub = np.array([[3.0, np.inf]])
+    batch = LPBatch.from_arrays(A, b, c, ub=ub)
+    ref = solve_batched_reference(batch)
+    assert ref.status[0] == OPTIMAL
+    np.testing.assert_allclose(ref.objective[0], 2.0, rtol=1e-12)
+    for name, solve in _engines("dantzig"):
+        res = solve(batch)
+        assert res.status[0] == OPTIMAL, name
+        np.testing.assert_allclose(res.objective[0], 2.0, rtol=1e-5)
+
+
+def test_bounded_never_unbounded():
+    """Finite bounds on every variable rule out UNBOUNDED even when no row
+    restrains the objective direction."""
+    A = np.array([[[0.0, 1.0]]])
+    b = np.array([[1.0]])
+    c = np.array([[1.0, 0.0]])                      # unbounded without ub
+    ub = np.array([[5.0, np.inf]])
+    batch = LPBatch.from_arrays(A, b, c, ub=ub)
+    for solver in (solve_batched_reference,
+                   solve_batched_jax, solve_batched_revised):
+        res = solver(batch)
+        assert res.status[0] == OPTIMAL
+        np.testing.assert_allclose(res.objective[0], 5.0, rtol=1e-5)
+
+
+def test_infeasible_with_bounds_stays_infeasible():
+    """Bounds must not mask genuine row infeasibility (phase 1 still runs
+    with the bounded ratio test)."""
+    A = np.array([[[1.0, 1.0]]])
+    b = np.array([[-1.0]])                          # x1 + x2 <= -1, x >= 0
+    c = np.array([[1.0, 1.0]])
+    ub = np.array([[2.0, 2.0]])
+    batch = LPBatch.from_arrays(A, b, c, ub=ub)
+    assert solve_batched_reference(batch).status[0] == INFEASIBLE
+    assert solve_batched_jax(batch).status[0] == INFEASIBLE
+    assert solve_batched_revised(batch).status[0] == INFEASIBLE
+
+
+# ---------------------------------------------------------------------------
+# compact encoding == row encoding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pricing", PRICING)
+def test_bound_flip_matches_row_encoding(pricing):
+    """The native-ub solve and the explicit bound-row solve are the same LP:
+    statuses and objectives must agree across tableau and revised engines,
+    while the native form carries fewer rows."""
+    B, m, n = 12, 6, 5
+    A = RNG.uniform(1.0, 100.0, size=(B, m, n))
+    b = RNG.uniform(50.0, 500.0, size=(B, m))
+    c = RNG.uniform(1.0, 50.0, size=(B, n))
+    ub = np.where(RNG.random((B, n)) < 0.7,
+                  RNG.uniform(0.5, 10.0, size=(B, n)), np.inf)
+    native = LPBatch.from_arrays(A, b, c, ub=ub)
+    rows = _with_bound_rows(native)
+    assert rows.A.shape[1] > native.A.shape[1]
+
+    ref_n = solve_batched_reference(native)
+    ref_r = solve_batched_reference(rows)
+    assert (ref_n.status == ref_r.status).all()
+    ok = ref_n.status == OPTIMAL
+    assert ok.sum() > 0
+    np.testing.assert_allclose(ref_n.objective[ok], ref_r.objective[ok],
+                               rtol=1e-9)
+
+    for name, solve in _engines(pricing):
+        res_n = solve(native)
+        res_r = solve(rows)
+        agree = (res_n.status == ref_n.status).mean()
+        assert agree >= 0.9, (name, pricing, agree)
+        both = (res_n.status == OPTIMAL) & (res_r.status == OPTIMAL)
+        rel = np.abs(res_n.objective[both] - res_r.objective[both]) \
+            / np.maximum(1.0, np.abs(res_r.objective[both]))
+        assert rel.max() < 2e-3, (name, pricing)
+
+
+def test_chunked_solve_keeps_bounds():
+    """The chunked driver must thread ub into every chunk (and through the
+    difficulty sort): a dropped bound turns bounded-only LPs UNBOUNDED."""
+    from repro.core import solve_batched
+    B, m, n = 9, 3, 4
+    A = RNG.uniform(-0.5, 1.0, size=(B, m, n))
+    b = RNG.uniform(1.0, 5.0, size=(B, m))
+    c = RNG.uniform(0.5, 2.0, size=(B, n))
+    ub = RNG.uniform(0.5, 3.0, size=(B, n))         # every column bounded
+    batch = LPBatch.from_arrays(A, b, c, ub=ub)
+    whole = solve_batched(batch)
+    chunked = solve_batched(batch, chunk_size=4)
+    sorted_ = solve_batched(batch, chunk_size=4, sort_by_difficulty=True)
+    assert not (whole.status == 1).any()            # bounded: never UNBOUNDED
+    np.testing.assert_array_equal(whole.status, chunked.status)
+    np.testing.assert_array_equal(whole.status, sorted_.status)
+    np.testing.assert_allclose(chunked.objective, whole.objective, rtol=1e-6)
+    np.testing.assert_allclose(sorted_.objective, whole.objective, rtol=1e-6)
+
+
+def test_canonical_shape_drops_bound_rows():
+    """General-form canonicalization routes finite ubs into the bound
+    vector: canonical m must not grow with the number of bounded columns."""
+    n = 8
+    g = GeneralLPBatch.from_arrays(
+        A=RNG.uniform(0.1, 1.0, size=(1, 3, n)), sense=["L"] * 3,
+        rhs=RNG.uniform(5.0, 9.0, size=(1, 3)),
+        ub=np.full((1, n), 2.0), c=np.ones((1, n)))
+    m_native, n_native = canonical_shape(g)
+    m_rows, n_rows = canonical_shape(g, bound_rows=True)
+    assert n_native == n_rows
+    assert m_rows == m_native + n           # one row per finite ub

@@ -28,13 +28,16 @@ def _general(B=8, m=7, n=6, **kw):
 # ---------------------------------------------------------------------------
 
 def test_canonical_shape_growth():
-    # equalities double, finite ubs add rows, frees add columns
+    # equalities double, frees add columns; finite ubs are native (no rows)
     g = GeneralLPBatch.from_arrays(
         A=np.ones((1, 3, 2)), sense=[LE, GE, EQ], rhs=[[3.0, 1.0, 2.0]],
         lb=[[0.0, -np.inf]], ub=[[5.0, np.inf]], c=[[1.0, 1.0]])
     m_can, n_can = canonical_shape(g)
-    # rows: 1 (L hi) + 1 (E hi) + 1 (G lo) + 1 (E lo) + 1 (ub col) = 5
-    assert (m_can, n_can) == (5, 3)   # one free column split
+    # rows: 1 (L hi) + 1 (E hi) + 1 (G lo) + 1 (E lo) = 4; the finite ub
+    # rides the bound vector instead of an identity row
+    assert (m_can, n_can) == (4, 3)   # one free column split
+    # legacy counterfactual: the row encoding would have paid one more row
+    assert canonical_shape(g, bound_rows=True) == (5, 3)
 
 
 def test_lower_bound_shift_and_constant():

@@ -15,6 +15,7 @@ from repro.io.mps import (FIXTURE_NAMES, fixture_path, perturbed_batch,
 AFIRO_OPT = -464.7531428571429       # published Netlib optimum
 TESTPROB_OPT = -13.0
 SC50B_LIKE_OPT = -2908.473039215686  # scipy/HiGHS float64 reference
+SC205_LIKE_OPT = 3859.009119857473   # float64 oracle (min; all-UP staircase)
 
 
 def _equal(g, g2):
@@ -123,7 +124,7 @@ def test_write_rejects_batches():
 
 @pytest.mark.parametrize("name,opt", [
     ("afiro", AFIRO_OPT), ("testprob", TESTPROB_OPT),
-    ("sc50b_like", SC50B_LIKE_OPT),
+    ("sc50b_like", SC50B_LIKE_OPT), ("sc205_like", SC205_LIKE_OPT),
 ])
 def test_fixture_optimum_oracle(name, opt):
     g = read_mps(fixture_path(name))
