@@ -46,6 +46,14 @@ required to agree (same algorithm — only the matvecs change), and the
 per-iteration element traffic recorded as the dense/sparse ratio
 (~1/density) that scripts/bench_gate.py holds a floor under.
 
+A ``warm_workloads`` section measures the warm-start engine (core/lp.py
+WarmStart): a ``perturbed_sequence`` trajectory per fixture is re-solved
+cold and warm-chained per engine, and the per-re-solve work ratio
+(warm/cold mean iterations), status agreement and objective error are
+recorded — scripts/bench_gate.py holds the ratio under 0.5 (a warm
+re-solve must cost at most half a cold one) on top of the usual
+baseline-relative bound.
+
 Results land in ``BENCH_pivot_work.json`` next to this file so future PRs
 have a perf trajectory to beat; a ``quick_workloads`` section re-runs the
 --quick configuration (B=128) so scripts/bench_gate.py can diff a CI smoke
@@ -85,6 +93,9 @@ QUICK_SIZES = ((5, 5), (28, 28))
 GENERAL_FIXTURES = ("afiro", "sc50b_like")
 SPARSE_FIXTURES = ("sc50b_like", "sc205_like")   # staircases: shared pattern
 GENERAL_B = 32      # same in --quick and full runs: the gate matches on it
+WARM_FIXTURES = ("afiro", "sc50b_like")  # same in both modes (gate keys on
+WARM_B = 16                              # fixture/B/K); sc205 would push the
+WARM_K = 4                               # smoke past its minute budget
 
 
 def mixed_batch(m: int, n: int, B: int, seed: int = 0) -> LPBatch:
@@ -261,6 +272,59 @@ def measure_sparse(fixture: str, B: int = GENERAL_B, *, iters: int = 1,
         "wall_s_dense": t_dense,
         "wall_s_sparse": t_sparse,
     }
+
+
+def measure_warm(fixture: str, B: int = WARM_B, K: int = WARM_K, *,
+                 seed: int = 0, backends: str = "all") -> dict:
+    """Warm-start engine row: a ``perturbed_sequence`` trajectory (K nudged
+    copies of one fixture batch, the repeated-solve workload from the
+    reachability pipeline) solved cold at every step and warm-chained from
+    the previous step's terminal state (``res.warm_start()``).  Records, per
+    engine, the mean re-solve iteration counts cold vs warm, their ratio
+    (``work_ratio`` — scripts/bench_gate.py holds this under 0.5: a warm
+    re-solve must cost at most half a cold one), the cold-vs-warm status
+    agreement, and the objective error on commonly-OPTIMAL LPs.  Step 0 is
+    excluded from the means (both paths solve it cold — it only seeds the
+    chain)."""
+    from repro.core import solve_batched
+    from repro.io.mps import fixture_path, perturbed_sequence, read_mps
+
+    g = read_mps(fixture_path(fixture))
+    seq = perturbed_sequence(g, B, K, np.random.default_rng(seed))
+    engines = (("tableau", "revised", "pdhg") if backends == "all"
+               else (backends,))
+    row = {"fixture": fixture, "B": B, "K": K, "backends": {}}
+    for backend in engines:
+        cold_iters, warm_iters, match, errs = [], [], [], []
+        ws = None
+        for k, gb in enumerate(seq):
+            cold = solve_batched(gb, backend=backend)
+            if k > 0:
+                warm = solve_batched(gb, backend=backend, warm=ws)
+                cold_iters.append(np.asarray(cold.iterations, np.int64))
+                warm_iters.append(np.asarray(warm.iterations, np.int64))
+                match.append(np.asarray(warm.status)
+                             == np.asarray(cold.status))
+                ok = (np.asarray(cold.status) == OPTIMAL) \
+                    & (np.asarray(warm.status) == OPTIMAL)
+                if ok.any():
+                    errs.append(float(
+                        (np.abs(warm.objective[ok] - cold.objective[ok])
+                         / np.maximum(np.abs(cold.objective[ok]),
+                                      1e-12)).max()))
+                ws = warm.warm_start()  # chain from the warm trajectory
+            else:
+                ws = cold.warm_start()
+        cold_mean = float(np.concatenate(cold_iters).mean())
+        warm_mean = float(np.concatenate(warm_iters).mean())
+        row["backends"][backend] = {
+            "cold_iters_mean": cold_mean,
+            "warm_iters_mean": warm_mean,
+            "work_ratio": warm_mean / max(cold_mean, 1e-12),
+            "status_match_frac": float(np.concatenate(match).mean()),
+            "rel_obj_err": float(max(errs)) if errs else 0.0,
+        }
+    return row
 
 
 def measure_pdhg(batch: LPBatch, sched, iters: int) -> dict:
@@ -498,6 +562,20 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
                   f"rel_obj={r['rel_obj_err_vs_dense']:.1e} "
                   f"wall dense={r['wall_s_dense']:.3f}s "
                   f"sparse={r['wall_s_sparse']:.3f}s")
+    print("-- warm_workloads (warm-start engine, bench_gate baseline) --")
+    warm_rows = []
+    for fixture in WARM_FIXTURES:
+        r = measure_warm(fixture, backends=backends)
+        warm_rows.append(r)
+        for name, wb in r["backends"].items():
+            ratio = wb["work_ratio"]
+            cut = "all" if ratio == 0.0 else f"x{1.0 / ratio:.1f}"
+            print(f"warm {r['fixture']} B={r['B']} K={r['K']} "
+                  f"{name:<8} cold_iters={wb['cold_iters_mean']:8.1f} "
+                  f"warm_iters={wb['warm_iters_mean']:8.1f} "
+                  f"({cut} re-solve work eliminated) "
+                  f"status_match={wb['status_match_frac']:.3f} "
+                  f"rel_obj={wb['rel_obj_err']:.1e}")
     result = {
         "benchmark": "pivot_work",
         "quick": quick,
@@ -507,6 +585,7 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
         "quick_workloads": quick_rows,
         "general_workloads": general_rows,
         "sparse_workloads": sparse_rows,
+        "warm_workloads": warm_rows,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

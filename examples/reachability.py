@@ -65,7 +65,25 @@ print(f"numpy closed form (sequential-ish): {t_np*1e3:6.1f} ms "
 print(f"general batched simplex (extrapolated): {t_simplex*1e3:8.1f} ms "
       f"({t_simplex/t_box:.0f}x slower)")
 np.testing.assert_allclose(res.objective + off,
-                           sup.reshape(T * K)[:4000], rtol=1e-4)
+                           sup.reshape(T * K)[:4000], rtol=1e-4, atol=1e-6)
 print("hyperbox == simplex on the same LPs (checked on 4000)")
+
+# warm-start chaining along the flow-pipe: the next 4000 LPs are the same K
+# directions against boxes drifted 100 Euler steps further — the optimal
+# basis of a box LP depends only on the direction's sign pattern relative
+# to the box, which the drift never flips, so re-solving from the previous
+# slice's terminal state (``warm=res.warm_start()``) needs ~0 pivots where
+# a cold solve re-pays the full pivot path.
+lp2, off2 = hyperbox_as_general_lp(lo_e[4000:8000], hi_e[4000:8000],
+                                   d_e[4000:8000])
+cold2 = solve_batched_jax(lp2)
+warm2 = solve_batched_jax(lp2, warm=res.warm_start())
+print(f"flow-pipe warm chaining (next 4000 LPs): "
+      f"cold {cold2.iterations.mean():.1f} pivots/LP -> "
+      f"warm {warm2.iterations.mean():.1f}; statuses agree: "
+      f"{bool(np.array_equal(cold2.status, warm2.status))}")
+np.testing.assert_allclose(warm2.objective + off2,
+                           sup.reshape(T * K)[4000:8000], rtol=1e-4,
+                           atol=1e-6)
 print(f"state-space envelope at t=0:   {sup.reshape(T, K)[0, :4].round(3)}")
 print(f"state-space envelope at t=end: {sup.reshape(T, K)[-1, :4].round(3)}")

@@ -38,6 +38,16 @@ older baselines).  On every matching workload the gate fails when:
   structural zeros" number) drops more than ``--rel-drop`` relative, or
   the sparse iteration count grows more than ``--rel-drop`` relative to
   the dense engine's on the same workload;
+* a ``warm_workloads`` row (the warm-start engine re-solving a perturbed
+  fixture trajectory, benchmarks/pivot_work.py measure_warm) regresses:
+  any engine's ``work_ratio`` (warm/cold mean re-solve iterations)
+  exceeds the hard 0.5 bound — a warm re-solve must cost at most half a
+  cold one — or grows more than ``--rel-drop`` relative to the baseline
+  (with a small absolute slack for ratios near zero), cold-vs-warm status
+  agreement drops below baseline - 0.02, or the warm objective drifts
+  more than 2e-3 relative from the cold one on commonly-optimal LPs;
+  baselines predating the warm engine simply have no such rows, so old
+  JSONs pass untouched;
 * a ``general_workloads`` row (fixture-backed real instances through the
   MPS/canonicalization pipeline) regresses: per-backend status agreement
   with the float64 oracle drops below baseline - 0.02, relative objective
@@ -201,6 +211,47 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
                 f"{tag}: presolve-scaling f32 effect disappeared (baseline "
                 "recorded a scaled-vs-unscaled difference; the smoke run "
                 "shows none — the equilibration pass likely stopped running)")
+
+    # ---- warm-start rows (re-solve work-elimination invariants) -----------
+    cur_warm = {(w["fixture"], w["B"], w["K"]): w
+                for w in current.get("warm_workloads", [])}
+    for bw in baseline.get("warm_workloads", []):
+        key = (bw["fixture"], bw["B"], bw["K"])
+        tag = f"warm {bw['fixture']} B={bw['B']} K={bw['K']}"
+        cw = cur_warm.get(key)
+        if cw is None:
+            failures.append(f"{tag}: row missing from the smoke run")
+            continue
+        for backend, bb in bw.get("backends", {}).items():
+            if backend not in measured:
+                continue
+            cb = cw.get("backends", {}).get(backend)
+            if cb is None:
+                failures.append(f"{tag}: backend {backend!r} missing")
+                continue
+            if cb["work_ratio"] > 0.5:
+                failures.append(
+                    f"{tag}: {backend} work_ratio {cb['work_ratio']:.3f} > "
+                    "0.50 (hard bound: a warm re-solve must cost at most "
+                    "half a cold one)")
+            ceiling = bb["work_ratio"] * (1.0 + rel_drop) + cut_slack
+            if cb["work_ratio"] > ceiling:
+                failures.append(
+                    f"{tag}: {backend} work_ratio {cb['work_ratio']:.3f} > "
+                    f"{ceiling:.3f} (baseline {bb['work_ratio']:.3f} "
+                    f"+ {rel_drop:.0%} — warm starts stopped eliminating "
+                    "re-solve work)")
+            floor = bb["status_match_frac"] - 0.02
+            if cb["status_match_frac"] < floor:
+                failures.append(
+                    f"{tag}: {backend} cold-vs-warm status agreement "
+                    f"{cb['status_match_frac']:.3f} < {floor:.3f} "
+                    f"(baseline {bb['status_match_frac']:.3f})")
+            if cb["rel_obj_err"] > 2e-3:
+                failures.append(
+                    f"{tag}: {backend} warm rel_obj_err "
+                    f"{cb['rel_obj_err']:.2e} > 2e-3 — warm starts changed "
+                    "the answer, not just the path")
 
     # ---- shared-pattern sparse rows (dense-vs-sparse PDHG invariants) -----
     if check_pdhg:

@@ -10,8 +10,11 @@
 # The smoke also carries the general-form rows (vendored MPS fixtures through
 # canonicalize -> solve -> recover vs the float64 oracle), the shared-pattern
 # sparse rows on the pdhg/all legs (sparse-vs-dense PDHG agreement on the
-# staircase fixtures + the nnz-scaled traffic ratio), and the fast path
-# an mps-roundtrip check (parse fixtures, write, re-parse, assert equal).
+# staircase fixtures + the nnz-scaled traffic ratio), the warm-start rows
+# (perturbed fixture trajectories re-solved from the previous step's
+# terminal state: each engine must at least halve re-solve work with
+# unchanged statuses/objectives), and the fast path an mps-roundtrip check
+# (parse fixtures, write, re-parse, assert equal).
 #
 # Per backend the smoke run writes /tmp/pivot_work_smoke_<backend>.json
 # (never the committed BENCH_pivot_work.json), asserts the absolute
@@ -135,6 +138,20 @@ for sw in d.get("sparse_workloads", []):
     assert sw["element_traffic_ratio"] > 2.0, \
         f"sparse {sw['fixture']}: element traffic ratio " \
         f"{sw['element_traffic_ratio']:.2f} — not scaling with nnz"
+# warm smoke: the warm-start engine must at least halve the re-solve
+# iteration count on the perturbed trajectories (hard bound — the same
+# one bench_gate.py holds), with cold-vs-warm statuses agreeing and
+# objectives unchanged (warm starts change the path, never the answer)
+for ww in d.get("warm_workloads", []):
+    for name, wb in ww["backends"].items():
+        assert wb["work_ratio"] <= 0.5, \
+            f"warm {ww['fixture']}: {name} work_ratio " \
+            f"{wb['work_ratio']:.2f} > 0.5 — warm re-solves not halving work"
+        assert wb["status_match_frac"] >= 0.95, \
+            f"warm {ww['fixture']}: {name} cold-vs-warm status agreement " \
+            f"{wb['status_match_frac']:.2f} < 0.95"
+        assert wb["rel_obj_err"] < 2e-3, \
+            f"warm {ww['fixture']}: {name} rel_obj_err {wb['rel_obj_err']:.2e}"
 # general-form smoke: real fixtures through the MPS/canonicalization
 # pipeline must track the float64 oracle after recovery
 for gw in d.get("general_workloads", []):
@@ -173,6 +190,12 @@ if d.get("sparse_workloads"):
           ", ".join(f"{sw['fixture']} (nnz={sw['nnz']}, traffic "
                     f"x{sw['element_traffic_ratio']:.1f})"
                     for sw in d["sparse_workloads"]))
+if d.get("warm_workloads"):
+    print("warm smoke OK:",
+          ", ".join(f"{ww['fixture']}/{name} ratio "
+                    f"{wb['work_ratio']:.2f}"
+                    for ww in d["warm_workloads"]
+                    for name, wb in ww["backends"].items()))
 EOF
 
   echo "== bench-regression gate (backend=$backend) =="

@@ -28,15 +28,21 @@ Public API:
                                            (``pricing=`` on every solve_*):
                                            dantzig | steepest_edge | devex
                                            | partial
+    WarmStart                            — cross-solve state carrier
+                                           (``res.warm_start()`` ->
+                                           ``solve_*(..., warm=ws)``): basis
+                                           + flips + pricing weights for the
+                                           simplexes, iterates + primal
+                                           weight for PDHG
 """
 from .lp import (  # noqa: F401
     BACKEND_REGISTRY, BACKENDS, BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL,
-    UNBOUNDED, LPBatch, LPResult, STATUS_NAMES, backend_spec, build_tableau,
-    canonicalize_backend, default_max_iters, resolve_backend,
+    UNBOUNDED, LPBatch, LPResult, STATUS_NAMES, WarmStart, backend_spec,
+    build_tableau, canonicalize_backend, default_max_iters, resolve_backend,
 )
 from .forms import (  # noqa: F401
     GeneralLPBatch, Recovery, canonical_shape, canonicalize, general_kkt,
-    general_violation, random_general_lp_batch,
+    general_violation, prepare_warm, random_general_lp_batch,
 )
 from .pricing import ALL_PRICING, PRICING_RULES, canonicalize_rule  # noqa: F401
 from .simplex import (  # noqa: F401

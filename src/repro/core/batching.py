@@ -22,8 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .compaction import solve_batched_compacted
-from .forms import ensure_canonical, finish_result
-from .lp import LPBatch, LPResult, canonicalize_backend, resolve_backend
+from .forms import ensure_canonical, finish_result, prepare_warm
+from .lp import (LPBatch, LPResult, WarmStart, canonicalize_backend,
+                 resolve_backend)
 from .simplex import solve_batched_jax
 
 # Conservative default budget for planning on real devices; on CPU hosts this
@@ -68,6 +69,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                   compaction: bool = False, pricing: str = "dantzig",
                   backend: str = "tableau",
                   presolve: bool = True, scale: Optional[bool] = None,
+                  warm: Optional[WarmStart] = None,
                   **solver_kwargs) -> LPResult:
     """Chunked batched solve (Algorithm 1). ``solver`` defaults to the pure
     JAX lockstep solver; kernels.ops.solve_batched_pallas and
@@ -103,9 +105,16 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     chunking, sorting and memory planning all operate on the canonical
     shape (Eq. 5 budgets the canonical tableau) — and the concatenated
     result is recovered into original coordinates at the end;
-    ``presolve``/``scale`` control the canonicalization."""
+    ``presolve``/``scale`` control the canonicalization.
+
+    ``warm`` (core/lp.py WarmStart, usually ``parent.warm_start()``) seeds
+    every engine from a parent solve; its per-LP leaves are permuted and
+    chunk-sliced alongside ``A``/``b``/``c``, and chunk results' terminal
+    states are re-concatenated/unpermuted so the returned ``LPResult.warm``
+    chains into the next re-solve."""
     canonicalize_backend(backend)
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
+    warm = prepare_warm(warm, rec, batch)
     if solver is None:
         if backend != "tableau":
             # registry dispatch (core/lp.py BACKEND_REGISTRY): each engine
@@ -115,7 +124,8 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
             solver = (solve_batched_compacted if compaction
                       else solve_batched_jax)
         solver_kwargs["pricing"] = pricing
-    elif compaction or pricing != "dantzig" or backend != "tableau":
+    elif compaction or pricing != "dantzig" or backend != "tableau" \
+            or warm is not None:
         # only introspect when a kwarg actually needs forwarding, so
         # non-introspectable callables keep working on the default path
         params = inspect.signature(solver).parameters
@@ -147,6 +157,12 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                     f"{getattr(solver, '__name__', solver)!r} does not accept "
                     "a 'backend' kwarg; use solver=None or a backend-aware "
                     "solver such as kernels.ops.solve_batched_pallas")
+        if warm is not None and "warm" not in params and not has_varkw:
+            raise ValueError(
+                f"warm= requested but solver "
+                f"{getattr(solver, '__name__', solver)!r} does not accept "
+                "a 'warm' kwarg; use solver=None or a warm-start-aware "
+                "solver")
     B = batch.batch
     perm = None
     if sort_by_difficulty and B > 1:
@@ -156,10 +172,20 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                         c=np.asarray(batch.c)[perm],
                         ub=None if batch.ub is None
                         else np.asarray(batch.ub)[perm])
+        if warm is not None:
+            warm = warm.take(perm)
+
+    def call(sub, sub_warm):
+        # warm is passed per-call (never via solver_kwargs) because each
+        # chunk gets its own slice of the carrier
+        if sub_warm is not None:
+            return solver(sub, warm=sub_warm, **solver_kwargs)
+        return solver(sub, **solver_kwargs)
+
     if chunk_size is None:
         chunk_size = max_chunk_size(batch, device_bytes, n_devices)
     if chunk_size >= B:
-        res = solver(batch, **solver_kwargs)
+        res = call(batch, warm)
         return finish_result(rec, _unpermute(res, perm))
 
     n_chunks = math.ceil(B / chunk_size)
@@ -170,7 +196,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                       ub=None if batch.ub is None else batch.ub[s:e])
         # async dispatch: this returns before the device finishes; the next
         # chunk's H2D overlaps this chunk's compute (CUDA-streams analogue)
-        pending.append(solver(sub, **solver_kwargs))
+        pending.append(call(sub, None if warm is None else warm.slice(s, e)))
 
     def cat(field):
         vals = [getattr(r, field) for r in pending]
@@ -180,7 +206,8 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
 
     res = LPResult(x=cat("x"), objective=cat("objective"),
                    status=cat("status"), iterations=cat("iterations"),
-                   y=cat("y"), z=cat("z"))
+                   y=cat("y"), z=cat("z"),
+                   warm=WarmStart.concat([r.warm for r in pending]))
     return finish_result(rec, _unpermute(res, perm))
 
 
@@ -194,4 +221,5 @@ def _unpermute(res: LPResult, perm) -> LPResult:
                     objective=take(res.objective),
                     status=take(res.status),
                     iterations=take(res.iterations),
-                    y=take(res.y), z=take(res.z))
+                    y=take(res.y), z=take(res.z),
+                    warm=None if res.warm is None else res.warm.take(inv))

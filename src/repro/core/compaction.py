@@ -42,8 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .forms import ensure_canonical, finish_result
-from .lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult,
+from .forms import ensure_canonical, finish_result, prepare_warm
+from .lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, WarmStart,
                  canonicalize_backend, default_max_iters, resolve_backend)
 from .pricing import canonicalize_rule, compact_weights, init_weights
 from .simplex import (
@@ -54,6 +54,7 @@ from .simplex import (
     extract_duals,
     extract_solution_compacted,
     extract_solution_jax,
+    inject_tableau_warm,
     phase2_step,
     simplex_step,
     tableau_elements,
@@ -250,23 +251,43 @@ class JaxBackend:
         self.dtype = dtype
         self.rule = canonicalize_rule(pricing)
 
-    def init(self, A, b, c, ub=None) -> CompactionState:
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None
+             ) -> CompactionState:
         T, basis, phase = build_tableau_jax(A, b, c)
         B = T.shape[0]
         if ub is None:
             ub = jnp.full((B, self.n), jnp.inf, dtype=T.dtype)
         else:
             ub = jnp.asarray(ub, dtype=T.dtype)
+        flip = jnp.zeros((B, self.n), dtype=bool)
+        ok = None
+        if warm is not None and warm.basis is not None:
+            wfl = (flip if warm.at_upper is None
+                   else jnp.asarray(np.asarray(warm.at_upper), bool))
+            T_w, basis_w, phase_w, flip_w, ok = inject_tableau_warm(
+                A, b, c, ub, jnp.asarray(np.asarray(warm.basis), jnp.int32),
+                wfl, m=self.m, n=self.n, feas_tol=self.feas_tol)
+            T = jnp.where(ok[:, None, None], T_w, T)
+            basis = jnp.where(ok[:, None], basis_w, basis)
+            phase = jnp.where(ok, phase_w, phase)
+            flip = jnp.where(ok[:, None], flip_w, flip)
         thr = self.feas_tol * jnp.maximum(1.0, T[:, self.m + 1, -1])
         # dantzig never reads weights: carry a (B, 1) stub so segments and
         # bucket gathers don't move a dead (B, C) array
         w = (jnp.ones((B, 1), T.dtype) if self.rule in ("dantzig", "partial")
              else init_weights(self.rule, T, self.m))
+        if (ok is not None and self.rule == "devex"
+                and warm.pricing == self.rule and warm.weights is not None
+                and np.asarray(warm.weights).shape[1] >= self.n + self.m):
+            ww = jnp.asarray(np.asarray(warm.weights), w.dtype)
+            nm = self.n + self.m
+            w = w.at[:, :nm].set(
+                jnp.where(ok[:, None], ww[:, :nm], w[:, :nm]))
         return CompactionState(
             T=T, basis=basis, phase=phase,
             status=jnp.full((B,), _RUNNING, jnp.int32),
             iters=jnp.zeros((B,), jnp.int32), w=w,
-            flip=jnp.zeros((B, self.n), dtype=bool), ub=ub, thr=thr)
+            flip=flip, ub=ub, thr=thr)
 
     def run_phase1(self, state, steps):
         state, it = _segment_phase1_jit(state, jnp.int32(steps), m=self.m,
@@ -438,7 +459,8 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
                             backend: str = "tableau",
                             stats_out: Optional[List[SegmentStat]] = None,
                             presolve: bool = True,
-                            scale: Optional[bool] = None) -> LPResult:
+                            scale: Optional[bool] = None,
+                            warm: WarmStart | None = None) -> LPResult:
     """Solve a batch with the two-level work-elimination engine (phase
     compaction + active-set compaction scheduler) on the pure-JAX backend.
     Accepts a GeneralLPBatch like every solver entry point (canonicalize on
@@ -455,13 +477,17 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
 
     ``backend`` selects the solver engine under the scheduler: "tableau"
     (this module's JaxBackend), "revised" or "pdhg" route to the engine's
-    own compacted entry point via the core/lp.py registry."""
+    own compacted entry point via the core/lp.py registry.
+
+    ``warm`` seeds the initial state (warm-derived leaves then ride the
+    bucket gathers automatically); compacted results report ``warm=None``
+    (no terminal-state capture across the retirement buckets)."""
     if canonicalize_backend(backend) != "tableau":
         return resolve_backend(backend, compacted=True)(
             batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
             max_iters=max_iters, segment_k=segment_k,
             compact_threshold=compact_threshold, pricing=pricing,
-            stats_out=stats_out, presolve=presolve, scale=scale)
+            stats_out=stats_out, presolve=presolve, scale=scale, warm=warm)
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     if max_iters is None:
@@ -476,7 +502,8 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
     state = backend.init(jnp.asarray(batch.A, dtype),
                          jnp.asarray(batch.b, dtype),
                          jnp.asarray(batch.c, dtype),
-                         ub=jnp.asarray(batch.upper_bounds(), dtype))
+                         ub=jnp.asarray(batch.upper_bounds(), dtype),
+                         warm=prepare_warm(warm, rec, batch))
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
     cfg = CompactionConfig(

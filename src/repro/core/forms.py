@@ -48,11 +48,12 @@ unchanged — they only ever see the canonical ``LPBatch``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import numpy as np
 
-from .lp import INFEASIBLE, OPTIMAL, LPBatch, LPResult
+from .lp import INFEASIBLE, OPTIMAL, LPBatch, LPResult, WarmStart
 
 # Row senses (MPS letters).
 LE, GE, EQ = "L", "G", "E"
@@ -366,8 +367,21 @@ class Recovery:
             y, z = self.recover_duals(np.where(np.isnan(res.y), 0.0, res.y))
             y = np.where(opt[:, None], y, np.nan)
             z = np.where(opt[:, None], z, np.nan)
+        # warm-start state stays in *canonical* coordinates (a basis has no
+        # original-space meaning) but the equilibration scaling is peeled
+        # off the iterate leaves: a perturbed follow-up batch re-scales with
+        # its own factors at injection (prepare_warm)
+        warm = res.warm
+        if warm is not None:
+            wx, wy = warm.x, warm.y
+            if wx is not None and self.col_scale is not None:
+                wx = np.asarray(wx) * self.col_scale
+            if wy is not None and self.row_scale is not None:
+                wy = np.asarray(wy) * self.row_scale
+            warm = dataclasses.replace(warm, x=wx, y=wy)
         return LPResult(x=x, objective=obj, status=status,
-                        iterations=np.asarray(res.iterations), y=y, z=z)
+                        iterations=np.asarray(res.iterations), y=y, z=z,
+                        warm=warm)
 
 
 def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
@@ -605,6 +619,51 @@ def ensure_canonical(batch, *, presolve: bool = True,
 def finish_result(rec, res: LPResult) -> LPResult:
     """Entry-point shim: apply ``Recovery`` when the input was general."""
     return res if rec is None else rec.recover(res)
+
+
+def prepare_warm(warm: Optional[WarmStart], rec: Optional[Recovery],
+                 batch: LPBatch) -> Optional[WarmStart]:
+    """Validate a ``WarmStart`` against the canonical batch about to be
+    solved and map its iterate leaves into the engine's scaled coordinates.
+
+    The single validation gate every entry point routes through: a carrier
+    whose batch/shape does not match (the follow-up batch changed size, or
+    the perturbation changed the canonical shape) is *dropped with a
+    warning* — warm starting is an optimization, never a correctness
+    requirement, so shape drift degrades to a cold solve instead of
+    erroring.  ``rec=None`` (the input was already canonical) skips the
+    re-scaling and only validates."""
+    if warm is None:
+        return None
+    B, m, n = batch.batch, batch.m, batch.n
+
+    def drop(why):
+        warnings.warn(f"warm start dropped ({why}); solving cold")
+        return None
+
+    if warm.m != m or warm.n != n:
+        return drop(f"carrier is {warm.m}x{warm.n}, batch canonicalizes "
+                    f"to {m}x{n}")
+    if warm.batch != B:
+        return drop(f"carrier batch {warm.batch} != batch size {B}")
+    for field, rows, cols in (("basis", m, None), ("at_upper", n, None),
+                              ("x", n, None), ("y", m, None),
+                              ("omega", None, None), ("eta", None, None)):
+        v = getattr(warm, field)
+        if v is None:
+            continue
+        want = (B,) if rows is None else (B, rows)
+        if np.asarray(v).shape != want:
+            return drop(f"leaf {field!r} has shape {np.asarray(v).shape}, "
+                        f"expected {want}")
+    if rec is None:
+        return warm
+    wx, wy = warm.x, warm.y
+    if wx is not None and rec.col_scale is not None:
+        wx = np.asarray(wx) / rec.col_scale
+    if wy is not None and rec.row_scale is not None:
+        wy = np.asarray(wy) / rec.row_scale
+    return dataclasses.replace(warm, x=wx, y=wy)
 
 
 def random_general_lp_batch(rng: np.random.Generator, B: int, m: int, n: int,

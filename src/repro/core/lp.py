@@ -96,6 +96,37 @@ Two orthogonal capabilities cut across the engines:
 tolerance-based backends must be compared against oracles at ``tol``, not
 bitwise.
 
+Warm starting repeated solves
+-----------------------------
+
+Sequences of near-identical batches (the reachability loop of Sec. 7, MPC,
+branch-and-bound re-solves) should not pay cold-start cost every time.  Every
+monolithic batched solver captures its terminal state in a backend-uniform
+``WarmStart`` carrier and the next solve re-injects it:
+
+    res1 = solve_batched(batch1)                    # cold
+    res2 = solve_batched(batch2, warm=res1.warm_start())   # warm
+
+For the simplex engines the carrier holds the final basis, the
+nonbasic-at-upper flips and the pricing weights; injection rebuilds the
+tableau (or refactorizes the basis) from the parent basis, checks primal
+feasibility *per LP*, and each LP independently (a) skips phase 1 when the
+parent basis is still feasible, (b) runs a repair phase 1 seeded from the
+parent basis (only the violated rows get artificials) when it is not, or
+(c) falls back to the cold construction when the basis is unusable
+(singular/out of range).  For PDHG the carrier holds the final iterates,
+the primal weight ``omega`` and the step-size state; injection adopts them
+only when their KKT residual beats the cold zero start (the reset guard),
+so a bad warm start can never do worse than cold.  Statuses and final
+objectives are unchanged either way — warm starting only moves the start
+point, never the optimality test.
+
+Warm starts survive general-form canonicalization (``Recovery`` maps the
+carrier between original and canonical coordinates, forms.prepare_warm) and
+ride through the chunked driver's sorting/slicing like every other per-LP
+leaf.  A carrier whose shape does not match the target batch is dropped
+with a warning (cold solve), never an error.
+
 Once phase 1 certifies feasibility, the artificial block and the phase-1
 objective row are dead weight; the device solvers drop them with a one-shot
 *phase compaction* (core/simplex.py) and finish phase 2 on the
@@ -307,6 +338,91 @@ class LPBatch:
 
 
 @dataclasses.dataclass(frozen=True)
+class WarmStart:
+    """Backend-uniform warm-start carrier: the terminal solver state of one
+    batched solve, re-injectable into the next via ``solve_*(..., warm=ws)``.
+
+    ``m``/``n`` are the *canonical* dimensions of the batch the carrier was
+    captured from (a basis has no original-coordinate meaning, so for
+    general-form solves the carrier stays in canonical space; only the
+    equilibration scaling is peeled off its iterate leaves by ``Recovery``).
+    A carrier is only usable on a batch whose canonical shape matches
+    (B, m, n); mismatches are dropped with a warning at injection
+    (forms.prepare_warm), degrading to a cold solve.
+
+    Simplex leaves (tableau/revised engines):
+      basis    (B, m) int32 — parent basis (column basic in each row)
+      at_upper (B, n) bool  — structural columns nonbasic at their upper
+                              bound (tableau ``flip`` / revised ``onub``)
+      weights  (B, C)       — pricing weights at termination (``pricing``
+                              tags the rule; reused only when rule and
+                              shape still match, else re-initialized)
+    PDHG leaves:
+      x (B, n), y (B, m)    — final iterates (original coordinates)
+      omega (B,)            — primal weight at termination
+      eta   (B,)            — step size at termination (recorded for
+                              completeness; injection re-estimates the step
+                              from the new matrix, which is always safe)
+
+    Unused leaves are None — a simplex result carries no PDHG state and
+    vice versa, and each engine ignores the other's leaves at injection.
+    """
+
+    m: int
+    n: int
+    basis: np.ndarray | None = None
+    at_upper: np.ndarray | None = None
+    weights: np.ndarray | None = None
+    pricing: str | None = None
+    x: np.ndarray | None = None
+    y: np.ndarray | None = None
+    omega: np.ndarray | None = None
+    eta: np.ndarray | None = None
+
+    _ARRAY_FIELDS = ("basis", "at_upper", "weights", "x", "y", "omega", "eta")
+
+    @property
+    def batch(self) -> int:
+        for f in self._ARRAY_FIELDS:
+            v = getattr(self, f)
+            if v is not None:
+                return np.asarray(v).shape[0]
+        return 0
+
+    def _map(self, fn) -> "WarmStart":
+        kw = {f: (None if getattr(self, f) is None
+                  else fn(np.asarray(getattr(self, f))))
+              for f in self._ARRAY_FIELDS}
+        return WarmStart(m=self.m, n=self.n, pricing=self.pricing, **kw)
+
+    def take(self, idx) -> "WarmStart":
+        """Gather per-LP state along the batch axis (sorting/permutation)."""
+        return self._map(lambda a: a[np.asarray(idx)])
+
+    def slice(self, start: int, stop: int) -> "WarmStart":
+        """The [start:stop) sub-carrier (chunked driver)."""
+        return self._map(lambda a: a[start:stop])
+
+    @staticmethod
+    def concat(parts) -> "WarmStart | None":
+        """Concatenate per-chunk carriers back into one (chunked driver).
+        Any missing part (a chunk whose solver captured no state) drops the
+        whole carrier — a partial warm start cannot be re-injected."""
+        parts = list(parts)
+        if not parts or any(p is None for p in parts):
+            return None
+        first = parts[0]
+        kw = {}
+        for f in WarmStart._ARRAY_FIELDS:
+            vals = [getattr(p, f) for p in parts]
+            if any(v is None for v in vals):
+                kw[f] = None
+            else:
+                kw[f] = np.concatenate([np.asarray(v) for v in vals])
+        return WarmStart(m=first.m, n=first.n, pricing=first.pricing, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class LPResult:
     """Solver output for a batch: per-LP solution, objective, status, iters,
     and (when the backend provides them) the dual certificate.
@@ -322,6 +438,13 @@ class LPResult:
       signs follow the problem sense (see forms.Recovery.recover_duals).
     * ``z`` (B, n) — reduced costs ``c - A^T y``; complementary slackness
       pairs them with active bounds (forms.general_kkt is the checker).
+
+    ``warm`` is the terminal solver state (basis/flips/weights for the
+    simplex engines, iterates/omega/eta for PDHG) when the solve path
+    captures it — the monolithic batched solvers and the chunked driver do;
+    compaction-scheduled, distributed and Pallas paths report None.  Feed it
+    to the next solve of a perturbed batch via
+    ``solve_batched(batch2, warm=res.warm_start())``.
     """
 
     x: np.ndarray          # (B, n)
@@ -330,6 +453,21 @@ class LPResult:
     iterations: np.ndarray  # (B,) int32
     y: np.ndarray | None = None   # (B, m) row duals (see above)
     z: np.ndarray | None = None   # (B, n) reduced costs
+    warm: "WarmStart | None" = None  # terminal state for warm restarts
+
+    def warm_start(self) -> WarmStart:
+        """The warm-start carrier for a follow-up solve of a same-shape
+        (typically perturbed) batch.  Raises when this result came from a
+        path that does not capture terminal state (compaction scheduler,
+        distributed solvers, Pallas kernels) — solve cold there, or route
+        the sequence through a monolithic/chunked entry point."""
+        if self.warm is None:
+            raise ValueError(
+                "this LPResult carries no warm-start state (the producing "
+                "path does not capture it — e.g. compaction-scheduled, "
+                "distributed or Pallas solves); re-solve through a "
+                "monolithic entry point to obtain one")
+        return self.warm
 
     def summary(self) -> str:
         status = np.asarray(self.status)

@@ -76,7 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .forms import ensure_canonical, finish_result
+from .forms import ensure_canonical, finish_result, prepare_warm
 from .lp import (
     INFEASIBLE,
     ITERATION_LIMIT,
@@ -84,6 +84,7 @@ from .lp import (
     UNBOUNDED,
     LPBatch,
     LPResult,
+    WarmStart,
 )
 
 _RUNNING = -1
@@ -262,6 +263,40 @@ def init_pdhg_state(A, b, c, ub=None) -> PdhgState:
         iters=jnp.zeros((B,), jnp.int32))
 
 
+def inject_pdhg_warm(state: PdhgState, wx, wy, womega=None,
+                     mv: Matvecs = DENSE_MV) -> PdhgState:
+    """Seed the iterate from a parent solve's terminal point (warm start).
+
+    ``wx``/``wy`` arrive in *unscaled canonical* coordinates (the WarmStart
+    carrier convention) and are mapped into this state's Ruiz-scaled space,
+    projected onto the feasible boxes (x into [0, ub], y into >= 0).  The
+    **reset guard** makes a bad warm start harmless: each LP adopts the
+    warm point only where its KKT residual is no worse than the zero
+    iterate's — otherwise that LP silently starts cold.  ``womega`` carries
+    the parent's adapted primal weight (clipped to the usual range); ``eta``
+    is always re-estimated fresh from the new data (step sizes depend on
+    ||A|| of *this* batch, not the parent's).  Restart bookkeeping
+    (averages, anchors, residual history) starts clean from the adopted
+    point, so the downstream round logic is oblivious to warm starts."""
+    dtype = state.x.dtype
+    xw = jnp.clip(jnp.asarray(wx, dtype) / state.csc, 0.0, state.ub)
+    yw = jnp.maximum(jnp.asarray(wy, dtype) / state.rsc, 0.0)
+    xw = jnp.where(jnp.isfinite(xw), xw, 0.0)
+    yw = jnp.where(jnp.isfinite(yw), yw, 0.0)
+    res_w = kkt_residuals(state, xw, yw, mv)
+    res_0 = kkt_residuals(state, state.x, state.y, mv)
+    adopt = jnp.isfinite(res_w) & (res_w <= res_0)
+    x = jnp.where(adopt[:, None], xw, state.x)
+    y = jnp.where(adopt[:, None], yw, state.y)
+    omega = state.omega
+    if womega is not None:
+        ow = jnp.asarray(womega, dtype).reshape(-1, 1)
+        ow = jnp.where(jnp.isfinite(ow),
+                       jnp.clip(ow, OMEGA_MIN, OMEGA_MAX), state.omega)
+        omega = jnp.where(adopt[:, None], ow, state.omega)
+    return state._replace(x=x, y=y, xr=x, yr=y, omega=omega)
+
+
 # ---------------------------------------------------------------------------
 # Residuals + certificates
 # ---------------------------------------------------------------------------
@@ -436,13 +471,20 @@ def extract_pdhg(s: PdhgState, mv: Matvecs = DENSE_MV):
 
 def solve_pdhg(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
                tol: float, feas_tol: float = 0.0,
-               check_every: int = CHECK_EVERY):
+               check_every: int = CHECK_EVERY,
+               warm_x=None, warm_y=None, warm_omega=None,
+               full_state: bool = False):
     """Traceable whole-solve body (shared by jit, pjit and shard_map):
     setup + one while_loop over check rounds.  ``feas_tol`` is accepted for
     entry-point uniformity but unused (PDHG has no phase 1 — feasibility is
-    part of the KKT residual)."""
+    part of the KKT residual).  ``warm_x``/``warm_y``/``warm_omega`` seed
+    the iterate via `inject_pdhg_warm` (per-LP reset guard included);
+    ``full_state=True`` appends the terminal iterate leaves
+    (x, y unscaled *pre NaN-mask*, omega, eta) for WarmStart capture."""
     del feas_tol
     state = init_pdhg_state(A, b, c, ub)
+    if warm_x is not None and warm_y is not None:
+        state = inject_pdhg_warm(state, warm_x, warm_y, warm_omega)
     rounds = -(-int(max_iters) // int(check_every))
 
     def cond(carry):
@@ -454,7 +496,11 @@ def solve_pdhg(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
         return pdhg_round(s, tol=tol, check_every=check_every), it + 1
 
     state, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
-    return extract_pdhg(state)
+    out = extract_pdhg(state)
+    if full_state:
+        out = out + (state.x * state.csc, state.y * state.rsc,
+                     state.omega[:, 0], state.eta[:, 0])
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
@@ -462,6 +508,17 @@ def solve_pdhg(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
 def _solve_pdhg_core(A, b, c, ub, *, m, n, max_iters, tol, check_every):
     return solve_pdhg(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                       check_every=check_every)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
+                                             "check_every"))
+def _solve_pdhg_core_state(A, b, c, ub, warm_x, warm_y, warm_omega, *, m, n,
+                           max_iters, tol, check_every):
+    """`_solve_pdhg_core` + warm injection + terminal-iterate capture (the
+    batched entry point's core; warm args may be None for a cold run)."""
+    return solve_pdhg(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
+                      check_every=check_every, warm_x=warm_x, warm_y=warm_y,
+                      warm_omega=warm_omega, full_state=True)
 
 
 def _check_pdhg_pricing(pricing: str) -> None:
@@ -479,7 +536,8 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
                        check_every: int = CHECK_EVERY,
                        pricing: str = "dantzig",
                        presolve: bool = True,
-                       scale: bool | None = None) -> LPResult:
+                       scale: bool | None = None,
+                       warm: WarmStart | None = None) -> LPResult:
     """Solve a batch with the restarted-PDHG first-order engine.
 
     Same LPBatch -> LPResult contract and GeneralLPBatch acceptance as
@@ -492,6 +550,10 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
       — typically 10^2-10^4, not comparable to pivot counts (see
       analysis.lp_perf.pdhg_crossover for the honest flops comparison).
     * ``LPResult.y``/``z`` are the native primal-dual certificate.
+    * ``warm`` accepts a `WarmStart` carrying x/y iterates (any engine's —
+      the simplex backends' vertex solutions work too); adoption is
+      per-LP behind the `inject_pdhg_warm` reset guard, so a stale warm
+      start can never do worse than cold.
     """
     _check_pdhg_pricing(pricing)
     del feas_tol
@@ -501,15 +563,29 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
         max_iters = default_pdhg_max_iters(m, n)
     if tol is None:
         tol = 1e-5 if dtype == jnp.float32 else 1e-8
-    x, obj, status, iters, y, z = _solve_pdhg_core(
-        jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
-        jnp.asarray(batch.c, dtype),
-        jnp.asarray(batch.upper_bounds(), dtype),
-        m=m, n=n, max_iters=int(max_iters),
-        tol=float(tol), check_every=int(check_every))
+    warm = prepare_warm(warm, rec, batch)
+    wx = wy = womega = None
+    if warm is not None and warm.x is not None and warm.y is not None:
+        wx = jnp.asarray(np.nan_to_num(np.asarray(warm.x, np.float64),
+                                       posinf=0.0, neginf=0.0), dtype)
+        wy = jnp.asarray(np.nan_to_num(np.asarray(warm.y, np.float64),
+                                       posinf=0.0, neginf=0.0), dtype)
+        if warm.omega is not None:
+            womega = jnp.asarray(np.asarray(warm.omega), dtype)
+    x, obj, status, iters, y, z, wx_t, wy_t, om_t, eta_t = \
+        _solve_pdhg_core_state(
+            jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
+            jnp.asarray(batch.c, dtype),
+            jnp.asarray(batch.upper_bounds(), dtype),
+            wx, wy, womega,
+            m=m, n=n, max_iters=int(max_iters),
+            tol=float(tol), check_every=int(check_every))
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
                    status=np.asarray(status), iterations=np.asarray(iters),
-                   y=np.asarray(y), z=np.asarray(z))
+                   y=np.asarray(y), z=np.asarray(z),
+                   warm=WarmStart(m=m, n=n, x=np.asarray(wx_t),
+                                  y=np.asarray(wy_t), omega=np.asarray(om_t),
+                                  eta=np.asarray(eta_t)))
     return finish_result(rec, res)
 
 
@@ -561,8 +637,19 @@ class PdhgBackend:
         self.dtype = dtype
         self.check_every = int(check_every)
 
-    def init(self, A, b, c, ub=None) -> PdhgState:
-        return init_pdhg_state(A, b, c, ub)
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None
+             ) -> PdhgState:
+        state = init_pdhg_state(A, b, c, ub)
+        if warm is not None and warm.x is not None and warm.y is not None:
+            dtype = state.x.dtype
+            wx = jnp.asarray(np.nan_to_num(np.asarray(warm.x, np.float64),
+                                           posinf=0.0, neginf=0.0), dtype)
+            wy = jnp.asarray(np.nan_to_num(np.asarray(warm.y, np.float64),
+                                           posinf=0.0, neginf=0.0), dtype)
+            womega = (None if warm.omega is None
+                      else jnp.asarray(np.asarray(warm.omega), dtype))
+            state = inject_pdhg_warm(state, wx, wy, womega)
+        return state
 
     def run_phase1(self, state, steps):
         return state, 0          # no phase 1: stage 1 is a no-op
@@ -608,7 +695,8 @@ def solve_batched_pdhg_compacted(
         compact_threshold: Optional[float] = None,
         check_every: int = CHECK_EVERY, pricing: str = "dantzig",
         stats_out: Optional[List] = None,
-        presolve: bool = True, scale: Optional[bool] = None) -> LPResult:
+        presolve: bool = True, scale: Optional[bool] = None,
+        warm: WarmStart | None = None) -> LPResult:
     """Restarted PDHG under the active-set compaction scheduler: K-round
     segments, power-of-two bucket gathers of still-running LPs (problem
     data, iterates, averages and restart state gathered alongside).  Same
@@ -640,7 +728,8 @@ def solve_batched_pdhg_compacted(
     state = backend.init(jnp.asarray(batch.A, dtype),
                          jnp.asarray(batch.b, dtype),
                          jnp.asarray(batch.c, dtype),
-                         ub=jnp.asarray(batch.upper_bounds(), dtype))
+                         ub=jnp.asarray(batch.upper_bounds(), dtype),
+                         warm=prepare_warm(warm, rec, batch))
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
     cfg = CompactionConfig(

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .forms import ensure_canonical, finish_result
+from .forms import ensure_canonical, finish_result, prepare_warm
 from .lp import (
     BIG,
     INFEASIBLE,
@@ -22,6 +22,7 @@ from .lp import (
     UNBOUNDED,
     LPBatch,
     LPResult,
+    WarmStart,
     build_tableau,
     default_max_iters,
     extract_solution,
@@ -34,8 +35,54 @@ from .pricing import (
 )
 
 
+def _inject_warm_np(A, b, c, ub, wb, wfl, *, m: int, n: int,
+                    feas_tol: float = 1e-8):
+    """Single-LP float64 mirror of ``simplex.inject_tableau_warm``: rebuild
+    the two-phase tableau from a parent basis with the same per-LP
+    skip/repair/cold trichotomy (see that docstring for the math).  Returns
+    ``(T, basis, start_phase, flip)`` or ``None`` for the cold fallback."""
+    if wb.min() < 0 or wb.max() >= n + 2 * m:
+        return None
+    wb2 = np.where(wb >= n + m, wb - m, wb).astype(np.int64)
+    ubv = np.full(n, np.inf) if ub is None else np.asarray(ub, np.float64)
+    wfl = wfl & np.isfinite(ubv)
+    ubz = np.where(wfl, ubv, 0.0)
+    Af = np.where(wfl[None, :], -A, A)
+    bf = b - A @ ubz
+    cf = np.where(wfl, -c, c)
+    obj_off = float(c @ ubz)
+    Acols = np.concatenate([Af, np.eye(m)], axis=1)
+    Bmat = Acols[:, wb2]
+    try:
+        body = np.linalg.solve(
+            Bmat, np.concatenate([Acols, bf[:, None]], axis=1))
+    except np.linalg.LinAlgError:
+        return None
+    if not np.isfinite(body).all():
+        return None
+    xB = body[:, -1]
+    eps = feas_tol * max(1.0, float(np.abs(bf).max(initial=0.0)))
+    viol = xB < -eps
+    rows = np.where(viol, -1.0, 1.0)[:, None] * body
+    cext = np.concatenate([cf, np.zeros(m)])
+    cB = np.where(viol, 0.0, cext[wb2])
+    red = cext - cB @ rows[:, :n + m]
+    idx = np.arange(m)
+    T = np.zeros((m + 2, n + 2 * m + 1))
+    T[:m, :n + m] = rows[:, :n + m]
+    T[idx, n + m + idx] = np.where(viol, 1.0, 0.0)
+    T[:m, -1] = rows[:, -1]
+    T[m, :n + m] = red
+    T[m, -1] = -(cB @ rows[:, -1] + obj_off)
+    p1 = (rows * viol[:, None]).sum(axis=0)
+    T[m + 1, :n + m] = p1[:n + m]
+    T[m + 1, -1] = p1[-1]
+    basis = np.where(viol, n + m + idx, wb2)
+    return T, basis, (1 if viol.any() else 2), wfl
+
+
 def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig", ub=None,
-                  flip=None):
+                  flip=None, start_phase=1):
     """Solve one LP in-place on its (m+2, cols) float64 tableau.
 
     Returns (status, iters, p1_iters): ``p1_iters`` counts the iterations
@@ -62,7 +109,7 @@ def _solve_single(T, basis, n, m, tol, max_iters, rule="dantzig", ub=None,
     bounded = ub is not None and np.isfinite(ub).any()
     if flip is None:
         flip = np.zeros(n, dtype=bool)
-    phase = 1
+    phase = start_phase
     iters = 0
     p1_iters = 0
     status = None
@@ -147,7 +194,8 @@ def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
                                      max_iters: int | None = None,
                                      pricing: str = "dantzig",
                                      presolve: bool = True,
-                                     scale: bool | None = None):
+                                     scale: bool | None = None,
+                                     warm: WarmStart | None = None):
     """Like solve_batched_reference, but also returns per-LP phase-1
     iteration counts ``(LPResult, p1_iters)`` — the input for the
     phase-compaction executed-work models (analysis/lp_perf.py,
@@ -155,22 +203,41 @@ def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
 
     Accepts a ``GeneralLPBatch`` like every solver entry point: the oracle
     then solves the canonical form and reports in original coordinates
-    (``presolve``/``scale`` control the canonicalization)."""
+    (``presolve``/``scale`` control the canonicalization).  ``warm``
+    accepts a WarmStart (any basis-carrying engine's, or a previous oracle
+    solve's) and seeds each LP via `_inject_warm_np` — the f64 ground truth
+    for the batched engines' warm paths."""
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     B, m, n = batch.batch, batch.m, batch.n
     rule = canonicalize_rule(pricing)
     if max_iters is None:
         max_iters = default_max_iters(m, n)
+    warm = prepare_warm(warm, rec, batch)
     T, basis, _ = build_tableau(batch.A, batch.b, batch.c)
     ub = None if batch.ub is None else np.asarray(batch.ub, np.float64)
     flip = np.zeros((B, n), dtype=bool)
+    start_phase = np.ones(B, dtype=np.int32)
+    if warm is not None and warm.basis is not None:
+        wb = np.asarray(warm.basis, np.int64)
+        wfl = (np.zeros((B, n), bool) if warm.at_upper is None
+               else np.asarray(warm.at_upper, bool))
+        A64 = np.asarray(batch.A, np.float64)
+        b64 = np.asarray(batch.b, np.float64)
+        c64 = np.asarray(batch.c, np.float64)
+        for k in range(B):
+            inj = _inject_warm_np(A64[k], b64[k], c64[k],
+                                  None if ub is None else ub[k],
+                                  wb[k], wfl[k], m=m, n=n)
+            if inj is not None:
+                T[k], basis[k], start_phase[k], flip[k] = inj
     status = np.zeros(B, dtype=np.int8)
     iters = np.zeros(B, dtype=np.int32)
     p1_iters = np.zeros(B, dtype=np.int32)
     for k in range(B):
         status[k], iters[k], p1_iters[k] = _solve_single(
             T[k], basis[k], n, m, tol, max_iters, rule=rule,
-            ub=None if ub is None else ub[k], flip=flip[k])
+            ub=None if ub is None else ub[k], flip=flip[k],
+            start_phase=int(start_phase[k]))
     x, obj = extract_solution(T, basis, n, ub=ub, flip=flip)
     # dual certificate off the final tableau (see simplex.extract_duals):
     # slack-column reduced costs are -y, structural entries are z = c - y.A
@@ -183,7 +250,9 @@ def solve_batched_reference_detailed(batch: LPBatch, tol: float = 1e-9,
     y = np.where(bad[:, None], np.nan, y)
     z = np.where(bad[:, None], np.nan, z)
     res = LPResult(x=x, objective=obj, status=status, iterations=iters,
-                   y=y, z=z)
+                   y=y, z=z,
+                   warm=WarmStart(m=m, n=n, basis=basis.astype(np.int32),
+                                  at_upper=flip.copy(), pricing=rule))
     return finish_result(rec, res), p1_iters
 
 
@@ -191,14 +260,17 @@ def solve_batched_reference(batch: LPBatch, tol: float = 1e-9,
                             max_iters: int | None = None,
                             pricing: str = "dantzig",
                             presolve: bool = True,
-                            scale: bool | None = None) -> LPResult:
+                            scale: bool | None = None,
+                            warm: WarmStart | None = None) -> LPResult:
     """Sequentially solve every LP in the batch (float64). O(B) loop — this is
     the 'CPU sequential' side of every speedup table.  Accepts general-form
-    batches (GeneralLPBatch) like every solver entry point."""
+    batches (GeneralLPBatch) like every solver entry point, and a ``warm``
+    carrier like every batched engine."""
     res, _ = solve_batched_reference_detailed(batch, tol=tol,
                                               max_iters=max_iters,
                                               pricing=pricing,
-                                              presolve=presolve, scale=scale)
+                                              presolve=presolve, scale=scale,
+                                              warm=warm)
     return res
 
 

@@ -75,7 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .forms import ensure_canonical, finish_result
+from .forms import ensure_canonical, finish_result, prepare_warm
 from .compaction import (
     CompactionConfig,
     JaxBackend,
@@ -92,6 +92,7 @@ from .lp import (
     UNBOUNDED,
     LPBatch,
     LPResult,
+    WarmStart,
     default_max_iters,
 )
 from .pricing import (canonicalize_rule, partial_geometry,
@@ -268,6 +269,71 @@ def _refactorize(Abar, basis):
     perm = perm.astype(jnp.int32)
     perm_inv = jnp.argsort(perm, axis=1).astype(jnp.int32)
     return lu, perm, perm_inv
+
+
+def inject_revised_warm(state: RevisedState, wb, wonub, *, m: int, n: int,
+                        feas_tol: float) -> RevisedState:
+    """Seed a freshly built ``RevisedState`` from a parent basis (warm start).
+
+    The revised analogue of ``simplex.inject_tableau_warm``, per LP:
+
+    * **skip** — refactorize the parent basis against the *new* data, solve
+      for the basic values; all nonnegative means phase 2 starts directly
+      from the parent vertex (at-upper nonbasics contribute through the
+      effective rhs);
+    * **repair** — rows whose basic value went negative get a fresh
+      artificial whose *physical column* is ``-(B e_i)``: the new basis
+      matrix is the old one with those columns negated (still nonsingular),
+      its basic solution is ``|x_B|`` elementwise, and the ordinary phase-1
+      costs (-1 on columns >= n+m, which pricing never scans) drive the
+      artificials back out — a repair phase 1 seeded from the parent basis;
+    * **cold** — out-of-range indices or a singular parent basis (duplicate
+      columns after the artificial->slack remap surface as a non-finite
+      solve): the LP keeps the cold state.
+
+    The slack diagonal — the row-sign record ``extract_duals_revised``
+    reads — lives in columns n..n+m-1 and is never overwritten."""
+    Abar, ub = state.Abar, state.ub
+    B = Abar.shape[0]
+    dtype = Abar.dtype
+    ncand = n + m
+    idx = jnp.arange(m)
+    in_range = ((wb >= 0) & (wb < n + 2 * m)).all(axis=1)
+    wb2 = jnp.clip(jnp.where(wb >= ncand, wb - m, wb), 0, ncand - 1)
+    wb2 = wb2.astype(jnp.int32)
+    onub_w = wonub & jnp.isfinite(ub)
+    bbar = state.xB                      # cold state: xB == sign-adjusted b
+    rhs_eff = bbar - jnp.einsum(
+        "bmn,bn->bm", Abar[:, :, :n],
+        jnp.where(onub_w, ub, 0.0).astype(dtype))
+    lu, perm, perm_inv = _refactorize(Abar, wb2)
+    xB = _lu_solve(lu, perm, rhs_eff)
+    ok = in_range & jnp.isfinite(xB).all(axis=1)
+    eps = feas_tol * jnp.maximum(1.0, jnp.max(jnp.abs(bbar), axis=1))
+    viol = xB < -eps[:, None]
+
+    Bcols = jnp.take_along_axis(Abar, wb2[:, None, :], axis=2)   # (B, m, m)
+    art_w = jnp.where(viol[:, None, :], -Bcols, Abar[:, :, ncand:])
+    Abar_w = jnp.concatenate([Abar[:, :, :ncand], art_w], axis=2)
+    basis_w = jnp.where(viol, ncand + idx[None, :], wb2).astype(jnp.int32)
+    lu2, perm2, pinv2 = _refactorize(Abar_w, basis_w)
+    xB_w = jnp.where(viol, -xB, xB)
+    phase_w = jnp.where(viol.any(axis=1), 1, 2).astype(jnp.int32)
+    thr_w = feas_tol * jnp.maximum(
+        1.0, jnp.where(viol, -xB, 0.0).sum(axis=1))
+
+    ok2 = ok[:, None]
+    ok3 = ok[:, None, None]
+    return state._replace(
+        Abar=jnp.where(ok3, Abar_w, Abar),
+        xB=jnp.where(ok2, xB_w, state.xB),
+        basis=jnp.where(ok2, basis_w, state.basis),
+        phase=jnp.where(ok, phase_w, state.phase),
+        lu=jnp.where(ok3, lu2, state.lu),
+        perm=jnp.where(ok2, perm2, state.perm),
+        perm_inv=jnp.where(ok2, pinv2, state.perm_inv),
+        onub=jnp.where(ok2, onub_w, state.onub),
+        thr=jnp.where(ok, thr_w, state.thr))
 
 
 # ---------------------------------------------------------------------------
@@ -508,13 +574,24 @@ def extract_duals_revised(state: RevisedState, n: int):
 
 def solve_revised(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
                   tol: float, feas_tol: float, refactor_period: int,
-                  pricing: str = "dantzig"):
+                  pricing: str = "dantzig",
+                  warm_basis=None, warm_at_upper=None,
+                  full_state: bool = False):
     """Traceable whole-solve body (shared by jit, pjit and shard_map): one
     while_loop, per-LP phase switch inside the step (the revised method has
-    no dead tableau columns, so there is nothing to phase-compact)."""
+    no dead tableau columns, so there is nothing to phase-compact).
+
+    ``warm_basis``/``warm_at_upper`` seed the solve from a parent basis via
+    `inject_revised_warm` (per-LP skip/repair/cold); ``full_state=True``
+    appends ``(basis, onub)`` to the return tuple for WarmStart capture."""
     rule = canonicalize_revised_rule(pricing)
     state = build_revised_state(A, b, c, ub, feas_tol=feas_tol,
                                 refactor_period=refactor_period)
+    if warm_basis is not None:
+        wonub = (jnp.zeros((A.shape[0], n), bool) if warm_at_upper is None
+                 else jnp.asarray(warm_at_upper, bool))
+        state = inject_revised_warm(state, jnp.asarray(warm_basis, jnp.int32),
+                                    wonub, m=m, n=n, feas_tol=feas_tol)
 
     def cond(carry):
         s, it = carry
@@ -534,7 +611,10 @@ def solve_revised(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
     opt = (status == OPTIMAL)[:, None]
     y = jnp.where(opt, y, jnp.nan)
     z = jnp.where(opt, z, jnp.nan)
-    return x, obj, status.astype(jnp.int8), state.iters, y, z
+    out = (x, obj, status.astype(jnp.int8), state.iters, y, z)
+    if full_state:
+        out = out + (state.basis, state.onub)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
@@ -547,6 +627,20 @@ def _solve_revised_core(A, b, c, ub, *, m, n, max_iters, tol, feas_tol,
                          pricing=pricing)
 
 
+@functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
+                                             "feas_tol", "refactor_period",
+                                             "pricing"))
+def _solve_revised_core_state(A, b, c, ub, warm_basis, warm_at_upper, *, m, n,
+                              max_iters, tol, feas_tol, refactor_period,
+                              pricing):
+    """`_solve_revised_core` + warm injection + terminal-state capture (the
+    batched entry point's core; warm args may be None for a cold run)."""
+    return solve_revised(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
+                         feas_tol=feas_tol, refactor_period=refactor_period,
+                         pricing=pricing, warm_basis=warm_basis,
+                         warm_at_upper=warm_at_upper, full_state=True)
+
+
 def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
                           tol: float | None = None,
                           feas_tol: float | None = None,
@@ -554,7 +648,8 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
                           refactor_period: int | None = None,
                           pricing: str = "dantzig",
                           presolve: bool = True,
-                          scale: bool | None = None) -> LPResult:
+                          scale: bool | None = None,
+                          warm: WarmStart | None = None) -> LPResult:
     """Solve a batch of LPs with the lockstep revised simplex.
 
     Same LPBatch -> LPResult contract, status codes and defaults as
@@ -562,7 +657,10 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
     (canonicalize on ingestion, recover on the way out); ``pricing``
     accepts "dantzig" (full pricing) or "partial" (rotating column blocks,
     core/pricing.py).  ``refactor_period`` bounds the eta file (None
-    derives ~m/2 via `auto_refactor_period`)."""
+    derives ~m/2 via `auto_refactor_period`).  ``warm`` accepts a
+    `WarmStart` from a previous solve (any basis-carrying engine): its
+    basis/at_upper leaves seed the eta-file via `inject_revised_warm`;
+    the result's own ``warm`` field carries the terminal basis onward."""
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     if max_iters is None:
@@ -573,17 +671,27 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
         tol = 1e-6 if dtype == jnp.float32 else 1e-9
     if feas_tol is None:
         feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
-    x, obj, status, iters, y, z = _solve_revised_core(
+    warm = prepare_warm(warm, rec, batch)
+    wb = wonub = None
+    if warm is not None and warm.basis is not None:
+        wb = jnp.asarray(np.asarray(warm.basis), jnp.int32)
+        if warm.at_upper is not None:
+            wonub = jnp.asarray(np.asarray(warm.at_upper), bool)
+    rule = canonicalize_revised_rule(pricing)
+    x, obj, status, iters, y, z, basis, onub = _solve_revised_core_state(
         jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
         jnp.asarray(batch.c, dtype),
         jnp.asarray(batch.upper_bounds(), dtype),
+        wb, wonub,
         m=m, n=n, max_iters=int(max_iters),
         tol=float(tol), feas_tol=float(feas_tol),
         refactor_period=int(refactor_period),
-        pricing=canonicalize_revised_rule(pricing))
+        pricing=rule)
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
                    status=np.asarray(status), iterations=np.asarray(iters),
-                   y=np.asarray(y), z=np.asarray(z))
+                   y=np.asarray(y), z=np.asarray(z),
+                   warm=WarmStart(m=m, n=n, basis=np.asarray(basis),
+                                  at_upper=np.asarray(onub), pricing=rule))
     return finish_result(rec, res)
 
 
@@ -673,9 +781,18 @@ class RevisedBackend(JaxBackend):
         self.refactor_period = int(refactor_period
                                    or auto_refactor_period(m, n))
 
-    def init(self, A, b, c, ub=None) -> RevisedState:
-        return build_revised_state(A, b, c, ub, feas_tol=self.feas_tol,
-                                   refactor_period=self.refactor_period)
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None
+             ) -> RevisedState:
+        state = build_revised_state(A, b, c, ub, feas_tol=self.feas_tol,
+                                    refactor_period=self.refactor_period)
+        if warm is not None and warm.basis is not None:
+            wonub = (jnp.zeros((A.shape[0], self.n), bool)
+                     if warm.at_upper is None
+                     else jnp.asarray(np.asarray(warm.at_upper), bool))
+            state = inject_revised_warm(
+                state, jnp.asarray(np.asarray(warm.basis), jnp.int32),
+                wonub, m=self.m, n=self.n, feas_tol=self.feas_tol)
+        return state
 
     def run_phase1(self, state, steps):
         state, it = _segment_rev_p1_jit(
@@ -715,11 +832,15 @@ def solve_batched_revised_compacted(
         compact_threshold: Optional[float] = None,
         refactor_period: Optional[int] = None, pricing: str = "dantzig",
         stats_out: Optional[List[SegmentStat]] = None,
-        presolve: bool = True, scale: Optional[bool] = None) -> LPResult:
+        presolve: bool = True, scale: Optional[bool] = None,
+        warm: WarmStart | None = None) -> LPResult:
     """Revised simplex under the active-set compaction scheduler: K-pivot
     segments, power-of-two bucket gathers of survivors (eta file, LU factors
     and basis arrays gathered alongside), refactorization after every gather.
-    Same contract as ``solve_batched_compacted`` (GeneralLPBatch accepted)."""
+    Same contract as ``solve_batched_compacted`` (GeneralLPBatch accepted).
+    ``warm`` seeds the initial state (the warm-derived leaves then ride the
+    bucket gathers automatically); the compacted result reports
+    ``warm=None``."""
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     if max_iters is None:
@@ -735,7 +856,8 @@ def solve_batched_revised_compacted(
     state = backend.init(jnp.asarray(batch.A, dtype),
                          jnp.asarray(batch.b, dtype),
                          jnp.asarray(batch.c, dtype),
-                         ub=jnp.asarray(batch.upper_bounds(), dtype))
+                         ub=jnp.asarray(batch.upper_bounds(), dtype),
+                         warm=prepare_warm(warm, rec, batch))
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
     cfg = CompactionConfig(

@@ -73,7 +73,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .forms import ensure_canonical, finish_result
+from .forms import ensure_canonical, finish_result, prepare_warm
 from .lp import (
     BIG,
     INFEASIBLE,
@@ -82,6 +82,7 @@ from .lp import (
     UNBOUNDED,
     LPBatch,
     LPResult,
+    WarmStart,
     canonicalize_backend,
     default_max_iters,
     resolve_backend,
@@ -163,6 +164,110 @@ def build_tableau_jax(A: jax.Array, b: jax.Array, c: jax.Array):
     basis = jnp.where(neg, n + m + idx[None, :], n + idx[None, :]).astype(jnp.int32)
     phase = jnp.where(neg.any(axis=1), 1, 2).astype(jnp.int32)
     return T, basis, phase
+
+
+def _gauss_solve(Bmat, rhs):
+    """Batched ``B^-1 @ rhs`` via Gauss-Jordan with partial pivoting, built
+    from the same per-LP elementwise/rank-1 ops as the pivot loop itself.
+
+    ``jnp.linalg.solve`` in f32 returns *batch-size-dependent* results on
+    some backends (different compilations reduce in different orders), which
+    would make a chunked warm solve drift from an unchunked one; this
+    routine's arithmetic is per-LP and batch-shape-invariant, keeping warm
+    injection — like the cold pivot sequence — identical across chunkings.
+    A singular matrix divides by ~0 and yields non-finite rows, which is
+    exactly the callers' cold-fallback signal (mirroring linalg.solve's
+    non-raising contract on singular batches)."""
+    B, m, _ = Bmat.shape
+    aug = jnp.concatenate([Bmat, rhs], axis=2)
+    rows_iota = jnp.arange(m)
+
+    def body(k, aug):
+        cand = jnp.where(rows_iota[None, :] >= k,
+                         jnp.abs(aug[:, :, k]), -jnp.inf)
+        p = jnp.argmax(cand, axis=1)
+        swap = jnp.where(rows_iota[None, :] == k, p[:, None],
+                         jnp.where(rows_iota[None, :] == p[:, None], k,
+                                   rows_iota[None, :]))
+        aug = jnp.take_along_axis(aug, swap[:, :, None], axis=1)
+        pivrow = aug[:, k, :] / aug[:, k, k][:, None]
+        aug = aug - aug[:, :, k][:, :, None] * pivrow[:, None, :]
+        return aug.at[:, k, :].set(pivrow)
+
+    aug = jax.lax.fori_loop(0, m, body, aug)
+    return aug[:, :, m:]
+
+
+def inject_tableau_warm(A, b, c, ub, wb, wfl, *, m: int, n: int,
+                        feas_tol: float):
+    """Rebuild the two-phase tableau batch from a parent basis (warm start).
+
+    ``wb`` (B, m) int32 is the parent basis, ``wfl`` (B, n) bool the parent
+    nonbasic-at-upper flips.  Per LP, independently:
+
+    * **skip** — the parent basis is still primal-feasible on the perturbed
+      data: the tableau starts in phase 2 with no artificials;
+    * **repair** — some basic values went negative: only those rows get an
+      artificial (the new artificial's physical column is ``-B e_i``, so
+      row-negating the computed tableau rows makes it basic at ``+|x_B_i|``)
+      and a phase-1 objective summing exactly the violated rows drives them
+      out through the ordinary pivot machinery — a repair phase 1 seeded
+      from the parent basis instead of the all-artificial cold start;
+    * **cold** — the basis is unusable (out-of-range indices, a singular
+      basis matrix after the artificial->slack remap, non-finite solve):
+      the ``ok`` flag is False and the caller swaps in the cold tableau.
+
+    Parent artificials (degenerate, value 0, possible after equality-pair
+    canonicalization) are remapped to the same row's slack: the swap flips
+    at most a column sign, so the basis stays nonsingular, and a duplicate
+    slack shows up as a singular solve -> cold fallback.  Flips on columns
+    whose new ``ub`` went infinite are cleared (the complement no longer
+    exists).  Returns ``(T, basis, phase, flip, ok)``.
+    """
+    B = A.shape[0]
+    dtype = A.dtype
+    idx = jnp.arange(m)
+    in_range = ((wb >= 0) & (wb < n + 2 * m)).all(axis=1)
+    wb2 = jnp.clip(jnp.where(wb >= n + m, wb - m, wb), 0, n + m - 1)
+    wb2 = wb2.astype(jnp.int32)
+    wfl = wfl & jnp.isfinite(ub)
+    ubz = jnp.where(wfl, ub, 0.0).astype(dtype)
+    # complement flipped structurals: x_j = ub_j - x'_j
+    Af = jnp.where(wfl[:, None, :], -A, A)
+    bf = b - jnp.einsum("bmn,bn->bm", A, ubz)
+    cf = jnp.where(wfl, -c, c)
+    obj_off = jnp.sum(c * ubz, axis=1)
+
+    eye = jnp.broadcast_to(jnp.eye(m, dtype=dtype), (B, m, m))
+    Acols = jnp.concatenate([Af, eye], axis=2)                 # (B, m, n+m)
+    Bmat = jnp.take_along_axis(Acols, wb2[:, None, :], axis=2)
+    body = _gauss_solve(Bmat, jnp.concatenate(
+        [Acols, bf[:, :, None]], axis=2))                      # B^-1 [A | b]
+    xB = body[:, :, -1]
+    eps = feas_tol * jnp.maximum(1.0, jnp.max(jnp.abs(bf), axis=1))
+    viol = xB < -eps[:, None]
+    D = jnp.where(viol, -1.0, 1.0).astype(dtype)
+    rows = D[:, :, None] * body          # violated rows negated: rhs >= 0
+    cext = jnp.concatenate([cf, jnp.zeros((B, m), dtype)], axis=1)
+    cB = jnp.where(viol, 0.0, jnp.take_along_axis(cext, wb2, axis=1))
+    red = cext - jnp.einsum("bi,bij->bj", cB, rows[:, :, :n + m])
+
+    T = jnp.zeros((B, m + 2, n + 2 * m + 1), dtype)
+    T = T.at[:, :m, :n + m].set(rows[:, :, :n + m])
+    T = T.at[:, idx, n + m + idx].set(jnp.where(viol, 1.0, 0.0).astype(dtype))
+    T = T.at[:, :m, -1].set(rows[:, :, -1])
+    T = T.at[:, m, :n + m].set(red)
+    # row-m rhs: -(objective of the warm basic solution), offset included,
+    # so -T[m, -1] stays the true unflipped objective through every pivot
+    T = T.at[:, m, -1].set(-(jnp.sum(cB * rows[:, :, -1], axis=1) + obj_off))
+    p1 = (rows * viol[:, :, None].astype(dtype)).sum(axis=1)   # (B, n+m+1)
+    T = T.at[:, m + 1, :n + m].set(p1[:, :n + m])
+    T = T.at[:, m + 1, -1].set(p1[:, -1])
+
+    basis = jnp.where(viol, n + m + idx[None, :], wb2).astype(jnp.int32)
+    phase = jnp.where(viol.any(axis=1), 1, 2).astype(jnp.int32)
+    ok = in_range & jnp.isfinite(T).all(axis=(1, 2))
+    return T, basis, phase, wfl & ok[:, None], ok
 
 
 def _pivot_update(T, w, basis, factor, pivrow_raw, pe, e, l, do_pivot,
@@ -466,7 +571,9 @@ def _mask_duals(y, z, status):
 
 def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
                     tol: float, feas_tol: float, phase_compaction: bool = True,
-                    pricing: str = "dantzig"):
+                    pricing: str = "dantzig",
+                    warm_basis=None, warm_at_upper=None, warm_weights=None,
+                    full_state: bool = False):
     """Traceable two-phase solve body, shared by jit (`_solve_core`), pjit and
     shard_map (core/distributed.py).
 
@@ -478,23 +585,47 @@ def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
     behavior), kept as the A/B baseline for benchmarks/pivot_work.py.
     ``pricing`` selects the entering-column rule (core/pricing.py); weights
     are initialized here and phase-compacted alongside the tableau.
+
+    ``warm_basis``/``warm_at_upper`` ((B, m) int32 / (B, n) bool) seed the
+    solve from a parent basis via `inject_tableau_warm`; each LP falls back
+    to the cold tableau independently when its parent basis is unusable.
+    ``warm_weights`` (any width >= n+m) overlays carried devex weights.
+    ``full_state=True`` appends ``(basis, flip, w)`` to the return tuple so
+    batched entry points can capture a ``WarmStart``.
     """
     rule = canonicalize_rule(pricing)
-    T, basis, phase = build_tableau_jax(A, b, c)
-    B = T.shape[0]
+    B = A.shape[0]
+    dtype = A.dtype
     if ub is None:
-        ub = jnp.full((B, n), jnp.inf, dtype=T.dtype)
+        ub = jnp.full((B, n), jnp.inf, dtype=dtype)
     else:
-        ub = jnp.asarray(ub, dtype=T.dtype)
+        ub = jnp.asarray(ub, dtype=dtype)
+    T, basis, phase = build_tableau_jax(A, b, c)
+    flip = jnp.zeros((B, n), dtype=bool)
+    if warm_basis is not None:
+        wfl = (jnp.zeros((B, n), bool) if warm_at_upper is None
+               else jnp.asarray(warm_at_upper, bool))
+        T_w, basis_w, phase_w, flip_w, ok = inject_tableau_warm(
+            A, b, c, ub, jnp.asarray(warm_basis, jnp.int32), wfl,
+            m=m, n=n, feas_tol=feas_tol)
+        T = jnp.where(ok[:, None, None], T_w, T)
+        basis = jnp.where(ok[:, None], basis_w, basis)
+        phase = jnp.where(ok, phase_w, phase)
+        flip = jnp.where(ok[:, None], flip_w, flip)
     # Phase-1 feasibility threshold is *relative* to the initial infeasibility
     # mass (f32 tableaux accumulate O(scale * eps) error through pivots).
     feas_thr = feas_tol * jnp.maximum(1.0, T[:, m + 1, -1])
+    w = init_weights(rule, T, m)
+    if warm_basis is not None and warm_weights is not None:
+        ww = jnp.asarray(warm_weights, w.dtype)
+        w = w.at[:, :n + m].set(
+            jnp.where(ok[:, None], ww[:, :n + m], w[:, :n + m]))
     state = SimplexState(
         T=T, basis=basis, phase=phase,
         status=jnp.full((B,), _RUNNING, jnp.int32),
         iters=jnp.zeros((B,), jnp.int32),
-        w=init_weights(rule, T, m),
-        flip=jnp.zeros((B, n), dtype=bool),
+        w=w,
+        flip=flip,
         ub=ub,
         it=jnp.array(0, jnp.int32),
     )
@@ -545,7 +676,10 @@ def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
 
     obj = jnp.where(status == OPTIMAL, obj, jnp.nan)
     y, z = _mask_duals(y, z, status)
-    return x, obj, status.astype(jnp.int8), state.iters, y, z
+    out = (x, obj, status.astype(jnp.int8), state.iters, y, z)
+    if full_state:
+        out = out + (state.basis, state.flip, state.w)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
@@ -559,6 +693,22 @@ def _solve_core(A, b, c, ub, *, m: int, n: int, max_iters: int, tol: float,
                            pricing=pricing)
 
 
+@functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
+                                             "feas_tol", "phase_compaction",
+                                             "pricing"))
+def _solve_core_state(A, b, c, ub, warm_basis, warm_at_upper, warm_weights,
+                      *, m: int, n: int, max_iters: int, tol: float,
+                      feas_tol: float, phase_compaction: bool = True,
+                      pricing: str = "dantzig"):
+    """`_solve_core` + warm injection + terminal-state capture (the batched
+    entry point's core; warm args may be None for a cold capture-only run)."""
+    return solve_two_phase(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
+                           feas_tol=feas_tol, phase_compaction=phase_compaction,
+                           pricing=pricing, warm_basis=warm_basis,
+                           warm_at_upper=warm_at_upper,
+                           warm_weights=warm_weights, full_state=True)
+
+
 def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = None,
                       feas_tol: float | None = None, max_iters: int | None = None,
                       phase_compaction: bool = True,
@@ -566,7 +716,8 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
                       backend: str = "tableau",
                       refactor_period: int | None = None,
                       presolve: bool = True,
-                      scale: bool | None = None) -> LPResult:
+                      scale: bool | None = None,
+                      warm: WarmStart | None = None) -> LPResult:
     """Solve a batch of LPs with the lockstep pure-JAX simplex.
 
     Phase-compacted by default (identical pivot sequence, ~35-50% fewer
@@ -587,6 +738,11 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     canonicalized on ingestion (``presolve``/``scale`` control the presolve
     pass and geometric-mean equilibration) and the result is recovered into
     original coordinates.
+
+    ``warm`` re-injects a previous solve's ``LPResult.warm_start()`` carrier
+    (validated/re-scaled by forms.prepare_warm; per-LP skip/repair/cold, see
+    `inject_tableau_warm`); the returned result always carries a fresh
+    ``warm`` capture for the next solve in the sequence.
     """
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     if canonicalize_backend(backend) != "tableau":
@@ -595,10 +751,11 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
         # refactor_period
         solver = resolve_backend(backend)
         kwargs = dict(dtype=dtype, tol=tol, feas_tol=feas_tol,
-                      max_iters=max_iters, pricing=pricing)
+                      max_iters=max_iters, pricing=pricing, warm=warm)
         if backend == "revised":
             kwargs["refactor_period"] = refactor_period
         return finish_result(rec, solver(batch, **kwargs))
+    warm = prepare_warm(warm, rec, batch)
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
@@ -610,13 +767,30 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
     b = jnp.asarray(batch.b, dtype=dtype)
     c = jnp.asarray(batch.c, dtype=dtype)
     ub = jnp.asarray(batch.upper_bounds(), dtype=dtype)
-    x, obj, status, iters, y, z = _solve_core(
-        A, b, c, ub, m=m, n=n, max_iters=int(max_iters), tol=float(tol),
+    rule = canonicalize_rule(pricing)
+    wb = wfl = ww = None
+    if warm is not None and warm.basis is not None:
+        wb = jnp.asarray(warm.basis, jnp.int32)
+        if warm.at_upper is not None:
+            wfl = jnp.asarray(warm.at_upper, bool)
+        # carried weights are only meaningful for devex (its reference
+        # framework is cross-solve state); steepest edge re-initializes
+        # exactly from the warm tableau, dantzig/partial never read them
+        if (rule == "devex" and warm.pricing == rule
+                and warm.weights is not None
+                and np.asarray(warm.weights).shape[1] >= n + m):
+            ww = jnp.asarray(warm.weights, dtype)
+    x, obj, status, iters, y, z, basis, flip, w = _solve_core_state(
+        A, b, c, ub, wb, wfl, ww,
+        m=m, n=n, max_iters=int(max_iters), tol=float(tol),
         feas_tol=float(feas_tol), phase_compaction=bool(phase_compaction),
-        pricing=canonicalize_rule(pricing))
+        pricing=rule)
+    capture = WarmStart(m=m, n=n, basis=np.asarray(basis),
+                        at_upper=np.asarray(flip), weights=np.asarray(w),
+                        pricing=rule)
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
                    status=np.asarray(status), iterations=np.asarray(iters),
-                   y=np.asarray(y), z=np.asarray(z))
+                   y=np.asarray(y), z=np.asarray(z), warm=capture)
     return finish_result(rec, res)
 
 

@@ -299,3 +299,48 @@ def perturbed_batch(g: GeneralLPBatch, B: int,
         c0=np.repeat(g.c0, B, axis=0),
         maximize=g.maximize, ranges=g.ranges,
         name=f"{g.name}_x{B}", row_names=g.row_names, col_names=g.col_names)
+
+
+def perturbed_sequence(g: GeneralLPBatch, B: int, K: int,
+                       rng: Optional[np.random.Generator] = None,
+                       rel: float = 0.01, step_rel: float = 0.005,
+                       perturb: tuple = ("rhs", "c")) -> list:
+    """Deterministic trajectory of ``K`` successively-perturbed batches from
+    one instance — the shared workload for warm-start benchmarks and tests.
+
+    Batch 0 is ``perturbed_batch(g, B, rel=rel)``; each subsequent batch
+    applies an independent multiplicative ±``step_rel`` nudge to the
+    *nonzero* entries of the perturbed fields of its predecessor (default
+    rhs + c: the bound-edit/objective-nudge workload of MPC loops and
+    branch-and-bound frontiers — pass ``perturb=("A", "rhs", "c")`` for
+    matrix drift too).  Nudging only nonzeros keeps the sparsity pattern,
+    senses, bounds and canonical shape static across the trajectory, which
+    is exactly the contract a ``WarmStart`` carrier rides on.  With the
+    default ``rng=None`` the trajectory is reproducible (seed 0).
+    Returns a list of K ``GeneralLPBatch`` objects."""
+    if rng is None:
+        rng = np.random.default_rng(0)
+    if K < 1:
+        raise ValueError(f"K must be >= 1, got {K}")
+    seq = [perturbed_batch(g, B, rng=rng, rel=rel, perturb=perturb)]
+
+    def nudge(arr, on):
+        arr = np.asarray(arr, np.float64)
+        if not on:
+            return arr.copy()
+        noise = 1.0 + step_rel * rng.uniform(-1.0, 1.0, size=arr.shape)
+        return arr * np.where(arr != 0.0, noise, 1.0)
+
+    for _ in range(K - 1):
+        p = seq[-1]
+        seq.append(GeneralLPBatch(
+            A=nudge(p.A, "A" in perturb),
+            sense=p.sense,
+            rhs=nudge(p.rhs, "rhs" in perturb),
+            lb=p.lb.copy(), ub=p.ub.copy(),
+            c=nudge(p.c, "c" in perturb),
+            c0=p.c0.copy(),
+            maximize=p.maximize, ranges=p.ranges,
+            name=f"{g.name}_seq{len(seq)}", row_names=p.row_names,
+            col_names=p.col_names))
+    return seq

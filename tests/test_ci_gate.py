@@ -54,12 +54,30 @@ def _general_row(fixture="afiro", B=32):
     }
 
 
+def _warm_row(fixture="afiro", B=16, K=4):
+    return {
+        "fixture": fixture, "B": B, "K": K,
+        "backends": {
+            "tableau": {"cold_iters_mean": 17.0, "warm_iters_mean": 0.0,
+                        "work_ratio": 0.0, "status_match_frac": 1.0,
+                        "rel_obj_err": 1e-7},
+            "revised": {"cold_iters_mean": 17.0, "warm_iters_mean": 0.0,
+                        "work_ratio": 0.0, "status_match_frac": 1.0,
+                        "rel_obj_err": 1e-7},
+            "pdhg": {"cold_iters_mean": 700.0, "warm_iters_mean": 250.0,
+                     "work_ratio": 0.36, "status_match_frac": 1.0,
+                     "rel_obj_err": 6e-5},
+        },
+    }
+
+
 @pytest.fixture
 def baseline():
     return {"benchmark": "pivot_work", "quick": False, "backends": "all",
             "quick_workloads": [_workload()],
             "general_workloads": [_general_row(),
-                                  _general_row("sc50b_like")]}
+                                  _general_row("sc50b_like")],
+            "warm_workloads": [_warm_row()]}
 
 
 @pytest.fixture
@@ -67,7 +85,8 @@ def current():
     return {"benchmark": "pivot_work", "quick": True, "backends": "all",
             "workloads": [_workload()],
             "general_workloads": [_general_row(),
-                                  _general_row("sc50b_like")]}
+                                  _general_row("sc50b_like")],
+            "warm_workloads": [_warm_row()]}
 
 
 def test_gate_passes_on_matching_run(baseline, current):
@@ -168,6 +187,50 @@ def test_gate_general_small_drift_tolerated(baseline, current):
     current["general_workloads"][0]["backends"]["tableau"][
         "status_match_oracle_frac"] = 0.99
     assert bench_gate.gate(current, baseline) == []
+
+
+def test_gate_warm_hard_bound(baseline, current):
+    """work_ratio > 0.5 fails even if the baseline itself was that bad —
+    a warm re-solve must cost at most half a cold one, absolutely."""
+    for d in (baseline, current):
+        d["warm_workloads"][0]["backends"]["pdhg"]["work_ratio"] = 0.6
+    fails = bench_gate.gate(current, baseline)
+    assert any("hard bound" in f for f in fails)
+
+
+def test_gate_warm_relative_regression(baseline, current):
+    current["warm_workloads"][0]["backends"]["pdhg"]["work_ratio"] = 0.49
+    fails = bench_gate.gate(current, baseline)  # baseline 0.36 + 20% < 0.49
+    assert any("stopped eliminating" in f for f in fails)
+
+
+def test_gate_warm_status_and_objective(baseline, current):
+    current["warm_workloads"][0]["backends"]["tableau"][
+        "status_match_frac"] = 0.9
+    current["warm_workloads"][0]["backends"]["revised"][
+        "rel_obj_err"] = 5e-3
+    fails = bench_gate.gate(current, baseline)
+    assert any("status agreement" in f and "warm" in f for f in fails)
+    assert any("changed the answer" in f for f in fails)
+
+
+def test_gate_warm_missing_row_and_old_baseline(baseline, current):
+    current["warm_workloads"] = []
+    fails = bench_gate.gate(current, baseline)
+    assert any("warm" in f and "missing" in f for f in fails)
+    # a baseline predating the warm engine has no rows to hold floors on
+    del baseline["warm_workloads"]
+    assert not any("warm" in f for f in bench_gate.gate(current, baseline))
+
+
+def test_gate_warm_skips_unmeasured_engines(baseline, current):
+    """A per-engine smoke leg (--backend tableau) measures only its own
+    warm rows; the gate must not demand the others."""
+    current["backends"] = "tableau"
+    for name in ("revised", "pdhg"):
+        del current["warm_workloads"][0]["backends"][name]
+    assert not any("warm" in f
+                   for f in bench_gate.gate(current, baseline))
 
 
 def test_gate_cli_exit_codes(tmp_path, baseline, current):

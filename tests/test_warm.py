@@ -1,0 +1,308 @@
+"""Warm-start engine invariants (core/lp.py WarmStart, ``warm=`` on every
+solve_*).
+
+Warm starts change the *path*, never the *answer*: for every engine and
+pricing rule a warm re-solve of a perturbed trajectory must agree with the
+cold solve on statuses and objectives while doing no more work; broken,
+stale, or mis-shaped carriers must degrade to a cold solve per LP (not to
+wrong answers); and the chunked driver must make warm solving invisible —
+chunked warm results equal unchunked ones bit-identically, through
+difficulty sorting and re-permutation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    INFEASIBLE,
+    OPTIMAL,
+    PRICING_RULES,
+    LPBatch,
+    WarmStart,
+    random_lp_batch,
+    solve_batched,
+    solve_batched_compacted,
+    solve_batched_jax,
+    solve_batched_pdhg,
+    solve_batched_reference,
+    solve_batched_revised,
+)
+from repro.io.mps import fixture_path, perturbed_sequence, read_mps
+
+REVISED_RULES = ("dantzig", "partial")
+
+
+def _afiro_seq(B=8, K=3, seed=0, **kw):
+    g = read_mps(fixture_path("afiro"))
+    return perturbed_sequence(g, B, K, np.random.default_rng(seed), **kw)
+
+
+def _assert_same_answers(cold, warm, rtol=2e-3):
+    np.testing.assert_array_equal(cold.status, warm.status)
+    ok = np.asarray(cold.status) == OPTIMAL
+    np.testing.assert_allclose(np.asarray(warm.objective)[ok],
+                               np.asarray(cold.objective)[ok], rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# perturbed trajectories: every engine x pricing rule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", PRICING_RULES)
+def test_tableau_warm_trajectory(rule):
+    """Chained warm re-solves of a nudged AFIRO batch: same certificates,
+    strictly less pivot work than cold (the parent basis is optimal or a
+    repair step away)."""
+    seq = _afiro_seq()
+    ws, cold_tot, warm_tot = None, 0, 0
+    for k, gb in enumerate(seq):
+        cold = solve_batched_jax(gb, pricing=rule)
+        if k > 0:
+            warm = solve_batched_jax(gb, pricing=rule, warm=ws)
+            _assert_same_answers(cold, warm)
+            cold_tot += int(cold.iterations.astype(np.int64).sum())
+            warm_tot += int(warm.iterations.astype(np.int64).sum())
+            ws = warm.warm_start()
+        else:
+            ws = cold.warm_start()
+    assert warm_tot < cold_tot, (warm_tot, cold_tot)
+
+
+@pytest.mark.parametrize("rule", REVISED_RULES)
+def test_revised_warm_trajectory(rule):
+    seq = _afiro_seq(seed=1)
+    ws, cold_tot, warm_tot = None, 0, 0
+    for k, gb in enumerate(seq):
+        cold = solve_batched_revised(gb, pricing=rule)
+        if k > 0:
+            warm = solve_batched_revised(gb, pricing=rule, warm=ws)
+            _assert_same_answers(cold, warm)
+            cold_tot += int(cold.iterations.astype(np.int64).sum())
+            warm_tot += int(warm.iterations.astype(np.int64).sum())
+            ws = warm.warm_start()
+        else:
+            ws = cold.warm_start()
+    assert warm_tot < cold_tot, (warm_tot, cold_tot)
+
+
+def test_pdhg_warm_trajectory():
+    """The first-order engine resumes from the parent's iterates and primal
+    weight; the residual guard makes adoption monotone, so warm iteration
+    counts drop while the tolerance-based answers agree with cold."""
+    seq = _afiro_seq(seed=2)
+    ws, cold_tot, warm_tot = None, 0, 0
+    for k, gb in enumerate(seq):
+        cold = solve_batched_pdhg(gb)
+        if k > 0:
+            warm = solve_batched_pdhg(gb, warm=ws)
+            _assert_same_answers(cold, warm)
+            cold_tot += int(cold.iterations.astype(np.int64).sum())
+            warm_tot += int(warm.iterations.astype(np.int64).sum())
+            ws = warm.warm_start()
+        else:
+            ws = cold.warm_start()
+    assert warm_tot < cold_tot, (warm_tot, cold_tot)
+
+
+@pytest.mark.parametrize("fixture,backend", [
+    ("sc50b_like", "tableau"), ("sc50b_like", "revised"),
+    ("sc50b_like", "pdhg"),
+    ("sc205_like", "tableau"),
+    # sc205_like x revised is excluded: the f32 revised engine already hits
+    # the iteration cap on half the COLD batch there (a pre-existing
+    # capability edge, not a warm-start property), so there is no reliable
+    # cold reference to require bit-parity against — warm starts actually
+    # rescue some of the capped LPs while a degenerate one stalls.
+])
+def test_staircase_fixture_trajectories(fixture, backend):
+    """The ill-scaled staircase fixtures (equalities, RANGES, bounded
+    columns): warm answers must match cold through canonicalization +
+    equilibration, with no more work."""
+    g = read_mps(fixture_path(fixture))
+    seq = perturbed_sequence(g, 4, 2, np.random.default_rng(13))
+    ws = solve_batched(seq[0], backend=backend).warm_start()
+    cold = solve_batched(seq[1], backend=backend)
+    warm = solve_batched(seq[1], backend=backend, warm=ws)
+    _assert_same_answers(cold, warm)
+    assert warm.iterations.astype(np.int64).sum() \
+        <= cold.iterations.astype(np.int64).sum()
+
+
+def test_sign_flip_rhs_edit_uses_repair_path():
+    """A sign-flipping rhs edit makes the parent basis primal-infeasible on
+    the flipped rows: the injection must re-seed artificials there (the
+    bounded repair pass) and still land on the cold certificates."""
+    rng = np.random.default_rng(14)
+    batch = random_lp_batch(rng, 12, 8, 6, feasible_start=True)
+    parent = solve_batched_jax(batch)
+    b2 = np.asarray(batch.b).copy()
+    b2[:, ::2] *= -1.0
+    edited = LPBatch(A=batch.A, b=b2, c=batch.c)
+    cold = solve_batched_jax(edited)
+    warm = solve_batched_jax(edited, warm=parent.warm_start())
+    _assert_same_answers(cold, warm, rtol=1e-4)
+
+
+def test_cross_engine_carrier():
+    """The carrier is backend-uniform: a tableau parent seeds the revised
+    engine and the f64 oracle (and back) — the basis leaves mean the same
+    thing everywhere."""
+    seq = _afiro_seq(K=2, seed=3)
+    parent = solve_batched_jax(seq[0])
+    ws = parent.warm_start()
+    for solver in (solve_batched_revised, solve_batched_reference):
+        cold = solver(seq[1])
+        warm = solver(seq[1], warm=ws)
+        _assert_same_answers(cold, warm)
+        assert warm.iterations.astype(np.int64).sum() \
+            <= cold.iterations.astype(np.int64).sum()
+    # and the oracle's terminal state seeds the f32 tableau engine
+    oref = solve_batched_reference(seq[1])
+    back = solve_batched_jax(seq[1], warm=oref.warm_start())
+    _assert_same_answers(solve_batched_jax(seq[1]), back)
+
+
+# ---------------------------------------------------------------------------
+# the chunked driver: warm solving must be invisible to chunking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ("tableau", "revised", "pdhg"))
+def test_chunked_warm_equals_unchunked(backend):
+    seq = _afiro_seq(B=12, K=2, seed=4)
+    ws = solve_batched(seq[0], backend=backend).warm_start()
+    full = solve_batched(seq[1], backend=backend, warm=ws)
+    chunked = solve_batched(seq[1], backend=backend, warm=ws, chunk_size=5)
+    sorted_ = solve_batched(seq[1], backend=backend, warm=ws, chunk_size=5,
+                            sort_by_difficulty=True)
+    for other in (chunked, sorted_):
+        np.testing.assert_array_equal(full.status, other.status)
+        np.testing.assert_array_equal(full.iterations, other.iterations)
+        np.testing.assert_array_equal(full.objective, other.objective)
+    # the terminal carrier survives concatenation/unpermutation: chaining
+    # from the chunked result equals chaining from the unchunked one
+    assert chunked.warm is not None and sorted_.warm is not None
+    nxt_full = solve_batched(seq[1], backend=backend, warm=full.warm_start())
+    nxt_chunk = solve_batched(seq[1], backend=backend,
+                              warm=sorted_.warm_start())
+    np.testing.assert_array_equal(nxt_full.status, nxt_chunk.status)
+    np.testing.assert_array_equal(nxt_full.iterations, nxt_chunk.iterations)
+
+
+# ---------------------------------------------------------------------------
+# adversarial carriers: repair or fall back to cold, never a wrong answer
+# ---------------------------------------------------------------------------
+
+def test_garbage_basis_degrades_to_cold_answers():
+    """A syntactically valid but nonsensical basis (duplicates, wrong
+    columns) must be repaired or dropped per LP — certificates unchanged."""
+    rng = np.random.default_rng(5)
+    batch = random_lp_batch(rng, 12, 8, 6, feasible_start=False)
+    m, n, B = 8, 6, 12
+    garbage = WarmStart(
+        m=m, n=n,
+        basis=rng.integers(0, n + m, size=(B, m)).astype(np.int32),
+        at_upper=np.zeros((B, n), bool))
+    for solver in (solve_batched_jax, solve_batched_revised,
+                   solve_batched_reference):
+        cold = solver(batch)
+        warm = solver(batch, warm=garbage)
+        _assert_same_answers(cold, warm, rtol=1e-4)
+
+
+def test_garbage_iterates_trip_pdhg_reset_guard():
+    """Iterates far worse than the cold start must be rejected by the
+    residual guard: the warm solve IS the cold solve, bit for bit."""
+    rng = np.random.default_rng(6)
+    batch = random_lp_batch(rng, 8, 6, 5)
+    m, n, B = 6, 5, 8
+    garbage = WarmStart(
+        m=m, n=n,
+        x=np.full((B, n), 1e12), y=np.full((B, m), -1e12),
+        omega=np.full((B,), 1e9), eta=np.full((B,), 1.0))
+    cold = solve_batched_pdhg(batch)
+    warm = solve_batched_pdhg(batch, warm=garbage)
+    np.testing.assert_array_equal(cold.status, warm.status)
+    np.testing.assert_array_equal(cold.iterations, warm.iterations)
+    np.testing.assert_array_equal(cold.objective, warm.objective)
+
+
+def test_infeasible_parent_reuse():
+    """Warm-starting from a parent whose LPs include INFEASIBLE ones keeps
+    the infeasibility certificates on the re-solve."""
+    rng = np.random.default_rng(7)
+    batch = random_lp_batch(rng, 16, 8, 6, feasible_start=False)
+    # make half the LPs provably infeasible: a nonnegative row with a
+    # negative rhs cannot be satisfied by x >= 0
+    A = np.asarray(batch.A).copy()
+    b = np.asarray(batch.b).copy()
+    A[::2, 0, :] = np.abs(A[::2, 0, :])
+    b[::2, 0] = -1.0
+    batch = LPBatch(A=A, b=b, c=batch.c)
+    cold = solve_batched_jax(batch)
+    assert (np.asarray(cold.status) == INFEASIBLE).any(), \
+        "fixture drift: batch no longer contains infeasible LPs"
+    warm = solve_batched_jax(batch, warm=cold.warm_start())
+    _assert_same_answers(cold, warm, rtol=1e-4)
+    assert warm.iterations.astype(np.int64).sum() \
+        <= cold.iterations.astype(np.int64).sum()
+
+
+def test_shape_mismatch_drops_to_cold_with_warning():
+    seq = _afiro_seq(K=1, seed=8)
+    other = read_mps(fixture_path("testprob"))
+    ws = solve_batched_jax(seq[0]).warm_start()
+    cold = solve_batched_jax(other)
+    with pytest.warns(UserWarning, match="warm start dropped"):
+        warm = solve_batched_jax(other, warm=ws)
+    np.testing.assert_array_equal(cold.status, warm.status)
+    np.testing.assert_array_equal(cold.iterations, warm.iterations)
+
+
+def test_batch_mismatch_drops_to_cold_with_warning():
+    seq = _afiro_seq(B=8, K=2, seed=9)
+    ws = solve_batched_jax(seq[0]).warm_start()
+    bigger = perturbed_sequence(read_mps(fixture_path("afiro")), 10, 1,
+                                np.random.default_rng(9))[0]
+    cold = solve_batched_jax(bigger)
+    with pytest.warns(UserWarning, match="warm start dropped"):
+        warm = solve_batched_jax(bigger, warm=ws)
+    np.testing.assert_array_equal(cold.status, warm.status)
+    np.testing.assert_array_equal(cold.iterations, warm.iterations)
+
+
+# ---------------------------------------------------------------------------
+# carrier plumbing
+# ---------------------------------------------------------------------------
+
+def test_warm_start_raises_without_state():
+    rng = np.random.default_rng(10)
+    batch = random_lp_batch(rng, 4, 5, 4)
+    res = solve_batched_compacted(batch)  # compacted paths emit warm=None
+    assert res.warm is None
+    with pytest.raises(ValueError):
+        res.warm_start()
+
+
+def test_compacted_paths_accept_warm():
+    """The compaction scheduler consumes a carrier (bucket gathers ride the
+    generic state tree) even though it does not emit one."""
+    seq = _afiro_seq(B=8, K=2, seed=11)
+    ws = solve_batched_jax(seq[0]).warm_start()
+    cold = solve_batched_compacted(seq[1])
+    warm = solve_batched_compacted(seq[1], warm=ws)
+    _assert_same_answers(cold, warm, rtol=1e-4)
+    assert warm.iterations.astype(np.int64).sum() \
+        <= cold.iterations.astype(np.int64).sum()
+
+
+def test_carrier_take_slice_concat_roundtrip():
+    seq = _afiro_seq(B=9, K=1, seed=12)
+    ws = solve_batched_jax(seq[0]).warm_start()
+    parts = [ws.slice(0, 4), ws.slice(4, 9)]
+    back = WarmStart.concat(parts)
+    np.testing.assert_array_equal(ws.basis, back.basis)
+    np.testing.assert_array_equal(ws.at_upper, back.at_upper)
+    perm = np.array([2, 0, 1, 5, 4, 3, 8, 7, 6])
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(9)
+    np.testing.assert_array_equal(ws.take(perm).take(inv).basis, ws.basis)
+    assert WarmStart.concat([parts[0], None]) is None
