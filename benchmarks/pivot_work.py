@@ -54,6 +54,14 @@ recorded — scripts/bench_gate.py holds the ratio under 0.5 (a warm
 re-solve must cost at most half a cold one) on top of the usual
 baseline-relative bound.
 
+A ``bnb_workloads`` section measures the branch-and-bound driver
+(core/branch_bound.py) on the MIP fixtures: the same tree solved with
+warm-started frontiers vs cold, per exact engine — recorded are the proven
+objective, node/dispatch counts, total LP iterations both ways and their
+``work_ratio`` (warm/cold).  scripts/bench_gate.py requires proven
+optimality, an unchanged objective, and warm frontiers beating cold
+(ratio < 1.0 hard, plus the baseline-relative bound).
+
 Results land in ``BENCH_pivot_work.json`` next to this file so future PRs
 have a perf trajectory to beat; a ``quick_workloads`` section re-runs the
 --quick configuration (B=128) so scripts/bench_gate.py can diff a CI smoke
@@ -96,6 +104,8 @@ GENERAL_B = 32      # same in --quick and full runs: the gate matches on it
 WARM_FIXTURES = ("afiro", "sc50b_like")  # same in both modes (gate keys on
 WARM_B = 16                              # fixture/B/K); sc205 would push the
 WARM_K = 4                               # smoke past its minute budget
+BNB_FIXTURES = ("knapsack", "scheduling")  # assignment is root-integral
+BNB_FRONTIER = 8                           # (1 node): nothing to A/B there
 
 
 def mixed_batch(m: int, n: int, B: int, seed: int = 0) -> LPBatch:
@@ -323,6 +333,45 @@ def measure_warm(fixture: str, B: int = WARM_B, K: int = WARM_K, *,
             "work_ratio": warm_mean / max(cold_mean, 1e-12),
             "status_match_frac": float(np.concatenate(match).mean()),
             "rel_obj_err": float(max(errs)) if errs else 0.0,
+        }
+    return row
+
+
+def measure_bnb(fixture: str, *, frontier: int = BNB_FRONTIER,
+                backends: str = "all") -> dict:
+    """Branch-and-bound row: the same MIP tree driven with warm-started
+    frontiers and cold ones, per exact simplex engine.  Warm and cold runs
+    fathom identically (same relaxation optima), so nodes match and the
+    total-LP-iteration ``work_ratio`` isolates what parent-basis reuse
+    saves across the tree.  PDHG is skipped — its iteration counts are not
+    pivot work and its tree can differ (weaker safe bounds)."""
+    from repro.core import branch_and_bound
+    from repro.io.mps import fixture_path, read_mps
+
+    g = read_mps(fixture_path(fixture))
+    engines = [b for b in ("tableau", "revised")
+               if backends in ("all", b)]
+    row = {"fixture": fixture, "frontier": frontier, "backends": {}}
+    for backend in engines:
+        warm = branch_and_bound(g, backend=backend, frontier=frontier)
+        wall = timeit(lambda: branch_and_bound(g, backend=backend,
+                                               frontier=frontier),
+                      warmup=0, iters=1)
+        cold = branch_and_bound(g, backend=backend, frontier=frontier,
+                                warm_start=False)
+        row["backends"][backend] = {
+            "objective": float(warm.objective),
+            "proven": bool(warm.proven and cold.proven),
+            "objective_match": bool(
+                abs(warm.objective - cold.objective)
+                <= 1e-6 * max(1.0, abs(cold.objective))),
+            "nodes": int(warm.nodes),
+            "nodes_cold": int(cold.nodes),
+            "dispatches": int(warm.dispatches),
+            "warm_lp_iters": int(warm.lp_iterations),
+            "cold_lp_iters": int(cold.lp_iterations),
+            "work_ratio": warm.lp_iterations / max(cold.lp_iterations, 1),
+            "wall_s": wall,
         }
     return row
 
@@ -576,6 +625,21 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
                   f"({cut} re-solve work eliminated) "
                   f"status_match={wb['status_match_frac']:.3f} "
                   f"rel_obj={wb['rel_obj_err']:.1e}")
+    bnb_rows = []
+    if backends in ("all", "tableau", "revised"):
+        print("-- bnb_workloads (branch-and-bound driver, bench_gate "
+              "baseline) --")
+        for fixture in BNB_FIXTURES:
+            r = measure_bnb(fixture, backends=backends)
+            bnb_rows.append(r)
+            for name, nb in r["backends"].items():
+                print(f"bnb {r['fixture']} frontier={r['frontier']} "
+                      f"{name:<8} obj={nb['objective']:10.4f} "
+                      f"proven={nb['proven']} nodes={nb['nodes']} "
+                      f"warm_iters={nb['warm_lp_iters']} "
+                      f"cold_iters={nb['cold_lp_iters']} "
+                      f"(x{nb['work_ratio']:.2f} of cold) "
+                      f"wall={nb['wall_s']:.3f}s")
     result = {
         "benchmark": "pivot_work",
         "quick": quick,
@@ -586,6 +650,7 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
         "general_workloads": general_rows,
         "sparse_workloads": sparse_rows,
         "warm_workloads": warm_rows,
+        "bnb_workloads": bnb_rows,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

@@ -1,0 +1,75 @@
+"""Batched branch-and-bound: solve small MIPs as warm-started LP frontiers.
+
+    PYTHONPATH=src python examples/branch_bound.py
+
+A branch-and-bound tree is the batched-LP workload the paper's thesis was
+waiting for: every node is the root relaxation with a handful of variable
+bounds tightened, so a frontier of open nodes shares one canonical shape
+and solves as ONE device dispatch (core/branch_bound.py).  The driver
+
+* keeps the frontier as a single bound-edited batch
+  (``forms.rebind_bounds``: the root's canonical A/c/scales are frozen,
+  only rhs/shift recompute),
+* warm-starts every child from its parent's terminal basis — a child
+  differs by one bound, so it typically re-solves in a couple of pivots,
+* fathoms on per-LP status/bound/incumbent; with the PDHG backend the
+  relaxation objective is only ~tol-accurate, so pruning goes through the
+  ``safe_dual_bound`` certificate pass instead (valid for ANY duals).
+
+This demo runs the three vendored MIP fixtures (tests/fixtures/README.md)
+through the exact engines and PDHG, then A/Bs warm vs cold frontiers.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import OPTIMAL, branch_and_bound
+from repro.io.mps import MIP_FIXTURE_NAMES, fixture_path, read_mps
+
+
+def main():
+    print("=== 1. the three MIP fixtures, every backend =================")
+    for name in MIP_FIXTURE_NAMES:
+        g = read_mps(fixture_path(name))
+        n_int = int(g.integer.sum())
+        print(f"\n{name}: m={g.m} n={g.n} ({n_int} integer columns), "
+              f"{'max' if g.maximize else 'min'}")
+        for backend in ("tableau", "revised", "pdhg"):
+            t0 = time.perf_counter()
+            res = branch_and_bound(g, backend=backend, frontier=8)
+            dt = time.perf_counter() - t0
+            assert res.status == OPTIMAL and res.proven, res
+            print(f"  {backend:8s} objective={res.objective:10.4f}  "
+                  f"nodes={res.nodes:3d}  dispatches={res.dispatches:2d}  "
+                  f"lp_iters={res.lp_iterations:6d}  [{dt:.2f}s]")
+
+    print("\n=== 2. warm vs cold frontiers (the tentpole payoff) =========")
+    for name in ("knapsack", "scheduling"):
+        g = read_mps(fixture_path(name))
+        warm = branch_and_bound(g, backend="tableau", frontier=8)
+        cold = branch_and_bound(g, backend="tableau", frontier=8,
+                                warm_start=False)
+        assert warm.objective == cold.objective
+        ratio = warm.lp_iterations / max(1, cold.lp_iterations)
+        print(f"  {name:10s} warm={warm.lp_iterations:4d} pivots  "
+              f"cold={cold.lp_iterations:4d} pivots  "
+              f"(x{ratio:.2f} of cold, same {warm.nodes}-node tree)")
+
+    print("\n=== 3. streaming frontier (continuous batching) =============")
+    g = read_mps(fixture_path("scheduling"))
+    res = branch_and_bound(g, backend="tableau", mode="stream",
+                           frontier=8, lanes=8)
+    assert res.proven
+    print(f"  scheduling via FrontierScheduler lanes=8: "
+          f"objective={res.objective:.4f} nodes={res.nodes} "
+          f"lp_iters={res.lp_iterations}")
+    print("  (fathomed nodes retire mid-batch; children refill freed "
+          "lanes\n   without draining the device batch)")
+
+
+if __name__ == "__main__":
+    main()

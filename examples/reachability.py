@@ -13,8 +13,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (hyperbox_as_general_lp, solve_batched_jax,
-                        solve_hyperbox, solve_hyperbox_ref)
+from repro.core import (GeneralLPBatch, hyperbox_as_general_lp,
+                        solve_batched_jax, solve_hyperbox, solve_hyperbox_ref)
 
 rng = np.random.default_rng(1)
 n, T, K = 5, 2000, 40
@@ -68,21 +68,31 @@ np.testing.assert_allclose(res.objective + off,
                            sup.reshape(T * K)[:4000], rtol=1e-4, atol=1e-6)
 print("hyperbox == simplex on the same LPs (checked on 4000)")
 
-# warm-start chaining along the flow-pipe: the next 4000 LPs are the same K
-# directions against boxes drifted 100 Euler steps further — the optimal
-# basis of a box LP depends only on the direction's sign pattern relative
-# to the box, which the drift never flips, so re-solving from the previous
-# slice's terminal state (``warm=res.warm_start()``) needs ~0 pivots where
-# a cold solve re-pays the full pivot path.
-lp2, off2 = hyperbox_as_general_lp(lo_e[4000:8000], hi_e[4000:8000],
-                                   d_e[4000:8000])
-cold2 = solve_batched_jax(lp2)
-warm2 = solve_batched_jax(lp2, warm=res.warm_start())
-print(f"flow-pipe warm chaining (next 4000 LPs): "
+# warm-start chaining along the flow-pipe: the next 4000 LPs are the SAME
+# K directions against boxes drifted 100 Euler steps further — i.e. the
+# same general-form LPs with edited variable bounds.  Build the slice once
+# as a GeneralLPBatch and get the drifted slice with ``with_bounds`` (a
+# validated copy-edit: A/c untouched, only lb/ub replaced — the same
+# bound-edit path the branch-and-bound frontier rides).  The optimal basis
+# of a box LP depends only on the direction's sign pattern relative to the
+# box, which the drift never flips, so re-solving from the previous
+# slice's terminal state (``warm=res2.warm_start()``) needs ~0 pivots
+# where a cold solve re-pays the full pivot path.
+g1 = GeneralLPBatch.from_arrays(
+    A=d_e[:4000, None, :], sense=["L"],
+    rhs=np.full((4000, 1), 1e6),           # vacuous row; bounds do the work
+    lb=lo_e[:4000], ub=hi_e[:4000], c=d_e[:4000], maximize=True)
+res2 = solve_batched_jax(g1)
+np.testing.assert_allclose(res2.objective, sup.reshape(T * K)[:4000],
+                           rtol=1e-4, atol=1e-6)
+g2 = g1.with_bounds(lb=lo_e[4000:8000], ub=hi_e[4000:8000])
+cold2 = solve_batched_jax(g2)
+warm2 = solve_batched_jax(g2, warm=res2.warm_start())
+print(f"flow-pipe warm chaining (next 4000 LPs via with_bounds): "
       f"cold {cold2.iterations.mean():.1f} pivots/LP -> "
       f"warm {warm2.iterations.mean():.1f}; statuses agree: "
       f"{bool(np.array_equal(cold2.status, warm2.status))}")
-np.testing.assert_allclose(warm2.objective + off2,
+np.testing.assert_allclose(warm2.objective,
                            sup.reshape(T * K)[4000:8000], rtol=1e-4,
                            atol=1e-6)
 print(f"state-space envelope at t=0:   {sup.reshape(T, K)[0, :4].round(3)}")

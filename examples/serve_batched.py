@@ -1,6 +1,19 @@
 """Batched serving example (prefill + decode waves with KV-cache reuse).
 
     PYTHONPATH=src python examples/serve_batched.py
+
+STUB — this drives the seed's LM serving loop, not an LP solve service.
+The real target is the ROADMAP item "Streaming solve service: continuous
+batching over shape classes": an async service that accepts LPs of
+heterogeneous (m, n), pads them into pow2 shape-class buckets, admits new
+arrivals into lanes freed by the compaction scheduler, routes each class
+to the cheapest backend via BACKEND_REGISTRY, and reports p50/p99 latency
+under a Poisson load generator.  The lane-refill half of that design now
+exists — `core/compaction.py` `FrontierScheduler` retires finished LPs
+mid-batch and admits new ones into the freed lanes (its `source`/`sink`
+protocol is the intended service admission API; `core/branch_bound.py`
+``mode="stream"`` is its first production consumer) — but the async
+driver, shape-class bucketing, and latency reporting remain unbuilt.
 """
 import subprocess
 import sys

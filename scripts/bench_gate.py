@@ -48,6 +48,13 @@ older baselines).  On every matching workload the gate fails when:
   more than 2e-3 relative from the cold one on commonly-optimal LPs;
   baselines predating the warm engine simply have no such rows, so old
   JSONs pass untouched;
+* a ``bnb_workloads`` row (the branch-and-bound driver on the MIP
+  fixtures, benchmarks/pivot_work.py measure_bnb) regresses: the driver
+  stops proving optimality, the proven objective changes at all (the
+  fixtures have integral optima — any drift is a wrong answer), warm
+  frontiers stop beating cold ones (``work_ratio`` >= 1.0 hard, since
+  warm and cold solve the same tree), or the ratio grows more than
+  ``--rel-drop`` relative to the baseline;
 * a ``general_workloads`` row (fixture-backed real instances through the
   MPS/canonicalization pipeline) regresses: per-backend status agreement
   with the float64 oracle drops below baseline - 0.02, relative objective
@@ -252,6 +259,49 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
                     f"{tag}: {backend} warm rel_obj_err "
                     f"{cb['rel_obj_err']:.2e} > 2e-3 — warm starts changed "
                     "the answer, not just the path")
+
+    # ---- branch-and-bound rows (MIP driver invariants) --------------------
+    cur_bnb = {(w["fixture"], w["frontier"]): w
+               for w in current.get("bnb_workloads", [])}
+    for bn in baseline.get("bnb_workloads", []):
+        key = (bn["fixture"], bn["frontier"])
+        tag = f"bnb {bn['fixture']} frontier={bn['frontier']}"
+        cn = cur_bnb.get(key)
+        if cn is None:
+            failures.append(f"{tag}: row missing from the smoke run")
+            continue
+        for backend, bb in bn.get("backends", {}).items():
+            if backend not in measured:
+                continue
+            cb = cn.get("backends", {}).get(backend)
+            if cb is None:
+                failures.append(f"{tag}: backend {backend!r} missing")
+                continue
+            if not cb["proven"]:
+                failures.append(
+                    f"{tag}: {backend} no longer proves optimality")
+            if abs(cb["objective"] - bb["objective"]) \
+                    > 1e-6 * max(1.0, abs(bb["objective"])):
+                failures.append(
+                    f"{tag}: {backend} proven objective "
+                    f"{cb['objective']:.6g} != baseline "
+                    f"{bb['objective']:.6g} (integral optimum — any drift "
+                    "is a wrong answer)")
+            if not cb["objective_match"]:
+                failures.append(
+                    f"{tag}: {backend} warm and cold runs disagree on the "
+                    "incumbent objective")
+            if cb["work_ratio"] >= 1.0:
+                failures.append(
+                    f"{tag}: {backend} work_ratio {cb['work_ratio']:.3f} >= "
+                    "1.0 (hard bound: warm frontiers must beat cold on the "
+                    "same tree)")
+            ceiling = bb["work_ratio"] * (1.0 + rel_drop) + cut_slack
+            if cb["work_ratio"] > ceiling:
+                failures.append(
+                    f"{tag}: {backend} work_ratio {cb['work_ratio']:.3f} > "
+                    f"{ceiling:.3f} (baseline {bb['work_ratio']:.3f} "
+                    f"+ {rel_drop:.0%} — parent-basis reuse stopped paying)")
 
     # ---- shared-pattern sparse rows (dense-vs-sparse PDHG invariants) -----
     if check_pdhg:

@@ -49,13 +49,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 mps_roundtrip_smoke() {
   echo "== mps-roundtrip smoke =="
   python - <<'EOF'
-# parse every vendored fixture, write it back, re-parse, assert bit-equality
-# (seconds of work — the fixtures are tiny, nothing is solved)
+# parse every vendored fixture (LP and MIP), write it back, re-parse, assert
+# bit-equality (seconds of work — the fixtures are tiny, nothing is solved)
 import tempfile, os
 import numpy as np
-from repro.io.mps import FIXTURE_NAMES, fixture_path, read_mps, write_mps
+from repro.io.mps import (FIXTURE_NAMES, MIP_FIXTURE_NAMES, fixture_path,
+                          read_mps, write_mps)
 
-for name in FIXTURE_NAMES:
+for name in FIXTURE_NAMES + MIP_FIXTURE_NAMES:
     g = read_mps(fixture_path(name))
     with tempfile.NamedTemporaryFile(suffix=".mps", delete=False) as f:
         path = f.name
@@ -69,8 +70,40 @@ for name in FIXTURE_NAMES:
     if g.ranges is not None:
         assert np.array_equal(np.nan_to_num(g.ranges, nan=-1),
                               np.nan_to_num(g2.ranges, nan=-1)), name
-    print(f"  {name}: {g.m}x{g.n} round-trips bit-identically")
+    if g.integer is None:
+        assert g2.integer is None, f"{name}: integer mask appeared"
+    else:
+        assert np.array_equal(g.integer, g2.integer), \
+            f"{name}: integer mask changed in round-trip"
+    mark = " (integer)" if g.integer is not None else ""
+    print(f"  {name}: {g.m}x{g.n} round-trips bit-identically{mark}")
 print("mps-roundtrip smoke OK")
+EOF
+}
+
+bnb_smoke() {
+  echo "== branch-and-bound smoke =="
+  python - <<'EOF'
+# solve the tiny knapsack frontier end-to-end on both exact simplex engines:
+# proven optimality, the brute-force-verified objective, and warm frontiers
+# beating cold ones (seconds of work — a 5-node tree on a 1x8 instance)
+from repro.core import OPTIMAL, branch_and_bound
+from repro.io.mps import fixture_path, read_mps
+
+g = read_mps(fixture_path("knapsack"))
+for backend in ("tableau", "revised"):
+    warm = branch_and_bound(g, backend=backend, frontier=8)
+    assert warm.status == OPTIMAL and warm.proven, \
+        f"{backend}: {warm.summary()}"
+    assert abs(warm.objective - 280.0) < 1e-6, \
+        f"{backend}: objective {warm.objective} != 280 (brute-force optimum)"
+    cold = branch_and_bound(g, backend=backend, frontier=8,
+                            warm_start=False)
+    assert warm.lp_iterations < cold.lp_iterations, \
+        f"{backend}: warm {warm.lp_iterations} !< cold {cold.lp_iterations}"
+    print(f"  {backend}: optimum 280 proven in {warm.nodes} nodes, "
+          f"warm {warm.lp_iterations} vs cold {cold.lp_iterations} pivots")
+print("branch-and-bound smoke OK")
 EOF
 }
 
@@ -78,6 +111,7 @@ if [[ "$FAST" == 1 ]]; then
   echo "== tier-1 pytest (fast) =="
   python -m pytest -x -q
   mps_roundtrip_smoke
+  bnb_smoke
   echo "ALL CHECKS PASSED"
   exit 0
 fi
@@ -152,6 +186,20 @@ for ww in d.get("warm_workloads", []):
             f"{wb['status_match_frac']:.2f} < 0.95"
         assert wb["rel_obj_err"] < 2e-3, \
             f"warm {ww['fixture']}: {name} rel_obj_err {wb['rel_obj_err']:.2e}"
+# bnb smoke: the branch-and-bound driver must prove optimality on the
+# MIP fixtures at the brute-force-verified objective, and warm-started
+# frontiers must strictly beat cold ones on the identical tree (the same
+# bounds bench_gate.py holds against the committed baseline)
+for nw in d.get("bnb_workloads", []):
+    for name, nb in nw["backends"].items():
+        assert nb["proven"], \
+            f"bnb {nw['fixture']}: {name} did not prove optimality"
+        assert nb["objective_match"], \
+            f"bnb {nw['fixture']}: {name} objective {nb['objective']} " \
+            f"missed the brute-force optimum"
+        assert nb["work_ratio"] < 1.0, \
+            f"bnb {nw['fixture']}: {name} work_ratio " \
+            f"{nb['work_ratio']:.2f} >= 1.0 — warm frontiers not paying"
 # general-form smoke: real fixtures through the MPS/canonicalization
 # pipeline must track the float64 oracle after recovery
 for gw in d.get("general_workloads", []):
@@ -196,6 +244,12 @@ if d.get("warm_workloads"):
                     f"{wb['work_ratio']:.2f}"
                     for ww in d["warm_workloads"]
                     for name, wb in ww["backends"].items()))
+if d.get("bnb_workloads"):
+    print("bnb smoke OK:",
+          ", ".join(f"{nw['fixture']}/{name} ratio "
+                    f"{nb['work_ratio']:.2f}"
+                    for nw in d["bnb_workloads"]
+                    for name, nb in nw["backends"].items()))
 EOF
 
   echo "== bench-regression gate (backend=$backend) =="

@@ -34,6 +34,10 @@ Public API:
                                            + flips + pricing weights for the
                                            simplexes, iterates + primal
                                            weight for PDHG
+    branch_and_bound                     — batched MIP branch-and-bound:
+                                           frontiers of bound-edited nodes
+                                           solved as one warm-started batch
+                                           per dispatch (core/branch_bound.py)
 """
 from .lp import (  # noqa: F401
     BACKEND_REGISTRY, BACKENDS, BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL,
@@ -42,7 +46,7 @@ from .lp import (  # noqa: F401
 )
 from .forms import (  # noqa: F401
     GeneralLPBatch, Recovery, canonical_shape, canonicalize, general_kkt,
-    general_violation, prepare_warm, random_general_lp_batch,
+    general_violation, prepare_warm, random_general_lp_batch, rebind_bounds,
 )
 from .pricing import ALL_PRICING, PRICING_RULES, canonicalize_rule  # noqa: F401
 from .simplex import (  # noqa: F401
@@ -72,3 +76,6 @@ from .reference import (  # noqa: F401
 )
 from .distributed import solve_pjit, solve_shard_map  # noqa: F401
 from .lp_router import expert_capacity_lp  # noqa: F401
+from .branch_bound import (  # noqa: F401
+    BnBResult, branch_and_bound, safe_dual_bound,
+)

@@ -70,6 +70,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                   backend: str = "tableau",
                   presolve: bool = True, scale: Optional[bool] = None,
                   warm: Optional[WarmStart] = None,
+                  pad_to_bucket: bool = False,
                   **solver_kwargs) -> LPResult:
     """Chunked batched solve (Algorithm 1). ``solver`` defaults to the pure
     JAX lockstep solver; kernels.ops.solve_batched_pallas and
@@ -111,7 +112,15 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     every engine from a parent solve; its per-LP leaves are permuted and
     chunk-sliced alongside ``A``/``b``/``c``, and chunk results' terminal
     states are re-concatenated/unpermuted so the returned ``LPResult.warm``
-    chains into the next re-solve."""
+    chains into the next re-solve.
+
+    ``pad_to_bucket=True`` pads the batch up to the next power of two by
+    replicating members (results for the replicas are discarded, warm
+    leaves ride along).  Callers that dispatch many variable-sized batches
+    of one canonical shape — the branch-and-bound frontier loop — then
+    compile one XLA program per pow2 bucket instead of one per batch size,
+    at the cost of solving up to 2x LPs per dispatch (replicas terminate
+    in lockstep with their originals, so wall-clock cost is near zero)."""
     canonicalize_backend(backend)
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     warm = prepare_warm(warm, rec, batch)
@@ -174,6 +183,19 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                         else np.asarray(batch.ub)[perm])
         if warm is not None:
             warm = warm.take(perm)
+    unpad_B = None
+    if pad_to_bucket and B > 1:
+        Bp = 1 << (B - 1).bit_length()
+        if Bp != B:
+            idx = np.arange(Bp) % B
+            batch = LPBatch(A=np.asarray(batch.A)[idx],
+                            b=np.asarray(batch.b)[idx],
+                            c=np.asarray(batch.c)[idx],
+                            ub=None if batch.ub is None
+                            else np.asarray(batch.ub)[idx])
+            if warm is not None:
+                warm = warm.take(idx)
+            unpad_B, B = B, Bp
 
     def call(sub, sub_warm):
         # warm is passed per-call (never via solver_kwargs) because each
@@ -186,7 +208,7 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
         chunk_size = max_chunk_size(batch, device_bytes, n_devices)
     if chunk_size >= B:
         res = call(batch, warm)
-        return finish_result(rec, _unpermute(res, perm))
+        return finish_result(rec, _unpermute(_unpad(res, unpad_B), perm))
 
     n_chunks = math.ceil(B / chunk_size)
     pending = []
@@ -208,7 +230,18 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
                    status=cat("status"), iterations=cat("iterations"),
                    y=cat("y"), z=cat("z"),
                    warm=WarmStart.concat([r.warm for r in pending]))
-    return finish_result(rec, _unpermute(res, perm))
+    return finish_result(rec, _unpermute(_unpad(res, unpad_B), perm))
+
+
+def _unpad(res: LPResult, B) -> LPResult:
+    """Drop the pad_to_bucket replica rows (no-op when B is None)."""
+    if B is None:
+        return res
+    take = lambda a: None if a is None else np.asarray(a)[:B]  # noqa: E731
+    return LPResult(x=take(res.x), objective=take(res.objective),
+                    status=take(res.status), iterations=take(res.iterations),
+                    y=take(res.y), z=take(res.z),
+                    warm=None if res.warm is None else res.warm.slice(0, B))
 
 
 def _unpermute(res: LPResult, perm) -> LPResult:

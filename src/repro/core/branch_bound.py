@@ -1,0 +1,469 @@
+"""Batched branch-and-bound: MIP trees as frontiers of warm-started LPs.
+
+The paper's thesis is that small LPs only pay off on an accelerator when
+solved as large same-shape batches; "Batched First-Order Methods for
+Parallel LP Solving in MIP" (Blin et al., PAPERS.md) supplies the killer
+workload: a branch-and-bound tree emits thousands of *near-identical* node
+relaxations — every node is the root LP with a handful of variable bounds
+tightened.  This driver turns that observation into the repo's MIP layer:
+
+* **the frontier is one batch** — open nodes differ from the root only in
+  ``lb``/``ub``, so a frontier of B nodes canonicalizes through
+  ``forms.rebind_bounds`` (the cheap bound-edit path: the root's canonical
+  ``A``/``c``/scales broadcast, only rhs/shift/native-ub recompute) and is
+  solved in **one device dispatch** through ``solve_batched``.  PR 6's
+  native-bound ratio test is what makes a branch a pure bound edit: a
+  tightened ``ub`` lands in the canonical ``LPBatch.ub`` vector, never in
+  a new row, so every node in the tree shares one static canonical shape;
+* **children start warm** — each node stores its parent's per-LP
+  ``WarmStart`` slice (canonical coordinates, raw engine scaling) and the
+  next frontier dispatch re-injects the stacked carriers.  A child differs
+  from its parent by one bound, so the parent basis is usually
+  dual-feasible-after-repair and re-solves in a handful of pivots — the
+  measured warm/cold iteration ratio is the ``bnb`` row of
+  BENCH_pivot_work.json;
+* **fathoming is certificate-driven** — per-LP INFEASIBLE prunes,
+  integral OPTIMAL solutions update the incumbent (objective recomputed
+  exactly in float64 from the rounded point), and bound pruning compares
+  the node's relaxation bound against the incumbent.  For the exact
+  simplex engines the relaxation objective *is* the bound (minus a float32
+  safety slack); for PDHG — whose OPTIMAL means "KKT residuals below tol",
+  an *approximate* objective — the PR 5 dual certificate ``LPResult.y`` is
+  passed through ``safe_dual_bound``, which is valid for **any** dual
+  vector, so tolerance noise can never prune the true optimum.  Backends
+  advertise this via ``BackendSpec.supports_safe_bound``; non-exact
+  backends without it are rejected.
+
+Two dispatch modes:
+
+* ``mode="dispatch"`` (default, all backends): solve whole frontiers per
+  round through ``solve_batched(..., pad_to_bucket=True)`` — one compiled
+  XLA program per pow2 frontier bucket;
+* ``mode="stream"`` (tableau only): drive the ``FrontierScheduler``
+  (core/compaction.py) — fathomed nodes retire mid-batch and
+  freshly-branched children are admitted into the freed lanes, so the
+  device batch never drains between rounds.
+
+The driver itself is host-side NumPy: selection (best-first or diving),
+branching (most-fractional), and bookkeeping are O(frontier) scalar work
+per round — the device only ever sees batched LP relaxations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .batching import solve_batched
+from .compaction import FrontierScheduler
+from .forms import (GeneralLPBatch, Recovery, canonicalize, general_violation,
+                    rebind_bounds)
+from .lp import (INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED, LPBatch,
+                 LPResult, WarmStart, backend_spec)
+
+SEARCHES = ("best", "depth")
+MODES = ("dispatch", "stream")
+
+
+def safe_dual_bound(g: GeneralLPBatch, y: np.ndarray) -> np.ndarray:
+    """A bound on each LP's optimal value that is valid for **any** row-dual
+    vector ``y`` (B, m) — the safe-bound pass behind
+    ``BackendSpec.supports_safe_bound``.
+
+    From the exact identity ``c.x = y.(Ax) + z.x`` with ``z = c - A^T y``,
+    bounding each term over the feasible box gives, for minimization::
+
+        min c.x + c0  >=  c0 + sum_i min(y_i lo_i, y_i hi_i)
+                             + sum_j min(z_j lb_j, z_j ub_j)
+
+    (maximization: the mirrored upper bound with max picks).  This holds
+    for *every* y, so duals from a tolerance-based solver (PDHG) — or
+    float32-noisy duals from an exact one — still yield bounds safe to
+    prune with.  Entries of ``y`` whose optimizing side is an infinite row
+    bound are projected to 0 first (still valid: any y is); a reduced cost
+    pushing against an infinite variable bound honestly yields ``-inf``
+    (``+inf`` for max) — no information.  NaN duals are treated as 0.
+
+    Returns (B,) bounds in the problem's own sense: a lower bound on the
+    minimum, or an upper bound on the maximum.
+    """
+    y = np.nan_to_num(np.asarray(y, np.float64),
+                      nan=0.0, posinf=0.0, neginf=0.0)
+    lo, hi = g.row_bounds()
+    lb = np.asarray(g.lb, np.float64)
+    ub = np.asarray(g.ub, np.float64)
+    if not g.maximize:
+        bad = ((y > 0) & ~np.isfinite(lo)) | ((y < 0) & ~np.isfinite(hi))
+        yp = np.where(bad, 0.0, y)
+        rt = (np.where(yp > 0, yp, 0.0) * np.where(yp > 0, lo, 0.0)
+              + np.where(yp < 0, yp, 0.0) * np.where(yp < 0, hi, 0.0))
+        z = np.asarray(g.c, np.float64) - np.einsum("bmn,bm->bn", g.A, yp)
+        ct = (np.where(z > 0, z, 0.0) * np.where(z > 0, lb, 0.0)
+              + np.where(z < 0, z, 0.0) * np.where(z < 0, ub, 0.0))
+    else:
+        bad = ((y > 0) & ~np.isfinite(hi)) | ((y < 0) & ~np.isfinite(lo))
+        yp = np.where(bad, 0.0, y)
+        rt = (np.where(yp > 0, yp, 0.0) * np.where(yp > 0, hi, 0.0)
+              + np.where(yp < 0, yp, 0.0) * np.where(yp < 0, lo, 0.0))
+        z = np.asarray(g.c, np.float64) - np.einsum("bmn,bm->bn", g.A, yp)
+        ct = (np.where(z > 0, z, 0.0) * np.where(z > 0, ub, 0.0)
+              + np.where(z < 0, z, 0.0) * np.where(z < 0, lb, 0.0))
+    return np.asarray(g.c0, np.float64) + rt.sum(axis=1) + ct.sum(axis=1)
+
+
+def _cold_carrier(m: int, n: int) -> WarmStart:
+    """A 1-member carrier encoding the cold start (slack basis, zero
+    iterates): lets root/reset nodes share a frontier dispatch with
+    genuinely warm siblings — ``WarmStart.concat`` needs uniform leaves,
+    and injecting the cold construction *as* a warm start is a no-op."""
+    return WarmStart(m=m, n=n,
+                     basis=np.arange(n, n + m, dtype=np.int32)[None],
+                     at_upper=np.zeros((1, n), bool),
+                     x=np.zeros((1, n)), y=np.zeros((1, m)),
+                     omega=np.ones(1), eta=np.ones(1))
+
+
+@dataclasses.dataclass
+class _Node:
+    """One open node: bound edits vs the root + inherited bookkeeping."""
+    lb: np.ndarray            # (n,) original-coordinate bounds
+    ub: np.ndarray
+    bound: float              # inherited relaxation bound (min-form)
+    depth: int
+    warm: Optional[WarmStart]  # parent's terminal state, canonical coords
+
+
+@dataclasses.dataclass(frozen=True)
+class BnBResult:
+    """Outcome of one branch-and-bound run (original problem sense).
+
+    ``status`` reuses the LP codes: OPTIMAL — incumbent proven optimal to
+    ``gap_tol``; INFEASIBLE — no integer-feasible point exists (proven);
+    UNBOUNDED — the root relaxation is unbounded; ITERATION_LIMIT — the
+    node budget ran out or some node was unresolvable, ``objective``/
+    ``bound`` bracket the true optimum.  ``proven`` is the single flag
+    tests should assert.
+    """
+    x: Optional[np.ndarray]   # (n,) incumbent (integer cols exactly integral)
+    objective: float          # incumbent value (NaN when none found)
+    bound: float              # proven bound on the optimum (problem sense)
+    status: int
+    proven: bool
+    nodes: int                # LP relaxations solved
+    dispatches: int           # device dispatches (rounds / admit groups)
+    lp_iterations: int        # total LP iterations across all node solves
+    max_depth: int
+    gap: float                # |objective - bound| / max(1, |objective|)
+
+    def summary(self) -> str:
+        names = {OPTIMAL: "optimal", UNBOUNDED: "unbounded",
+                 INFEASIBLE: "infeasible", ITERATION_LIMIT: "node_limit"}
+        return (f"{names[self.status]}: objective={self.objective:.6g} "
+                f"bound={self.bound:.6g} nodes={self.nodes} "
+                f"lp_iters={self.lp_iterations} depth<={self.max_depth}")
+
+
+def _normalize_integer(g: GeneralLPBatch, integer) -> np.ndarray:
+    if integer is None:
+        integer = g.integer
+    if integer is None:
+        raise ValueError(
+            "no integer columns: pass integer= or set GeneralLPBatch.integer "
+            "(read_mps records INTORG/INTEND markers and BV/UI/LI bounds)")
+    integer = np.asarray(integer)
+    if integer.dtype != bool:
+        mask = np.zeros(g.n, bool)
+        mask[integer.reshape(-1).astype(int)] = True
+        integer = mask
+    integer = integer.reshape(g.n)
+    if not integer.any():
+        raise ValueError("integer mask is empty")
+    fin = (np.isfinite(g.lb[:, integer]).all()
+           and np.isfinite(g.ub[:, integer]).all())
+    if not fin:
+        raise ValueError(
+            "integer columns need finite lb and ub at the root: branching "
+            "edits bounds, and the canonical batch's bound-finiteness "
+            "pattern must stay invariant across the tree "
+            "(forms.rebind_bounds)")
+    return integer
+
+
+def branch_and_bound(g: GeneralLPBatch, *, integer=None,
+                     backend: str = "tableau", mode: str = "dispatch",
+                     search: str = "best", frontier: int = 16,
+                     lanes: Optional[int] = None,
+                     warm_start: bool = True,
+                     max_nodes: int = 10_000,
+                     gap_tol: float = 1e-6, int_tol: float = 1e-5,
+                     bound_slack: float = 1e-5, feas_accept: float = 1e-5,
+                     pricing: str = "dantzig",
+                     **solver_kwargs) -> BnBResult:
+    """Solve the mixed-integer program ``g`` (integer columns per
+    ``integer``/``g.integer``) by batched LP-based branch-and-bound.
+
+    ``g`` must be a single instance (batch of 1) with finite bounds on
+    every integer column.  ``backend`` is any BACKEND_REGISTRY engine; a
+    non-exact backend must advertise ``supports_safe_bound`` (its node
+    bounds then go through the ``safe_dual_bound`` certificate pass
+    instead of trusting tolerance-based objectives).  ``search`` picks the
+    node order — ``"best"`` (best-bound-first: strongest bound growth) or
+    ``"depth"`` (diving: incumbents early, frontier stays warm-start
+    coherent).  ``frontier`` caps nodes per device dispatch
+    (``mode="dispatch"``); ``lanes`` sizes the refill pool
+    (``mode="stream"``, tableau only, default ``next pow2 >= frontier``).
+    ``warm_start=False`` solves every node cold (the A/B the ``bnb``
+    benchmark row measures).  Remaining kwargs (``dtype``, ``tol``,
+    ``max_iters``, ...) forward to the LP engine via ``solve_batched``.
+
+    Fathoming tolerances: a node is pruned when its relaxation bound
+    cannot beat the incumbent by more than ``gap_tol`` (relative), so the
+    returned incumbent is optimal to ``gap_tol`` when ``proven``;
+    ``bound_slack`` is the float32 safety margin subtracted from exact
+    engines' relaxation objectives before they are used as bounds;
+    ``int_tol`` decides integrality of a relaxation solution and
+    ``feas_accept`` re-checks the rounded candidate's original-space
+    feasibility before it may become the incumbent.
+    """
+    spec = backend_spec(backend)
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    if search not in SEARCHES:
+        raise ValueError(
+            f"unknown search {search!r}; expected one of {SEARCHES}")
+    if mode == "stream" and backend != "tableau":
+        raise ValueError(
+            "mode='stream' drives the tableau FrontierScheduler; use "
+            "mode='dispatch' for the revised/pdhg engines")
+    if not spec.exact and not spec.supports_safe_bound:
+        raise ValueError(
+            f"backend {backend!r} is tolerance-based and does not support "
+            "the safe-bound certificate pass (BackendSpec."
+            "supports_safe_bound); its objectives cannot prune safely")
+    if g.batch != 1:
+        raise ValueError(f"branch_and_bound takes one instance, got a batch "
+                         f"of {g.batch}")
+    int_mask = _normalize_integer(g, integer)
+    int_cols = np.flatnonzero(int_mask)
+    if frontier < 1:
+        raise ValueError(f"frontier must be >= 1, got {frontier}")
+
+    # Integer columns' bounds are forced into canonical *rows*: a branch
+    # then edits only ``b``, which the engines' warm repair phase 1 can fix
+    # under the parent basis; a tightened native ``ub`` under a stale basis
+    # would go undetected (the injected vertex can sit above the new bound).
+    lp0, rec0 = canonicalize(g, bound_rows=int_mask)
+    mval = (lambda v: -v) if g.maximize else (lambda v: v)
+
+    # ---- mutable search state (shared by both modes via _process) ---------
+    open_nodes: List[_Node] = [
+        _Node(lb=np.asarray(g.lb[0], np.float64).copy(),
+              ub=np.asarray(g.ub[0], np.float64).copy(),
+              bound=-np.inf, depth=0, warm=None)]
+    state = {"incumbent": np.inf, "x": None, "proven": True,
+             "unbounded": False, "nodes": 0, "dispatches": 0,
+             "lp_iters": 0, "max_depth": 0}
+
+    def prune_eps():
+        inc = state["incumbent"]
+        return gap_tol * max(1.0, abs(inc)) if np.isfinite(inc) else 0.0
+
+    def select(k: int) -> List[_Node]:
+        if search == "best":
+            open_nodes.sort(key=lambda nd: nd.bound)
+            take = open_nodes[:k]
+            del open_nodes[:k]
+        else:                               # diving: deepest-first
+            take = open_nodes[-k:]
+            del open_nodes[-k:]
+        return take
+
+    def _branch(nd: _Node, j: int, split: float, bound: float,
+                warm: Optional[WarmStart]):
+        dn_ub = nd.ub.copy()
+        dn_ub[j] = split
+        up_lb = nd.lb.copy()
+        up_lb[j] = split + 1.0
+        for lb2, ub2 in ((nd.lb.copy(), dn_ub), (up_lb, nd.ub.copy())):
+            open_nodes.append(_Node(lb=lb2, ub=ub2, bound=bound,
+                                    depth=nd.depth + 1, warm=warm))
+        state["max_depth"] = max(state["max_depth"], nd.depth + 1)
+
+    def _process(nd: _Node, status: int, obj: float, x: np.ndarray,
+                 node_g_row, y_row, warm: Optional[WarmStart]):
+        """Fathom/branch one solved node (x/obj/y in original coords)."""
+        if status == INFEASIBLE:
+            return
+        if status == UNBOUNDED:
+            if nd.depth == 0:
+                state["unbounded"] = True
+            else:          # a child more constrained than a bounded root:
+                state["proven"] = False   # numerically suspect — don't claim
+            return
+        if status == ITERATION_LIMIT:
+            # x is whatever the limit left behind — branch on a domain
+            # split instead (always valid), cold-start the children
+            unfixed = int_cols[nd.lb[int_cols] < nd.ub[int_cols]]
+            if not len(unfixed):
+                state["proven"] = False
+                return
+            j = int(unfixed[0])
+            _branch(nd, j, np.floor((nd.lb[j] + nd.ub[j]) / 2.0),
+                    nd.bound, None)
+            return
+        # OPTIMAL relaxation
+        if spec.exact:
+            nb = mval(obj) - bound_slack * (1.0 + abs(obj))
+        else:
+            sb = float(safe_dual_bound(node_g_row, y_row[None])[0])
+            nb = mval(sb) if np.isfinite(sb) else nd.bound
+        nb = max(nb, nd.bound)
+        if nb >= state["incumbent"] - prune_eps():
+            return                          # fathom by bound
+        xi = x[int_cols]
+        frac = np.abs(xi - np.round(xi))
+        if float(frac.max()) <= int_tol:
+            cand = np.asarray(x, np.float64).copy()
+            cand[int_cols] = np.round(xi)
+            viol = float(general_violation(g, cand[None])[0])
+            if viol <= feas_accept:
+                v = mval(float(g.objective_value(cand[None])[0]))
+                if v < state["incumbent"]:
+                    state["incumbent"], state["x"] = v, cand
+            else:                           # rounding broke feasibility —
+                state["proven"] = False     # pathological; don't fabricate
+            return
+        j = int(int_cols[int(np.argmax(frac))])
+        split = float(np.clip(np.floor(x[j]), nd.lb[j], nd.ub[j] - 1.0))
+        _branch(nd, j, split, nb, warm if warm_start else None)
+
+    # ---- frontier loop ----------------------------------------------------
+    if mode == "dispatch":
+        while open_nodes and not state["unbounded"] \
+                and state["nodes"] < max_nodes:
+            take = select(min(frontier, len(open_nodes),
+                              max_nodes - state["nodes"]))
+            LB = np.stack([nd.lb for nd in take])
+            UB = np.stack([nd.ub for nd in take])
+            lp_f, rec_f = rebind_bounds(lp0, rec0, LB, UB)
+            ws = None
+            if warm_start:
+                ws = WarmStart.concat(
+                    [nd.warm if nd.warm is not None
+                     else _cold_carrier(lp0.m, lp0.n) for nd in take])
+            res_can = solve_batched(lp_f, backend=backend, pricing=pricing,
+                                    warm=ws, pad_to_bucket=True,
+                                    **solver_kwargs)
+            res = rec_f.recover(res_can)
+            state["nodes"] += len(take)
+            state["dispatches"] += 1
+            state["lp_iters"] += int(np.asarray(res.iterations).sum())
+            gf = rec_f.general
+            for i, nd in enumerate(take):
+                row_g = dataclasses.replace(
+                    gf, A=gf.A[i:i + 1], rhs=gf.rhs[i:i + 1],
+                    lb=gf.lb[i:i + 1], ub=gf.ub[i:i + 1],
+                    c=gf.c[i:i + 1], c0=gf.c0[i:i + 1]) \
+                    if not spec.exact else None
+                w = (res_can.warm.slice(i, i + 1)
+                     if res_can.warm is not None else None)
+                _process(nd, int(res.status[i]), float(res.objective[i])
+                         if res.objective is not None else np.nan,
+                         np.asarray(res.x[i], np.float64), row_g,
+                         None if res.y is None else np.asarray(res.y[i]), w)
+    else:                                   # mode == "stream"
+        sched = FrontierScheduler(
+            lp0.m, lp0.n, lanes=(frontier if lanes is None else lanes),
+            pricing=pricing,
+            **{k: v for k, v in solver_kwargs.items()
+               if k in ("dtype", "tol", "feas_tol", "max_iters",
+                        "segment_k", "stats_out")})
+        pending = {}
+        seq = [0]
+
+        def source(k):
+            if not open_nodes or state["unbounded"] \
+                    or state["nodes"] >= max_nodes:
+                return None
+            take = select(min(k, len(open_nodes),
+                              max_nodes - state["nodes"]))
+            LB = np.stack([nd.lb for nd in take])
+            UB = np.stack([nd.ub for nd in take])
+            lp_f, rec_f = rebind_bounds(lp0, rec0, LB, UB)
+            tags = []
+            for i, nd in enumerate(take):
+                pending[seq[0]] = (nd, rec_f, i)
+                tags.append(seq[0])
+                seq[0] += 1
+            ws = None
+            if warm_start:
+                ws = WarmStart.concat(
+                    [nd.warm if nd.warm is not None
+                     else _cold_carrier(lp0.m, lp0.n) for nd in take])
+            state["nodes"] += len(take)
+            state["dispatches"] += 1
+            return (np.asarray(lp_f.A), np.asarray(lp_f.b),
+                    np.asarray(lp_f.c), lp_f.upper_bounds(), ws, tags)
+
+        def sink(tag, row):
+            nd, rec_f, i = pending.pop(tag)
+            rec1 = _slice_recovery(rec_f, i)
+            res1 = LPResult(
+                x=row["x"][None], objective=np.array([row["objective"]]),
+                status=np.array([row["status"]], np.int8),
+                iterations=np.array([row["iterations"]], np.int32),
+                y=row["y"][None], z=row["z"][None])
+            res = rec1.recover(res1)
+            state["lp_iters"] += int(row["iterations"])
+            _process(nd, int(res.status[0]),
+                     float(res.objective[0]),
+                     np.asarray(res.x[0], np.float64), None,
+                     None if res.y is None else np.asarray(res.y[0]),
+                     row["warm"])
+
+        sched.run(source, sink)
+
+    # ---- verdict ----------------------------------------------------------
+    inc = state["incumbent"]
+    have_inc = np.isfinite(inc)
+    exhausted = not open_nodes and not state["unbounded"]
+    if state["unbounded"]:
+        status, proven = UNBOUNDED, True
+        bound_min = -np.inf
+    elif exhausted and state["proven"]:
+        status = OPTIMAL if have_inc else INFEASIBLE
+        proven = True
+        bound_min = inc
+    else:
+        status, proven = ITERATION_LIMIT, False
+        bound_min = min([nd.bound for nd in open_nodes] + [inc]) \
+            if (open_nodes or have_inc) else -np.inf
+    objective = mval(inc) if have_inc else np.nan
+    bound = mval(bound_min) if np.isfinite(bound_min) else \
+        (np.inf if g.maximize else -np.inf)
+    gap = (abs(objective - bound) / max(1.0, abs(objective))
+           if have_inc and np.isfinite(bound) else np.inf)
+    if proven:
+        gap = 0.0
+    return BnBResult(x=state["x"], objective=objective, bound=bound,
+                     status=status, proven=proven, nodes=state["nodes"],
+                     dispatches=state["dispatches"],
+                     lp_iterations=state["lp_iters"],
+                     max_depth=state["max_depth"], gap=gap)
+
+
+def _slice_recovery(rec: Recovery, i: int) -> Recovery:
+    """The single-row view of a frontier Recovery (stream-mode retirement
+    recovers nodes one at a time as they leave the lane pool)."""
+    gf = rec.general
+    g1 = dataclasses.replace(gf, A=gf.A[i:i + 1], rhs=gf.rhs[i:i + 1],
+                             lb=gf.lb[i:i + 1], ub=gf.ub[i:i + 1],
+                             c=gf.c[i:i + 1], c0=gf.c0[i:i + 1])
+    sl = (lambda a: None if a is None
+          else (a if a.shape[0] == 1 else a[i:i + 1]))
+    return dataclasses.replace(
+        rec, general=g1, baseline=rec.baseline[i:i + 1],
+        shift=rec.shift[i:i + 1],
+        status_override=rec.status_override[i:i + 1],
+        col_scale=sl(rec.col_scale), row_scale=sl(rec.row_scale))

@@ -202,10 +202,39 @@ def segment_phase2(state: CompactionState, steps, *, m: int, n: int,
     return state, it
 
 
+def segment_combined(state: CompactionState, steps, *, m: int, n: int,
+                     tol: float, rule: str = "dantzig"):
+    """Run up to `steps` combined two-phase pivots on the *full* tableau;
+    stops early once every LP is terminal.
+
+    Unlike the `segment_phase1` -> column-compaction -> `segment_phase2`
+    ladder, this runner never changes the tableau layout — which is what
+    the frontier scheduler needs: a lane must accept a cold *or* warm
+    newcomer at any segment boundary, and a newcomer starts in phase 1,
+    which the phase-compacted tableau cannot represent."""
+    def cond(carry):
+        s, it = carry
+        return jnp.any(s.status == _RUNNING) & (it < steps)
+
+    def body(carry):
+        s, it = carry
+        ns = simplex_step(
+            SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w,
+                         s.flip, s.ub, it),
+            n=n, m=m, tol=tol, feas_thr=s.thr, rule=rule)
+        return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
+                               ns.w, ns.flip, ns.ub, s.thr), it + 1
+
+    state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return state, it
+
+
 _segment_phase1_jit = jax.jit(segment_phase1,
                               static_argnames=("m", "n", "tol", "rule"))
 _segment_phase2_jit = jax.jit(segment_phase2,
                               static_argnames=("m", "n", "tol", "rule"))
+_segment_combined_jit = jax.jit(segment_combined,
+                                static_argnames=("m", "n", "tol", "rule"))
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n"))
@@ -237,6 +266,15 @@ def _extract_jit(T, basis, status, iters, flip, ub, *, n, compacted):
 @jax.jit
 def _take_jit(state, idx):
     return jax.tree_util.tree_map(lambda a: a[idx], state)
+
+
+@jax.jit
+def _scatter_jit(state, new_state, idx):
+    """Write the j-lane ``new_state`` into lanes ``idx`` of ``state`` (the
+    frontier scheduler's admission move — the inverse of a retirement
+    gather)."""
+    return jax.tree_util.tree_map(lambda a, b: a.at[idx].set(b),
+                                  state, new_state)
 
 
 class JaxBackend:
@@ -300,6 +338,15 @@ class JaxBackend:
                                         n=self.n, tol=self.tol,
                                         rule=self.rule)
         return state, int(it)
+
+    def run_combined(self, state, steps):
+        state, it = _segment_combined_jit(state, jnp.int32(steps), m=self.m,
+                                          n=self.n, tol=self.tol,
+                                          rule=self.rule)
+        return state, int(it)
+
+    def scatter(self, state, new_state, idx) -> CompactionState:
+        return _scatter_jit(state, new_state, jnp.asarray(idx))
 
     def compact_columns(self, state: CompactionState) -> CompactionState:
         w = (state.w if self.rule in ("dantzig", "partial")
@@ -514,3 +561,142 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
     return finish_result(rec, run_schedule(backend, state, orig, B, n,
                                            max_iters=int(max_iters),
                                            config=cfg, stats_out=stats_out))
+
+
+# ---------------------------------------------------------------------------
+# Frontier refill: continuous batching over a work producer
+# ---------------------------------------------------------------------------
+
+class FrontierScheduler:
+    """Continuous-batching counterpart of `run_schedule`: where the bucket
+    ladder only ever *shrinks* a fixed batch, this scheduler keeps a fixed
+    pool of ``lanes`` batch slots and **admits new LPs into lanes freed by
+    retired ones** — the same gather machinery, run in reverse.
+
+    Built for producers that generate work *from results*: the
+    branch-and-bound driver (core/branch_bound.py) retires fathomed nodes
+    and pushes their freshly-branched children, which the scheduler admits
+    mid-solve — the device batch never drains below the available work, so
+    a 2-node frontier does not serialize a 64-lane dispatch.
+
+    Segments run the *combined* two-phase pivot on the full tableau
+    (`segment_combined`) and never column-compact: a lane must accept a
+    cold or warm newcomer at any segment boundary, and a newcomer starts
+    in phase 1, which the phase-compacted layout cannot represent.  The
+    per-lane pivot sequence is still bit-identical to the monolithic
+    lockstep solver — admission scatters never touch other lanes'
+    tableaux.
+
+    Protocol (all arrays canonical-standard-form, batch axis 0):
+
+    * ``source(k)`` — up to ``k`` new LPs, or ``None`` when no work is
+      currently available: a tuple ``(A, b, c, ub, warm, tags)`` with
+      ``j <= k`` members; ``warm`` is a j-member ``WarmStart`` or None;
+      ``tags`` are nonnegative ints identifying each LP.
+    * ``sink(tag, row)`` — called once per retired LP with a dict holding
+      ``x``/``objective``/``status``/``iterations``/``y``/``z`` (the
+      monolithic extraction contract) plus ``warm``, a 1-member
+      ``WarmStart`` carrying the lane's terminal basis/flip state — the
+      carrier children warm-start from.  ``sink`` may push work that a
+      subsequent ``source`` call returns.
+
+    ``run`` drives segments until every lane is free and ``source`` is
+    exhausted; per-LP pivots are capped at ``max_iters`` (over-budget
+    lanes retire as ITERATION_LIMIT), so it always terminates.
+    """
+
+    def __init__(self, m: int, n: int, *, lanes: int = 32,
+                 dtype=jnp.float32, tol: Optional[float] = None,
+                 feas_tol: Optional[float] = None,
+                 max_iters: Optional[int] = None,
+                 segment_k: Optional[int] = None,
+                 pricing: str = "dantzig",
+                 stats_out: Optional[List[SegmentStat]] = None):
+        if lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {lanes}")
+        self.m, self.n = int(m), int(n)
+        self.lanes = next_bucket(int(lanes))
+        self.dtype = dtype
+        if tol is None:
+            tol = 1e-6 if dtype == jnp.float32 else 1e-9
+        if feas_tol is None:
+            feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
+        self.max_iters = int(max_iters if max_iters is not None
+                             else default_max_iters(self.m, self.n))
+        self.segment_k = int(segment_k if segment_k is not None
+                             else auto_segment_k(self.m, self.n))
+        self.stats_out = stats_out
+        self.backend = JaxBackend(self.m, self.n, tol, feas_tol, dtype,
+                                  pricing=pricing)
+
+    def _admit(self, state, tags, source):
+        be = self.backend
+        free = np.flatnonzero(tags < 0)
+        if not len(free):
+            return state, tags
+        req = source(len(free))
+        if req is None:
+            return state, tags
+        A, b, c, ub, warm, new_tags = req
+        A = jnp.asarray(np.asarray(A), self.dtype)
+        j = A.shape[0]
+        if j > len(free) or j != len(new_tags):
+            raise ValueError(f"source returned {j} LPs / {len(new_tags)} "
+                             f"tags for {len(free)} free lanes")
+        new_state = be.init(
+            A, jnp.asarray(np.asarray(b), self.dtype),
+            jnp.asarray(np.asarray(c), self.dtype),
+            ub=None if ub is None else jnp.asarray(np.asarray(ub), self.dtype),
+            warm=warm)
+        if state is None:
+            # bootstrap: replicate to fill all lanes, deactivate the padding
+            if j < self.lanes:
+                new_state = be.take(new_state, np.arange(self.lanes) % j)
+                new_state = be.deactivate(new_state, np.arange(self.lanes) < j)
+            state = new_state
+            tags[:j] = new_tags
+        else:
+            idx = free[:j]
+            state = be.scatter(state, new_state, idx)
+            tags[idx] = new_tags
+        return state, tags
+
+    def run(self, source, sink) -> int:
+        """Drain ``source`` through the lane pool; returns LPs retired."""
+        be = self.backend
+        tags = np.full(self.lanes, -1, np.int64)
+        state = None
+        retired = 0
+        while True:
+            state, tags = self._admit(state, tags, source)
+            active = tags >= 0
+            if not active.any():
+                return retired
+            state, done = be.run_combined(state, self.segment_k)
+            status = be.status_host(state)
+            # per-LP budget: over-budget lanes retire as ITERATION_LIMIT
+            over = (active & (status == _RUNNING)
+                    & (np.asarray(state.iters).reshape(-1) >= self.max_iters))
+            if over.any():
+                state = be.deactivate(state, ~over)
+                status = np.where(over, ITERATION_LIMIT, status)
+            if self.stats_out is not None:
+                self.stats_out.append(SegmentStat(
+                    stage="frontier", bucket=self.lanes, steps=done,
+                    elements=done * self.lanes * be.elements_per_step("p1"),
+                    survivors=int((active & (status == _RUNNING)).sum())))
+            done_mask = active & (status != _RUNNING)
+            if done_mask.any():
+                x, obj, st, it, y, z = be.extract(state, "p1")
+                basis = np.asarray(state.basis)
+                flip = np.asarray(state.flip)
+                for i in np.flatnonzero(done_mask):
+                    sink(int(tags[i]), {
+                        "x": x[i], "objective": obj[i],
+                        "status": int(st[i]), "iterations": int(it[i]),
+                        "y": y[i], "z": z[i],
+                        "warm": WarmStart(m=self.m, n=self.n,
+                                          basis=basis[i:i + 1],
+                                          at_upper=flip[i:i + 1])})
+                    retired += 1
+                tags[done_mask] = -1

@@ -97,6 +97,14 @@ class GeneralLPBatch:
     name: str = "general"
     row_names: Optional[Tuple[str, ...]] = None
     col_names: Optional[Tuple[str, ...]] = None
+    integer: Optional[np.ndarray] = None  # (n,) bool — columns required
+                                          # integral (structure, shared
+                                          # across the batch).  Every LP
+                                          # solver ignores it (solves the
+                                          # continuous relaxation); the
+                                          # branch-and-bound driver
+                                          # (core/branch_bound.py) enforces
+                                          # it by branching on lb/ub.
 
     @property
     def batch(self) -> int:
@@ -113,7 +121,8 @@ class GeneralLPBatch:
     @staticmethod
     def from_arrays(A, sense, rhs, *, lb=None, ub=None, c=None, c0=0.0,
                     maximize=False, ranges=None, name="general",
-                    row_names=None, col_names=None) -> "GeneralLPBatch":
+                    row_names=None, col_names=None,
+                    integer=None) -> "GeneralLPBatch":
         A = np.asarray(A, dtype=np.float64)
         if A.ndim == 2:
             A = A[None]
@@ -132,11 +141,21 @@ class GeneralLPBatch:
             ranges = np.asarray(ranges, np.float64).reshape(m)
         if (lb > ub).any():
             raise ValueError("lb > ub on some variable")
+        if integer is not None:
+            integer = np.asarray(integer)
+            if integer.dtype != bool:      # index list -> (n,) mask
+                mask = np.zeros(n, bool)
+                mask[integer.reshape(-1).astype(int)] = True
+                integer = mask
+            integer = integer.reshape(n)
+            if not integer.any():
+                integer = None
         return GeneralLPBatch(A=A, sense=sense, rhs=rhs, lb=lb, ub=ub, c=c,
                               c0=c0, maximize=bool(maximize), ranges=ranges,
                               name=name,
                               row_names=tuple(row_names) if row_names else None,
-                              col_names=tuple(col_names) if col_names else None)
+                              col_names=tuple(col_names) if col_names else None,
+                              integer=integer)
 
     def row_bounds(self) -> Tuple[np.ndarray, np.ndarray]:
         """Per-row activity interval (lo, hi), each (B, m), from sense +
@@ -169,6 +188,52 @@ class GeneralLPBatch:
         """c . x + c0 in original coordinates (the recovered objective)."""
         return np.einsum("bn,bn->b", self.c,
                          np.asarray(x, np.float64)) + self.c0
+
+    def with_bounds(self, lb=None, ub=None) -> "GeneralLPBatch":
+        """Validated copy-edit: the same batch with new variable bounds.
+
+        The bound-edit entry point for branching (core/branch_bound.py) and
+        MPC-style receding-horizon updates — everything except ``lb``/``ub``
+        is shared with ``self`` (no data copies).  Accepts (n,), (1, n) or
+        (B', n) arrays; when ``self`` holds a single LP, a (B', n) bound
+        stack *broadcasts the batch*: the result is B' copies of the
+        instance differing only in bounds (one frontier of branch-and-bound
+        nodes, say).  Omitted sides keep their current values.  Raises on
+        shape mismatches and on ``lb > ub``."""
+        B, n = self.batch, self.n
+
+        def norm(v, cur, what):
+            if v is None:
+                return cur
+            v = np.asarray(v, np.float64)
+            if v.ndim == 1:
+                v = v[None]
+            if v.ndim != 2 or v.shape[1] != n:
+                raise ValueError(f"{what}: expected (n,)=({n},) or (B, {n}),"
+                                 f" got {v.shape}")
+            return v
+
+        lb2 = norm(lb, self.lb, "lb")
+        ub2 = norm(ub, self.ub, "ub")
+        Bt = max(B, lb2.shape[0], ub2.shape[0])
+        for what, v in (("lb", lb2), ("ub", ub2)):
+            if v.shape[0] not in (1, Bt):
+                raise ValueError(
+                    f"{what} batch {v.shape[0]} incompatible with batch {Bt}")
+        if Bt != B and B != 1:
+            raise ValueError(
+                f"cannot broadcast a batch of {B} to {Bt} bound rows "
+                "(only single-instance batches broadcast)")
+        ex = lambda a, shape: np.broadcast_to(a, shape)  # noqa: E731
+        lb2 = ex(lb2, (Bt, n))
+        ub2 = ex(ub2, (Bt, n))
+        if (lb2 > ub2).any():
+            raise ValueError("lb > ub on some variable")
+        if Bt == B:
+            return dataclasses.replace(self, lb=lb2, ub=ub2)
+        return dataclasses.replace(
+            self, A=ex(self.A, (Bt, self.m, n)), rhs=ex(self.rhs, (Bt, self.m)),
+            c=ex(self.c, (Bt, n)), c0=ex(self.c0, (Bt,)), lb=lb2, ub=ub2)
 
 
 def general_violation(g: GeneralLPBatch, x: np.ndarray) -> np.ndarray:
@@ -302,6 +367,16 @@ class Recovery:
     rows: np.ndarray = None      # (mk,) original row indices that survived
     hi_rows: np.ndarray = None   # indices into ``rows``: A x <= hi rows
     lo_rows: np.ndarray = None   # indices into ``rows``: -A x <= -lo rows
+    # frozen structural decisions, recorded so ``rebind_bounds`` can re-run
+    # the *numeric* part of canonicalize for new per-LP lb/ub without
+    # re-deriving (and possibly flipping) the structure: presolve's verdict
+    # per eliminated column, which kept columns carry row-encoded vs native
+    # upper bounds (indices into the canonical column space)
+    fixed_cols: np.ndarray = None    # original col idx: presolved lb == ub
+    dropped_cols: np.ndarray = None  # original col idx: empty cols
+                                     # substituted at a cost-optimal bound
+    ub_cols: np.ndarray = None       # kept-col idx with an ub *row*
+    native_cols: np.ndarray = None   # kept-col idx with a native LPBatch.ub
 
     def recover_x(self, x_can: np.ndarray) -> np.ndarray:
         """Canonical solution (B, n_canonical) -> original x (B, n)."""
@@ -387,7 +462,7 @@ class Recovery:
 def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
                  scale: Optional[bool] = None,
                  feas_tol: float = 1e-9,
-                 bound_rows: bool = False) -> Tuple[LPBatch, Recovery]:
+                 bound_rows=False) -> Tuple[LPBatch, Recovery]:
     """General form -> the paper's standard form (see module docstring).
 
     ``scale=None`` follows ``presolve`` (equilibration is part of the
@@ -398,7 +473,13 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
     bounds as one dense ``x_j <= ub_j`` row each; the default routes them
     into the canonical batch's native ``LPBatch.ub`` vector (zero extra
     rows).  Bounds on split free columns always stay rows — a bound on
-    ``y+ - y-`` is not a column bound.
+    ``y+ - y-`` is not a column bound.  A (n,) bool mask forces *those*
+    columns' bounds into rows and leaves the rest native: the
+    branch-and-bound driver uses this for integer columns, because a
+    bound edit that lands in ``b`` (a row's rhs) is repairable by the
+    engines' warm-start phase-1 machinery, while a native ``ub`` edit
+    under a stale basis is not (a basic variable above a freshly
+    tightened native bound goes undetected).
     """
     if scale is None:
         scale = presolve
@@ -414,6 +495,8 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
     keep_col = np.ones(n, bool)
     keep_row = np.ones(m, bool)
     status_override = np.full(B, -1, np.int16)
+    fixed = np.zeros(n, bool)
+    droppable = np.zeros(n, bool)
 
     if presolve:
         # --- fixed variables: lb == ub for every batch member ------------
@@ -472,11 +555,14 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
             "canonical batch needs one static shape")
     bounded_cols = np.flatnonzero(ub_fin.all(axis=0)) if B else np.array([], int)
     # native bounds by default; row encoding for free (split) columns and,
-    # under bound_rows=True, for everything
-    if bound_rows:
+    # under bound_rows=True (or per-column via a mask), for the selection
+    if bound_rows is True:
         ub_cols = bounded_cols
-    else:
+    elif bound_rows is False:
         ub_cols = bounded_cols[free[bounded_cols]]
+    else:
+        forced = np.asarray(bound_rows, bool).reshape(n)[kept]
+        ub_cols = bounded_cols[free[bounded_cols] | forced[bounded_cols]]
     native_cols = np.setdiff1d(bounded_cols, ub_cols)
 
     nk = len(kept)
@@ -553,8 +639,149 @@ def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,
                    free=free, status_override=status_override,
                    col_scale=col_scale, row_scale=row_scale,
                    m_canonical=m_can, n_canonical=n_can,
-                   rows=rows, hi_rows=hi_rows, lo_rows=lo_rows)
+                   rows=rows, hi_rows=hi_rows, lo_rows=lo_rows,
+                   fixed_cols=np.flatnonzero(fixed),
+                   dropped_cols=np.flatnonzero(droppable),
+                   ub_cols=ub_cols, native_cols=native_cols)
     return lp, rec
+
+
+def rebind_bounds(lp0: LPBatch, rec: Recovery, lb, ub, *,
+                  feas_tol: float = 1e-9) -> Tuple[LPBatch, Recovery]:
+    """Cheap per-LP bound-edit canonicalization: re-run only the *numeric*
+    part of ``canonicalize`` for new variable bounds, reusing the parent's
+    frozen structure (presolve masks, free splits, ub encoding, row blocks,
+    pow2 scales).
+
+    This is the branch-and-bound fast path: a frontier of B nodes differs
+    from the root only in ``lb``/``ub``, so the canonical ``A``/``c`` are
+    the root's (broadcast across the frontier — zero copies) and only the
+    rhs, the lower-bound shift and the native bound vector are recomputed.
+    Crucially the canonical *shape and column meaning are guaranteed
+    stable* across every rebind of the same root, which is what lets a
+    parent node's ``WarmStart`` carrier inject into its children — a full
+    re-``canonicalize`` could flip a presolve mask mid-tree and silently
+    drop every warm start.
+
+    ``lp0``/``rec`` come from ``canonicalize(root)`` (root batch of 1, or
+    of B matching the bound stacks); ``lb``/``ub`` are (B, n) bound stacks
+    in original coordinates.  Raises ``ValueError`` when the new bounds
+    are structurally incompatible with the frozen decisions (finiteness
+    pattern changed, a presolved-fixed column un-fixed, a degenerate
+    padded shell) — callers that can't guarantee stability should fall
+    back to ``canonicalize``.
+    """
+    g0 = rec.general
+    if rec.fixed_cols is None or rec.ub_cols is None:
+        raise ValueError("rebind_bounds needs a Recovery produced by this "
+                         "version's canonicalize (frozen masks missing)")
+    m, n = g0.m, g0.n
+    lb = np.asarray(lb, np.float64)
+    ub = np.asarray(ub, np.float64)
+    if lb.ndim == 1:
+        lb = lb[None]
+    if ub.ndim == 1:
+        ub = ub[None]
+    B = lb.shape[0]
+    if lb.shape != (B, n) or ub.shape != (B, n):
+        raise ValueError(f"bound stacks must be (B, {n}); got lb {lb.shape},"
+                         f" ub {ub.shape}")
+    if g0.batch not in (1, B):
+        raise ValueError(f"root batch {g0.batch} incompatible with {B} "
+                         "bound rows")
+    if (lb > ub).any():
+        raise ValueError("lb > ub on some variable")
+    kept, rows = rec.kept, rec.rows
+    nk, nf = len(kept), int(rec.free.sum())
+    r0, r1 = len(rec.hi_rows), len(rec.hi_rows) + len(rec.lo_rows)
+    if rec.n_canonical != nk + nf or rec.m_canonical != r1 + len(rec.ub_cols):
+        raise ValueError("root canonicalized to a padded degenerate shell; "
+                         "rebind_bounds cannot preserve it — re-canonicalize")
+
+    # --- presolve contributions with the frozen verdicts -------------------
+    lo, hi = g0.row_bounds()
+    lo = np.ascontiguousarray(np.broadcast_to(lo, (B, m)))
+    hi = np.ascontiguousarray(np.broadcast_to(hi, (B, m)))
+    A0 = np.asarray(g0.A, np.float64)
+    csign = 1.0 if g0.maximize else -1.0
+    cmax = np.broadcast_to(csign * np.asarray(g0.c, np.float64), (B, n))
+    baseline = np.zeros((B, n))
+    fx = rec.fixed_cols
+    if len(fx):
+        if (lb[:, fx] != ub[:, fx]).any():
+            raise ValueError(
+                "a presolved-fixed column is no longer fixed (lb != ub); "
+                "the frozen structure cannot represent it — re-canonicalize")
+        baseline[:, fx] = lb[:, fx]
+    dr = rec.dropped_cols
+    if len(dr):
+        val = np.where(cmax[:, dr] > 0, ub[:, dr],
+                       np.where(cmax[:, dr] < 0, lb[:, dr],
+                                np.where(np.isfinite(lb[:, dr]), lb[:, dr],
+                                         ub[:, dr])))
+        if not np.isfinite(val).all():
+            raise ValueError(
+                "an eliminated empty column's cost-optimal bound became "
+                "infinite under the new bounds — re-canonicalize")
+        baseline[:, dr] = val
+    sub = np.concatenate([fx, dr])
+    if len(sub):
+        Ab = np.broadcast_to(A0, (B, m, n))
+        contrib = np.einsum("bmk,bk->bm", Ab[:, :, sub], baseline[:, sub])
+        lo -= contrib
+        hi -= contrib
+    status_override = np.full(B, -1, np.int16)
+    dropped_rows = np.setdiff1d(np.arange(m), rows)
+    if len(dropped_rows):
+        bad = ((np.where(np.isfinite(lo), lo, -np.inf) > feas_tol)
+               | (np.where(np.isfinite(hi), hi, np.inf) < -feas_tol))
+        status_override[bad[:, dropped_rows].any(axis=1)] = INFEASIBLE
+
+    # --- shift + bound vectors over the kept columns -----------------------
+    lo, hi = lo[:, rows], hi[:, rows]
+    lbk, ubk = lb[:, kept], ub[:, kept]
+    lb_fin = np.isfinite(lbk)
+    if (lb_fin != ~rec.free[None, :]).any():
+        raise ValueError(
+            "lower-bound finiteness changed vs the root (a free column "
+            "gained a finite lb or vice versa); the frozen free-split "
+            "structure cannot represent it — re-canonicalize")
+    shift = np.where(lb_fin, lbk, 0.0)
+    Ak = np.broadcast_to(A0[:, rows][:, :, kept], (B, len(rows), nk))
+    contrib = np.einsum("bmk,bk->bm", Ak, shift)
+    lo, hi = lo - contrib, hi - contrib
+    ub_shifted = ubk - shift
+    bounded = np.zeros(nk, bool)
+    bounded[rec.ub_cols] = True
+    bounded[rec.native_cols] = True
+    if (np.isfinite(ub_shifted) != bounded[None, :]).any():
+        raise ValueError(
+            "upper-bound finiteness changed vs the root; the frozen bound "
+            "encoding cannot represent it — re-canonicalize")
+
+    b_can = np.empty((B, rec.m_canonical))
+    b_can[:, :r0] = hi[:, rec.hi_rows]
+    b_can[:, r0:r1] = -lo[:, rec.lo_rows]
+    for k, j in enumerate(rec.ub_cols):
+        b_can[:, r1 + k] = ub_shifted[:, j]
+    ub_can = np.full((B, rec.n_canonical), np.inf)
+    if len(rec.native_cols):
+        ub_can[:, rec.native_cols] = ub_shifted[:, rec.native_cols]
+    if rec.row_scale is not None:
+        b_can = b_can * rec.row_scale
+        ub_can = ub_can / rec.col_scale
+
+    # per-LP equilibration scales make the canonical A/c per-LP only when
+    # the root itself was a batch; a B=1 root broadcasts for free
+    A_t, c_t = np.asarray(lp0.A), np.asarray(lp0.c)
+    if A_t.shape[0] != B:
+        A_t = np.broadcast_to(A_t[:1], (B,) + A_t.shape[1:])
+        c_t = np.broadcast_to(c_t[:1], (B,) + c_t.shape[1:])
+    lp = LPBatch.from_arrays(A_t, b_can, c_t, ub=ub_can)
+    rec_new = dataclasses.replace(
+        rec, general=g0.with_bounds(lb=lb, ub=ub), baseline=baseline,
+        shift=shift, status_override=status_override)
+    return lp, rec_new
 
 
 def canonical_shape(g: GeneralLPBatch, *, presolve: bool = True,

@@ -181,6 +181,12 @@ class BackendSpec:
     solve_local: str           # the registry cannot import them eagerly)
     supports_sparse: bool = False  # accepts SparseLPBatch (shared-pattern
     solve_sparse: str = ""         # sparse matvecs) via solve_sparse
+    supports_safe_bound: bool = False  # emits dual certificates (LPResult.y/z)
+                                       # a consumer can turn into *valid*
+                                       # relaxation bounds independent of the
+                                       # engine's own tolerance (the B&B
+                                       # driver's safe-bound pass requires
+                                       # this from non-exact backends)
 
 
 BACKEND_REGISTRY = {
@@ -190,14 +196,16 @@ BACKEND_REGISTRY = {
         supports_compaction=True,
         solve="repro.core.simplex:solve_batched_jax",
         solve_compacted="repro.core.compaction:solve_batched_compacted",
-        solve_local="repro.core.simplex:solve_two_phase"),
+        solve_local="repro.core.simplex:solve_two_phase",
+        supports_safe_bound=True),
     # immutable data, basis-factor updates (core/revised.py)
     "revised": BackendSpec(
         name="revised", exact=True, supports_pallas=False,
         supports_compaction=True,
         solve="repro.core.revised:solve_batched_revised",
         solve_compacted="repro.core.revised:solve_batched_revised_compacted",
-        solve_local="repro.core.revised:solve_revised"),
+        solve_local="repro.core.revised:solve_revised",
+        supports_safe_bound=True),
     # restarted primal-dual hybrid gradient, matrix-free first-order
     # iterations with tolerance-based KKT convergence (core/pdhg.py);
     # the only engine whose per-iteration work is a pure matvec pair,
@@ -209,7 +217,8 @@ BACKEND_REGISTRY = {
         solve_compacted="repro.core.pdhg:solve_batched_pdhg_compacted",
         solve_local="repro.core.pdhg:solve_pdhg",
         supports_sparse=True,
-        solve_sparse="repro.core.sparse:solve_batched_pdhg_sparse"),
+        solve_sparse="repro.core.sparse:solve_batched_pdhg_sparse",
+        supports_safe_bound=True),
 }
 
 # Back-compat tuple (older call sites iterate it for error messages).

@@ -17,6 +17,16 @@ variables, E+... constraints — exactly the paper's workload shape (batches of
 thousands of dim-16..160 LPs), solved on-device by the batched simplex with
 zero host round-trips. Gradients do not flow through the allocation
 (stop-gradient), matching how capacity truncation is already treated.
+
+STUB in one respect: this module solves each group's LP inline with a
+fixed engine and a hand-rolled `_solve_core` call.  The ROADMAP item
+"Streaming solve service: continuous batching over shape classes" names
+the intended endpoint — routing these allocations (and any other
+heterogeneous LP traffic) through a shared scheduler that buckets by
+shape class, picks the backend from the BACKEND_REGISTRY capability
+table + `analysis/lp_perf.py` crossover models, and refills device lanes
+via `core/compaction.py` `FrontierScheduler` instead of dispatching
+fixed batches.  Until that service exists, this stays a direct call.
 """
 from __future__ import annotations
 

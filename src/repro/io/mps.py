@@ -6,9 +6,14 @@ the objective-row entry, which sets the objective constant ``c0 = -value``
 per the MPS convention), RANGES, BOUNDS (UP/LO/FX/FR/MI/PL/BV) and ENDATA —
 plus the common OBJSENSE extension.  Parsing is whitespace-tolerant (names
 may not contain blanks), which accepts both strictly column-aligned files
-and the free-format variants most tools emit; ``*`` comment lines and
-integrality MARKERs are skipped (markers with a warning — everything is
-solved continuously here).
+and the free-format variants most tools emit; ``*`` comment lines are
+skipped.
+
+Integrality is *recorded, not enforced*: columns inside
+``'MARKER' 'INTORG'``/``'INTEND'`` pairs and columns with BV/UI/LI bounds
+land in ``GeneralLPBatch.integer`` (a (n,) mask).  Every LP solver ignores
+the mask (it solves the continuous relaxation); the branch-and-bound
+driver (core/branch_bound.py) is the consumer that enforces it.
 
 ``write_mps`` emits a fixed-format file that re-parses bit-identically
 (values at ``%.12g``), which is what the CI ``mps-roundtrip`` smoke and the
@@ -35,6 +40,11 @@ _FIXTURE_DIR = os.path.join(
 # provenance notes).  Benchmarks and configs address them by these names.
 FIXTURE_NAMES = ("afiro", "sc50b_like", "sc205_like", "testprob")
 
+# The vendored MIP instances (integer columns; the branch-and-bound driver's
+# fixtures).  Kept separate so the pure-LP benchmark loops above stay
+# unchanged; their LP relaxations parse/solve like any other fixture.
+MIP_FIXTURE_NAMES = ("knapsack", "assignment", "scheduling")
+
 
 def fixture_path(name: str) -> str:
     """Absolute path of a vendored fixture (with or without ``.mps``)."""
@@ -56,8 +66,9 @@ def read_mps(path: str) -> GeneralLPBatch:
     obj_const = 0.0
     ranges: dict = {}
     bounds: dict = {}              # col -> [lb, ub]
+    integer_cols: set = set()      # columns declared integral
+    in_integer = False             # inside an INTORG..INTEND marker pair
     section = None
-    warned_int = False
 
     with open(path) as f:
         for lineno, raw in enumerate(f, 1):
@@ -89,16 +100,21 @@ def read_mps(path: str) -> GeneralLPBatch:
                         f"{path}:{lineno}: unknown row sense {sense!r}")
             elif section == "COLUMNS":
                 if len(fields) >= 3 and fields[1].upper() == "'MARKER'":
-                    if not warned_int:
-                        warnings.warn(
-                            f"{path}: integrality MARKERs ignored — all "
-                            "variables treated as continuous")
-                        warned_int = True
+                    mk = fields[-1].upper().strip("'")
+                    if mk == "INTORG":
+                        in_integer = True
+                    elif mk == "INTEND":
+                        in_integer = False
+                    else:
+                        warnings.warn(f"{path}:{lineno}: unknown marker "
+                                      f"{mk!r} ignored")
                     continue
                 col = fields[0]
                 if col not in entries:
                     entries[col] = {}
                     col_order.append(col)
+                if in_integer:
+                    integer_cols.add(col)
                 for rname, val in zip(fields[1::2], fields[2::2]):
                     entries[col][rname] = float(val)
             elif section == "RHS":
@@ -133,12 +149,14 @@ def read_mps(path: str) -> GeneralLPBatch:
                 elif btype == "PL":
                     b[1] = np.inf
                 elif btype == "BV":
-                    if not warned_int:
-                        warnings.warn(
-                            f"{path}: BV bound relaxed to [0, 1] — all "
-                            "variables treated as continuous")
-                        warned_int = True
                     b[0], b[1] = 0.0, 1.0
+                    integer_cols.add(col)
+                elif btype == "UI":
+                    b[1] = val
+                    integer_cols.add(col)
+                elif btype == "LI":
+                    b[0] = val
+                    integer_cols.add(col)
                 else:
                     raise ValueError(
                         f"{path}:{lineno}: unsupported bound type {btype!r}")
@@ -180,10 +198,14 @@ def read_mps(path: str) -> GeneralLPBatch:
             raise ValueError(f"{path}: BOUNDS references unknown column "
                              f"{col!r}")
         lb[0, cidx[col]], ub[0, cidx[col]] = blo, bhi
+    integer = None
+    if integer_cols:
+        integer = np.array([col in integer_cols for col in col_order], bool)
     return GeneralLPBatch.from_arrays(
         A, sense, b, lb=lb, ub=ub, c=c, c0=obj_const, maximize=maximize,
         ranges=rng_arr, name=name,
-        row_names=[rname for _, rname in row_order], col_names=col_order)
+        row_names=[rname for _, rname in row_order], col_names=col_order,
+        integer=integer)
 
 
 def _num(v: float) -> str:
@@ -224,7 +246,15 @@ def write_mps(g: GeneralLPBatch, path: str) -> None:
     out += [f" {g.sense[i]}  {rows[i]}" for i in range(m)]
     out.append(" N  COST")
     out.append("COLUMNS")
+    intg = (np.zeros(n, bool) if g.integer is None
+            else np.asarray(g.integer, bool))
+    in_int = False
     for j in range(n):
+        if intg[j] != in_int:
+            mk = "INTORG" if intg[j] else "INTEND"
+            out.append(f"    MARKER                 'MARKER'"
+                       f"                 '{mk}'")
+            in_int = bool(intg[j])
         items = [(rows[i], g.A[0, i, j]) for i in range(m)
                  if g.A[0, i, j] != 0.0]
         if g.c[0, j] != 0.0 or not items:
@@ -232,6 +262,9 @@ def write_mps(g: GeneralLPBatch, path: str) -> None:
             # no nonzeros at all, so they survive the round-trip
             items.append(("COST", g.c[0, j]))
         out += _pairs(cols[j], items)
+    if in_int:
+        out.append("    MARKER                 'MARKER'"
+                   "                 'INTEND'")
     out.append("RHS")
     items = [(rows[i], g.rhs[0, i]) for i in range(m) if g.rhs[0, i] != 0.0]
     if g.c0[0] != 0.0:
@@ -298,7 +331,8 @@ def perturbed_batch(g: GeneralLPBatch, B: int,
         c=expand(g.c, "c" in perturb),
         c0=np.repeat(g.c0, B, axis=0),
         maximize=g.maximize, ranges=g.ranges,
-        name=f"{g.name}_x{B}", row_names=g.row_names, col_names=g.col_names)
+        name=f"{g.name}_x{B}", row_names=g.row_names, col_names=g.col_names,
+        integer=g.integer)
 
 
 def perturbed_sequence(g: GeneralLPBatch, B: int, K: int,
@@ -342,5 +376,5 @@ def perturbed_sequence(g: GeneralLPBatch, B: int, K: int,
             c0=p.c0.copy(),
             maximize=p.maximize, ranges=p.ranges,
             name=f"{g.name}_seq{len(seq)}", row_names=p.row_names,
-            col_names=p.col_names))
+            col_names=p.col_names, integer=p.integer))
     return seq

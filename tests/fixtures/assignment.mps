@@ -1,0 +1,44 @@
+NAME          assignment
+ROWS
+ E  AGENT0
+ E  AGENT1
+ E  AGENT2
+ E  TASK0
+ E  TASK1
+ E  TASK2
+ N  COST
+COLUMNS
+    MARKER                 'MARKER'                 'INTORG'
+    X00       AGENT0                 1   TASK0                  1
+    X00       COST                   4
+    X01       AGENT0                 1   TASK1                  1
+    X01       COST                   1
+    X02       AGENT0                 1   TASK2                  1
+    X02       COST                   3
+    X10       AGENT1                 1   TASK0                  1
+    X10       COST                   2
+    X11       AGENT1                 1   TASK1                  1
+    X12       AGENT1                 1   TASK2                  1
+    X12       COST                   5
+    X20       AGENT2                 1   TASK0                  1
+    X20       COST                   3
+    X21       AGENT2                 1   TASK1                  1
+    X21       COST                   2
+    X22       AGENT2                 1   TASK2                  1
+    X22       COST                   2
+    MARKER                 'MARKER'                 'INTEND'
+RHS
+    RHS       AGENT0                 1   AGENT1                 1
+    RHS       AGENT2                 1   TASK0                  1
+    RHS       TASK1                  1   TASK2                  1
+BOUNDS
+ UP BND       X00                    1
+ UP BND       X01                    1
+ UP BND       X02                    1
+ UP BND       X10                    1
+ UP BND       X11                    1
+ UP BND       X12                    1
+ UP BND       X20                    1
+ UP BND       X21                    1
+ UP BND       X22                    1
+ENDATA

@@ -1,0 +1,29 @@
+NAME          knapsack
+OBJSENSE
+    MAX
+ROWS
+ L  CAP
+ N  COST
+COLUMNS
+    MARKER                 'MARKER'                 'INTORG'
+    X0        CAP                    2   COST                  15
+    X1        CAP                   20   COST                 100
+    X2        CAP                   20   COST                  90
+    X3        CAP                   30   COST                  60
+    X4        CAP                   40   COST                  40
+    X5        CAP                   30   COST                  15
+    X6        CAP                   60   COST                  10
+    X7        CAP                   10   COST                   1
+    MARKER                 'MARKER'                 'INTEND'
+RHS
+    RHS       CAP                  102
+BOUNDS
+ UP BND       X0                     1
+ UP BND       X1                     1
+ UP BND       X2                     1
+ UP BND       X3                     1
+ UP BND       X4                     1
+ UP BND       X5                     1
+ UP BND       X6                     1
+ UP BND       X7                     1
+ENDATA

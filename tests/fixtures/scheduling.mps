@@ -1,0 +1,35 @@
+NAME          scheduling
+ROWS
+ L  HOURS0
+ L  HOURS1
+ G  DEM0
+ G  DEM1
+ G  DEM2
+ N  COST
+COLUMNS
+    MARKER                 'MARKER'                 'INTORG'
+    X00       HOURS0                 3   DEM0                   1
+    X00       COST                   4
+    X01       HOURS0                 5   DEM1                   1
+    X01       COST                   6
+    X02       HOURS0                 7   DEM2                   1
+    X02       COST                   9
+    X10       HOURS1                 3   DEM0                   1
+    X10       COST                   5
+    X11       HOURS1                 5   DEM1                   1
+    X11       COST                   8
+    X12       HOURS1                 7   DEM2                   1
+    X12       COST                  11
+    MARKER                 'MARKER'                 'INTEND'
+RHS
+    RHS       HOURS0                19   HOURS1                17
+    RHS       DEM0                   2   DEM1                   2
+    RHS       DEM2                   2
+BOUNDS
+ UP BND       X00                    3
+ UP BND       X01                    3
+ UP BND       X02                    3
+ UP BND       X10                    3
+ UP BND       X11                    3
+ UP BND       X12                    3
+ENDATA

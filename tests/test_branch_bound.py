@@ -1,0 +1,221 @@
+"""Branch-and-bound driver: proven optimality vs brute force on the MIP
+fixtures, warm-start pivot wins, stream/dispatch agreement, and the
+bound-edit plumbing underneath (with_bounds / rebind_bounds /
+safe_dual_bound / the supports_safe_bound registry contract)."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (BACKEND_REGISTRY, INFEASIBLE, ITERATION_LIMIT,
+                        OPTIMAL, GeneralLPBatch, branch_and_bound,
+                        backend_spec, canonicalize, general_violation,
+                        rebind_bounds, safe_dual_bound,
+                        random_general_lp_batch, solve_batched_reference)
+from repro.io.mps import MIP_FIXTURE_NAMES, fixture_path, read_mps
+
+# brute-force optima, re-derivable with brute_force_mip() below
+FIXTURE_OPT = {"knapsack": 280.0, "assignment": 5.0, "scheduling": 42.0}
+
+
+def brute_force_mip(g: GeneralLPBatch):
+    """Enumerate every integer point in the bound box (fixtures are sized
+    to keep this in the low thousands) — the oracle the driver is held to."""
+    lb = g.lb[0].astype(int)
+    ub = g.ub[0].astype(int)
+    best, bx = np.inf, None
+    for xs in itertools.product(*[range(l, u + 1) for l, u in zip(lb, ub)]):
+        x = np.asarray(xs, np.float64)
+        if general_violation(g, x[None])[0] > 1e-9:
+            continue
+        v = float(g.objective_value(x[None])[0])
+        v = -v if g.maximize else v
+        if v < best:
+            best, bx = v, x
+    return (-best if g.maximize else best), bx
+
+
+def _tiny_knapsack():
+    v = np.array([[10.0, 6.0, 4.0]])
+    w = np.array([[[5.0, 4.0, 3.0]]])
+    return GeneralLPBatch.from_arrays(
+        A=w, sense=["L"], rhs=[[9.0]], lb=np.zeros((1, 3)),
+        ub=np.ones((1, 3)), c=v, maximize=True, integer=np.ones(3, bool))
+
+
+# ---------------------------------------------------------------------------
+# fixtures to proven optimality, cross-checked against brute force
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", MIP_FIXTURE_NAMES)
+@pytest.mark.parametrize("backend", ["tableau", "revised"])
+def test_fixtures_proven_optimal_exact_backends(name, backend):
+    g = read_mps(fixture_path(name))
+    opt, _ = brute_force_mip(g)
+    assert abs(opt - FIXTURE_OPT[name]) < 1e-9   # recorded optimum is right
+    res = branch_and_bound(g, backend=backend, frontier=8)
+    assert res.status == OPTIMAL and res.proven
+    assert abs(res.objective - opt) < 1e-5
+    assert abs(res.bound - opt) < 1e-5 and res.gap == 0.0
+    # incumbent is exactly integral and feasible in original coordinates
+    xi = res.x[np.flatnonzero(g.integer)]
+    assert np.array_equal(xi, np.round(xi))
+    assert general_violation(g, res.x[None])[0] < 1e-7
+
+
+@pytest.mark.parametrize("name", ["knapsack", "scheduling"])
+def test_fixtures_pdhg_safe_bound_pass(name):
+    """PDHG relaxations are tolerance-based: fathoming must survive on the
+    safe_dual_bound certificate alone and still prove the optimum."""
+    g = read_mps(fixture_path(name))
+    res = branch_and_bound(g, backend="pdhg", frontier=8, max_nodes=200)
+    assert res.status == OPTIMAL and res.proven
+    assert abs(res.objective - FIXTURE_OPT[name]) < 1e-3
+
+
+def test_stream_matches_dispatch():
+    g = read_mps(fixture_path("scheduling"))
+    a = branch_and_bound(g, backend="tableau", mode="dispatch", frontier=8)
+    b = branch_and_bound(g, backend="tableau", mode="stream", frontier=8,
+                         lanes=8)
+    assert a.status == b.status == OPTIMAL
+    assert abs(a.objective - b.objective) < 1e-6
+    np.testing.assert_allclose(a.x, b.x)
+
+
+def test_warm_start_reduces_pivots():
+    """The tentpole's payoff: children re-solved from the parent basis take
+    measurably fewer simplex iterations than cold solves of the same tree."""
+    g = read_mps(fixture_path("knapsack"))
+    warm = branch_and_bound(g, backend="tableau", frontier=8)
+    cold = branch_and_bound(g, backend="tableau", frontier=8,
+                            warm_start=False)
+    assert warm.objective == cold.objective == FIXTURE_OPT["knapsack"]
+    assert warm.nodes == cold.nodes          # same tree, same fathoming
+    assert warm.lp_iterations < cold.lp_iterations
+
+
+def test_search_orders_agree():
+    g = read_mps(fixture_path("scheduling"))
+    best = branch_and_bound(g, search="best", frontier=4)
+    dive = branch_and_bound(g, search="depth", frontier=4)
+    assert best.proven and dive.proven
+    assert abs(best.objective - dive.objective) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# verdict edge cases
+# ---------------------------------------------------------------------------
+
+def test_integer_infeasible_is_proven():
+    """LP-feasible but integer-infeasible: x1 + x2 == 0.5 over binaries."""
+    g = GeneralLPBatch.from_arrays(
+        A=[[[1.0, 1.0]]], sense=["E"], rhs=[[0.5]], lb=np.zeros((1, 2)),
+        ub=np.ones((1, 2)), c=[[1.0, 1.0]], integer=np.ones(2, bool))
+    res = branch_and_bound(g, frontier=4)
+    assert res.status == INFEASIBLE and res.proven and res.x is None
+
+
+def test_node_budget_brackets_optimum():
+    g = read_mps(fixture_path("scheduling"))
+    res = branch_and_bound(g, frontier=1, max_nodes=3)
+    assert res.status == ITERATION_LIMIT and not res.proven
+    assert res.nodes <= 3
+    # min sense: the surviving bound must stay below the true optimum
+    assert res.bound <= FIXTURE_OPT["scheduling"] + 1e-6
+
+
+def test_input_validation():
+    g = _tiny_knapsack()
+    with pytest.raises(ValueError, match="mode"):
+        branch_and_bound(g, mode="nope")
+    with pytest.raises(ValueError, match="search"):
+        branch_and_bound(g, search="nope")
+    with pytest.raises(ValueError, match="stream"):
+        branch_and_bound(g, mode="stream", backend="revised")
+    with pytest.raises(ValueError, match="no integer"):
+        branch_and_bound(GeneralLPBatch.from_arrays(
+            A=[[[1.0]]], sense=["L"], rhs=[[1.0]], c=[[1.0]]))
+    free = GeneralLPBatch.from_arrays(
+        A=[[[1.0]]], sense=["L"], rhs=[[1.0]], c=[[1.0]],
+        integer=[0])                      # default ub is +inf
+    with pytest.raises(ValueError, match="finite"):
+        branch_and_bound(free)
+
+
+def test_registry_safe_bound_contract():
+    """Every shipped backend advertises safe bounds; the driver gates
+    non-exact engines on the flag."""
+    for name in BACKEND_REGISTRY:
+        assert backend_spec(name).supports_safe_bound, name
+    # exact engines may participate regardless of the flag
+    assert backend_spec("tableau").exact
+    assert not backend_spec("pdhg").exact
+
+
+# ---------------------------------------------------------------------------
+# the bound-edit plumbing
+# ---------------------------------------------------------------------------
+
+def test_with_bounds_shapes_and_broadcast():
+    g = _tiny_knapsack()
+    g2 = g.with_bounds(ub=np.zeros(3))            # (n,) broadcast
+    assert g2.ub.shape == (1, 3) and (g2.ub == 0).all()
+    assert (g.ub == 1).all()                      # original untouched
+    stack = np.stack([np.zeros(3), np.ones(3)])   # (B', n) batch expansion
+    g4 = g.with_bounds(ub=stack)
+    assert g4.batch == 2 and g4.A.shape == (2, 1, 3)
+    with pytest.raises(ValueError, match="lb > ub"):
+        g.with_bounds(lb=np.full(3, 2.0))
+    with pytest.raises(ValueError):
+        g.with_bounds(ub=np.ones(4))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rebind_bounds_matches_full_canonicalize(seed):
+    """The cheap bound-edit path must produce the same canonical batch and
+    recovery numbers as canonicalizing the edited general form from
+    scratch (given the root's frozen structure)."""
+    rng = np.random.default_rng(seed)
+    g = random_general_lp_batch(rng, 1, 6, 5)
+    # finite boxes so nudged bounds keep the finiteness pattern
+    g = g.with_bounds(lb=np.zeros((1, 5)), ub=np.full((1, 5), 4.0))
+    lp0, rec0 = canonicalize(g)
+    lbs = np.repeat(g.lb, 3, axis=0) + rng.uniform(0, 1, (3, 5))
+    ubs = np.repeat(g.ub, 3, axis=0) - rng.uniform(0, 1, (3, 5))
+    lp_f, rec_f = rebind_bounds(lp0, rec0, lbs, ubs)
+    g_f = g.with_bounds(lb=lbs, ub=ubs)
+    lp_ref, rec_ref = canonicalize(g_f)
+    np.testing.assert_allclose(np.broadcast_to(
+        np.asarray(lp_f.A), np.asarray(lp_ref.A).shape), lp_ref.A)
+    np.testing.assert_allclose(lp_f.b, lp_ref.b)
+    np.testing.assert_allclose(np.broadcast_to(
+        np.asarray(lp_f.c), np.asarray(lp_ref.c).shape), lp_ref.c)
+    np.testing.assert_allclose(lp_f.upper_bounds(), lp_ref.upper_bounds())
+    np.testing.assert_allclose(rec_f.baseline, rec_ref.baseline)
+    np.testing.assert_allclose(rec_f.shift, rec_ref.shift)
+    res_f = solve_batched_reference(lp_f)
+    res_ref = solve_batched_reference(lp_ref)
+    np.testing.assert_allclose(rec_f.recover(res_f).objective,
+                               rec_ref.recover(res_ref).objective,
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_safe_dual_bound_validity_and_tightness():
+    """For any y the bound must under(over)-estimate the min(max); with the
+    true optimal duals it must be tight."""
+    rng = np.random.default_rng(3)
+    for name in ("knapsack", "scheduling"):
+        g = read_mps(fixture_path(name))
+        ref = solve_batched_reference(g)
+        assert ref.status[0] == OPTIMAL
+        opt = float(ref.objective[0])
+        y_opt = np.asarray(ref.y)        # PR 5 certificate, original rows
+        tight = float(safe_dual_bound(g, y_opt)[0])
+        slack_dir = -1.0 if g.maximize else 1.0
+        # validity for random, zero, and NaN-poisoned duals
+        for y in (np.zeros((1, g.m)), rng.normal(size=(1, g.m)),
+                  np.full((1, g.m), np.nan), y_opt):
+            sb = float(safe_dual_bound(g, y)[0])
+            assert slack_dir * (opt - sb) >= -1e-7 * (1 + abs(opt))
+        assert abs(tight - opt) < 1e-6 * (1 + abs(opt))

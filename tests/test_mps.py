@@ -9,8 +9,8 @@ import pytest
 
 from repro.core import (OPTIMAL, general_violation, solve_batched,
                         solve_batched_jax, solve_batched_reference)
-from repro.io.mps import (FIXTURE_NAMES, fixture_path, perturbed_batch,
-                          read_mps, write_mps)
+from repro.io.mps import (FIXTURE_NAMES, MIP_FIXTURE_NAMES, fixture_path,
+                          perturbed_batch, read_mps, write_mps)
 
 AFIRO_OPT = -464.7531428571429       # published Netlib optimum
 TESTPROB_OPT = -13.0
@@ -88,12 +88,17 @@ def test_parse_errors():
 # writer round-trip
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("name", FIXTURE_NAMES)
+@pytest.mark.parametrize("name", FIXTURE_NAMES + MIP_FIXTURE_NAMES)
 def test_roundtrip(tmp_path, name):
     g = read_mps(fixture_path(name))
     out = str(tmp_path / f"{name}_rt.mps")
     write_mps(g, out)
-    _equal(g, read_mps(out))
+    g2 = read_mps(out)
+    _equal(g, g2)
+    if g.integer is None:
+        assert g2.integer is None
+    else:
+        assert np.array_equal(g.integer, g2.integer)
 
 
 def test_roundtrip_preserves_empty_columns(tmp_path):
@@ -197,7 +202,9 @@ def test_secondary_n_rows_ignored(tmp_path):
     assert solve_batched_reference(g).objective[0] == TESTPROB_OPT
 
 
-def test_markers_warn_once_and_parse(tmp_path):
+def test_markers_record_integrality(tmp_path):
+    """INTORG/INTEND markers land in GeneralLPBatch.integer (no warning);
+    the LP solvers still solve the continuous relaxation unchanged."""
     src = open(fixture_path("testprob")).read()
     marked = src.replace(
         "COLUMNS\n",
@@ -207,5 +214,31 @@ def test_markers_warn_once_and_parse(tmp_path):
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         g = read_mps(str(p))
-    assert any("MARKER" in str(x.message) for x in w)
+    assert not any("MARKER" in str(x.message) for x in w)
+    assert g.integer is not None and g.integer.all()
     assert solve_batched_reference(g).objective[0] == TESTPROB_OPT
+
+
+def test_integer_markers_round_trip(tmp_path):
+    """A scattered integer mask survives write_mps -> read_mps (marker
+    pairs per contiguous run), as do BV/UI-typed bounds."""
+    src = open(fixture_path("testprob")).read()
+    marked = src.replace(
+        "    X2        COST",
+        "    MARKER                 'MARKER'                 'INTORG'\n"
+        "    X2        COST")
+    marked = marked.replace(
+        "    X3        COST",
+        "    MARKER                 'MARKER'                 'INTEND'\n"
+        "    X3        COST")
+    p = tmp_path / "scattered.mps"
+    p.write_text(marked)
+    g = read_mps(str(p))
+    assert g.integer is not None
+    assert list(g.integer) == [False, True, False]
+    q = tmp_path / "rt.mps"
+    write_mps(g, str(q))
+    g2 = read_mps(str(q))
+    assert np.array_equal(g.integer, g2.integer)
+    for field in ("A", "rhs", "c", "lb", "ub"):
+        assert np.array_equal(getattr(g, field), getattr(g2, field))
