@@ -62,6 +62,23 @@ objective, node/dispatch counts, total LP iterations both ways and their
 optimality, an unchanged objective, and warm frontiers beating cold
 (ratio < 1.0 hard, plus the baseline-relative bound).
 
+A ``pallas_workloads`` section A/Bs the Pallas tile kernels
+(src/repro/kernels/, interpret=True on this CPU environment) against their
+JAX engines on small mixed batches: the tableau and revised kernels must
+reproduce engine statuses *and* iteration counts exactly (they execute the
+same pivot sequences), the PDHG kernel to tolerance; each kernel also runs
+under the compaction scheduler (segment kernels + bucket gathers) with the
+executed element traffic and bucket-shrink count recorded —
+scripts/bench_gate.py holds a status floor and an element-traffic ceiling
+per kernel row.  Wall-clock is recorded but informational only: these are
+interpreter runs, not TPU timings.
+
+The ``pdhg`` row additionally carries a ``malitsky_pock`` sub-row: the
+adaptive-step-size rule (``step_rule="malitsky_pock"``) on the same
+adversarial dense workload, recording the iteration cut vs the fixed-step
+rule (statuses must keep agreeing — the rule changes the trajectory, not
+the certificate).
+
 Results land in ``BENCH_pivot_work.json`` next to this file so future PRs
 have a perf trajectory to beat; a ``quick_workloads`` section re-runs the
 --quick configuration (B=128) so scripts/bench_gate.py can diff a CI smoke
@@ -106,6 +123,9 @@ WARM_B = 16                              # fixture/B/K); sc205 would push the
 WARM_K = 4                               # smoke past its minute budget
 BNB_FIXTURES = ("knapsack", "scheduling")  # assignment is root-integral
 BNB_FRONTIER = 8                           # (1 node): nothing to A/B there
+PALLAS_SIZES = ((5, 5), (12, 8))  # interpreter-sized: the kernels run on
+PALLAS_B = 48                     # the Pallas CPU interpreter here, so the
+PALLAS_TILE_B = 8                 # rows stay minutes, not hours
 
 
 def mixed_batch(m: int, n: int, B: int, seed: int = 0) -> LPBatch:
@@ -376,6 +396,60 @@ def measure_bnb(fixture: str, *, frontier: int = BNB_FRONTIER,
     return row
 
 
+def measure_pallas(m: int, n: int, B: int = PALLAS_B, *,
+                   tile_b: int = PALLAS_TILE_B, seed: int = 0,
+                   backends: str = "all") -> dict:
+    """One Pallas-kernel workload row: every selected tile kernel vs its
+    JAX engine on the same mixed batch, monolithic and through the
+    compaction scheduler (segment kernels with bucket gathers between
+    launches).  The simplex kernels are pivot-exact — statuses and
+    iteration counts must equal the engine's; PDHG agrees to ~tol (a
+    different XLA compilation of the same rounds).  ``elements_scheduled``
+    is the executed element traffic of the scheduled kernel run (the
+    bench_gate ceiling); ``wall_s`` is an interpreter time, recorded for
+    trend only."""
+    from repro.kernels import solve_batched_pallas
+
+    batch = mixed_batch(m, n, B, seed)
+    engines = {
+        "tableau": solve_batched_jax,
+        "revised": solve_batched_revised,
+        "pdhg": solve_batched_pdhg,
+    }
+    names = tuple(engines) if backends == "all" else (backends,)
+    row = {"m": m, "n": n, "B": B, "tile_b": tile_b, "kernels": {}}
+    for name in names:
+        ref = engines[name](batch)
+        t0 = time.time()
+        pal = solve_batched_pallas(batch, backend=name, tile_b=tile_b)
+        wall = time.time() - t0
+        stats = []
+        pal_sched = solve_batched_pallas(batch, backend=name, tile_b=tile_b,
+                                         compaction=True, segment_k=6,
+                                         stats_out=stats)
+        ok = (np.asarray(ref.status) == OPTIMAL) \
+            & (np.asarray(pal.status) == OPTIMAL)
+        rel = (np.abs(pal.objective[ok] - ref.objective[ok])
+               / np.maximum(np.abs(ref.objective[ok]), 1e-12)).max() \
+            if ok.any() else 0.0
+        buckets = [s.bucket for s in stats]
+        row["kernels"][name] = {
+            "status_match_engine_frac": float(
+                (np.asarray(pal.status) == np.asarray(ref.status)).mean()),
+            "iters_match_engine": bool(np.array_equal(
+                np.asarray(pal.iterations), np.asarray(ref.iterations))),
+            "rel_obj_err_vs_engine": float(rel),
+            "segments": len(stats),
+            "elements_scheduled": int(total_elements(stats)),
+            "bucket_shrunk": bool(buckets and min(buckets) < max(buckets)),
+            "scheduled_status_match_frac": float(
+                (np.asarray(pal_sched.status)
+                 == np.asarray(ref.status)).mean()),
+            "wall_s_interpret": wall,
+        }
+    return row
+
+
 def measure_pdhg(batch: LPBatch, sched, iters: int) -> dict:
     """The first-order engine's workload row: tolerance-based agreement
     with the (exact) tableau engine on statuses and objectives, iteration
@@ -400,6 +474,21 @@ def measure_pdhg(batch: LPBatch, sched, iters: int) -> dict:
     ok = (res.status == OPTIMAL) & (tab_status == OPTIMAL)
     rel = (np.abs(res.objective[ok] - tab_obj[ok])
            / np.maximum(np.abs(tab_obj[ok]), 1e-12)).max() if ok.any() else 0.0
+    # adaptive-step-size A/B on the same adversarial dense workload: the
+    # Malitsky-Pock linesearch must cut iterations without moving statuses
+    mp = solve_batched_pdhg(sub, step_rule="malitsky_pock")
+    mp_it = mp.iterations.astype(np.int64)
+    mp_ok = (res.status == OPTIMAL) & (mp.status == OPTIMAL)
+    mp_rel = (np.abs(mp.objective[mp_ok] - res.objective[mp_ok])
+              / np.maximum(np.abs(res.objective[mp_ok]), 1e-12)).max() \
+        if mp_ok.any() else 0.0
+    mp_row = {
+        "iters_mean": float(mp_it.mean()),
+        "iters_cut_vs_fixed": 1.0 - float(mp_it.mean()) / max(
+            float(it.mean()), 1e-12),
+        "status_match_fixed_frac": float((mp.status == res.status).mean()),
+        "rel_obj_err_vs_fixed": float(mp_rel),
+    }
     return {
         "B": B_pdhg,
         "iters_mean": float(it.mean()),
@@ -413,6 +502,7 @@ def measure_pdhg(batch: LPBatch, sched, iters: int) -> dict:
         "rel_obj_err_vs_tableau": float(rel),
         "scheduled_status_match_frac": float(
             (res_sched.status == res.status).mean()),
+        "malitsky_pock": mp_row,
     }
 
 
@@ -560,6 +650,11 @@ def _measure_rows(sizes, B: int, quick: bool, backends: str) -> list:
                   f"rel_obj={pp['rel_obj_err_vs_tableau']:.1e} "
                   f"wall={pp['wall_s']:.3f}s "
                   f"sched_match={pp['scheduled_status_match_frac']:.3f}")
+            mp = pp["malitsky_pock"]
+            print(f"  step_rule=malitsky_pock iters_mean={mp['iters_mean']:8.0f} "
+                  f"(cut {mp['iters_cut_vs_fixed']:+.1%} vs fixed) "
+                  f"status_match={mp['status_match_fixed_frac']:.3f} "
+                  f"rel_obj={mp['rel_obj_err_vs_fixed']:.1e}")
     return rows
 
 
@@ -625,6 +720,21 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
                   f"({cut} re-solve work eliminated) "
                   f"status_match={wb['status_match_frac']:.3f} "
                   f"rel_obj={wb['rel_obj_err']:.1e}")
+    print("-- pallas_workloads (tile kernels vs engines, bench_gate "
+          "baseline) --")
+    pallas_rows = []
+    for (pm, pn) in PALLAS_SIZES:
+        r = measure_pallas(pm, pn, backends=backends)
+        pallas_rows.append(r)
+        for name, kk in r["kernels"].items():
+            print(f"pallas {r['m']}x{r['n']} B={r['B']} "
+                  f"{name:<8} status_match={kk['status_match_engine_frac']:.3f} "
+                  f"iters_match={kk['iters_match_engine']} "
+                  f"rel_obj={kk['rel_obj_err_vs_engine']:.1e} "
+                  f"segments={kk['segments']} "
+                  f"elems={kk['elements_scheduled']:.3e} "
+                  f"shrunk={kk['bucket_shrunk']} "
+                  f"wall={kk['wall_s_interpret']:.1f}s (interpret)")
     bnb_rows = []
     if backends in ("all", "tableau", "revised"):
         print("-- bnb_workloads (branch-and-bound driver, bench_gate "
@@ -651,6 +761,7 @@ def run(quick: bool = False, B: int = 4096, out: str | None = None,
         "sparse_workloads": sparse_rows,
         "warm_workloads": warm_rows,
         "bnb_workloads": bnb_rows,
+        "pallas_workloads": pallas_rows,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=2)

@@ -55,6 +55,25 @@ older baselines).  On every matching workload the gate fails when:
   frontiers stop beating cold ones (``work_ratio`` >= 1.0 hard, since
   warm and cold solve the same tree), or the ratio grows more than
   ``--rel-drop`` relative to the baseline;
+* a ``pallas_workloads`` row (the tile kernels A/B'd against their JAX
+  engines under the Pallas interpreter, benchmarks/pivot_work.py
+  measure_pallas) regresses: a simplex kernel (tableau/revised) loses
+  pivot-exactness (status agreement below 1.0 or iteration counts
+  diverging from the engine — hard bounds, these kernels execute the
+  engine's pivot sequence), the PDHG kernel's status agreement drops
+  below baseline - 0.02, any kernel's scheduled (compaction) run stops
+  agreeing with the engine, the executed element traffic of the scheduled
+  run grows more than ``--rel-drop`` relative (the element-traffic
+  ceiling: segment sizing or bucket shrinking silently degrading shows up
+  here), or a bucket shrink the baseline recorded disappears; smoke runs
+  predating the kernels simply lack the rows, and rows missing from an
+  older *baseline* pass untouched;
+* the pdhg row's ``malitsky_pock`` sub-row regresses: the adaptive rule's
+  mean iteration count grows more than ``--rel-drop`` relative to
+  baseline, its status agreement with the fixed-step rule drops below
+  baseline - 0.02, or its iteration *cut* vs fixed goes negative (the
+  linesearch must never cost more than the fixed step on the adversarial
+  dense class);
 * a ``general_workloads`` row (fixture-backed real instances through the
   MPS/canonicalization pipeline) regresses: per-backend status agreement
   with the float64 oracle drops below baseline - 0.02, relative objective
@@ -154,6 +173,34 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
                         f"{tag}: pdhg compaction round-trip agreement "
                         f"{cp['scheduled_status_match_frac']:.3f} < "
                         f"{sched_floor:.3f}")
+                bmp = bp.get("malitsky_pock") or {}
+                cmp_row = cp.get("malitsky_pock") or {}
+                if bmp and not cmp_row:
+                    failures.append(
+                        f"{tag}: pdhg malitsky_pock sub-row missing from "
+                        "the smoke run")
+                elif bmp:
+                    mp_ceiling = bmp["iters_mean"] * (1.0 + rel_drop)
+                    if cmp_row["iters_mean"] > mp_ceiling:
+                        failures.append(
+                            f"{tag}: malitsky_pock iters_mean "
+                            f"{cmp_row['iters_mean']:.0f} > "
+                            f"{mp_ceiling:.0f} (baseline "
+                            f"{bmp['iters_mean']:.0f} + {rel_drop:.0%} — "
+                            "the linesearch stopped paying)")
+                    mp_floor = bmp["status_match_fixed_frac"] - 0.02
+                    if cmp_row["status_match_fixed_frac"] < mp_floor:
+                        failures.append(
+                            f"{tag}: malitsky_pock status agreement with "
+                            f"the fixed rule "
+                            f"{cmp_row['status_match_fixed_frac']:.3f} < "
+                            f"{mp_floor:.3f}")
+                    if cmp_row["iters_cut_vs_fixed"] < 0.0:
+                        failures.append(
+                            f"{tag}: malitsky_pock iteration cut vs fixed "
+                            f"{cmp_row['iters_cut_vs_fixed']:+.1%} < 0 — "
+                            "the adaptive rule now costs more than the "
+                            "fixed step")
 
         if not check_backends:
             continue
@@ -302,6 +349,61 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
                     f"{tag}: {backend} work_ratio {cb['work_ratio']:.3f} > "
                     f"{ceiling:.3f} (baseline {bb['work_ratio']:.3f} "
                     f"+ {rel_drop:.0%} — parent-basis reuse stopped paying)")
+
+    # ---- Pallas tile-kernel rows (kernel-vs-engine invariants) ------------
+    cur_pal = {(w["m"], w["n"], w["B"]): w
+               for w in current.get("pallas_workloads", [])}
+    for bpw in baseline.get("pallas_workloads", []):
+        key = (bpw["m"], bpw["n"], bpw["B"])
+        tag = f"pallas {bpw['m']}x{bpw['n']} B={bpw['B']}"
+        cpw = cur_pal.get(key)
+        if cpw is None:
+            failures.append(f"{tag}: row missing from the smoke run")
+            continue
+        for name, bk in bpw.get("kernels", {}).items():
+            if name not in measured:
+                continue
+            ck = cpw.get("kernels", {}).get(name)
+            if ck is None:
+                failures.append(f"{tag}: kernel row {name!r} missing")
+                continue
+            if name in ("tableau", "revised"):
+                # pivot-exact kernels: hard bounds, no baseline tolerance
+                if ck["status_match_engine_frac"] < 1.0:
+                    failures.append(
+                        f"{tag}: {name} kernel status agreement "
+                        f"{ck['status_match_engine_frac']:.3f} < 1.0 (the "
+                        "kernel executes the engine's pivot sequence — any "
+                        "divergence is a wrong answer)")
+                if not ck["iters_match_engine"]:
+                    failures.append(
+                        f"{tag}: {name} kernel iteration counts diverged "
+                        "from the engine (pivot-exactness lost)")
+            else:
+                floor = bk["status_match_engine_frac"] - 0.02
+                if ck["status_match_engine_frac"] < floor:
+                    failures.append(
+                        f"{tag}: {name} kernel status agreement "
+                        f"{ck['status_match_engine_frac']:.3f} < {floor:.3f}"
+                        f" (baseline {bk['status_match_engine_frac']:.3f})")
+            floor = bk["scheduled_status_match_frac"] - 0.02
+            if ck["scheduled_status_match_frac"] < floor:
+                failures.append(
+                    f"{tag}: {name} kernel compaction-scheduled agreement "
+                    f"{ck['scheduled_status_match_frac']:.3f} < {floor:.3f}")
+            ceiling = bk["elements_scheduled"] * (1.0 + rel_drop)
+            if ck["elements_scheduled"] > ceiling:
+                failures.append(
+                    f"{tag}: {name} kernel scheduled element traffic "
+                    f"{ck['elements_scheduled']:.3e} > {ceiling:.3e} "
+                    f"(baseline {bk['elements_scheduled']:.3e} "
+                    f"+ {rel_drop:.0%} — segment sizing or bucket "
+                    "shrinking regressed)")
+            if bk.get("bucket_shrunk") and not ck.get("bucket_shrunk"):
+                failures.append(
+                    f"{tag}: {name} kernel no longer shrinks a bucket "
+                    "under compaction (the baseline recorded at least one "
+                    "gather into a smaller bucket)")
 
     # ---- shared-pattern sparse rows (dense-vs-sparse PDHG invariants) -----
     if check_pdhg:

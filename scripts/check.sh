@@ -14,7 +14,11 @@
 # (perturbed fixture trajectories re-solved from the previous step's
 # terminal state: each engine must at least halve re-solve work with
 # unchanged statuses/objectives), and the fast path an mps-roundtrip check
-# (parse fixtures, write, re-parse, assert equal).
+# (parse fixtures, write, re-parse, assert equal).  The full legs start
+# with a pallas smoke block: the revised tile kernel and the PDHG segment
+# kernel (interpret=True) against their JAX engines — pivot-exactness for
+# the simplex kernel, tolerance agreement plus a completed bucket shrink
+# for PDHG under the compaction scheduler.
 #
 # Per backend the smoke run writes /tmp/pivot_work_smoke_<backend>.json
 # (never the committed BENCH_pivot_work.json), asserts the absolute
@@ -107,6 +111,47 @@ print("branch-and-bound smoke OK")
 EOF
 }
 
+pallas_smoke() {
+  echo "== pallas kernel smoke =="
+  python - <<'EOF'
+# both new tile kernels against their JAX engines on a tiny mixed batch
+# (interpret=True — the Pallas interpreter, ~a minute): the revised kernel
+# must be pivot-exact, the PDHG segment kernel must agree to tolerance and
+# complete at least one bucket shrink through the compaction scheduler
+import numpy as np
+from repro.core import (OPTIMAL, random_lp_batch, solve_batched_pdhg,
+                        solve_batched_revised)
+from repro.kernels import solve_batched_pallas
+
+rng = np.random.default_rng(7)
+batch = random_lp_batch(rng, B=16, m=5, n=5)
+
+ref = solve_batched_revised(batch)
+pal = solve_batched_pallas(batch, backend="revised", tile_b=8)
+assert np.array_equal(ref.status, pal.status), "revised kernel: statuses"
+assert np.array_equal(ref.iterations, pal.iterations), \
+    "revised kernel: pivot counts diverged from core/revised.py"
+ok = np.asarray(ref.status) == OPTIMAL
+np.testing.assert_allclose(pal.objective[ok], ref.objective[ok],
+                           rtol=1e-4, atol=1e-4)
+print(f"  revised tile: {int(ok.sum())}/{batch.batch} OPTIMAL, "
+      "statuses+pivots identical to the engine")
+
+pref = solve_batched_pdhg(batch)
+stats = []
+ppal = solve_batched_pallas(batch, backend="pdhg", tile_b=8,
+                            compaction=True, segment_k=4, stats_out=stats)
+match = (np.asarray(ppal.status) == np.asarray(pref.status)).mean()
+assert match >= 0.95, f"pdhg segment kernel: status agreement {match:.2f}"
+buckets = [s.bucket for s in stats]
+assert min(buckets) < max(buckets), \
+    "pdhg segment kernel: no bucket shrink through the scheduler"
+print(f"  pdhg segment tile: status match {match:.2f}, "
+      f"bucket ladder {sorted(set(buckets), reverse=True)}")
+print("pallas kernel smoke OK")
+EOF
+}
+
 if [[ "$FAST" == 1 ]]; then
   echo "== tier-1 pytest (fast) =="
   python -m pytest -x -q
@@ -115,6 +160,8 @@ if [[ "$FAST" == 1 ]]; then
   echo "ALL CHECKS PASSED"
   exit 0
 fi
+
+pallas_smoke
 
 for backend in $BACKENDS; do
   echo "== tier-1 pytest (backend=$backend) =="
@@ -158,6 +205,33 @@ for w in d["workloads"]:
         assert pp["scheduled_status_match_frac"] >= 0.95, \
             f"pdhg compaction round-trip " \
             f"{pp['scheduled_status_match_frac']:.2f} at {w['m']}x{w['n']}"
+        # adaptive step sizes: the Malitsky-Pock linesearch must never
+        # cost more iterations than the fixed step, with statuses agreeing
+        mp = pp["malitsky_pock"]
+        assert mp["iters_cut_vs_fixed"] >= 0.0, \
+            f"malitsky_pock costs more than fixed at {w['m']}x{w['n']}: " \
+            f"cut {mp['iters_cut_vs_fixed']:+.1%}"
+        assert mp["status_match_fixed_frac"] >= 0.9, \
+            f"malitsky_pock status agreement " \
+            f"{mp['status_match_fixed_frac']:.2f} at {w['m']}x{w['n']}"
+# pallas smoke: the tile kernels vs their engines — the simplex kernels
+# must be pivot-exact (identical statuses AND iteration counts), the
+# tolerance-based pdhg kernel agrees on nearly every status, and every
+# kernel's compaction-scheduled run keeps agreeing with the engine
+for pw in d.get("pallas_workloads", []):
+    ptag = f"{pw['m']}x{pw['n']} B={pw['B']}"
+    for name, kk in pw["kernels"].items():
+        if name in ("tableau", "revised"):
+            assert kk["status_match_engine_frac"] == 1.0 \
+                and kk["iters_match_engine"], \
+                f"pallas {ptag}: {name} kernel lost pivot-exactness"
+        else:
+            assert kk["status_match_engine_frac"] >= 0.9, \
+                f"pallas {ptag}: {name} kernel status agreement " \
+                f"{kk['status_match_engine_frac']:.2f} < 0.9"
+        assert kk["scheduled_status_match_frac"] >= 0.9, \
+            f"pallas {ptag}: {name} scheduled-kernel agreement " \
+            f"{kk['scheduled_status_match_frac']:.2f} < 0.9"
 # sparse smoke (pdhg/all legs): the shared-pattern sparse engine must
 # agree with the dense engine on the staircase fixtures — same algorithm,
 # the matvecs just pay nnz instead of m*n — and the recorded traffic
@@ -244,6 +318,13 @@ if d.get("warm_workloads"):
                     f"{wb['work_ratio']:.2f}"
                     for ww in d["warm_workloads"]
                     for name, wb in ww["backends"].items()))
+if d.get("pallas_workloads"):
+    print("pallas smoke OK:",
+          ", ".join(f"{pw['m']}x{pw['n']}/{name} match "
+                    f"{kk['status_match_engine_frac']:.2f}"
+                    f"{' shrunk' if kk['bucket_shrunk'] else ''}"
+                    for pw in d["pallas_workloads"]
+                    for name, kk in pw["kernels"].items()))
 if d.get("bnb_workloads"):
     print("bnb smoke OK:",
           ", ".join(f"{nw['fixture']}/{name} ratio "

@@ -155,6 +155,23 @@ def next_bucket(active: int, pad_multiple: int = 1) -> int:
     return -(-b // pad_multiple) * pad_multiple
 
 
+def init_orig(backend, state, B: int):
+    """Build the original-slot map for a freshly init'd backend state.
+
+    Returns ``(state, orig)`` where ``orig[i]`` is the caller's batch index
+    occupying slot ``i``.  A backend may return a batch-padded state from
+    ``init`` (Pallas tile multiples); padding slots get ``orig == -1`` and
+    are deactivated so the scheduler never counts them as active.
+    """
+    orig = np.arange(B, dtype=np.int64)
+    B_state = int(np.asarray(backend.status_host(state)).shape[0])
+    if B_state > B:
+        orig = np.concatenate(
+            [orig, np.full(B_state - B, -1)]).astype(np.int64)
+        state = backend.deactivate(state, orig >= 0)
+    return state, orig
+
+
 # ---------------------------------------------------------------------------
 # Traceable segment runners (shared by JaxBackend and the shard_map backend)
 # ---------------------------------------------------------------------------

@@ -200,7 +200,7 @@ BACKEND_REGISTRY = {
         supports_safe_bound=True),
     # immutable data, basis-factor updates (core/revised.py)
     "revised": BackendSpec(
-        name="revised", exact=True, supports_pallas=False,
+        name="revised", exact=True, supports_pallas=True,
         supports_compaction=True,
         solve="repro.core.revised:solve_batched_revised",
         solve_compacted="repro.core.revised:solve_batched_revised_compacted",

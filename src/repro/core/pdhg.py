@@ -115,6 +115,19 @@ CHECK_EVERY = 16
 # convergent iterates stay small; diverging rays cross it immediately).
 CERT_TOL = 1e-4
 RAY_MIN_NORM = 1.0
+# Malitsky-Pock linesearch (step_rule="malitsky_pock"): per-iteration dual
+# backtracking that lets tau grow past the conservative spectral-norm bound
+# on instances where the local curvature allows it — the fix for the
+# adversarial dense stragglers that cap out under the fixed step.  A dual
+# trial step at tau_try is accepted when
+#   sqrt(beta) * tau_try * ||A^T y_try - A^T y|| <= MP_DELTA * ||y_try - y||
+# (beta = omega^2, so sigma = beta * tau preserves the primal weight);
+# rejection shrinks tau_try by MP_MU, and after MP_TRIALS rejections the
+# iteration falls back to the known-safe fixed step (sqrt(beta) * tau0 =
+# eta <= STEP_SAFETY / ||A||) and resets the growth clock.
+MP_DELTA = 0.99
+MP_MU = 0.7
+MP_TRIALS = 6
 
 
 def default_pdhg_max_iters(m: int, n: int) -> int:
@@ -403,6 +416,15 @@ def pdhg_round(s: PdhgState, *, tol: float,
         0, check_every, body, (s.x, s.y, s.xs, s.ys, s.cnt))
     s = s._replace(x=x, y=y, xs=xs, ys=ys, cnt=cnt,
                    iters=s.iters + check_every * active0)
+    return _pdhg_check(s, tol=tol, mv=mv)
+
+
+def _pdhg_check(s: PdhgState, *, tol: float,
+                mv: Matvecs = DENSE_MV) -> PdhgState:
+    """The round's convergence / restart / certificate check, shared by
+    every step rule (the fixed-step and Malitsky-Pock rounds differ only
+    in how they produce the iterates that land here)."""
+    active0 = s.status == _RUNNING
 
     # ---- check: candidate = better of current iterate and running average --
     cc = jnp.maximum(s.cnt, 1.0)[:, None]
@@ -453,6 +475,69 @@ def pdhg_round(s: PdhgState, *, tol: float,
                       status=status)
 
 
+def pdhg_round_mp(s: PdhgState, tau, tprev, *, tol: float,
+                  check_every: int = CHECK_EVERY,
+                  mv: Matvecs = DENSE_MV):
+    """Malitsky-Pock round: ``check_every`` iterations with per-iteration
+    dual linesearch (see the MP_* constants), then the same check as
+    `pdhg_round`.  ``tau``/``tprev`` are (B, 1) per-LP primal steps carried
+    across rounds (the linesearch extrapolates with theta = tau/tprev);
+    returns ``(state, tau, tprev)``.  The primal weight keeps adapting at
+    restarts exactly as under the fixed rule — the linesearch scales the
+    step magnitude, omega keeps steering the primal/dual split."""
+    active0 = s.status == _RUNNING
+    act = active0[:, None]
+    beta = s.omega ** 2
+    sqb = s.omega                    # sqrt(beta), omega > 0 by construction
+    tau0 = s.eta / s.omega
+    sig0 = s.eta * s.omega
+
+    def body(_, carry):
+        x, y, xs, ys, cnt, tau, tprev = carry
+        aty = mv.aty(s.A, y)
+        xn = jnp.clip(x + tau * (s.c - aty), 0.0, s.ub)
+
+        def trial(_, tc):
+            tau_t, y_acc, t_acc, done = tc
+            theta = tau_t / jnp.maximum(tau, 1e-30)
+            xbar = xn + theta * (xn - x)
+            y_try = jnp.maximum(
+                y + beta * tau_t * (mv.ax(s.A, xbar) - s.b), 0.0)
+            lhs = sqb * tau_t * jnp.linalg.norm(
+                mv.aty(s.A, y_try) - aty, axis=1)[:, None]
+            rhs = MP_DELTA * jnp.linalg.norm(y_try - y, axis=1)[:, None]
+            # a zero dual move (rhs == 0 == lhs) is a fixed point: accept
+            ok = ~done & (lhs <= rhs + 1e-30)
+            y_acc = jnp.where(ok, y_try, y_acc)
+            t_acc = jnp.where(ok, tau_t, t_acc)
+            done = done | ok
+            return (jnp.where(done, tau_t, tau_t * MP_MU), y_acc, t_acc,
+                    done)
+
+        theta0 = tau / jnp.maximum(tprev, 1e-30)
+        init = (tau * jnp.sqrt(1.0 + theta0), jnp.zeros_like(y),
+                jnp.zeros_like(tau), jnp.zeros_like(tau, bool))
+        _, y_acc, t_acc, done = jax.lax.fori_loop(0, MP_TRIALS, trial, init)
+        # fallback: the known-safe fixed step, and reset the growth clock
+        y_fb = jnp.maximum(
+            y + sig0 * (mv.ax(s.A, 2.0 * xn - x) - s.b), 0.0)
+        yn = jnp.where(done, y_acc, y_fb)
+        tau_n = jnp.where(done, t_acc, tau0)
+        tprev_n = jnp.where(done, tau, tau0)
+        x = jnp.where(act, xn, x)
+        y = jnp.where(act, yn, y)
+        tau = jnp.where(act, tau_n, tau)
+        tprev = jnp.where(act, tprev_n, tprev)
+        return (x, y, xs + jnp.where(act, x, 0.0),
+                ys + jnp.where(act, y, 0.0), cnt + active0, tau, tprev)
+
+    x, y, xs, ys, cnt, tau, tprev = jax.lax.fori_loop(
+        0, check_every, body, (s.x, s.y, s.xs, s.ys, s.cnt, tau, tprev))
+    s = s._replace(x=x, y=y, xs=xs, ys=ys, cnt=cnt,
+                   iters=s.iters + check_every * active0)
+    return _pdhg_check(s, tol=tol, mv=mv), tau, tprev
+
+
 def extract_pdhg(s: PdhgState, mv: Matvecs = DENSE_MV):
     """(x, obj, status, iters, y, z) in *unscaled* canonical coordinates.
     ``z = c - A^T y`` is the reduced-cost certificate; objective and duals
@@ -473,29 +558,52 @@ def solve_pdhg(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
                tol: float, feas_tol: float = 0.0,
                check_every: int = CHECK_EVERY,
                warm_x=None, warm_y=None, warm_omega=None,
-               full_state: bool = False):
+               full_state: bool = False, step_rule: str = "fixed"):
     """Traceable whole-solve body (shared by jit, pjit and shard_map):
     setup + one while_loop over check rounds.  ``feas_tol`` is accepted for
     entry-point uniformity but unused (PDHG has no phase 1 — feasibility is
     part of the KKT residual).  ``warm_x``/``warm_y``/``warm_omega`` seed
     the iterate via `inject_pdhg_warm` (per-LP reset guard included);
     ``full_state=True`` appends the terminal iterate leaves
-    (x, y unscaled *pre NaN-mask*, omega, eta) for WarmStart capture."""
+    (x, y unscaled *pre NaN-mask*, omega, eta) for WarmStart capture.
+    ``step_rule`` selects the iteration: "fixed" (default — the spectral
+    step estimate) or "malitsky_pock" (per-iteration dual linesearch,
+    see `pdhg_round_mp`)."""
     del feas_tol
+    if step_rule not in ("fixed", "malitsky_pock"):
+        raise ValueError(
+            f"unknown step_rule {step_rule!r}: expected 'fixed' or "
+            "'malitsky_pock'")
     state = init_pdhg_state(A, b, c, ub)
     if warm_x is not None and warm_y is not None:
         state = inject_pdhg_warm(state, warm_x, warm_y, warm_omega)
     rounds = -(-int(max_iters) // int(check_every))
 
-    def cond(carry):
-        s, it = carry
-        return jnp.any(s.status == _RUNNING) & (it < rounds)
+    if step_rule == "malitsky_pock":
+        tau0 = state.eta / state.omega
 
-    def body(carry):
-        s, it = carry
-        return pdhg_round(s, tol=tol, check_every=check_every), it + 1
+        def cond_mp(carry):
+            s, _, _, it = carry
+            return jnp.any(s.status == _RUNNING) & (it < rounds)
 
-    state, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+        def body_mp(carry):
+            s, tau, tprev, it = carry
+            s, tau, tprev = pdhg_round_mp(s, tau, tprev, tol=tol,
+                                          check_every=check_every)
+            return s, tau, tprev, it + 1
+
+        state, _, _, _ = jax.lax.while_loop(
+            cond_mp, body_mp, (state, tau0, tau0, jnp.int32(0)))
+    else:
+        def cond(carry):
+            s, it = carry
+            return jnp.any(s.status == _RUNNING) & (it < rounds)
+
+        def body(carry):
+            s, it = carry
+            return pdhg_round(s, tol=tol, check_every=check_every), it + 1
+
+        state, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     out = extract_pdhg(state)
     if full_state:
         out = out + (state.x * state.csc, state.y * state.rsc,
@@ -511,14 +619,16 @@ def _solve_pdhg_core(A, b, c, ub, *, m, n, max_iters, tol, check_every):
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
-                                             "check_every"))
+                                             "check_every", "step_rule"))
 def _solve_pdhg_core_state(A, b, c, ub, warm_x, warm_y, warm_omega, *, m, n,
-                           max_iters, tol, check_every):
+                           max_iters, tol, check_every,
+                           step_rule="fixed"):
     """`_solve_pdhg_core` + warm injection + terminal-iterate capture (the
     batched entry point's core; warm args may be None for a cold run)."""
     return solve_pdhg(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                       check_every=check_every, warm_x=warm_x, warm_y=warm_y,
-                      warm_omega=warm_omega, full_state=True)
+                      warm_omega=warm_omega, full_state=True,
+                      step_rule=step_rule)
 
 
 def _check_pdhg_pricing(pricing: str) -> None:
@@ -537,7 +647,8 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
                        pricing: str = "dantzig",
                        presolve: bool = True,
                        scale: bool | None = None,
-                       warm: WarmStart | None = None) -> LPResult:
+                       warm: WarmStart | None = None,
+                       step_rule: str = "fixed") -> LPResult:
     """Solve a batch with the restarted-PDHG first-order engine.
 
     Same LPBatch -> LPResult contract and GeneralLPBatch acceptance as
@@ -554,6 +665,9 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
       the simplex backends' vertex solutions work too); adoption is
       per-LP behind the `inject_pdhg_warm` reset guard, so a stale warm
       start can never do worse than cold.
+    * ``step_rule="malitsky_pock"`` enables the per-iteration dual
+      linesearch (`pdhg_round_mp`) — the default stays the fixed
+      spectral-estimate step.
     """
     _check_pdhg_pricing(pricing)
     del feas_tol
@@ -579,7 +693,8 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
             jnp.asarray(batch.upper_bounds(), dtype),
             wx, wy, womega,
             m=m, n=n, max_iters=int(max_iters),
-            tol=float(tol), check_every=int(check_every))
+            tol=float(tol), check_every=int(check_every),
+            step_rule=str(step_rule))
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
                    status=np.asarray(status), iterations=np.asarray(iters),
                    y=np.asarray(y), z=np.asarray(z),
@@ -696,7 +811,7 @@ def solve_batched_pdhg_compacted(
         check_every: int = CHECK_EVERY, pricing: str = "dantzig",
         stats_out: Optional[List] = None,
         presolve: bool = True, scale: Optional[bool] = None,
-        warm: WarmStart | None = None) -> LPResult:
+        warm: WarmStart | None = None, runner=None) -> LPResult:
     """Restarted PDHG under the active-set compaction scheduler: K-round
     segments, power-of-two bucket gathers of still-running LPs (problem
     data, iterates, averages and restart state gathered alongside).  Same
@@ -707,9 +822,16 @@ def solve_batched_pdhg_compacted(
     the monolithic while_loop — XLA fuses the f32 matvecs differently, so
     the restart trajectories (and the tol-satisfying points they stop at)
     drift to ~tol: statuses agree, objectives to ~1e-3 relative (cf. the
-    revised backend's batch-decomposition note)."""
-    from .compaction import (CompactionConfig, resolve_compact_threshold,
-                             run_schedule)
+    revised backend's batch-decomposition note).
+
+    ``runner`` swaps the segment executor: a factory called as
+    ``runner(m, n, tol, dtype, check_every=...)`` returning a
+    PdhgBackend-compatible object (kernels.ops.PdhgPallasBackend runs the
+    segments as Pallas tile kernels). A runner may return a batch-padded
+    state from ``init`` (tile multiples); the padding slots are marked
+    terminal here so the scheduler never counts them as active."""
+    from .compaction import (CompactionConfig, init_orig,
+                             resolve_compact_threshold, run_schedule)
 
     _check_pdhg_pricing(pricing)
     del feas_tol
@@ -724,14 +846,16 @@ def solve_batched_pdhg_compacted(
         # a handful of compaction checkpoints across the expected solve,
         # mirroring auto_segment_k's ~1/64-of-cap heuristic in round units
         segment_k = max(4, rounds // 64)
-    backend = PdhgBackend(m, n, tol, dtype, check_every=check_every)
+    backend = (PdhgBackend(m, n, tol, dtype, check_every=check_every)
+               if runner is None
+               else runner(m, n, tol, dtype, check_every=check_every))
     state = backend.init(jnp.asarray(batch.A, dtype),
                          jnp.asarray(batch.b, dtype),
                          jnp.asarray(batch.c, dtype),
                          ub=jnp.asarray(batch.upper_bounds(), dtype),
                          warm=prepare_warm(warm, rec, batch))
     B = batch.batch
-    orig = np.arange(B, dtype=np.int64)
+    state, orig = init_orig(backend, state, B)
     cfg = CompactionConfig(
         segment_k=int(segment_k),
         compact_threshold=resolve_compact_threshold(compact_threshold,

@@ -61,9 +61,10 @@ f32 rounding.  Identical batch composition (jit vs pjit) is bitwise;
 different decompositions guarantee identical certificates and
 objectives/solutions to f32 tolerance (~1e-6), verified in
 tests/test_revised.py.
-``backend="revised"`` on solve_batched / solve_pjit / solve_shard_map /
-solve_batched_pallas routes here (the Pallas entry point falls back to this
-pure-JAX path with a warning until a revised tile kernel exists).
+``backend="revised"`` on solve_batched / solve_pjit / solve_shard_map
+routes here; ``solve_batched_pallas(backend="revised")`` runs the revised
+tile kernel (kernels/revised_tile.py), which reuses this module's state
+builder, warm injection and pivot semantics and validates against it.
 """
 from __future__ import annotations
 

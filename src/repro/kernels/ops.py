@@ -18,16 +18,26 @@ dantzig | steepest_edge | devex) on both the whole-solve and segment paths.
 kernel keeps the full cost row resident in VMEM, so block-restricted pricing
 saves nothing — the rule exists for the revised backend's pricing matvec.
 
-``backend=`` dispatch follows the core/lp.py registry:
-``backend="pdhg"`` (core/pdhg.py) runs the whole-solve first-order tile
-kernel (kernels/pdhg_tile.py — fused matvec + prox + restart check in
-VMEM); with ``compaction=True`` its segments run the pure-JAX rounds under
-the scheduler (warned once — there is no pdhg segment kernel yet).
-``backend="revised"`` (core/revised.py) has no Pallas kernel
-(``backend_spec("revised").supports_pallas is False``): the call falls
-back to the pure-JAX revised path with a warning (fired once per process,
-not once per call) so the entry-point contract stays uniform across the
-stack.
+``backend=`` dispatch follows the core/lp.py registry; every registered
+backend now has a real Pallas surface. ``backend="pdhg"`` (core/pdhg.py)
+runs the whole-solve first-order tile kernel (kernels/pdhg_tile.py —
+fused matvec + prox + restart check in VMEM); with ``compaction=True``
+the scheduler's segments run the resumable PDHG *segment* kernel, so
+bucket gathers happen between kernel launches instead of abandoning
+Pallas. ``backend="revised"`` (core/revised.py) runs the revised-simplex
+tile kernel (kernels/revised_tile.py — BTRAN/FTRAN against a
+VMEM-resident basis inverse + eta file, refactorization at segment
+boundaries), monolithic or under the scheduler with refactor-on-gather.
+A backend whose registry entry reports ``supports_pallas=False`` falls
+back to its pure-JAX path with a warning (fired once per process, not
+once per call) so the entry-point contract stays uniform — no registered
+backend currently takes that path.
+
+``warm=`` accepts the backend-uniform `WarmStart` carrier: the revised
+kernel injects a parent basis (phase-1 skip / repair, exactly the
+engine's `inject_revised_warm`), the pdhg paths inject iterates +
+primal weight; the tableau tile kernel has no injection surface and
+warns once before starting cold.
 
 Like every solve_* entry point, a ``GeneralLPBatch`` (core/forms.py) is
 accepted directly: canonicalize on ingestion (``presolve=``/``scale=``),
@@ -43,19 +53,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.forms import ensure_canonical, finish_result
+from repro.core.forms import ensure_canonical, finish_result, prepare_warm
 from repro.core.lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult,
-                           backend_spec, default_max_iters)
+                           WarmStart, backend_spec, default_max_iters)
 from repro.core.compaction import (
-    CompactionConfig, CompactionState, JaxBackend, SegmentStat, auto_segment_k,
-    resolve_compact_threshold, run_schedule,
+    CompactionConfig, CompactionState, JaxBackend, SegmentStat, _take_jit,
+    auto_segment_k, init_orig, resolve_compact_threshold, run_schedule,
 )
+from repro.core.pdhg import PdhgBackend
 from repro.core.pricing import canonicalize_rule
+from repro.core.revised import RevisedBackend, canonicalize_revised_rule
 from repro.core.simplex import _RUNNING, scatter_solution
 from .simplex_tile import (
     _compact_tile, _compact_tile_lane, _compact_tile_weights,
     _init_tile_weights, build_padded_tableau, pick_tile_b, segment_pallas,
     simplex_pallas,
+)
+from .pdhg_tile import (
+    _extract_pdhg_tile_jit, build_pdhg_tile_state, pdhg_segment_pallas,
+    pick_pdhg_tile_b,
+)
+from .revised_tile import (
+    _extract_revised_tile_jit, build_revised_tile_state, pick_revised_tile_b,
+    refactor_tile, revised_pallas, revised_segment_pallas,
 )
 from .hyperbox_kernel import hyperbox_pallas
 
@@ -179,6 +199,106 @@ class PallasBackend(JaxBackend):
             m=self.m, n=self.n))
 
 
+class RevisedPallasBackend(RevisedBackend):
+    """Compaction-scheduler backend running the revised-simplex tile kernel
+    (kernels/revised_tile.py) on the padded tile layout. Bucket sizes are
+    multiples of ``tile_b`` so every segment is a whole grid of tiles; the
+    host refactorizes the basis inverse at every segment boundary and after
+    every bucket gather, so each kernel launch starts from an empty eta
+    file. Work accounting (`elements_per_step`) is inherited from the
+    pure-JAX revised backend — numbers stay comparable across executors."""
+
+    def __init__(self, m, n, tol, feas_tol, tile_b, interpret=True,
+                 dtype=jnp.float32, pricing="dantzig",
+                 refactor_period=None):
+        super().__init__(m, n, tol, feas_tol, dtype, pricing=pricing,
+                         refactor_period=refactor_period)
+        self.tile_b = int(tile_b)
+        self.interpret = bool(interpret)
+        self.pad_multiple = self.tile_b
+
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None):
+        wb = wu = None
+        if warm is not None and warm.basis is not None:
+            wb = jnp.asarray(np.asarray(warm.basis), jnp.int32)
+            if warm.at_upper is not None:
+                wu = jnp.asarray(np.asarray(warm.at_upper), bool)
+        return build_revised_tile_state(
+            A, b, c, ub, m=self.m, n=self.n, tile_b=self.tile_b,
+            feas_tol=self.feas_tol, warm_basis=wb, warm_at_upper=wu)
+
+    def _run(self, state, steps, stage):
+        xB, basis, onub, phase, status, iters, it = revised_segment_pallas(
+            jnp.int32(steps), state.Abar, state.cvec, state.ub, state.thr,
+            state.Binv, state.xB, state.basis, state.onub, state.phase,
+            state.status, state.iters, stage=stage, m=self.m, n=self.n,
+            tile_b=self.tile_b, tol=self.tol, K=self.refactor_period,
+            interpret=self.interpret, pricing=self.rule)
+        new = state._replace(xB=xB, basis=basis, onub=onub, phase=phase,
+                             status=status, iters=iters)
+        return (refactor_tile(new, m=self.m, n=self.n),
+                int(np.max(np.asarray(it))))
+
+    def run_phase1(self, state, steps):
+        return self._run(state, steps, "p1")
+
+    def run_phase2(self, state, steps):
+        return self._run(state, steps, "p2")
+
+    def take(self, state, idx):
+        # generic leaf gather (RevisedTileState, not RevisedState, so skip
+        # RevisedBackend's engine-state refactor), then refactor-on-compact
+        gathered = _take_jit(state, jnp.asarray(idx))
+        return refactor_tile(gathered, m=self.m, n=self.n)
+
+    def extract(self, state, stage: str):
+        return tuple(np.asarray(o) for o in _extract_revised_tile_jit(
+            state, m=self.m, n=self.n)[:6])
+
+
+class PdhgPallasBackend(PdhgBackend):
+    """Compaction-scheduler backend running the resumable PDHG segment
+    kernel (kernels/pdhg_tile.py). Same scheduling semantics as
+    core.pdhg.PdhgBackend — one scheduler "step" is one check round of
+    ``check_every`` iterations — with the rounds executed inside
+    ``pallas_call`` on the padded tile layout, so iterates, averages and
+    restart bookkeeping stay in VMEM between the scheduler's gathers."""
+
+    def __init__(self, m, n, tol, dtype, check_every=None, *,
+                 tile_b=None, interpret=True, vmem_budget=8 * 2 ** 20):
+        from repro.core.pdhg import CHECK_EVERY
+        super().__init__(m, n, tol, dtype,
+                         check_every=(CHECK_EVERY if check_every is None
+                                      else check_every))
+        if tile_b is None:
+            tile_b = pick_pdhg_tile_b(m, n, vmem_budget)
+        self.tile_b = int(tile_b)
+        self.interpret = bool(interpret)
+        self.pad_multiple = self.tile_b
+
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None):
+        s0 = super().init(A, b, c, ub, warm=warm)
+        return build_pdhg_tile_state(s0, m=self.m, n=self.n,
+                                     tile_b=self.tile_b)
+
+    def run_phase2(self, state, steps):
+        state, it = pdhg_segment_pallas(
+            jnp.int32(steps), state, m=self.m, n=self.n,
+            tile_b=self.tile_b, tol=self.tol,
+            check_every=self.check_every, interpret=self.interpret)
+        return state, int(np.max(np.asarray(it)))
+
+    def deactivate(self, state, valid):
+        # tile status is (B, 1): a (B,) mask would broadcast to (B, B)
+        valid = jnp.asarray(np.asarray(valid).reshape(-1, 1))
+        status = jnp.where(valid, state.status, ITERATION_LIMIT)
+        return state._replace(status=status.astype(state.status.dtype))
+
+    def extract(self, state, stage: str):
+        return tuple(np.asarray(o) for o in _extract_pdhg_tile_jit(
+            state, m=self.m, n=self.n))
+
+
 def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                          tile_b: Optional[int] = None,
                          max_iters: Optional[int] = None,
@@ -194,24 +314,24 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                          refactor_period: Optional[int] = None,
                          stats_out: Optional[List[SegmentStat]] = None,
                          presolve: bool = True,
-                         scale: Optional[bool] = None) -> LPResult:
+                         scale: Optional[bool] = None,
+                         warm: Optional[WarmStart] = None) -> LPResult:
     batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     pricing = canonicalize_rule(pricing)
+    warm = prepare_warm(warm, rec, batch)
     spec = backend_spec(backend)
     if not spec.supports_pallas:
-        # registry-driven fallback (currently: the revised engine) — the
-        # entry-point contract stays uniform across the stack
+        # registry-driven fallback for backends without a kernel surface
+        # (none registered today) — the entry-point contract stays uniform
         _warn_once(
             f"{backend}-fallback",
-            f"solve_batched_pallas(backend={backend!r}): no Pallas "
-            f"{backend} kernel exists yet; falling back to the pure-JAX "
-            f"path (see core/lp.py BACKEND_REGISTRY)")
+            f"solve_batched_pallas(backend={backend!r}): the registry "
+            f"reports no Pallas {backend} kernel; falling back to the "
+            f"pure-JAX path (see core/lp.py BACKEND_REGISTRY)")
         from repro.core.lp import resolve_backend
         kwargs = dict(dtype=dtype, tol=tol, feas_tol=feas_tol,
                       max_iters=max_iters, pricing=pricing)
-        if backend == "revised":
-            kwargs["refactor_period"] = refactor_period
         if compaction:
             kwargs.update(segment_k=segment_k,
                           compact_threshold=compact_threshold,
@@ -222,22 +342,24 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
         from repro.core.pdhg import _check_pdhg_pricing
         _check_pdhg_pricing(pricing)
         if compaction:
-            # the scheduler's pdhg segments run the pure-JAX rounds (no
-            # segment kernel yet — the whole-solve kernel is the Pallas
-            # surface); results are identical, only the executor differs
-            _warn_once(
-                "pdhg-segment-jax",
-                "solve_batched_pallas(backend='pdhg', compaction=True): "
-                "pdhg segments run the pure-JAX rounds under the "
-                "compaction scheduler (the whole-solve tile kernel has no "
-                "segment variant yet)")
+            # the scheduler's segments run the resumable PDHG segment
+            # kernel; bucket gathers happen between kernel launches
             from repro.core.pdhg import solve_batched_pdhg_compacted
+            runner = functools.partial(PdhgPallasBackend, tile_b=tile_b,
+                                       interpret=interpret,
+                                       vmem_budget=vmem_budget)
             return finish_result(rec, solve_batched_pdhg_compacted(
                 batch, dtype=dtype, tol=tol, max_iters=max_iters,
                 segment_k=segment_k, compact_threshold=compact_threshold,
-                stats_out=stats_out))
+                stats_out=stats_out, warm=warm, runner=runner))
         from repro.core.pdhg import default_pdhg_max_iters
-        from .pdhg_tile import pdhg_pallas, pick_pdhg_tile_b
+        from .pdhg_tile import pdhg_pallas
+        if warm is not None:
+            _warn_once(
+                "pdhg-whole-warm",
+                "solve_batched_pallas(backend='pdhg', warm=...): the "
+                "whole-solve tile kernel starts cold; use compaction=True "
+                "for warm iterate injection through the segment kernel")
         if tol is None:
             tol = 1e-5 if dtype == jnp.float32 else 1e-8
         if max_iters is None:
@@ -254,6 +376,61 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
             x=np.asarray(x), objective=np.asarray(obj),
             status=np.asarray(status), iterations=np.asarray(iters),
             y=np.asarray(y), z=np.asarray(z)))
+    if backend == "revised":
+        rule = canonicalize_revised_rule(pricing)
+        if tol is None:
+            tol = 1e-6 if dtype == jnp.float32 else 1e-9
+        if max_iters is None:
+            max_iters = default_max_iters(m, n)
+        if tile_b is None:
+            tile_b = pick_revised_tile_b(m, n, vmem_budget,
+                                         refactor_period=refactor_period)
+        A = jnp.asarray(batch.A, dtype)
+        b = jnp.asarray(batch.b, dtype)
+        c = jnp.asarray(batch.c, dtype)
+        ub = jnp.asarray(batch.upper_bounds(), dtype)
+        if compaction:
+            if segment_k is None:
+                segment_k = auto_segment_k(m, n)
+            runner = RevisedPallasBackend(
+                m, n, tol, feas_tol, tile_b, interpret=interpret,
+                dtype=dtype, pricing=rule, refactor_period=refactor_period)
+            state = runner.init(A, b, c, ub=ub, warm=warm)
+            B = batch.batch
+            state, orig = init_orig(runner, state, B)
+            cfg = CompactionConfig(
+                segment_k=int(segment_k),
+                compact_threshold=resolve_compact_threshold(
+                    compact_threshold, int(segment_k)),
+                pad_multiple=runner.pad_multiple)
+            return finish_result(rec, run_schedule(
+                runner, state, orig, B, n, max_iters=int(max_iters),
+                config=cfg, stats_out=stats_out))
+        wb = wu = None
+        if warm is not None and warm.basis is not None:
+            wb = jnp.asarray(np.asarray(warm.basis), jnp.int32)
+            if warm.at_upper is not None:
+                wu = jnp.asarray(np.asarray(warm.at_upper), bool)
+        x, obj, status, iters, y, z, basis, onub = revised_pallas(
+            A, b, c, ub, m=m, n=n, tile_b=int(tile_b),
+            max_iters=int(max_iters), tol=float(tol),
+            feas_tol=float(feas_tol), refactor_period=refactor_period,
+            pricing=rule, interpret=interpret, warm_basis=wb,
+            warm_at_upper=wu)
+        res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
+                       status=np.asarray(status),
+                       iterations=np.asarray(iters),
+                       y=np.asarray(y), z=np.asarray(z),
+                       warm=WarmStart(m=m, n=n, basis=np.asarray(basis),
+                                      at_upper=np.asarray(onub),
+                                      pricing=rule))
+        return finish_result(rec, res)
+    if warm is not None:
+        _warn_once(
+            "tableau-warm",
+            "solve_batched_pallas(backend='tableau', warm=...): the "
+            "tableau tile kernel has no warm-start injection; starting "
+            "cold (backend='revised' and the pdhg segment path inject)")
     if pricing == "partial":
         _warn_once(
             "partial-pricing",
@@ -281,10 +458,7 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                                pricing=pricing)
         state = runner.init(A, b, c, ub=ub)
         B = batch.batch
-        B_pad = state.T.shape[0]
-        orig = np.concatenate(
-            [np.arange(B), np.full(B_pad - B, -1)]).astype(np.int64)
-        state = runner.deactivate(state, orig >= 0)
+        state, orig = init_orig(runner, state, B)
         cfg = CompactionConfig(
             segment_k=int(segment_k),
             compact_threshold=resolve_compact_threshold(

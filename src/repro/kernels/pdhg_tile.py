@@ -42,6 +42,7 @@ check.  Validated under ``interpret=True`` like the simplex tiles.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -96,32 +97,18 @@ def _mtv(A, y):
     return jnp.sum(A * y[:, :, None], axis=1)
 
 
-def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
-                 binf_ref, cinf_ref, ub_ref,
-                 x_out, obj_out, status_out, iters_out, y_out, z_out,
-                 *, tol: float, max_rounds: int, check_every: int):
-    """Whole-solve kernel: rounds of ``check_every`` fused PDHG iterations
-    + one in-VMEM convergence/restart/certificate check, mirroring
-    core.pdhg.pdhg_round exactly (same constants, same candidate rule,
-    same adaptive primal weight), until every LP in the tile is terminal."""
-    A = A_ref[...]
-    b = b_ref[...]
-    c = c_ref[...]
-    r = r_ref[...]
-    s = s_ref[...]
-    eta = eta_ref[...]          # (tile_b, 1)
-    om0 = om_ref[...]
-    binf = binf_ref[...]
-    cinf = cinf_ref[...]
-    ub = ub_ref[...]            # (tile_b, N) scaled upper bounds, +inf free
-    tile_b, M, N = A.shape
+def _make_pdhg_round(A, b, c, r, s, eta, binf, cinf, ub, *, tol: float,
+                     check_every: int):
+    """Build the fused check-round closure both PDHG kernels run: one round
+    = ``check_every`` prox iterations + the in-VMEM convergence / restart /
+    certificate check, mirroring core.pdhg.pdhg_round exactly (same
+    constants, same candidate rule, same adaptive primal weight).
+
+    Carry layout (shared by the whole-solve and segment kernels):
+    ``(it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status, iters)``."""
     dtype = A.dtype
     fin = jnp.isfinite(ub)
     ubm = jnp.where(fin, ub, 0.0)
-
-    zeros_n = jnp.zeros((tile_b, N), dtype)
-    zeros_m = jnp.zeros((tile_b, M), dtype)
-    inf1 = jnp.full((tile_b, 1), jnp.inf, dtype)
 
     def kkt(x, y):
         ax = _mv(A, x)
@@ -138,11 +125,6 @@ def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
             + jnp.sum(ubm * zc, axis=1, keepdims=True)
         gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
         return jnp.maximum(jnp.maximum(rp, rd), gap)
-
-    def cond(carry):
-        it = carry[0]
-        status = carry[11]
-        return jnp.any(status == _RUNNING) & (it < max_rounds)
 
     def body(carry):
         (it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
@@ -237,6 +219,40 @@ def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
         status = jnp.where(unbounded, UNBOUNDED, status)
         return (it + 1, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
                 iters)
+
+    return body
+
+
+def _pdhg_kernel(A_ref, b_ref, c_ref, r_ref, s_ref, eta_ref, om_ref,
+                 binf_ref, cinf_ref, ub_ref,
+                 x_out, obj_out, status_out, iters_out, y_out, z_out,
+                 *, tol: float, max_rounds: int, check_every: int):
+    """Whole-solve kernel: run the shared check round from a cold start
+    until every LP in the tile is terminal or the round budget is spent."""
+    A = A_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    r = r_ref[...]
+    s = s_ref[...]
+    eta = eta_ref[...]          # (tile_b, 1)
+    om0 = om_ref[...]
+    binf = binf_ref[...]
+    cinf = cinf_ref[...]
+    ub = ub_ref[...]            # (tile_b, N) scaled upper bounds, +inf free
+    tile_b, M, N = A.shape
+    dtype = A.dtype
+
+    zeros_n = jnp.zeros((tile_b, N), dtype)
+    zeros_m = jnp.zeros((tile_b, M), dtype)
+    inf1 = jnp.full((tile_b, 1), jnp.inf, dtype)
+
+    body = _make_pdhg_round(A, b, c, r, s, eta, binf, cinf, ub,
+                            tol=tol, check_every=check_every)
+
+    def cond(carry):
+        it = carry[0]
+        status = carry[11]
+        return jnp.any(status == _RUNNING) & (it < max_rounds)
 
     init = (jnp.int32(0), zeros_n, zeros_m, zeros_n, zeros_m, zeros_n,
             zeros_m, jnp.zeros((tile_b, 1), dtype), inf1, inf1, om0,
@@ -333,3 +349,195 @@ def pdhg_pallas(A, b, c, ub=None, *, m: int, n: int, tile_b: int,
     )(Ap, bp, cp, rp, sp, etap, omp, binfp, cinfp, ubp)
     return (x[:B, :n], obj[:B, 0], status[:B, 0].astype(jnp.int8),
             iters[:B, 0], y[:B, :m], z[:B, :n])
+
+
+# ---------------------------------------------------------------------------
+# Segment kernel: resumable rounds for the compaction scheduler
+# ---------------------------------------------------------------------------
+
+class PdhgTileState(NamedTuple):
+    """Padded resumable PDHG state for the segment kernel; every leaf keeps
+    the batch on axis 0 so the compaction scheduler's generic gathers apply
+    unchanged — the tile-layout analogue of core.pdhg.PdhgState."""
+    A: jax.Array       # (B, M, N) Ruiz-scaled data
+    b: jax.Array       # (B, M)
+    c: jax.Array       # (B, N)
+    rsc: jax.Array     # (B, M) row scales
+    csc: jax.Array     # (B, N) col scales
+    eta: jax.Array     # (B, 1) base step
+    binf: jax.Array    # (B, 1) unscaled ||b||_inf
+    cinf: jax.Array    # (B, 1) unscaled ||c||_inf
+    ub: jax.Array      # (B, N) scaled upper bounds (+inf free/padded)
+    x: jax.Array       # (B, N) primal iterate
+    y: jax.Array       # (B, M) dual iterate
+    xs: jax.Array      # (B, N) running primal sum since last restart
+    ys: jax.Array      # (B, M) running dual sum
+    xr: jax.Array      # (B, N) last-restart anchor
+    yr: jax.Array      # (B, M) last-restart anchor
+    cnt: jax.Array     # (B, 1) iterations in the running average
+    last: jax.Array    # (B, 1) KKT residual at the last restart
+    prev: jax.Array    # (B, 1) candidate residual at the previous check
+    omega: jax.Array   # (B, 1) primal weight
+    phase: jax.Array   # (B, 1) int32 — constant 2 (scheduler stage-1 no-op)
+    status: jax.Array  # (B, 1) int32
+    iters: jax.Array   # (B, 1) int32
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "tile_b"))
+def build_pdhg_tile_state(s0, *, m: int, n: int, tile_b: int
+                          ) -> PdhgTileState:
+    """Pad an engine ``PdhgState`` (cold or warm-injected) onto the tile
+    layout.  Padding slots are all-zero LPs deactivated outright; padded
+    lanes are inert (A = b = c = 0, unit scales, +inf bounds)."""
+    B = s0.A.shape[0]
+    dtype = s0.A.dtype
+    M, N = pdhg_dims(m, n)
+    B_pad = _round_up(B, tile_b)
+
+    def pad(a, rows, fill=0.0):
+        out = jnp.full((B_pad, rows), fill, dtype)
+        return out.at[:B, :a.shape[1]].set(a)
+
+    def pad1(a, fill=0.0):
+        return pad(a.reshape(B, 1), 1, fill)
+
+    Ap = jnp.zeros((B_pad, M, N), dtype).at[:B, :m, :n].set(s0.A)
+    return PdhgTileState(
+        A=Ap, b=pad(s0.b, M), c=pad(s0.c, N), rsc=pad(s0.rsc, M, 1.0),
+        csc=pad(s0.csc, N, 1.0), eta=pad(s0.eta, 1, 1.0),
+        binf=pad1(s0.binf), cinf=pad1(s0.cinf), ub=pad(s0.ub, N, jnp.inf),
+        x=pad(s0.x, N), y=pad(s0.y, M), xs=pad(s0.xs, N), ys=pad(s0.ys, M),
+        xr=pad(s0.xr, N), yr=pad(s0.yr, M), cnt=pad1(s0.cnt),
+        last=pad1(s0.last_res, jnp.inf), prev=pad1(s0.prev_res, jnp.inf),
+        omega=pad(s0.omega, 1, 1.0),
+        phase=jnp.full((B_pad, 1), 2, jnp.int32).at[:B, 0].set(s0.phase),
+        status=jnp.full((B_pad, 1), ITERATION_LIMIT,
+                        jnp.int32).at[:B, 0].set(s0.status),
+        iters=jnp.zeros((B_pad, 1), jnp.int32).at[:B, 0].set(s0.iters))
+
+
+def _pdhg_segment_kernel(steps_ref, A_ref, b_ref, c_ref, r_ref, s_ref,
+                         eta_ref, binf_ref, cinf_ref, ub_ref,
+                         x_ref, y_ref, xs_ref, ys_ref, xr_ref, yr_ref,
+                         cnt_ref, last_ref, prev_ref, om_ref, status_ref,
+                         iters_ref,
+                         x_out, y_out, xs_out, ys_out, xr_out, yr_out,
+                         cnt_out, last_out, prev_out, om_out, status_out,
+                         iters_out, it_out,
+                         *, tol: float, check_every: int):
+    """Resumable segment: up to ``steps`` check rounds of the *same* fused
+    round closure the whole-solve kernel runs, with the full iterate /
+    average / restart state streamed in and out so the compaction
+    scheduler's bucket gathers happen between kernel segments."""
+    steps = steps_ref[0, 0]
+    A = A_ref[...]
+    round_body = _make_pdhg_round(
+        A, b_ref[...], c_ref[...], r_ref[...], s_ref[...], eta_ref[...],
+        binf_ref[...], cinf_ref[...], ub_ref[...],
+        tol=tol, check_every=check_every)
+
+    def cond(carry):
+        it = carry[0]
+        status = carry[11]
+        return jnp.any(status == _RUNNING) & (it < steps)
+
+    init = (jnp.int32(0), x_ref[...], y_ref[...], xs_ref[...], ys_ref[...],
+            xr_ref[...], yr_ref[...], cnt_ref[...], last_ref[...],
+            prev_ref[...], om_ref[...], status_ref[...], iters_ref[...])
+    (it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
+     iters) = jax.lax.while_loop(cond, round_body, init)
+
+    x_out[...] = x
+    y_out[...] = y
+    xs_out[...] = xs
+    ys_out[...] = ys
+    xr_out[...] = xr
+    yr_out[...] = yr
+    cnt_out[...] = cnt
+    last_out[...] = last
+    prev_out[...] = prev
+    om_out[...] = om
+    status_out[...] = status
+    iters_out[...] = iters
+    it_out[...] = jnp.full(it_out.shape, it, jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "n", "tile_b", "tol", "check_every", "interpret"))
+def pdhg_segment_pallas(steps, state: PdhgTileState, *, m: int, n: int,
+                        tile_b: int, tol: float,
+                        check_every: int = CHECK_EVERY,
+                        interpret: bool = True):
+    """Run up to ``steps`` check rounds per tile and return
+    ``(new_state, executed_rounds)`` — the PDHG analogue of the simplex
+    ``segment_pallas`` protocol (early exit per tile once every LP in it is
+    terminal)."""
+    B, M, N = state.A.shape
+    grid = (B // tile_b,)
+    dtype = state.A.dtype
+    vec = lambda i: (i, 0)  # noqa: E731
+    kernel = functools.partial(_pdhg_segment_kernel, tol=float(tol),
+                               check_every=int(check_every))
+    spec_n = pl.BlockSpec((tile_b, N), vec)
+    spec_m = pl.BlockSpec((tile_b, M), vec)
+    spec_1 = pl.BlockSpec((tile_b, 1), vec)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # steps
+            pl.BlockSpec((tile_b, M, N), lambda i: (i, 0, 0)),
+            spec_m, spec_n, spec_m, spec_n,                  # b c rsc csc
+            spec_1, spec_1, spec_1,                          # eta binf cinf
+            spec_n,                                          # ub
+            spec_n, spec_m, spec_n, spec_m, spec_n, spec_m,  # x y xs ys xr yr
+            spec_1, spec_1, spec_1, spec_1, spec_1, spec_1,  # cnt..iters
+        ],
+        out_specs=[
+            spec_n, spec_m, spec_n, spec_m, spec_n, spec_m,
+            spec_1, spec_1, spec_1, spec_1, spec_1, spec_1,
+            spec_1,                                          # executed
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), dtype),
+            jax.ShapeDtypeStruct((B, M), dtype),
+            jax.ShapeDtypeStruct((B, N), dtype),
+            jax.ShapeDtypeStruct((B, M), dtype),
+            jax.ShapeDtypeStruct((B, N), dtype),
+            jax.ShapeDtypeStruct((B, M), dtype),
+            jax.ShapeDtypeStruct((B, 1), dtype),
+            jax.ShapeDtypeStruct((B, 1), dtype),
+            jax.ShapeDtypeStruct((B, 1), dtype),
+            jax.ShapeDtypeStruct((B, 1), dtype),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.full((1, 1), steps, jnp.int32), state.A, state.b, state.c,
+      state.rsc, state.csc, state.eta, state.binf, state.cinf, state.ub,
+      state.x, state.y, state.xs, state.ys, state.xr, state.yr, state.cnt,
+      state.last, state.prev, state.omega, state.status, state.iters)
+    (x, y, xs, ys, xr, yr, cnt, last, prev, om, status, iters, it) = outs
+    new = state._replace(x=x, y=y, xs=xs, ys=ys, xr=xr, yr=yr, cnt=cnt,
+                         last=last, prev=prev, omega=om, status=status,
+                         iters=iters)
+    return new, it
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n"))
+def _extract_pdhg_tile_jit(state: PdhgTileState, *, m: int, n: int):
+    """(x, obj, status, iters, y, z) in unscaled coordinates off the padded
+    iterates — the same epilogue as the whole-solve kernel."""
+    status = jnp.where(state.status[:, 0] == _RUNNING, ITERATION_LIMIT,
+                       state.status[:, 0])
+    opt = (status == OPTIMAL)[:, None]
+    obj = jnp.sum(state.c * state.x, axis=1)
+    z = (state.c - _mtv(state.A, state.y)) / state.csc
+    x = state.x * state.csc
+    y = state.y * state.rsc
+    return (x[:, :n], jnp.where(opt[:, 0], obj, jnp.nan),
+            status.astype(jnp.int8), state.iters[:, 0],
+            jnp.where(opt, y, jnp.nan)[:, :m],
+            jnp.where(opt, z, jnp.nan)[:, :n])

@@ -368,7 +368,7 @@ def test_registry_capabilities():
     assert backend_spec("revised").exact
     assert not backend_spec("pdhg").exact
     assert backend_spec("pdhg").supports_pallas
-    assert not backend_spec("revised").supports_pallas
+    assert backend_spec("revised").supports_pallas
 
 
 def test_pdhg_rejects_pricing_rules():
