@@ -107,6 +107,7 @@ from repro.core.compaction import auto_segment_k, total_elements, total_steps
 from repro.core.lp import default_max_iters
 from repro.core.pricing import PRICING_RULES
 from repro.core.simplex import tableau_elements
+from repro.obs.work import element_updates_lockstep, lockstep_steps
 
 try:  # package and direct-script execution
     from .common import timeit
@@ -164,7 +165,6 @@ def measure_backends(batch: LPBatch, sched, segment_k: int, iters: int) -> dict:
                   c=np.asarray(batch.c)[:B_rev])
     tab_status = np.asarray(sched.status)[:B_rev]
     tab_iters = np.asarray(sched.iterations)[:B_rev].astype(np.int64)
-    steps_tab = int(tab_iters.max()) + 1
     out = {
         "tableau": {
             "pivots_mean": float(sched.iterations.mean()),
@@ -181,7 +181,7 @@ def measure_backends(batch: LPBatch, sched, segment_k: int, iters: int) -> dict:
         stats = []
         res_sched = solve_batched_revised_compacted(
             sub, segment_k=segment_k, pricing=rule, stats_out=stats)
-        steps = int(res.iterations.max()) + 1
+        steps = lockstep_steps(res.iterations)
         per_pivot = revised_elements(m, n, partial=partial)
         out[f"revised_{rule}"] = {
             "B": B_rev,
@@ -200,7 +200,7 @@ def measure_backends(batch: LPBatch, sched, segment_k: int, iters: int) -> dict:
         # tableau-element-equivalent reduction at matching (lockstep)
         # granularity on the identical LP slice: steps x slots x per-pivot
         out[f"revised_{rule}"]["element_reduction_vs_tableau"] = (
-            steps_tab * B_rev * tableau_elements(m, n)
+            element_updates_lockstep(tab_iters, m, n)
             / max(1, out[f"revised_{rule}"]["elements_lockstep"]))
     return out
 
@@ -519,8 +519,8 @@ def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
     t_lock = timeit(lambda: solve_batched_jax(batch, phase_compaction=False),
                     warmup=0, iters=iters)  # first call above was the warmup
     piv = lock.iterations.astype(np.int64)
-    steps_lock = int(piv.max()) + 1
-    elems_lock = steps_lock * B * tableau_elements(m, n)
+    steps_lock = lockstep_steps(piv)
+    elems_lock = element_updates_lockstep(piv, m, n)
 
     # --- Level 1: phase-compacted two-loop solve ----------------------------
     pc = solve_batched_jax(batch)
@@ -533,10 +533,12 @@ def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
     elems_pc = total_elements(stats_pc)
 
     # --- Level 1+2: compaction-scheduled ------------------------------------
+    # telemetry=True: the counter plane sources the pivot accounting below,
+    # so BENCH rows and user-facing telemetry can never drift apart
     stats_sched = []
     sched = solve_batched_compacted(batch, segment_k=segment_k,
                                     compact_threshold=compact_threshold,
-                                    stats_out=stats_sched)
+                                    stats_out=stats_sched, telemetry=True)
     t_sched = timeit(lambda: solve_batched_compacted(
         batch, segment_k=segment_k, compact_threshold=compact_threshold),
         warmup=0, iters=iters)
@@ -584,12 +586,32 @@ def measure(m: int, n: int, B: int, *, segment_k: int | None = None,
     pdhg_row = (measure_pdhg(batch, sched, iters)
                 if backends in ("all", "pdhg") else {})
 
+    # telemetry-sourced counters from the scheduled run's SolveReport; the
+    # match flags assert they equal the bespoke LPResult-derived counts
+    rep = sched.stats
+    tel_piv = rep.iterations.astype(np.int64)
+    telemetry_row = {
+        "iterations_match_result": bool(
+            np.array_equal(rep.iterations,
+                           np.asarray(sched.iterations))),
+        "iterations_match_lockstep": bool(np.array_equal(tel_piv, piv)),
+        "useful_pivots": int(tel_piv.sum()),
+        "phase1_pivots_total": int(rep.total("phase1_pivots")),
+        "phase2_pivots_total": int(rep.total("phase2_pivots")),
+        "bound_flips_total": int(rep.total("bound_flips")),
+        "degenerate_pivots_total": int(rep.total("degenerate_pivots")),
+        "elements_lockstep_from_telemetry": element_updates_lockstep(
+            tel_piv, m, n),
+    }
+
     return {
         "m": m, "n": n, "B": B, "mixed": True,
         "segment_k": segment_k, "compact_threshold": compact_threshold,
-        "useful_pivots": int(piv.sum()),
-        "pivots_mean": float(piv.mean()), "pivots_max": int(piv.max()),
+        "useful_pivots": int(tel_piv.sum()),
+        "pivots_mean": float(tel_piv.mean()),
+        "pivots_max": int(tel_piv.max()),
         "statuses_identical": statuses_identical,
+        "telemetry": telemetry_row,
         "lockstep": {
             "steps": steps_lock,
             "elements": int(elems_lock),

@@ -74,6 +74,13 @@ older baselines).  On every matching workload the gate fails when:
   baseline - 0.02, or its iteration *cut* vs fixed goes negative (the
   linesearch must never cost more than the fixed step on the adversarial
   dense class);
+* a workload's ``telemetry`` row (the on-device counter plane sourcing the
+  pivot accounting, src/repro/obs/) regresses: the counters stop matching
+  ``LPResult.iterations`` or the lockstep accounting (hard invariants —
+  the match flags are recorded by the bench itself), the row vanishes from
+  a smoke run whose baseline recorded one, or ``useful_pivots`` grows more
+  than ``--rel-drop`` relative; baselines predating the telemetry plane
+  simply lack the row and pass untouched;
 * a ``general_workloads`` row (fixture-backed real instances through the
   MPS/canonicalization pipeline) regresses: per-backend status agreement
   with the float64 oracle drops below baseline - 0.02, relative objective
@@ -126,6 +133,38 @@ def gate(current: dict, baseline: dict, *, rel_drop: float = 0.2,
                 f"{tag}: reduction_scheduled {w['reduction_scheduled']:.3f} "
                 f"< {floor:.3f} (baseline {b['reduction_scheduled']:.3f} "
                 f"- {rel_drop:.0%})")
+
+        # ---- telemetry row (counter-plane self-consistency) ---------------
+        ct = w.get("telemetry")
+        if ct is not None:
+            # hard invariants regardless of baseline: the on-device counters
+            # must agree exactly with LPResult.iterations and the lockstep
+            # accounting — a false flag means the counter plane miscounts
+            if not ct.get("iterations_match_result", True):
+                failures.append(
+                    f"{tag}: telemetry counters diverged from "
+                    "LPResult.iterations (the on-device plane miscounts)")
+            if not ct.get("iterations_match_lockstep", True):
+                failures.append(
+                    f"{tag}: telemetry counters diverged from the lockstep "
+                    "pivot accounting")
+        bt = b.get("telemetry")
+        if bt is not None:
+            # baselines predating the telemetry plane lack the row and pass
+            # untouched; once recorded, a vanished row or growing pivot
+            # count gates here
+            if ct is None:
+                failures.append(
+                    f"{tag}: telemetry row missing from the smoke run "
+                    "(baseline recorded counter-plane data)")
+            else:
+                piv_ceiling = bt["useful_pivots"] * (1.0 + rel_drop)
+                if ct["useful_pivots"] > piv_ceiling:
+                    failures.append(
+                        f"{tag}: telemetry useful_pivots "
+                        f"{ct['useful_pivots']} > {piv_ceiling:.0f} "
+                        f"(baseline {bt['useful_pivots']} + {rel_drop:.0%} "
+                        "— the pivot paths got longer)")
 
         for rule, br in b.get("rules", {}).items():
             cr = w.get("rules", {}).get(rule)

@@ -14,7 +14,12 @@
 # (perturbed fixture trajectories re-solved from the previous step's
 # terminal state: each engine must at least halve re-solve work with
 # unchanged statuses/objectives), and the fast path an mps-roundtrip check
-# (parse fixtures, write, re-parse, assert equal).  The full legs start
+# (parse fixtures, write, re-parse, assert equal).  Every leg also runs the
+# telemetry smoke: the observability plane on a perturbed fixture batch —
+# off by default (stats None, answers unchanged when enabled), on-device
+# counters summing exactly to LPResult.iterations (and matching the f64
+# oracle's lanes on the exact engines), and a compacted+traced solve
+# exporting a valid Perfetto span tree.  The full legs start
 # with a pallas smoke block: the revised tile kernel and the PDHG segment
 # kernel (interpret=True) against their JAX engines — pivot-exactness for
 # the simplex kernel, tolerance agreement plus a completed bucket shrink
@@ -111,6 +116,66 @@ print("branch-and-bound smoke OK")
 EOF
 }
 
+telemetry_smoke() {
+  local backend="${1:-tableau}"
+  echo "== telemetry smoke (backend=$backend) =="
+  TELEMETRY_BACKEND="$backend" python - <<'EOF'
+# the observability plane on a perturbed fixture batch (seconds of work):
+# disabled by default (stats None, answers identical to the telemetry run),
+# counters summing exactly to LPResult.iterations, phase lanes matching the
+# float64 oracle on the exact engines, and a compacted+traced solve whose
+# span tree exports as valid Perfetto trace-event JSON
+import json, os, tempfile
+import numpy as np
+from repro.core import solve_batched, solve_batched_compacted
+from repro.core.reference import solve_batched_reference_detailed
+from repro.io.mps import fixture_path, perturbed_batch, read_mps
+from repro.obs import SpanTracer
+
+backend = os.environ["TELEMETRY_BACKEND"]
+g = read_mps(fixture_path("afiro"))
+gb = perturbed_batch(g, 8, np.random.default_rng(3))
+
+off = solve_batched(gb, backend=backend)
+assert off.stats is None, "telemetry off must leave LPResult.stats unset"
+on = solve_batched(gb, backend=backend, telemetry=True)
+rep = on.stats
+assert rep is not None, "telemetry=True produced no SolveReport"
+assert np.array_equal(np.asarray(off.status), np.asarray(on.status)) \
+    and np.allclose(np.asarray(off.objective), np.asarray(on.objective),
+                    equal_nan=True), \
+    "turning telemetry on changed the answers"
+assert np.array_equal(rep.iterations, np.asarray(on.iterations)), \
+    "telemetry iteration lanes do not sum to LPResult.iterations"
+assert int(rep.iterations.sum()) > 0, "counters never fired"
+if backend in ("tableau", "revised"):
+    oracle, p1 = solve_batched_reference_detailed(gb)
+    assert np.array_equal(rep.iterations, np.asarray(oracle.iterations)), \
+        f"{backend}: telemetry iterations diverged from the f64 oracle"
+    assert np.array_equal(rep.lane("phase1_iters"), np.asarray(p1)), \
+        f"{backend}: phase1_iters lane diverged from the f64 oracle"
+    tag = "lanes == f64 oracle"
+else:
+    kkt = rep.lane("kkt_gap")
+    assert np.all(np.isfinite(kkt)), "pdhg kkt_gap lane not finite"
+    tag = "kkt lanes finite"
+
+tracer = SpanTracer()
+solve_batched_compacted(gb, backend=backend, telemetry=True, tracer=tracer)
+assert tracer.roots, "compacted solve recorded no spans"
+with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+    path = f.name
+tracer.to_perfetto(path)
+events = json.load(open(path))["traceEvents"]
+os.unlink(path)
+assert any(e.get("name", "").startswith("segment") for e in events), \
+    "Perfetto export lost the segment spans"
+print(f"  {backend}: {int(rep.iterations.sum())} iterations counted, "
+      f"{tag}, {len(events)} trace events")
+print("telemetry smoke OK")
+EOF
+}
+
 pallas_smoke() {
   echo "== pallas kernel smoke =="
   python - <<'EOF'
@@ -157,6 +222,7 @@ if [[ "$FAST" == 1 ]]; then
   python -m pytest -x -q
   mps_roundtrip_smoke
   bnb_smoke
+  telemetry_smoke tableau
   echo "ALL CHECKS PASSED"
   exit 0
 fi
@@ -166,6 +232,8 @@ pallas_smoke
 for backend in $BACKENDS; do
   echo "== tier-1 pytest (backend=$backend) =="
   python -m pytest -x -q
+
+  telemetry_smoke "$backend"
 
   smoke="/tmp/pivot_work_smoke_${backend}.json"
   echo "== pivot-work + pricing smoke (backend=$backend) =="
@@ -184,6 +252,13 @@ for w in d["workloads"]:
             f"pricing rule {rule} diverged on statuses at {w['m']}x{w['n']}"
     assert w["rules"]["steepest_edge"]["pivot_cut_vs_dantzig"] > 0.0, \
         f"steepest_edge did not cut pivots at {w['m']}x{w['n']}"
+    # telemetry smoke: the counter plane now sources the pivot accounting —
+    # its lanes must match both LPResult.iterations and the lockstep count
+    tel = w["telemetry"]
+    assert tel["iterations_match_result"], \
+        f"telemetry iterations != LPResult.iterations at {w['m']}x{w['n']}"
+    assert tel["iterations_match_lockstep"], \
+        f"telemetry iterations != lockstep accounting at {w['m']}x{w['n']}"
     # backend smoke: the revised engine must agree with the tableau engine
     # on every status, monolithic and through the compaction scheduler
     for name, bb in w.get("backends", {}).items():
@@ -286,6 +361,10 @@ for gw in d.get("general_workloads", []):
             f"{bb['rel_obj_err']:.2e}"
 print("pivot-work smoke OK:",
       ", ".join(f"{w['m']}x{w['n']}: x{w['reduction_scheduled']:.2f}"
+                for w in d["workloads"]))
+print("telemetry smoke OK:",
+      ", ".join(f"{w['m']}x{w['n']}: {w['telemetry']['useful_pivots']} pivots "
+                "counted on-device"
                 for w in d["workloads"]))
 print("pricing smoke OK:",
       ", ".join(f"{w['m']}x{w['n']}: se cut "

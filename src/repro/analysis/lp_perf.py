@@ -77,6 +77,7 @@ from repro.core.compaction import next_bucket
 from repro.core.pricing import PRICING_RULES, partial_priced_candidates
 from repro.core.revised import auto_refactor_period, revised_elements  # noqa: F401  (re-export: the element-update side of the model)
 from repro.core.simplex import flops_per_pivot, tableau_elements
+from repro.obs.work import element_updates_lockstep  # noqa: F401  (re-export: the shared lockstep accounting — benchmarks/pivot_work.py uses the same helper)
 
 
 def executed_pivots(iters: np.ndarray, group: int) -> float:
@@ -85,13 +86,6 @@ def executed_pivots(iters: np.ndarray, group: int) -> float:
     pad = (-n) % group
     arr = np.concatenate([iters, np.zeros(pad, iters.dtype)])
     return float(arr.reshape(-1, group).max(axis=1).sum() * group)
-
-
-def element_updates_lockstep(iters: np.ndarray, m: int, n: int) -> float:
-    """Seed lockstep solver: every global step updates every LP's full
-    tableau (masked no-ops included) until the slowest LP terminates."""
-    steps = int(iters.max()) + 1  # +1: the final all-converged check
-    return float(steps * len(iters) * tableau_elements(m, n))
 
 
 def element_updates_phase_compacted(p1_iters: np.ndarray, iters: np.ndarray,

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.report import SolveReport
 from .compaction import solve_batched_compacted
 from .forms import ensure_canonical, finish_result, prepare_warm
 from .lp import (LPBatch, LPResult, WarmStart, canonicalize_backend,
@@ -107,6 +108,12 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     shape (Eq. 5 budgets the canonical tableau) — and the concatenated
     result is recovered into original coordinates at the end;
     ``presolve``/``scale`` control the canonicalization.
+
+    ``telemetry=True`` (forwarded through ``solver_kwargs`` — every built-in
+    engine accepts it) turns on the per-LP counter plane (``repro.obs``);
+    each chunk's ``LPResult.stats`` SolveReport is concatenated, chunk
+    results are unpermuted/unpadded alongside the other per-LP leaves, and
+    the merged report lands on the returned ``LPResult.stats``.
 
     ``warm`` (core/lp.py WarmStart, usually ``parent.warm_start()``) seeds
     every engine from a parent solve; its per-LP leaves are permuted and
@@ -229,7 +236,8 @@ def solve_batched(batch: LPBatch, *, solver: Optional[Callable] = None,
     res = LPResult(x=cat("x"), objective=cat("objective"),
                    status=cat("status"), iterations=cat("iterations"),
                    y=cat("y"), z=cat("z"),
-                   warm=WarmStart.concat([r.warm for r in pending]))
+                   warm=WarmStart.concat([r.warm for r in pending]),
+                   stats=SolveReport.concat([r.stats for r in pending]))
     return finish_result(rec, _unpermute(_unpad(res, unpad_B), perm))
 
 
@@ -241,7 +249,8 @@ def _unpad(res: LPResult, B) -> LPResult:
     return LPResult(x=take(res.x), objective=take(res.objective),
                     status=take(res.status), iterations=take(res.iterations),
                     y=take(res.y), z=take(res.z),
-                    warm=None if res.warm is None else res.warm.slice(0, B))
+                    warm=None if res.warm is None else res.warm.slice(0, B),
+                    stats=None if res.stats is None else res.stats.slice(0, B))
 
 
 def _unpermute(res: LPResult, perm) -> LPResult:
@@ -255,4 +264,5 @@ def _unpermute(res: LPResult, perm) -> LPResult:
                     status=take(res.status),
                     iterations=take(res.iterations),
                     y=take(res.y), z=take(res.z),
-                    warm=None if res.warm is None else res.warm.take(inv))
+                    warm=None if res.warm is None else res.warm.take(inv),
+                    stats=None if res.stats is None else res.stats.take(inv))

@@ -56,7 +56,7 @@ from typing import List, Optional
 import numpy as np
 
 from .batching import solve_batched
-from .compaction import FrontierScheduler
+from .compaction import FrontierScheduler, _maybe_span
 from .forms import (GeneralLPBatch, Recovery, canonicalize, general_violation,
                     rebind_bounds)
 from .lp import (INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED, LPBatch,
@@ -198,7 +198,7 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
                      max_nodes: int = 10_000,
                      gap_tol: float = 1e-6, int_tol: float = 1e-5,
                      bound_slack: float = 1e-5, feas_accept: float = 1e-5,
-                     pricing: str = "dantzig",
+                     pricing: str = "dantzig", tracer=None,
                      **solver_kwargs) -> BnBResult:
     """Solve the mixed-integer program ``g`` (integer columns per
     ``integer``/``g.integer``) by batched LP-based branch-and-bound.
@@ -225,6 +225,11 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
     ``int_tol`` decides integrality of a relaxation solution and
     ``feas_accept`` re-checks the rounded candidate's original-space
     feasibility before it may become the incumbent.
+
+    ``tracer`` (an `obs.SpanTracer`) records node lifecycle events — one
+    ``node`` event per fathom/branch decision with the outcome and depth —
+    plus dispatch spans; in ``mode="stream"`` it is also handed to the
+    `FrontierScheduler` for admit/retire lane events.
     """
     spec = backend_spec(backend)
     if mode not in MODES:
@@ -265,6 +270,11 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
              "unbounded": False, "nodes": 0, "dispatches": 0,
              "lp_iters": 0, "max_depth": 0}
 
+    def note(outcome: str, nd: "_Node", **kw):
+        if tracer is not None:
+            tracer.event("node", outcome=outcome, depth=nd.depth,
+                         bound=float(nd.bound), **kw)
+
     def prune_eps():
         inc = state["incumbent"]
         return gap_tol * max(1.0, abs(inc)) if np.isfinite(inc) else 0.0
@@ -294,8 +304,10 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
                  node_g_row, y_row, warm: Optional[WarmStart]):
         """Fathom/branch one solved node (x/obj/y in original coords)."""
         if status == INFEASIBLE:
+            note("infeasible", nd)
             return
         if status == UNBOUNDED:
+            note("unbounded", nd)
             if nd.depth == 0:
                 state["unbounded"] = True
             else:          # a child more constrained than a bounded root:
@@ -306,9 +318,11 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
             # split instead (always valid), cold-start the children
             unfixed = int_cols[nd.lb[int_cols] < nd.ub[int_cols]]
             if not len(unfixed):
+                note("limit_stuck", nd)
                 state["proven"] = False
                 return
             j = int(unfixed[0])
+            note("limit_split", nd, column=j)
             _branch(nd, j, np.floor((nd.lb[j] + nd.ub[j]) / 2.0),
                     nd.bound, None)
             return
@@ -320,6 +334,7 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
             nb = mval(sb) if np.isfinite(sb) else nd.bound
         nb = max(nb, nd.bound)
         if nb >= state["incumbent"] - prune_eps():
+            note("fathomed", nd, node_bound=float(nb))
             return                          # fathom by bound
         xi = x[int_cols]
         frac = np.abs(xi - np.round(xi))
@@ -331,11 +346,16 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
                 v = mval(float(g.objective_value(cand[None])[0]))
                 if v < state["incumbent"]:
                     state["incumbent"], state["x"] = v, cand
+                    note("incumbent", nd, objective=mval(v))
+                else:
+                    note("integral", nd)
             else:                           # rounding broke feasibility —
+                note("round_infeasible", nd)
                 state["proven"] = False     # pathological; don't fabricate
             return
         j = int(int_cols[int(np.argmax(frac))])
         split = float(np.clip(np.floor(x[j]), nd.lb[j], nd.ub[j] - 1.0))
+        note("branched", nd, column=j, split=split, node_bound=float(nb))
         _branch(nd, j, split, nb, warm if warm_start else None)
 
     # ---- frontier loop ----------------------------------------------------
@@ -352,9 +372,11 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
                 ws = WarmStart.concat(
                     [nd.warm if nd.warm is not None
                      else _cold_carrier(lp0.m, lp0.n) for nd in take])
-            res_can = solve_batched(lp_f, backend=backend, pricing=pricing,
-                                    warm=ws, pad_to_bucket=True,
-                                    **solver_kwargs)
+            with _maybe_span(tracer, "bnb_dispatch", nodes=len(take),
+                             open_nodes=len(open_nodes)):
+                res_can = solve_batched(lp_f, backend=backend,
+                                        pricing=pricing, warm=ws,
+                                        pad_to_bucket=True, **solver_kwargs)
             res = rec_f.recover(res_can)
             state["nodes"] += len(take)
             state["dispatches"] += 1
@@ -375,7 +397,7 @@ def branch_and_bound(g: GeneralLPBatch, *, integer=None,
     else:                                   # mode == "stream"
         sched = FrontierScheduler(
             lp0.m, lp0.n, lanes=(frontier if lanes is None else lanes),
-            pricing=pricing,
+            pricing=pricing, tracer=tracer,
             **{k: v for k, v in solver_kwargs.items()
                if k in ("dtype", "tol", "feas_tol", "max_iters",
                         "segment_k", "stats_out")})

@@ -34,14 +34,18 @@ phase-compacted tableau (stage "p2") — see core/simplex.py for Level 1.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-from typing import List, NamedTuple, Optional
+import time
+from typing import Any, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.report import report_from_counters
+from ..obs.telemetry import init_telemetry, tel_to_numpy, zeros_numpy
 from .forms import ensure_canonical, finish_result, prepare_warm
 from .lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult, WarmStart,
                  canonicalize_backend, default_max_iters, resolve_backend)
@@ -74,6 +78,9 @@ class CompactionState(NamedTuple):
     flip: jax.Array    # (B, n) bool complement flags (bounded variables)
     ub: jax.Array      # (B, n) upper bounds (+inf = unbounded)
     thr: jax.Array     # per-LP phase-1 feasibility threshold
+    tel: Any = None    # obs.TelemetryState lanes or None (empty subtree:
+                       #  the telemetry-off trace is unchanged); rides the
+                       #  bucket gathers like every other leaf
 
 
 def auto_segment_k(m: int, n: int) -> int:
@@ -189,10 +196,10 @@ def segment_phase1(state: CompactionState, steps, *, m: int, n: int,
         s, it = carry
         ns = simplex_step(
             SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w,
-                         s.flip, s.ub, it),
+                         s.flip, s.ub, it, s.tel),
             n=n, m=m, tol=tol, feas_thr=s.thr, rule=rule)
         return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
-                               ns.w, ns.flip, ns.ub, s.thr), it + 1
+                               ns.w, ns.flip, ns.ub, s.thr, ns.tel), it + 1
 
     state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, it
@@ -210,10 +217,10 @@ def segment_phase2(state: CompactionState, steps, *, m: int, n: int,
         s, it = carry
         ns = phase2_step(
             SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w,
-                         s.flip, s.ub, it),
+                         s.flip, s.ub, it, s.tel),
             n=n, m=m, tol=tol, rule=rule)
         return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
-                               ns.w, ns.flip, ns.ub, s.thr), it + 1
+                               ns.w, ns.flip, ns.ub, s.thr, ns.tel), it + 1
 
     state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, it
@@ -237,10 +244,10 @@ def segment_combined(state: CompactionState, steps, *, m: int, n: int,
         s, it = carry
         ns = simplex_step(
             SimplexState(s.T, s.basis, s.phase, s.status, s.iters, s.w,
-                         s.flip, s.ub, it),
+                         s.flip, s.ub, it, s.tel),
             n=n, m=m, tol=tol, feas_thr=s.thr, rule=rule)
         return CompactionState(ns.T, ns.basis, ns.phase, ns.status, ns.iters,
-                               ns.w, ns.flip, ns.ub, s.thr), it + 1
+                               ns.w, ns.flip, ns.ub, s.thr, ns.tel), it + 1
 
     state, it = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, it
@@ -306,8 +313,8 @@ class JaxBackend:
         self.dtype = dtype
         self.rule = canonicalize_rule(pricing)
 
-    def init(self, A, b, c, ub=None, warm: WarmStart | None = None
-             ) -> CompactionState:
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None,
+             telemetry: bool = False) -> CompactionState:
         T, basis, phase = build_tableau_jax(A, b, c)
         B = T.shape[0]
         if ub is None:
@@ -342,7 +349,8 @@ class JaxBackend:
             T=T, basis=basis, phase=phase,
             status=jnp.full((B,), _RUNNING, jnp.int32),
             iters=jnp.zeros((B,), jnp.int32), w=w,
-            flip=flip, ub=ub, thr=thr)
+            flip=flip, ub=ub, thr=thr,
+            tel=init_telemetry(B) if telemetry else None)
 
     def run_phase1(self, state, steps):
         state, it = _segment_phase1_jit(state, jnp.int32(steps), m=self.m,
@@ -409,9 +417,18 @@ class JaxBackend:
 # The scheduler
 # ---------------------------------------------------------------------------
 
+def _maybe_span(tracer, name, **args):
+    """``tracer.span`` when a tracer is attached, a no-op context otherwise
+    (run_schedule and the frontier scheduler trace opportunistically)."""
+    if tracer is None:
+        return contextlib.nullcontext()
+    return tracer.span(name, **args)
+
+
 def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
                  n: int, *, max_iters: int, config: CompactionConfig,
-                 stats_out: Optional[List[SegmentStat]] = None) -> LPResult:
+                 stats_out: Optional[List[SegmentStat]] = None,
+                 tracer=None) -> LPResult:
     """Drive a backend through segmented stage-1 (full tableau) and stage-2
     (phase-compacted) solves with active-set compaction in between.
 
@@ -419,7 +436,16 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
     (-1 for padding slots, which must already be terminal).  Results land in
     dense (B, ...) output arrays; retired LPs are flushed right before every
     compaction, survivors at the end.
+
+    When the backend state carries telemetry lanes (``state.tel`` not None)
+    the per-LP counters are flushed to host buffers alongside the results —
+    each LP's lanes are read at its retirement gather, so counters survive
+    the bucket shrinks — and the returned ``LPResult.stats`` holds the
+    assembled `obs.SolveReport`.  ``tracer`` (an `obs.SpanTracer`) records
+    segment / bucket-gather spans and flush events with bucket sizes and
+    survivor counts.
     """
+    t_start = time.perf_counter()
     np_dtype = np.dtype(jnp.zeros((), backend.dtype).dtype)
     out_x = np.zeros((B, n), np_dtype)
     out_obj = np.full((B,), np.nan, np_dtype)
@@ -428,6 +454,8 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
     # dual-certificate buffers sized lazily off the first flush (m is not a
     # scheduler parameter; every backend now extracts a 6-tuple)
     duals = {}
+    tel_host = (zeros_numpy(B)
+                if getattr(state, "tel", None) is not None else None)
 
     def flush(state, orig, stage):
         x, obj, status, iters, y, z = backend.extract(state, stage)
@@ -442,6 +470,12 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
             duals["z"] = np.full((B, z.shape[1]), np.nan, np_dtype)
         duals["y"][oi] = y[sel]
         duals["z"][oi] = z[sel]
+        tel = getattr(state, "tel", None)
+        if tel_host is not None and tel is not None:
+            for name, vals in tel_to_numpy(tel).items():
+                tel_host[name][oi] = vals[sel]
+        if tracer is not None:
+            tracer.event("flush", stage=stage, lps=int(sel.sum()))
 
     def maybe_compact(state, orig, stage):
         """Returns (state, orig, status_host) — the single D2H status fetch
@@ -456,15 +490,19 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
         if bucket >= cur or n_run >= config.compact_threshold * cur:
             return state, orig, status
         # retire everyone's current results, then gather the survivors
-        flush(state, orig, stage)
-        idx = np.nonzero(running)[0]
-        pad = bucket - len(idx)
-        fill = idx[np.arange(pad) % len(idx)]
-        take_idx = np.concatenate([idx, fill])
-        state = backend.take(state, take_idx)
-        valid = np.arange(bucket) < len(idx)
-        state = backend.deactivate(state, valid)
-        orig = np.where(valid, np.concatenate([orig[idx], orig[fill]]), -1)
+        with _maybe_span(tracer, "bucket_gather", stage=stage,
+                         src_bucket=cur, dst_bucket=bucket,
+                         survivors=n_run):
+            flush(state, orig, stage)
+            idx = np.nonzero(running)[0]
+            pad = bucket - len(idx)
+            fill = idx[np.arange(pad) % len(idx)]
+            take_idx = np.concatenate([idx, fill])
+            state = backend.take(state, take_idx)
+            valid = np.arange(bucket) < len(idx)
+            state = backend.deactivate(state, valid)
+            orig = np.where(valid,
+                            np.concatenate([orig[idx], orig[fill]]), -1)
         # post-gather host status is known without another transfer:
         # survivors are RUNNING, fill slots were just deactivated
         status = np.where(valid, _RUNNING, ITERATION_LIMIT)
@@ -472,21 +510,32 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
 
     def run_stage(state, orig, stage, runner, pending, budget):
         status = backend.status_host(state)
+        seg = 0
         while budget > 0:
             if not pending(state, status):
                 break
             steps = min(config.segment_k, budget)
             bucket = len(orig)
-            state, done = runner(state, steps)
-            budget -= max(1, done)
-            state, orig, status = maybe_compact(state, orig, stage)
+            with _maybe_span(tracer, f"segment[{stage}]", k=seg,
+                             bucket=bucket, max_steps=steps) as sp:
+                state, done = runner(state, steps)
+                budget -= max(1, done)
+                # a triggered bucket gather nests under its segment span
+                state, orig, status = maybe_compact(state, orig, stage)
+                survivors = int((status == _RUNNING).sum())
+                if sp is not None:
+                    # lane occupancy after the (possibly compacted) segment
+                    sp.args["steps"] = int(done)
+                    sp.args["survivors"] = survivors
+                    sp.args["occupancy"] = survivors / max(1, len(orig))
             if stats_out is not None:
                 # survivor count is compaction-invariant (gathers only drop
                 # terminal LPs), so the post-compact host status serves both
                 stats_out.append(SegmentStat(
                     stage=stage, bucket=bucket, steps=done,
                     elements=done * bucket * backend.elements_per_step(stage),
-                    survivors=int((status == _RUNNING).sum())))
+                    survivors=survivors))
+            seg += 1
         return state, orig, budget
 
     def pending_p1(state, status):
@@ -509,8 +558,15 @@ def run_schedule(backend, state: CompactionState, orig: np.ndarray, B: int,
                                pending_p2, budget)
 
     flush(state, orig, "p2")
+    stats = None
+    if tel_host is not None:
+        stats = report_from_counters(
+            tel_host, wall_s=time.perf_counter() - t_start,
+            backend=type(backend).__name__,
+            spans=tuple(tracer.roots) if tracer is not None else ())
     return LPResult(x=out_x, objective=out_obj, status=out_status,
-                    iterations=out_iters, y=duals["y"], z=duals["z"])
+                    iterations=out_iters, y=duals["y"], z=duals["z"],
+                    stats=stats)
 
 
 def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
@@ -524,7 +580,9 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
                             stats_out: Optional[List[SegmentStat]] = None,
                             presolve: bool = True,
                             scale: Optional[bool] = None,
-                            warm: WarmStart | None = None) -> LPResult:
+                            warm: WarmStart | None = None,
+                            telemetry: bool = False,
+                            tracer=None) -> LPResult:
     """Solve a batch with the two-level work-elimination engine (phase
     compaction + active-set compaction scheduler) on the pure-JAX backend.
     Accepts a GeneralLPBatch like every solver entry point (canonicalize on
@@ -551,8 +609,10 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
             batch, dtype=dtype, tol=tol, feas_tol=feas_tol,
             max_iters=max_iters, segment_k=segment_k,
             compact_threshold=compact_threshold, pricing=pricing,
-            stats_out=stats_out, presolve=presolve, scale=scale, warm=warm)
-    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
+            stats_out=stats_out, presolve=presolve, scale=scale, warm=warm,
+            telemetry=telemetry, tracer=tracer)
+    with _maybe_span(tracer, "canonicalize"):
+        batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     if max_iters is None:
         max_iters = default_max_iters(m, n)
@@ -563,11 +623,14 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
     if feas_tol is None:
         feas_tol = 1e-5 if dtype == jnp.float32 else 1e-7
     backend = JaxBackend(m, n, tol, feas_tol, dtype, pricing=pricing)
-    state = backend.init(jnp.asarray(batch.A, dtype),
-                         jnp.asarray(batch.b, dtype),
-                         jnp.asarray(batch.c, dtype),
-                         ub=jnp.asarray(batch.upper_bounds(), dtype),
-                         warm=prepare_warm(warm, rec, batch))
+    with _maybe_span(tracer, "dispatch", backend="tableau", B=batch.batch,
+                     m=m, n=n):
+        state = backend.init(jnp.asarray(batch.A, dtype),
+                             jnp.asarray(batch.b, dtype),
+                             jnp.asarray(batch.c, dtype),
+                             ub=jnp.asarray(batch.upper_bounds(), dtype),
+                             warm=prepare_warm(warm, rec, batch),
+                             telemetry=telemetry)
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
     cfg = CompactionConfig(
@@ -575,9 +638,10 @@ def solve_batched_compacted(batch: LPBatch, *, dtype=jnp.float32,
         compact_threshold=resolve_compact_threshold(compact_threshold,
                                                     int(segment_k)),
         pad_multiple=backend.pad_multiple)
-    return finish_result(rec, run_schedule(backend, state, orig, B, n,
-                                           max_iters=int(max_iters),
-                                           config=cfg, stats_out=stats_out))
+    res = run_schedule(backend, state, orig, B, n, max_iters=int(max_iters),
+                       config=cfg, stats_out=stats_out, tracer=tracer)
+    with _maybe_span(tracer, "recover"):
+        return finish_result(rec, res)
 
 
 # ---------------------------------------------------------------------------
@@ -628,7 +692,8 @@ class FrontierScheduler:
                  max_iters: Optional[int] = None,
                  segment_k: Optional[int] = None,
                  pricing: str = "dantzig",
-                 stats_out: Optional[List[SegmentStat]] = None):
+                 stats_out: Optional[List[SegmentStat]] = None,
+                 tracer=None):
         if lanes < 1:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
         self.m, self.n = int(m), int(n)
@@ -643,6 +708,7 @@ class FrontierScheduler:
         self.segment_k = int(segment_k if segment_k is not None
                              else auto_segment_k(self.m, self.n))
         self.stats_out = stats_out
+        self.tracer = tracer
         self.backend = JaxBackend(self.m, self.n, tol, feas_tol, dtype,
                                   pricing=pricing)
 
@@ -676,6 +742,11 @@ class FrontierScheduler:
             idx = free[:j]
             state = be.scatter(state, new_state, idx)
             tags[idx] = new_tags
+        if self.tracer is not None:
+            self.tracer.event("admit", lps=int(j),
+                              tags=[int(t) for t in new_tags],
+                              occupied=int((tags >= 0).sum()),
+                              lanes=self.lanes)
         return state, tags
 
     def run(self, source, sink) -> int:
@@ -689,7 +760,12 @@ class FrontierScheduler:
             active = tags >= 0
             if not active.any():
                 return retired
-            state, done = be.run_combined(state, self.segment_k)
+            with _maybe_span(self.tracer, "segment[frontier]",
+                             lanes=self.lanes,
+                             occupied=int(active.sum())) as sp:
+                state, done = be.run_combined(state, self.segment_k)
+                if sp is not None:
+                    sp.args["steps"] = int(done)
             status = be.status_host(state)
             # per-LP budget: over-budget lanes retire as ITERATION_LIMIT
             over = (active & (status == _RUNNING)
@@ -708,6 +784,10 @@ class FrontierScheduler:
                 basis = np.asarray(state.basis)
                 flip = np.asarray(state.flip)
                 for i in np.flatnonzero(done_mask):
+                    if self.tracer is not None:
+                        self.tracer.event("retire", tag=int(tags[i]),
+                                          lane=int(i), status=int(st[i]),
+                                          iterations=int(it[i]))
                     sink(int(tags[i]), {
                         "x": x[i], "objective": obj[i],
                         "status": int(st[i]), "iterations": int(it[i]),

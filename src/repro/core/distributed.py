@@ -31,6 +31,7 @@ dimension to shard).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -39,6 +40,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from ..obs.report import report_from_counters
+from ..obs.telemetry import tel_to_numpy
+from .compaction import _maybe_span
 from .forms import ensure_canonical, finish_result
 from .lp import (LPBatch, LPResult, OPTIMAL, ITERATION_LIMIT,
                  canonicalize_backend, default_max_iters)
@@ -74,25 +78,29 @@ def _pad_batch(batch: LPBatch, multiple: int):
 
 def _solve_local(A, b, c, ub, *, m, n, max_iters, tol, feas_tol,
                  pricing="dantzig", backend="tableau",
-                 refactor_period=None):
+                 refactor_period=None, telemetry=False):
     """The shared solve body — tableau (phase-compacted two-phase), revised
     (basis-factor updates) or pdhg (restarted first-order iterations) —
     callable under shard_map (local shapes) or pjit (global shapes).  All
     three return the same (x, obj, status, iters, y, z) 6-tuple, so the
-    sharding specs are backend-independent."""
+    sharding specs are backend-independent.  ``telemetry=True`` appends the
+    per-LP `obs.TelemetryState` counter lanes as a seventh member (every
+    lane is batched on axis 0, so one extra batch-sharded spec covers the
+    whole subtree)."""
     if backend == "revised":
         return solve_revised(
             A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
             feas_tol=feas_tol,
             refactor_period=int(refactor_period or auto_refactor_period(m, n)),
-            pricing=pricing)
+            pricing=pricing, telemetry=telemetry)
     if backend == "pdhg":
         from .pdhg import _check_pdhg_pricing
         _check_pdhg_pricing(pricing)   # same contract as every pdhg entry
         return solve_pdhg(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
-                          feas_tol=feas_tol)
+                          feas_tol=feas_tol, telemetry=telemetry)
     return solve_two_phase(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
-                           feas_tol=feas_tol, pricing=pricing)
+                           feas_tol=feas_tol, pricing=pricing,
+                           telemetry=telemetry)
 
 
 def _backend_defaults(backend: str, max_iters, tol, m: int, n: int, dtype):
@@ -129,7 +137,8 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                max_iters: Optional[int] = None, lower_only: bool = False,
                pricing: str = "dantzig", backend: str = "tableau",
                refactor_period: Optional[int] = None,
-               presolve: bool = True, scale: Optional[bool] = None):
+               presolve: bool = True, scale: Optional[bool] = None,
+               telemetry: bool = False):
     """Lockstep global solve: batch sharded over all mesh axes, single global
     while_loop (the paper-faithful distributed baseline).  ``pricing``
     selects the entering-column rule (core/pricing.py); the per-LP weights
@@ -149,20 +158,33 @@ def solve_pjit(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
     fn = jax.jit(
         functools.partial(_solve_local, m=m, n=n, max_iters=max_iters,
                           tol=tol, feas_tol=feas_tol, pricing=pricing,
-                          backend=backend, refactor_period=refactor_period),
+                          backend=backend, refactor_period=refactor_period,
+                          telemetry=telemetry),
         in_shardings=(shard, shard, shard, shard),
-        out_shardings=(shard,) * 6,
+        # the telemetry subtree's lanes are all batch-on-axis-0, so one
+        # extra batch-sharded entry (a pytree prefix) covers every lane
+        out_shardings=(shard,) * (7 if telemetry else 6),
     )
     if lower_only:
         return fn.lower(jax.ShapeDtypeStruct(A.shape, A.dtype),
                         jax.ShapeDtypeStruct(b.shape, b.dtype),
                         jax.ShapeDtypeStruct(c.shape, c.dtype),
                         jax.ShapeDtypeStruct(ub.shape, ub.dtype))
-    x, obj, status, iters, y, z = fn(A, b, c, ub)
+    t0 = time.perf_counter()
+    out = fn(A, b, c, ub)
+    x, obj, status, iters, y, z = out[:6]
+    stats = None
+    if telemetry:
+        jax.block_until_ready(out[6])
+        counters = {k: v[:orig] for k, v in tel_to_numpy(out[6]).items()}
+        stats = report_from_counters(counters,
+                                     wall_s=time.perf_counter() - t0,
+                                     backend=backend)
     res = LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
                    status=np.asarray(status)[:orig],
                    iterations=np.asarray(iters)[:orig],
-                   y=np.asarray(y)[:orig], z=np.asarray(z)[:orig])
+                   y=np.asarray(y)[:orig], z=np.asarray(z)[:orig],
+                   stats=stats)
     return finish_result(rec, res)
 
 
@@ -305,7 +327,8 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                     pricing: str = "dantzig", stats_out=None,
                     backend: str = "tableau",
                     refactor_period: Optional[int] = None,
-                    presolve: bool = True, scale: Optional[bool] = None):
+                    presolve: bool = True, scale: Optional[bool] = None,
+                    telemetry: bool = False, tracer=None):
     """Per-shard termination: each chip solves its local LPs to completion
     independently (no cross-chip sync per pivot).
 
@@ -352,7 +375,8 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
         state = runner.init(jnp.asarray(padded.A, dtype),
                             jnp.asarray(padded.b, dtype),
                             jnp.asarray(padded.c, dtype),
-                            ub=jnp.asarray(padded.upper_bounds(), dtype))
+                            ub=jnp.asarray(padded.upper_bounds(), dtype),
+                            telemetry=telemetry)
         B_pad = padded.batch
         orig = np.concatenate(
             [np.arange(orig_B), np.full(B_pad - orig_B, -1)]).astype(np.int64)
@@ -365,18 +389,21 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
             pad_multiple=runner.pad_multiple)
         return finish_result(rec, run_schedule(runner, state, orig, orig_B, n,
                                                max_iters=budget, config=cfg,
-                                               stats_out=stats_out))
+                                               stats_out=stats_out,
+                                               tracer=tracer))
 
     A, b, c, ub, axes, orig, _ = _prep(batch, mesh, dtype)
     spec = P(axes)
 
     local = functools.partial(_solve_local, m=m, n=n, max_iters=max_iters,
                               tol=tol, feas_tol=feas_tol, pricing=pricing,
-                              backend=backend, refactor_period=refactor_period)
+                              backend=backend, refactor_period=refactor_period,
+                              telemetry=telemetry)
     fn = jax.jit(shard_map(
         local, mesh=mesh,
         in_specs=(spec, spec, spec, spec),
-        out_specs=(spec,) * 6,
+        # one extra batch-sharded prefix entry covers every telemetry lane
+        out_specs=(spec,) * (7 if telemetry else 6),
         check_rep=False,
     ))
     if lower_only:
@@ -384,9 +411,22 @@ def solve_shard_map(batch: LPBatch, mesh: Mesh, *, dtype=jnp.float32,
                         jax.ShapeDtypeStruct(b.shape, b.dtype),
                         jax.ShapeDtypeStruct(c.shape, c.dtype),
                         jax.ShapeDtypeStruct(ub.shape, ub.dtype))
-    x, obj, status, iters, y, z = fn(A, b, c, ub)
+    t0 = time.perf_counter()
+    with _maybe_span(tracer, "dispatch", backend=backend, B=batch.batch,
+                     m=m, n=n):
+        out = fn(A, b, c, ub)
+        x, obj, status, iters, y, z = out[:6]
+        stats = None
+        if telemetry:
+            jax.block_until_ready(out[6])
+            counters = {k: v[:orig]
+                        for k, v in tel_to_numpy(out[6]).items()}
+            stats = report_from_counters(counters,
+                                         wall_s=time.perf_counter() - t0,
+                                         backend=backend)
     res = LPResult(x=np.asarray(x)[:orig], objective=np.asarray(obj)[:orig],
                    status=np.asarray(status)[:orig],
                    iterations=np.asarray(iters)[:orig],
-                   y=np.asarray(y)[:orig], z=np.asarray(z)[:orig])
+                   y=np.asarray(y)[:orig], z=np.asarray(z)[:orig],
+                   stats=stats)
     return finish_result(rec, res)

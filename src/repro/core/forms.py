@@ -456,7 +456,7 @@ class Recovery:
             warm = dataclasses.replace(warm, x=wx, y=wy)
         return LPResult(x=x, objective=obj, status=status,
                         iterations=np.asarray(res.iterations), y=y, z=z,
-                        warm=warm)
+                        warm=warm, stats=res.stats)
 
 
 def canonicalize(g: GeneralLPBatch, *, presolve: bool = True,

@@ -454,6 +454,10 @@ class LPResult:
     compaction-scheduled, distributed and Pallas paths report None.  Feed it
     to the next solve of a perturbed batch via
     ``solve_batched(batch2, warm=res.warm_start())``.
+
+    ``stats`` is a ``repro.obs.SolveReport`` (per-LP telemetry counters +
+    host span tree + wall-clock) when the solve ran with ``telemetry=True``;
+    None otherwise.  ``stats.iterations`` always equals ``iterations``.
     """
 
     x: np.ndarray          # (B, n)
@@ -463,6 +467,7 @@ class LPResult:
     y: np.ndarray | None = None   # (B, m) row duals (see above)
     z: np.ndarray | None = None   # (B, n) reduced costs
     warm: "WarmStart | None" = None  # terminal state for warm restarts
+    stats: "object | None" = None  # obs.SolveReport when telemetry was on
 
     def warm_start(self) -> WarmStart:
         """The warm-start carrier for a follow-up solve of a same-shape

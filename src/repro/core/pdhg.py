@@ -70,12 +70,15 @@ matvec + prox + restart check in VMEM).
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Optional
+import time
+from typing import Any, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.report import report_from_counters
+from ..obs.telemetry import init_telemetry, tel_pdhg_update, tel_to_numpy
 from .forms import ensure_canonical, finish_result, prepare_warm
 from .lp import (
     INFEASIBLE,
@@ -177,6 +180,8 @@ class PdhgState(NamedTuple):
                         #  compaction scheduler's stage-1 pass no-op)
     status: jax.Array   # (B,) int32 — _RUNNING until terminal
     iters: jax.Array    # (B,) int32
+    tel: Any = None     # obs.TelemetryState lanes or None (empty subtree:
+                        #  the telemetry-off trace is unchanged)
 
 
 # ---------------------------------------------------------------------------
@@ -314,11 +319,11 @@ def inject_pdhg_warm(state: PdhgState, wx, wy, womega=None,
 # Residuals + certificates
 # ---------------------------------------------------------------------------
 
-def kkt_residuals(s: PdhgState, x, y, mv: Matvecs = DENSE_MV):
-    """Relative KKT residuals of a (scaled-space) point, reported for the
-    *unscaled* problem: primal infeasibility, dual infeasibility, duality
-    gap.  Unscaling is elementwise — A itself is only touched through the
-    two scaled matvecs.
+def kkt_residual_parts(s: PdhgState, x, y, mv: Matvecs = DENSE_MV):
+    """Relative KKT residual components of a (scaled-space) point, reported
+    for the *unscaled* problem: (primal infeasibility, dual infeasibility,
+    duality gap).  Unscaling is elementwise — A itself is only touched
+    through the two scaled matvecs.
 
     Bounded columns (finite ub) shift from the dual-infeasibility term to
     the dual objective: the dual of max c.x s.t. Ax <= b, 0 <= x <= u is
@@ -336,6 +341,12 @@ def kkt_residuals(s: PdhgState, x, y, mv: Matvecs = DENSE_MV):
     dobj = jnp.einsum("bm,bm->b", s.b, y) \
         + (jnp.where(fin, s.ub, 0.0) * zc).sum(axis=1)
     gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
+    return rp, rd, gap
+
+
+def kkt_residuals(s: PdhgState, x, y, mv: Matvecs = DENSE_MV):
+    """max over the `kkt_residual_parts` triple — the convergence test."""
+    rp, rd, gap = kkt_residual_parts(s, x, y, mv)
     return jnp.maximum(jnp.maximum(rp, rd), gap)
 
 
@@ -416,6 +427,9 @@ def pdhg_round(s: PdhgState, *, tol: float,
         0, check_every, body, (s.x, s.y, s.xs, s.ys, s.cnt))
     s = s._replace(x=x, y=y, xs=xs, ys=ys, cnt=cnt,
                    iters=s.iters + check_every * active0)
+    if s.tel is not None:
+        s = s._replace(tel=tel_pdhg_update(
+            s.tel, inc_iters=check_every * active0))
     return _pdhg_check(s, tol=tol, mv=mv)
 
 
@@ -470,9 +484,16 @@ def _pdhg_check(s: PdhgState, *, tol: float,
     status = jnp.where(converged, OPTIMAL, s.status)
     status = jnp.where(infeas, INFEASIBLE, status)
     status = jnp.where(unbounded, UNBOUNDED, status)
+    tel = s.tel
+    if tel is not None:
+        # component triple at the adopted candidate (extra matvecs only on
+        # the telemetry trace); terminal LPs recompute frozen values
+        rp_t, rd_t, gap_t = kkt_residual_parts(s, xc, yc, mv)
+        tel = tel_pdhg_update(tel, restart=restart, kkt=(rp_t, rd_t, gap_t),
+                              omega=omega)
     return s._replace(x=x, y=y, xs=xs, ys=ys, xr=xr, yr=yr, cnt=cnt,
                       last_res=last_res, prev_res=prev_res, omega=omega,
-                      status=status)
+                      status=status, tel=tel)
 
 
 def pdhg_round_mp(s: PdhgState, tau, tprev, *, tol: float,
@@ -535,6 +556,9 @@ def pdhg_round_mp(s: PdhgState, tau, tprev, *, tol: float,
         0, check_every, body, (s.x, s.y, s.xs, s.ys, s.cnt, tau, tprev))
     s = s._replace(x=x, y=y, xs=xs, ys=ys, cnt=cnt,
                    iters=s.iters + check_every * active0)
+    if s.tel is not None:
+        s = s._replace(tel=tel_pdhg_update(
+            s.tel, inc_iters=check_every * active0))
     return _pdhg_check(s, tol=tol, mv=mv), tau, tprev
 
 
@@ -558,7 +582,8 @@ def solve_pdhg(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
                tol: float, feas_tol: float = 0.0,
                check_every: int = CHECK_EVERY,
                warm_x=None, warm_y=None, warm_omega=None,
-               full_state: bool = False, step_rule: str = "fixed"):
+               full_state: bool = False, step_rule: str = "fixed",
+               telemetry: bool = False):
     """Traceable whole-solve body (shared by jit, pjit and shard_map):
     setup + one while_loop over check rounds.  ``feas_tol`` is accepted for
     entry-point uniformity but unused (PDHG has no phase 1 — feasibility is
@@ -575,6 +600,8 @@ def solve_pdhg(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
             f"unknown step_rule {step_rule!r}: expected 'fixed' or "
             "'malitsky_pock'")
     state = init_pdhg_state(A, b, c, ub)
+    if telemetry:
+        state = state._replace(tel=init_telemetry(state.x.shape[0]))
     if warm_x is not None and warm_y is not None:
         state = inject_pdhg_warm(state, warm_x, warm_y, warm_omega)
     rounds = -(-int(max_iters) // int(check_every))
@@ -608,27 +635,31 @@ def solve_pdhg(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
     if full_state:
         out = out + (state.x * state.csc, state.y * state.rsc,
                      state.omega[:, 0], state.eta[:, 0])
+    if telemetry:
+        out = out + (state.tel,)
     return out
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
-                                             "check_every"))
-def _solve_pdhg_core(A, b, c, ub, *, m, n, max_iters, tol, check_every):
+                                             "check_every", "telemetry"))
+def _solve_pdhg_core(A, b, c, ub, *, m, n, max_iters, tol, check_every,
+                     telemetry=False):
     return solve_pdhg(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
-                      check_every=check_every)
+                      check_every=check_every, telemetry=telemetry)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
-                                             "check_every", "step_rule"))
+                                             "check_every", "step_rule",
+                                             "telemetry"))
 def _solve_pdhg_core_state(A, b, c, ub, warm_x, warm_y, warm_omega, *, m, n,
                            max_iters, tol, check_every,
-                           step_rule="fixed"):
+                           step_rule="fixed", telemetry=False):
     """`_solve_pdhg_core` + warm injection + terminal-iterate capture (the
     batched entry point's core; warm args may be None for a cold run)."""
     return solve_pdhg(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                       check_every=check_every, warm_x=warm_x, warm_y=warm_y,
                       warm_omega=warm_omega, full_state=True,
-                      step_rule=step_rule)
+                      step_rule=step_rule, telemetry=telemetry)
 
 
 def _check_pdhg_pricing(pricing: str) -> None:
@@ -648,7 +679,8 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
                        presolve: bool = True,
                        scale: bool | None = None,
                        warm: WarmStart | None = None,
-                       step_rule: str = "fixed") -> LPResult:
+                       step_rule: str = "fixed",
+                       telemetry: bool = False) -> LPResult:
     """Solve a batch with the restarted-PDHG first-order engine.
 
     Same LPBatch -> LPResult contract and GeneralLPBatch acceptance as
@@ -686,21 +718,29 @@ def solve_batched_pdhg(batch: LPBatch, *, dtype=jnp.float32,
                                        posinf=0.0, neginf=0.0), dtype)
         if warm.omega is not None:
             womega = jnp.asarray(np.asarray(warm.omega), dtype)
-    x, obj, status, iters, y, z, wx_t, wy_t, om_t, eta_t = \
-        _solve_pdhg_core_state(
-            jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
-            jnp.asarray(batch.c, dtype),
-            jnp.asarray(batch.upper_bounds(), dtype),
-            wx, wy, womega,
-            m=m, n=n, max_iters=int(max_iters),
-            tol=float(tol), check_every=int(check_every),
-            step_rule=str(step_rule))
+    t0 = time.perf_counter()
+    out = _solve_pdhg_core_state(
+        jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
+        jnp.asarray(batch.c, dtype),
+        jnp.asarray(batch.upper_bounds(), dtype),
+        wx, wy, womega,
+        m=m, n=n, max_iters=int(max_iters),
+        tol=float(tol), check_every=int(check_every),
+        step_rule=str(step_rule), telemetry=bool(telemetry))
+    x, obj, status, iters, y, z, wx_t, wy_t, om_t, eta_t = out[:10]
+    stats = None
+    if telemetry:
+        jax.block_until_ready(out[10])
+        stats = report_from_counters(tel_to_numpy(out[10]),
+                                     wall_s=time.perf_counter() - t0,
+                                     backend="pdhg")
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
                    status=np.asarray(status), iterations=np.asarray(iters),
                    y=np.asarray(y), z=np.asarray(z),
                    warm=WarmStart(m=m, n=n, x=np.asarray(wx_t),
                                   y=np.asarray(wy_t), omega=np.asarray(om_t),
-                                  eta=np.asarray(eta_t)))
+                                  eta=np.asarray(eta_t)),
+                   stats=stats)
     return finish_result(rec, res)
 
 
@@ -752,9 +792,11 @@ class PdhgBackend:
         self.dtype = dtype
         self.check_every = int(check_every)
 
-    def init(self, A, b, c, ub=None, warm: WarmStart | None = None
-             ) -> PdhgState:
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None,
+             telemetry: bool = False) -> PdhgState:
         state = init_pdhg_state(A, b, c, ub)
+        if telemetry:
+            state = state._replace(tel=init_telemetry(state.x.shape[0]))
         if warm is not None and warm.x is not None and warm.y is not None:
             dtype = state.x.dtype
             wx = jnp.asarray(np.nan_to_num(np.asarray(warm.x, np.float64),
@@ -811,7 +853,8 @@ def solve_batched_pdhg_compacted(
         check_every: int = CHECK_EVERY, pricing: str = "dantzig",
         stats_out: Optional[List] = None,
         presolve: bool = True, scale: Optional[bool] = None,
-        warm: WarmStart | None = None, runner=None) -> LPResult:
+        warm: WarmStart | None = None, runner=None,
+        telemetry: bool = False, tracer=None) -> LPResult:
     """Restarted PDHG under the active-set compaction scheduler: K-round
     segments, power-of-two bucket gathers of still-running LPs (problem
     data, iterates, averages and restart state gathered alongside).  Same
@@ -853,7 +896,8 @@ def solve_batched_pdhg_compacted(
                          jnp.asarray(batch.b, dtype),
                          jnp.asarray(batch.c, dtype),
                          ub=jnp.asarray(batch.upper_bounds(), dtype),
-                         warm=prepare_warm(warm, rec, batch))
+                         warm=prepare_warm(warm, rec, batch),
+                         telemetry=telemetry)
     B = batch.batch
     state, orig = init_orig(backend, state, B)
     cfg = CompactionConfig(
@@ -863,4 +907,5 @@ def solve_batched_pdhg_compacted(
         pad_multiple=backend.pad_multiple)
     return finish_result(rec, run_schedule(backend, state, orig, B, n,
                                            max_iters=rounds, config=cfg,
-                                           stats_out=stats_out))
+                                           stats_out=stats_out,
+                                           tracer=tracer))

@@ -69,13 +69,17 @@ builder, warm injection and pivot semantics and validates against it.
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Optional
+import time
+from typing import Any, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..obs.report import report_from_counters
+from ..obs.telemetry import (init_telemetry, tel_revised_update,
+                             tel_simplex_update, tel_to_numpy)
 from .forms import ensure_canonical, finish_result, prepare_warm
 from .compaction import (
     CompactionConfig,
@@ -168,6 +172,8 @@ class RevisedState(NamedTuple):
                          #  immutable columns are never complemented)
     ub: jax.Array        # (B, n) upper bounds (+inf = unbounded)
     thr: jax.Array       # (B,) phase-1 feasibility threshold
+    tel: Any = None      # obs.TelemetryState lanes or None (empty subtree:
+                         #  the telemetry-off trace is unchanged)
 
 
 def build_revised_state(A: jax.Array, b: jax.Array, c: jax.Array, ub=None, *,
@@ -348,12 +354,15 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
     eta-append — the Step 1-3 structure of simplex_step re-expressed on the
     basis factorization instead of the tableau."""
     (Abar, cvec, xB, basis, phase, status, iters, lu, perm, perm_inv,
-     etaR, etaV, cnt, onub, ub, thr) = state
+     etaR, etaV, cnt, onub, ub, thr) = state[:16]
+    tel = state.tel
+    in_p1 = phase == 1  # pre-update phase, for telemetry attribution
     B = xB.shape[0]
     K = int(refactor_period)
     iota_m = jnp.arange(m, dtype=jnp.int32)
     ncand = n + m
     active = status == _RUNNING
+    refac_due = cnt[0] >= K  # scalar; captured pre-reset for telemetry
     # nonbasic-at-upper flags over all candidates (slacks never flip: ub=inf)
     onub_pad = jnp.concatenate([onub, jnp.zeros((B, m), bool)], axis=1)
 
@@ -418,9 +427,10 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
         e_blk = jnp.take_along_axis(
             cols_safe, jnp.argmax(d_blk, axis=1)[:, None], axis=1)[:, 0]
         blk_improving = blk_max > tol
+        priced_out = active & ~blk_improving
         # the full fallback also carries the optimality test, so it runs
         # (for the whole batch) only when some active LP's block priced out
-        need_full = jnp.any(active & ~blk_improving)
+        need_full = jnp.any(priced_out)
         d_full = lax.cond(need_full, price_full,
                           lambda _: jnp.full((B, ncand), -BIG, xB.dtype),
                           operand=None)
@@ -429,6 +439,7 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
                       jnp.argmax(d_full, axis=1).astype(jnp.int32))
         max_cost = jnp.where(blk_improving, blk_max, full_max)
     else:
+        priced_out = None
         d_full = price_full(None)
         e = jnp.argmax(d_full, axis=1).astype(jnp.int32)
         max_cost = jnp.max(d_full, axis=1)
@@ -526,9 +537,17 @@ def revised_step(state: RevisedState, *, m: int, n: int, tol: float,
     status = jnp.where(stuck, ITERATION_LIMIT, status)
     status = jnp.where(p2_done, OPTIMAL, status)
     phase = jnp.where(to_phase2, 2, phase)
-    iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
+    inc = active & ~p2_done & ~infeasible
+    iters = iters + inc.astype(jnp.int32)
+    if tel is not None:
+        tel = tel_simplex_update(tel, inc=inc, in_phase1=in_p1,
+                                 do_pivot=do_pivot, do_flip=do_flip,
+                                 degenerate=min_ratio <= 0.0)
+        tel = tel_revised_update(tel, refactor=refac_due & active,
+                                 eta_len=cnt, block_rotation=priced_out)
     return RevisedState(Abar, cvec, xB, basis, phase, status, iters,
-                        lu, perm, perm_inv, etaR, etaV, cnt, onub, ub, thr)
+                        lu, perm, perm_inv, etaR, etaV, cnt, onub, ub, thr,
+                        tel)
 
 
 def extract_solution_revised(state: RevisedState, n: int):
@@ -577,7 +596,7 @@ def solve_revised(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
                   tol: float, feas_tol: float, refactor_period: int,
                   pricing: str = "dantzig",
                   warm_basis=None, warm_at_upper=None,
-                  full_state: bool = False):
+                  full_state: bool = False, telemetry: bool = False):
     """Traceable whole-solve body (shared by jit, pjit and shard_map): one
     while_loop, per-LP phase switch inside the step (the revised method has
     no dead tableau columns, so there is nothing to phase-compact).
@@ -588,6 +607,8 @@ def solve_revised(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
     rule = canonicalize_revised_rule(pricing)
     state = build_revised_state(A, b, c, ub, feas_tol=feas_tol,
                                 refactor_period=refactor_period)
+    if telemetry:
+        state = state._replace(tel=init_telemetry(A.shape[0]))
     if warm_basis is not None:
         wonub = (jnp.zeros((A.shape[0], n), bool) if warm_at_upper is None
                  else jnp.asarray(warm_at_upper, bool))
@@ -615,31 +636,34 @@ def solve_revised(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
     out = (x, obj, status.astype(jnp.int8), state.iters, y, z)
     if full_state:
         out = out + (state.basis, state.onub)
+    if telemetry:
+        out = out + (state.tel,)
     return out
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
                                              "feas_tol", "refactor_period",
-                                             "pricing"))
+                                             "pricing", "telemetry"))
 def _solve_revised_core(A, b, c, ub, *, m, n, max_iters, tol, feas_tol,
-                        refactor_period, pricing):
+                        refactor_period, pricing, telemetry=False):
     return solve_revised(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                          feas_tol=feas_tol, refactor_period=refactor_period,
-                         pricing=pricing)
+                         pricing=pricing, telemetry=telemetry)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
                                              "feas_tol", "refactor_period",
-                                             "pricing"))
+                                             "pricing", "telemetry"))
 def _solve_revised_core_state(A, b, c, ub, warm_basis, warm_at_upper, *, m, n,
                               max_iters, tol, feas_tol, refactor_period,
-                              pricing):
+                              pricing, telemetry=False):
     """`_solve_revised_core` + warm injection + terminal-state capture (the
     batched entry point's core; warm args may be None for a cold run)."""
     return solve_revised(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                          feas_tol=feas_tol, refactor_period=refactor_period,
                          pricing=pricing, warm_basis=warm_basis,
-                         warm_at_upper=warm_at_upper, full_state=True)
+                         warm_at_upper=warm_at_upper, full_state=True,
+                         telemetry=telemetry)
 
 
 def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
@@ -650,7 +674,8 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
                           pricing: str = "dantzig",
                           presolve: bool = True,
                           scale: bool | None = None,
-                          warm: WarmStart | None = None) -> LPResult:
+                          warm: WarmStart | None = None,
+                          telemetry: bool = False) -> LPResult:
     """Solve a batch of LPs with the lockstep revised simplex.
 
     Same LPBatch -> LPResult contract, status codes and defaults as
@@ -679,7 +704,8 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
         if warm.at_upper is not None:
             wonub = jnp.asarray(np.asarray(warm.at_upper), bool)
     rule = canonicalize_revised_rule(pricing)
-    x, obj, status, iters, y, z, basis, onub = _solve_revised_core_state(
+    t0 = time.perf_counter()
+    out = _solve_revised_core_state(
         jnp.asarray(batch.A, dtype), jnp.asarray(batch.b, dtype),
         jnp.asarray(batch.c, dtype),
         jnp.asarray(batch.upper_bounds(), dtype),
@@ -687,12 +713,20 @@ def solve_batched_revised(batch: LPBatch, *, dtype=jnp.float32,
         m=m, n=n, max_iters=int(max_iters),
         tol=float(tol), feas_tol=float(feas_tol),
         refactor_period=int(refactor_period),
-        pricing=rule)
+        pricing=rule, telemetry=bool(telemetry))
+    x, obj, status, iters, y, z, basis, onub = out[:8]
+    stats = None
+    if telemetry:
+        jax.block_until_ready(out[8])
+        stats = report_from_counters(tel_to_numpy(out[8]),
+                                     wall_s=time.perf_counter() - t0,
+                                     backend="revised")
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
                    status=np.asarray(status), iterations=np.asarray(iters),
                    y=np.asarray(y), z=np.asarray(z),
                    warm=WarmStart(m=m, n=n, basis=np.asarray(basis),
-                                  at_upper=np.asarray(onub), pricing=rule))
+                                  at_upper=np.asarray(onub), pricing=rule),
+                   stats=stats)
     return finish_result(rec, res)
 
 
@@ -748,8 +782,15 @@ _segment_rev_p2_jit = jax.jit(
 @jax.jit
 def _refactor_state_jit(state: RevisedState) -> RevisedState:
     lu, perm, perm_inv = _refactorize(state.Abar, state.basis)
+    tel = state.tel
+    if tel is not None:
+        # refactor-on-compact counts as a refactorization for every
+        # gathered (still-running) LP
+        tel = tel_revised_update(
+            tel, refactor=state.status == _RUNNING,
+            eta_len=jnp.zeros_like(state.cnt))
     return state._replace(lu=lu, perm=perm, perm_inv=perm_inv,
-                          cnt=jnp.zeros_like(state.cnt))
+                          cnt=jnp.zeros_like(state.cnt), tel=tel)
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -782,10 +823,12 @@ class RevisedBackend(JaxBackend):
         self.refactor_period = int(refactor_period
                                    or auto_refactor_period(m, n))
 
-    def init(self, A, b, c, ub=None, warm: WarmStart | None = None
-             ) -> RevisedState:
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None,
+             telemetry: bool = False) -> RevisedState:
         state = build_revised_state(A, b, c, ub, feas_tol=self.feas_tol,
                                     refactor_period=self.refactor_period)
+        if telemetry:
+            state = state._replace(tel=init_telemetry(A.shape[0]))
         if warm is not None and warm.basis is not None:
             wonub = (jnp.zeros((A.shape[0], self.n), bool)
                      if warm.at_upper is None
@@ -834,7 +877,8 @@ def solve_batched_revised_compacted(
         refactor_period: Optional[int] = None, pricing: str = "dantzig",
         stats_out: Optional[List[SegmentStat]] = None,
         presolve: bool = True, scale: Optional[bool] = None,
-        warm: WarmStart | None = None) -> LPResult:
+        warm: WarmStart | None = None,
+        telemetry: bool = False, tracer=None) -> LPResult:
     """Revised simplex under the active-set compaction scheduler: K-pivot
     segments, power-of-two bucket gathers of survivors (eta file, LU factors
     and basis arrays gathered alongside), refactorization after every gather.
@@ -858,7 +902,8 @@ def solve_batched_revised_compacted(
                          jnp.asarray(batch.b, dtype),
                          jnp.asarray(batch.c, dtype),
                          ub=jnp.asarray(batch.upper_bounds(), dtype),
-                         warm=prepare_warm(warm, rec, batch))
+                         warm=prepare_warm(warm, rec, batch),
+                         telemetry=telemetry)
     B = batch.batch
     orig = np.arange(B, dtype=np.int64)
     cfg = CompactionConfig(
@@ -868,4 +913,5 @@ def solve_batched_revised_compacted(
         pad_multiple=backend.pad_multiple)
     return finish_result(rec, run_schedule(backend, state, orig, B, n,
                                            max_iters=int(max_iters),
-                                           config=cfg, stats_out=stats_out))
+                                           config=cfg, stats_out=stats_out,
+                                           tracer=tracer))

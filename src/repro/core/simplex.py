@@ -67,12 +67,15 @@ no dynamic shapes, shardable over any mesh axis with pjit/shard_map.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+import time
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.report import report_from_counters
+from ..obs.telemetry import init_telemetry, tel_simplex_update, tel_to_numpy
 from .forms import ensure_canonical, finish_result, prepare_warm
 from .lp import (
     BIG,
@@ -111,6 +114,10 @@ class SimplexState(NamedTuple):
     ub: jax.Array       # (B, n) upper bounds (+inf = unbounded); structural
                         #  columns only, so column compaction never slices it
     it: jax.Array       # () int32 loop-local iteration counter
+    tel: Any = None     # obs.TelemetryState counter lanes, or None (the
+                        #  default) — None is an empty pytree subtree, so
+                        #  the telemetry-off trace is identical to a state
+                        #  without the field
 
 
 class _StepConsts(NamedTuple):
@@ -373,7 +380,9 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     the paper's argmax bit-for-bit; steepest_edge/devex score candidates by
     d_j^2 / weight using the weights carried in ``state.w``.
     """
-    T, basis, phase, status, iters, w, flip, ub, it = state
+    T, basis, phase, status, iters, w, flip, ub, it = state[:9]
+    tel = state.tel
+    in_p1 = phase == 1  # pre-update phase, for telemetry attribution
     B, rows, C = T.shape
     consts = _step_consts(rows, m, n, C)
     active = status == _RUNNING
@@ -434,8 +443,14 @@ def simplex_step(state: SimplexState, *, n: int, m: int, tol: float,
     status = jnp.where(stuck, ITERATION_LIMIT, status)
     status = jnp.where(p2_done, OPTIMAL, status)
     phase = jnp.where(to_phase2, 2, phase)
-    iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
-    return SimplexState(T, basis, phase, status, iters, w, flip, ub, it + 1)
+    inc = active & ~p2_done & ~infeasible
+    iters = iters + inc.astype(jnp.int32)
+    if tel is not None:
+        tel = tel_simplex_update(tel, inc=inc, in_phase1=in_p1,
+                                 do_pivot=do_pivot, do_flip=do_flip,
+                                 degenerate=min_ratio <= 0.0)
+    return SimplexState(T, basis, phase, status, iters, w, flip, ub, it + 1,
+                        tel)
 
 
 def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
@@ -448,7 +463,8 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
     pivots `simplex_step` would — at (m+1)(n+m+1)/((m+2)(n+2m+1)) of the
     per-pivot FLOPs/bytes.  ``rule`` selects the pricing engine exactly as in
     `simplex_step`; ``state.w`` is the phase-compacted weight vector."""
-    T, basis, phase, status, iters, w, flip, ub, it = state
+    T, basis, phase, status, iters, w, flip, ub, it = state[:9]
+    tel = state.tel
     B, rows, C = T.shape          # rows == m + 1, C == n + m + 1
     consts = _step_consts(rows, m, n, C)
     active = (status == _RUNNING) & (phase == 2)
@@ -489,8 +505,16 @@ def phase2_step(state: SimplexState, *, n: int, m: int, tol: float,
 
     status = jnp.where(unbounded, UNBOUNDED, status)
     status = jnp.where(p2_done, OPTIMAL, status)
-    iters = iters + (active & ~p2_done).astype(jnp.int32)
-    return SimplexState(T, basis, phase, status, iters, w, flip, ub, it + 1)
+    inc = active & ~p2_done
+    iters = iters + inc.astype(jnp.int32)
+    if tel is not None:
+        # active implies phase == 2 here, so everything lands in the
+        # phase-2 lanes regardless of the stale phase entries
+        tel = tel_simplex_update(tel, inc=inc, in_phase1=phase == 1,
+                                 do_pivot=do_pivot, do_flip=do_flip,
+                                 degenerate=min_ratio <= 0.0)
+    return SimplexState(T, basis, phase, status, iters, w, flip, ub, it + 1,
+                        tel)
 
 
 def compact_tableau(T: jax.Array, *, m: int, n: int) -> jax.Array:
@@ -573,7 +597,7 @@ def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
                     tol: float, feas_tol: float, phase_compaction: bool = True,
                     pricing: str = "dantzig",
                     warm_basis=None, warm_at_upper=None, warm_weights=None,
-                    full_state: bool = False):
+                    full_state: bool = False, telemetry: bool = False):
     """Traceable two-phase solve body, shared by jit (`_solve_core`), pjit and
     shard_map (core/distributed.py).
 
@@ -592,6 +616,10 @@ def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
     ``warm_weights`` (any width >= n+m) overlays carried devex weights.
     ``full_state=True`` appends ``(basis, flip, w)`` to the return tuple so
     batched entry points can capture a ``WarmStart``.
+    ``telemetry=True`` (static) seeds an ``obs.TelemetryState`` into the
+    loop carry and appends it to the return tuple; with the default False
+    the carry holds ``tel=None`` — an empty pytree subtree — so the traced
+    program is unchanged.
     """
     rule = canonicalize_rule(pricing)
     B = A.shape[0]
@@ -628,6 +656,7 @@ def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
         flip=flip,
         ub=ub,
         it=jnp.array(0, jnp.int32),
+        tel=init_telemetry(B) if telemetry else None,
     )
 
     def body1(s: SimplexState):
@@ -660,7 +689,7 @@ def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
             phase=state.phase, status=status, iters=state.iters,
             w=compact_weights(state.w, m=m, n=n),
             flip=state.flip, ub=state.ub,
-            it=state.it)
+            it=state.it, tel=state.tel)
 
         def cond2(s: SimplexState):
             return jnp.any(s.status == _RUNNING) & (s.it < max_iters)
@@ -679,34 +708,37 @@ def solve_two_phase(A, b, c, ub=None, *, m: int, n: int, max_iters: int,
     out = (x, obj, status.astype(jnp.int8), state.iters, y, z)
     if full_state:
         out = out + (state.basis, state.flip, state.w)
+    if telemetry:
+        out = out + (state.tel,)
     return out
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
                                              "feas_tol", "phase_compaction",
-                                             "pricing"))
+                                             "pricing", "telemetry"))
 def _solve_core(A, b, c, ub, *, m: int, n: int, max_iters: int, tol: float,
                 feas_tol: float, phase_compaction: bool = True,
-                pricing: str = "dantzig"):
+                pricing: str = "dantzig", telemetry: bool = False):
     return solve_two_phase(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                            feas_tol=feas_tol, phase_compaction=phase_compaction,
-                           pricing=pricing)
+                           pricing=pricing, telemetry=telemetry)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "max_iters", "tol",
                                              "feas_tol", "phase_compaction",
-                                             "pricing"))
+                                             "pricing", "telemetry"))
 def _solve_core_state(A, b, c, ub, warm_basis, warm_at_upper, warm_weights,
                       *, m: int, n: int, max_iters: int, tol: float,
                       feas_tol: float, phase_compaction: bool = True,
-                      pricing: str = "dantzig"):
+                      pricing: str = "dantzig", telemetry: bool = False):
     """`_solve_core` + warm injection + terminal-state capture (the batched
     entry point's core; warm args may be None for a cold capture-only run)."""
     return solve_two_phase(A, b, c, ub, m=m, n=n, max_iters=max_iters, tol=tol,
                            feas_tol=feas_tol, phase_compaction=phase_compaction,
                            pricing=pricing, warm_basis=warm_basis,
                            warm_at_upper=warm_at_upper,
-                           warm_weights=warm_weights, full_state=True)
+                           warm_weights=warm_weights, full_state=True,
+                           telemetry=telemetry)
 
 
 def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = None,
@@ -717,7 +749,8 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
                       refactor_period: int | None = None,
                       presolve: bool = True,
                       scale: bool | None = None,
-                      warm: WarmStart | None = None) -> LPResult:
+                      warm: WarmStart | None = None,
+                      telemetry: bool = False) -> LPResult:
     """Solve a batch of LPs with the lockstep pure-JAX simplex.
 
     Phase-compacted by default (identical pivot sequence, ~35-50% fewer
@@ -751,7 +784,8 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
         # refactor_period
         solver = resolve_backend(backend)
         kwargs = dict(dtype=dtype, tol=tol, feas_tol=feas_tol,
-                      max_iters=max_iters, pricing=pricing, warm=warm)
+                      max_iters=max_iters, pricing=pricing, warm=warm,
+                      telemetry=telemetry)
         if backend == "revised":
             kwargs["refactor_period"] = refactor_period
         return finish_result(rec, solver(batch, **kwargs))
@@ -780,17 +814,26 @@ def solve_batched_jax(batch: LPBatch, *, dtype=jnp.float32, tol: float | None = 
                 and warm.weights is not None
                 and np.asarray(warm.weights).shape[1] >= n + m):
             ww = jnp.asarray(warm.weights, dtype)
-    x, obj, status, iters, y, z, basis, flip, w = _solve_core_state(
+    t0 = time.perf_counter()
+    out = _solve_core_state(
         A, b, c, ub, wb, wfl, ww,
         m=m, n=n, max_iters=int(max_iters), tol=float(tol),
         feas_tol=float(feas_tol), phase_compaction=bool(phase_compaction),
-        pricing=rule)
+        pricing=rule, telemetry=bool(telemetry))
+    x, obj, status, iters, y, z, basis, flip, w = out[:9]
+    stats = None
+    if telemetry:
+        jax.block_until_ready(out[9])
+        stats = report_from_counters(tel_to_numpy(out[9]),
+                                     wall_s=time.perf_counter() - t0,
+                                     backend="tableau")
     capture = WarmStart(m=m, n=n, basis=np.asarray(basis),
                         at_upper=np.asarray(flip), weights=np.asarray(w),
                         pricing=rule)
     res = LPResult(x=np.asarray(x), objective=np.asarray(obj),
                    status=np.asarray(status), iterations=np.asarray(iters),
-                   y=np.asarray(y), z=np.asarray(z), warm=capture)
+                   y=np.asarray(y), z=np.asarray(z), warm=capture,
+                   stats=stats)
     return finish_result(rec, res)
 
 

@@ -57,9 +57,11 @@ from repro.core.forms import ensure_canonical, finish_result, prepare_warm
 from repro.core.lp import (ITERATION_LIMIT, OPTIMAL, LPBatch, LPResult,
                            WarmStart, backend_spec, default_max_iters)
 from repro.core.compaction import (
-    CompactionConfig, CompactionState, JaxBackend, SegmentStat, _take_jit,
-    auto_segment_k, init_orig, resolve_compact_threshold, run_schedule,
+    CompactionConfig, CompactionState, JaxBackend, SegmentStat, _maybe_span,
+    _take_jit, auto_segment_k, init_orig, resolve_compact_threshold,
+    run_schedule,
 )
+from repro.obs.telemetry import init_telemetry, rows_to_tel, tel_to_rows
 from repro.core.pdhg import PdhgBackend
 from repro.core.pricing import canonicalize_rule
 from repro.core.revised import RevisedBackend, canonicalize_revised_rule
@@ -148,7 +150,8 @@ class PallasBackend(JaxBackend):
         self.interpret = bool(interpret)
         self.pad_multiple = self.tile_b
 
-    def init(self, A, b, c, ub=None) -> CompactionState:
+    def init(self, A, b, c, ub=None, telemetry: bool = False
+             ) -> CompactionState:
         T, basis, phase, thr, ub_lane, _, _ = build_padded_tableau(
             A, b, c, self.tile_b, feas_tol=self.feas_tol, ub=ub)
         B_pad = T.shape[0]
@@ -163,17 +166,23 @@ class PallasBackend(JaxBackend):
             status=jnp.full((B_pad, 1), _RUNNING, jnp.int32),
             iters=jnp.zeros((B_pad, 1), jnp.int32), w=w,
             flip=jnp.zeros((B_pad, T.shape[2]), jnp.int32), ub=ub_lane,
-            thr=thr)
+            thr=thr, tel=init_telemetry(B_pad) if telemetry else None)
 
     def _run(self, state: CompactionState, steps: int, stage: str):
-        T, basis, w, flip, phase, status, iters, it = segment_pallas(
+        # counters cross the kernel boundary as one packed int32 row; the
+        # f32 lanes are not touched by the tableau kernel and pass through
+        rows = None if state.tel is None else tel_to_rows(state.tel)
+        outs = segment_pallas(
             jnp.int32(steps), state.T, state.basis, state.w, state.flip,
             state.ub, state.phase, state.thr, state.status, state.iters,
+            None if rows is None else rows[0],
             stage=stage, m=self.m, n=self.n, tile_b=self.tile_b,
             tol=self.tol, interpret=self.interpret, pricing=self.rule)
+        T, basis, w, flip, phase, status, iters, it = outs[:8]
+        tel = state.tel if rows is None else rows_to_tel(outs[8], rows[1])
         new = CompactionState(T=T, basis=basis, phase=phase, status=status,
                               iters=iters, w=w, flip=flip, ub=state.ub,
-                              thr=state.thr)
+                              thr=state.thr, tel=tel)
         return new, int(np.max(np.asarray(it)))
 
     def run_phase1(self, state, steps):
@@ -217,7 +226,8 @@ class RevisedPallasBackend(RevisedBackend):
         self.interpret = bool(interpret)
         self.pad_multiple = self.tile_b
 
-    def init(self, A, b, c, ub=None, warm: WarmStart | None = None):
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None,
+             telemetry: bool = False):
         wb = wu = None
         if warm is not None and warm.basis is not None:
             wb = jnp.asarray(np.asarray(warm.basis), jnp.int32)
@@ -225,17 +235,25 @@ class RevisedPallasBackend(RevisedBackend):
                 wu = jnp.asarray(np.asarray(warm.at_upper), bool)
         return build_revised_tile_state(
             A, b, c, ub, m=self.m, n=self.n, tile_b=self.tile_b,
-            feas_tol=self.feas_tol, warm_basis=wb, warm_at_upper=wu)
+            feas_tol=self.feas_tol, warm_basis=wb, warm_at_upper=wu,
+            telemetry=telemetry)
 
     def _run(self, state, steps, stage):
-        xB, basis, onub, phase, status, iters, it = revised_segment_pallas(
+        rows = None if state.tel is None else tel_to_rows(state.tel)
+        outs = revised_segment_pallas(
             jnp.int32(steps), state.Abar, state.cvec, state.ub, state.thr,
             state.Binv, state.xB, state.basis, state.onub, state.phase,
-            state.status, state.iters, stage=stage, m=self.m, n=self.n,
+            state.status, state.iters,
+            None if rows is None else rows[0],
+            stage=stage, m=self.m, n=self.n,
             tile_b=self.tile_b, tol=self.tol, K=self.refactor_period,
             interpret=self.interpret, pricing=self.rule)
+        xB, basis, onub, phase, status, iters, it = outs[:7]
+        tel = state.tel if rows is None else rows_to_tel(outs[7], rows[1])
         new = state._replace(xB=xB, basis=basis, onub=onub, phase=phase,
-                             status=status, iters=iters)
+                             status=status, iters=iters, tel=tel)
+        # the boundary refactor also counts refactorizations on the
+        # telemetry trace (the kernel's eta file never crosses a segment)
         return (refactor_tile(new, m=self.m, n=self.n),
                 int(np.max(np.asarray(it))))
 
@@ -276,8 +294,9 @@ class PdhgPallasBackend(PdhgBackend):
         self.interpret = bool(interpret)
         self.pad_multiple = self.tile_b
 
-    def init(self, A, b, c, ub=None, warm: WarmStart | None = None):
-        s0 = super().init(A, b, c, ub, warm=warm)
+    def init(self, A, b, c, ub=None, warm: WarmStart | None = None,
+             telemetry: bool = False):
+        s0 = super().init(A, b, c, ub, warm=warm, telemetry=telemetry)
         return build_pdhg_tile_state(s0, m=self.m, n=self.n,
                                      tile_b=self.tile_b)
 
@@ -315,11 +334,23 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                          stats_out: Optional[List[SegmentStat]] = None,
                          presolve: bool = True,
                          scale: Optional[bool] = None,
-                         warm: Optional[WarmStart] = None) -> LPResult:
-    batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
+                         warm: Optional[WarmStart] = None,
+                         telemetry: bool = False,
+                         tracer=None) -> LPResult:
+    with _maybe_span(tracer, "canonicalize"):
+        batch, rec = ensure_canonical(batch, presolve=presolve, scale=scale)
     m, n = batch.m, batch.n
     pricing = canonicalize_rule(pricing)
     warm = prepare_warm(warm, rec, batch)
+    if telemetry and not compaction:
+        # the whole-solve tile kernels have no counter plane: the resumable
+        # segment kernels are where the packed rows ride (ISSUE 10)
+        _warn_once(
+            "pallas-whole-telemetry",
+            "solve_batched_pallas(telemetry=True) requires compaction=True "
+            "(counters ride the resumable segment kernels); the whole-solve "
+            "kernel path returns stats=None")
+        telemetry = False
     spec = backend_spec(backend)
     if not spec.supports_pallas:
         # registry-driven fallback for backends without a kernel surface
@@ -335,7 +366,8 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
         if compaction:
             kwargs.update(segment_k=segment_k,
                           compact_threshold=compact_threshold,
-                          stats_out=stats_out)
+                          stats_out=stats_out, telemetry=telemetry,
+                          tracer=tracer)
         return finish_result(rec, resolve_backend(
             backend, compacted=compaction)(batch, **kwargs))
     if backend == "pdhg":
@@ -351,7 +383,8 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
             return finish_result(rec, solve_batched_pdhg_compacted(
                 batch, dtype=dtype, tol=tol, max_iters=max_iters,
                 segment_k=segment_k, compact_threshold=compact_threshold,
-                stats_out=stats_out, warm=warm, runner=runner))
+                stats_out=stats_out, warm=warm, runner=runner,
+                telemetry=telemetry, tracer=tracer))
         from repro.core.pdhg import default_pdhg_max_iters
         from .pdhg_tile import pdhg_pallas
         if warm is not None:
@@ -395,9 +428,12 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
             runner = RevisedPallasBackend(
                 m, n, tol, feas_tol, tile_b, interpret=interpret,
                 dtype=dtype, pricing=rule, refactor_period=refactor_period)
-            state = runner.init(A, b, c, ub=ub, warm=warm)
             B = batch.batch
-            state, orig = init_orig(runner, state, B)
+            with _maybe_span(tracer, "dispatch", backend="revised-pallas",
+                             B=B, m=m, n=n):
+                state = runner.init(A, b, c, ub=ub, warm=warm,
+                                    telemetry=telemetry)
+                state, orig = init_orig(runner, state, B)
             cfg = CompactionConfig(
                 segment_k=int(segment_k),
                 compact_threshold=resolve_compact_threshold(
@@ -405,7 +441,7 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
                 pad_multiple=runner.pad_multiple)
             return finish_result(rec, run_schedule(
                 runner, state, orig, B, n, max_iters=int(max_iters),
-                config=cfg, stats_out=stats_out))
+                config=cfg, stats_out=stats_out, tracer=tracer))
         wb = wu = None
         if warm is not None and warm.basis is not None:
             wb = jnp.asarray(np.asarray(warm.basis), jnp.int32)
@@ -456,9 +492,11 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
         runner = PallasBackend(m, n, tol, feas_tol, tile_b,
                                interpret=interpret, dtype=dtype,
                                pricing=pricing)
-        state = runner.init(A, b, c, ub=ub)
         B = batch.batch
-        state, orig = init_orig(runner, state, B)
+        with _maybe_span(tracer, "dispatch", backend="tableau-pallas",
+                         B=B, m=m, n=n):
+            state = runner.init(A, b, c, ub=ub, telemetry=telemetry)
+            state, orig = init_orig(runner, state, B)
         cfg = CompactionConfig(
             segment_k=int(segment_k),
             compact_threshold=resolve_compact_threshold(
@@ -467,7 +505,8 @@ def solve_batched_pallas(batch: LPBatch, *, dtype=jnp.float32,
         return finish_result(rec, run_schedule(runner, state, orig, B, n,
                                                max_iters=int(max_iters),
                                                config=cfg,
-                                               stats_out=stats_out))
+                                               stats_out=stats_out,
+                                               tracer=tracer))
 
     x, obj, status, iters, y, z = simplex_pallas(
         A, b, c, ub, m=m, n=n, tile_b=int(tile_b), max_iters=int(max_iters),

@@ -42,13 +42,16 @@ check.  Validated under ``interpret=True`` like the simplex tiles.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.lp import INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED
+from repro.obs.telemetry import (F32_LANE, F32_ROW_WIDTH, INT_LANE,
+                                 INT_ROW_WIDTH, lane_add, lane_set,
+                                 rows_to_tel, tel_to_rows)
 from repro.core.pdhg import (
     CERT_TOL,
     CHECK_EVERY,
@@ -98,19 +101,24 @@ def _mtv(A, y):
 
 
 def _make_pdhg_round(A, b, c, r, s, eta, binf, cinf, ub, *, tol: float,
-                     check_every: int):
+                     check_every: int, telemetry: bool = False):
     """Build the fused check-round closure both PDHG kernels run: one round
     = ``check_every`` prox iterations + the in-VMEM convergence / restart /
     certificate check, mirroring core.pdhg.pdhg_round exactly (same
     constants, same candidate rule, same adaptive primal weight).
 
     Carry layout (shared by the whole-solve and segment kernels):
-    ``(it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status, iters)``."""
+    ``(it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status, iters)``.
+    With ``telemetry=True`` two packed counter rows — (tile_b,
+    INT_ROW_WIDTH) int32 and (tile_b, F32_ROW_WIDTH) float32 — are appended
+    to the carry and updated per round (iterations, adopted restarts, the
+    KKT triple at the adopted candidate, the primal weight); the disabled
+    closure is byte-identical to the pre-telemetry one."""
     dtype = A.dtype
     fin = jnp.isfinite(ub)
     ubm = jnp.where(fin, ub, 0.0)
 
-    def kkt(x, y):
+    def kkt_parts(x, y):
         ax = _mv(A, x)
         aty = _mtv(A, y)
         rp = jnp.max(jnp.maximum(ax - b, 0.0) / r, axis=1, keepdims=True) \
@@ -124,11 +132,20 @@ def _make_pdhg_round(A, b, c, r, s, eta, binf, cinf, ub, *, tol: float,
         dobj = jnp.sum(b * y, axis=1, keepdims=True) \
             + jnp.sum(ubm * zc, axis=1, keepdims=True)
         gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
+        return rp, rd, gap
+
+    def kkt(x, y):
+        rp, rd, gap = kkt_parts(x, y)
         return jnp.maximum(jnp.maximum(rp, rd), gap)
 
     def body(carry):
-        (it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
-         iters) = carry
+        if telemetry:
+            (it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
+             iters, ti, tf) = carry
+        else:
+            (it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
+             iters) = carry
+            ti = tf = None
         active = status == _RUNNING          # (tile_b, 1)
         tau = eta / om
         sig = eta * om
@@ -152,8 +169,17 @@ def _make_pdhg_round(A, b, c, r, s, eta, binf, cinf, ub, *, tol: float,
 
         cc = jnp.maximum(cnt, 1.0)
         xa, ya = xs / cc, ys / cc
-        res_cur = kkt(x, y)
-        res_avg = kkt(xa, ya)
+        if telemetry:
+            # keep the component triples so the adopted candidate's
+            # residuals can be recorded without extra matvecs; selecting
+            # precomputed parts equals recomputing at (xc, yc) exactly
+            rp_c, rd_c, gap_c = kkt_parts(x, y)
+            rp_a, rd_a, gap_a = kkt_parts(xa, ya)
+            res_cur = jnp.maximum(jnp.maximum(rp_c, rd_c), gap_c)
+            res_avg = jnp.maximum(jnp.maximum(rp_a, rd_a), gap_a)
+        else:
+            res_cur = kkt(x, y)
+            res_avg = kkt(xa, ya)
         use_avg = res_avg < res_cur
         res = jnp.where(use_avg, res_avg, res_cur)
         xc = jnp.where(use_avg, xa, x)
@@ -217,6 +243,22 @@ def _make_pdhg_round(A, b, c, r, s, eta, binf, cinf, ub, *, tol: float,
         status = jnp.where(converged, OPTIMAL, status)
         status = jnp.where(infeas, INFEASIBLE, status)
         status = jnp.where(unbounded, UNBOUNDED, status)
+        if telemetry:
+            # mirrors core.pdhg: iterations use the pre-round active mask,
+            # restarts count adopted restarts, the KKT lanes hold the
+            # adopted candidate's triple, omega the post-update weight
+            ti = lane_add(ti, INT_LANE["phase2_iters"],
+                          check_every * active.astype(jnp.int32))
+            ti = lane_add(ti, INT_LANE["restarts"], restart)
+            tf = lane_set(tf, F32_LANE["kkt_primal"],
+                          jnp.where(use_avg, rp_a, rp_c))
+            tf = lane_set(tf, F32_LANE["kkt_dual"],
+                          jnp.where(use_avg, rd_a, rd_c))
+            tf = lane_set(tf, F32_LANE["kkt_gap"],
+                          jnp.where(use_avg, gap_a, gap_c))
+            tf = lane_set(tf, F32_LANE["omega"], om)
+            return (it + 1, x, y, xs, ys, xr, yr, cnt, last, prev, om,
+                    status, iters, ti, tf)
         return (it + 1, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
                 iters)
 
@@ -381,6 +423,7 @@ class PdhgTileState(NamedTuple):
     phase: jax.Array   # (B, 1) int32 — constant 2 (scheduler stage-1 no-op)
     status: jax.Array  # (B, 1) int32
     iters: jax.Array   # (B, 1) int32
+    tel: Any = None    # optional obs.telemetry.TelemetryState ((B,) lanes)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "tile_b"))
@@ -388,7 +431,9 @@ def build_pdhg_tile_state(s0, *, m: int, n: int, tile_b: int
                           ) -> PdhgTileState:
     """Pad an engine ``PdhgState`` (cold or warm-injected) onto the tile
     layout.  Padding slots are all-zero LPs deactivated outright; padded
-    lanes are inert (A = b = c = 0, unit scales, +inf bounds)."""
+    lanes are inert (A = b = c = 0, unit scales, +inf bounds).  A telemetry
+    pytree riding the engine state is zero-padded leaf-wise (padding slots
+    never accumulate: they are deactivated before the first round)."""
     B = s0.A.shape[0]
     dtype = s0.A.dtype
     M, N = pdhg_dims(m, n)
@@ -401,6 +446,10 @@ def build_pdhg_tile_state(s0, *, m: int, n: int, tile_b: int
     def pad1(a, fill=0.0):
         return pad(a.reshape(B, 1), 1, fill)
 
+    tel = s0.tel
+    if tel is not None:
+        tel = jax.tree.map(
+            lambda v: jnp.zeros((B_pad,), v.dtype).at[:B].set(v), tel)
     Ap = jnp.zeros((B_pad, M, N), dtype).at[:B, :m, :n].set(s0.A)
     return PdhgTileState(
         A=Ap, b=pad(s0.b, M), c=pad(s0.c, N), rsc=pad(s0.rsc, M, 1.0),
@@ -413,28 +462,40 @@ def build_pdhg_tile_state(s0, *, m: int, n: int, tile_b: int
         phase=jnp.full((B_pad, 1), 2, jnp.int32).at[:B, 0].set(s0.phase),
         status=jnp.full((B_pad, 1), ITERATION_LIMIT,
                         jnp.int32).at[:B, 0].set(s0.status),
-        iters=jnp.zeros((B_pad, 1), jnp.int32).at[:B, 0].set(s0.iters))
+        iters=jnp.zeros((B_pad, 1), jnp.int32).at[:B, 0].set(s0.iters),
+        tel=tel)
 
 
 def _pdhg_segment_kernel(steps_ref, A_ref, b_ref, c_ref, r_ref, s_ref,
                          eta_ref, binf_ref, cinf_ref, ub_ref,
                          x_ref, y_ref, xs_ref, ys_ref, xr_ref, yr_ref,
                          cnt_ref, last_ref, prev_ref, om_ref, status_ref,
-                         iters_ref,
-                         x_out, y_out, xs_out, ys_out, xr_out, yr_out,
-                         cnt_out, last_out, prev_out, om_out, status_out,
-                         iters_out, it_out,
-                         *, tol: float, check_every: int):
+                         iters_ref, *refs,
+                         tol: float, check_every: int,
+                         telemetry: bool = False):
     """Resumable segment: up to ``steps`` check rounds of the *same* fused
     round closure the whole-solve kernel runs, with the full iterate /
     average / restart state streamed in and out so the compaction
-    scheduler's bucket gathers happen between kernel segments."""
+    scheduler's bucket gathers happen between kernel segments.
+
+    With ``telemetry=True`` the packed int32/float32 counter rows ride the
+    carry (extra inputs after ``iters``, extra outputs after ``it``); the
+    disabled trace is byte-identical to the pre-telemetry kernel."""
+    if telemetry:
+        ti_ref, tf_ref = refs[:2]
+        (x_out, y_out, xs_out, ys_out, xr_out, yr_out, cnt_out, last_out,
+         prev_out, om_out, status_out, iters_out, it_out, ti_out,
+         tf_out) = refs[2:]
+    else:
+        ti_ref = tf_ref = ti_out = tf_out = None
+        (x_out, y_out, xs_out, ys_out, xr_out, yr_out, cnt_out, last_out,
+         prev_out, om_out, status_out, iters_out, it_out) = refs
     steps = steps_ref[0, 0]
     A = A_ref[...]
     round_body = _make_pdhg_round(
         A, b_ref[...], c_ref[...], r_ref[...], s_ref[...], eta_ref[...],
         binf_ref[...], cinf_ref[...], ub_ref[...],
-        tol=tol, check_every=check_every)
+        tol=tol, check_every=check_every, telemetry=telemetry)
 
     def cond(carry):
         it = carry[0]
@@ -444,8 +505,11 @@ def _pdhg_segment_kernel(steps_ref, A_ref, b_ref, c_ref, r_ref, s_ref,
     init = (jnp.int32(0), x_ref[...], y_ref[...], xs_ref[...], ys_ref[...],
             xr_ref[...], yr_ref[...], cnt_ref[...], last_ref[...],
             prev_ref[...], om_ref[...], status_ref[...], iters_ref[...])
+    if telemetry:
+        init = init + (ti_ref[...], tf_ref[...])
+    out = jax.lax.while_loop(cond, round_body, init)
     (it, x, y, xs, ys, xr, yr, cnt, last, prev, om, status,
-     iters) = jax.lax.while_loop(cond, round_body, init)
+     iters) = out[:13]
 
     x_out[...] = x
     y_out[...] = y
@@ -460,6 +524,9 @@ def _pdhg_segment_kernel(steps_ref, A_ref, b_ref, c_ref, r_ref, s_ref,
     status_out[...] = status
     iters_out[...] = iters
     it_out[...] = jnp.full(it_out.shape, it, jnp.int32)
+    if telemetry:
+        ti_out[...] = out[13]
+        tf_out[...] = out[14]
 
 
 @functools.partial(
@@ -472,57 +539,77 @@ def pdhg_segment_pallas(steps, state: PdhgTileState, *, m: int, n: int,
     """Run up to ``steps`` check rounds per tile and return
     ``(new_state, executed_rounds)`` — the PDHG analogue of the simplex
     ``segment_pallas`` protocol (early exit per tile once every LP in it is
-    terminal)."""
+    terminal).  A telemetry pytree on ``state.tel`` is packed onto dense
+    counter rows around the kernel (obs.telemetry.tel_to_rows) and carried
+    through VMEM; ``state.tel is None`` traces the pre-telemetry program."""
     B, M, N = state.A.shape
     grid = (B // tile_b,)
     dtype = state.A.dtype
+    telemetry = state.tel is not None
     vec = lambda i: (i, 0)  # noqa: E731
     kernel = functools.partial(_pdhg_segment_kernel, tol=float(tol),
-                               check_every=int(check_every))
+                               check_every=int(check_every),
+                               telemetry=telemetry)
     spec_n = pl.BlockSpec((tile_b, N), vec)
     spec_m = pl.BlockSpec((tile_b, M), vec)
     spec_1 = pl.BlockSpec((tile_b, 1), vec)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),          # steps
+        pl.BlockSpec((tile_b, M, N), lambda i: (i, 0, 0)),
+        spec_m, spec_n, spec_m, spec_n,                  # b c rsc csc
+        spec_1, spec_1, spec_1,                          # eta binf cinf
+        spec_n,                                          # ub
+        spec_n, spec_m, spec_n, spec_m, spec_n, spec_m,  # x y xs ys xr yr
+        spec_1, spec_1, spec_1, spec_1, spec_1, spec_1,  # cnt..iters
+    ]
+    out_specs = [
+        spec_n, spec_m, spec_n, spec_m, spec_n, spec_m,
+        spec_1, spec_1, spec_1, spec_1, spec_1, spec_1,
+        spec_1,                                          # executed
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, N), dtype),
+        jax.ShapeDtypeStruct((B, M), dtype),
+        jax.ShapeDtypeStruct((B, N), dtype),
+        jax.ShapeDtypeStruct((B, M), dtype),
+        jax.ShapeDtypeStruct((B, N), dtype),
+        jax.ShapeDtypeStruct((B, M), dtype),
+        jax.ShapeDtypeStruct((B, 1), dtype),
+        jax.ShapeDtypeStruct((B, 1), dtype),
+        jax.ShapeDtypeStruct((B, 1), dtype),
+        jax.ShapeDtypeStruct((B, 1), dtype),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+    ]
+    operands = (jnp.full((1, 1), steps, jnp.int32), state.A, state.b,
+                state.c, state.rsc, state.csc, state.eta, state.binf,
+                state.cinf, state.ub, state.x, state.y, state.xs, state.ys,
+                state.xr, state.yr, state.cnt, state.last, state.prev,
+                state.omega, state.status, state.iters)
+    if telemetry:
+        ti, tf = tel_to_rows(state.tel)
+        in_specs += [pl.BlockSpec((tile_b, INT_ROW_WIDTH), vec),
+                     pl.BlockSpec((tile_b, F32_ROW_WIDTH), vec)]
+        out_specs += [pl.BlockSpec((tile_b, INT_ROW_WIDTH), vec),
+                      pl.BlockSpec((tile_b, F32_ROW_WIDTH), vec)]
+        out_shape += [jax.ShapeDtypeStruct((B, INT_ROW_WIDTH), jnp.int32),
+                      jax.ShapeDtypeStruct((B, F32_ROW_WIDTH), jnp.float32)]
+        operands = operands + (ti, tf)
     outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # steps
-            pl.BlockSpec((tile_b, M, N), lambda i: (i, 0, 0)),
-            spec_m, spec_n, spec_m, spec_n,                  # b c rsc csc
-            spec_1, spec_1, spec_1,                          # eta binf cinf
-            spec_n,                                          # ub
-            spec_n, spec_m, spec_n, spec_m, spec_n, spec_m,  # x y xs ys xr yr
-            spec_1, spec_1, spec_1, spec_1, spec_1, spec_1,  # cnt..iters
-        ],
-        out_specs=[
-            spec_n, spec_m, spec_n, spec_m, spec_n, spec_m,
-            spec_1, spec_1, spec_1, spec_1, spec_1, spec_1,
-            spec_1,                                          # executed
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, N), dtype),
-            jax.ShapeDtypeStruct((B, M), dtype),
-            jax.ShapeDtypeStruct((B, N), dtype),
-            jax.ShapeDtypeStruct((B, M), dtype),
-            jax.ShapeDtypeStruct((B, N), dtype),
-            jax.ShapeDtypeStruct((B, M), dtype),
-            jax.ShapeDtypeStruct((B, 1), dtype),
-            jax.ShapeDtypeStruct((B, 1), dtype),
-            jax.ShapeDtypeStruct((B, 1), dtype),
-            jax.ShapeDtypeStruct((B, 1), dtype),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(jnp.full((1, 1), steps, jnp.int32), state.A, state.b, state.c,
-      state.rsc, state.csc, state.eta, state.binf, state.cinf, state.ub,
-      state.x, state.y, state.xs, state.ys, state.xr, state.yr, state.cnt,
-      state.last, state.prev, state.omega, state.status, state.iters)
-    (x, y, xs, ys, xr, yr, cnt, last, prev, om, status, iters, it) = outs
+    )(*operands)
+    (x, y, xs, ys, xr, yr, cnt, last, prev, om, status, iters,
+     it) = outs[:13]
+    tel = rows_to_tel(outs[13], outs[14]) if telemetry else None
     new = state._replace(x=x, y=y, xs=xs, ys=ys, xr=xr, yr=yr, cnt=cnt,
                          last=last, prev=prev, omega=om, status=status,
-                         iters=iters)
+                         iters=iters, tel=tel)
     return new, it
 
 

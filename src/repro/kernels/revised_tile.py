@@ -38,7 +38,7 @@ the first segment.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.lp import (BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL,
                            UNBOUNDED)
+from repro.obs.telemetry import (INT_LANE, INT_ROW_WIDTH, init_telemetry,
+                                 lane_add, lane_set, tel_revised_update)
 from repro.core.pricing import partial_geometry
 from repro.core.revised import (auto_refactor_period, build_revised_state,
                                 canonicalize_revised_rule,
@@ -102,6 +104,7 @@ class RevisedTileState(NamedTuple):
     phase: jax.Array   # (B, 1) int32
     status: jax.Array  # (B, 1) int32
     iters: jax.Array   # (B, 1) int32
+    tel: Any = None    # optional obs.telemetry.TelemetryState ((B,) lanes)
 
 
 # ---------------------------------------------------------------------------
@@ -136,9 +139,17 @@ def _refactor_binv(Abar_t, basis_t, *, m: int, n: int):
 def refactor_tile(state: RevisedTileState, *, m: int, n: int
                   ) -> RevisedTileState:
     """Segment-boundary refactorization: recompute the dense basis inverse
-    so the next kernel segment starts from an empty eta file."""
+    so the next kernel segment starts from an empty eta file.  On the
+    telemetry trace this is where refactorizations are counted — the kernel
+    relocates the engine's refactor-if-due schedule to the segment clock, so
+    every boundary refactor of a still-running LP bumps its lane and resets
+    the eta-file length (mirroring core.revised._refactor_state_jit)."""
+    tel = state.tel
+    if tel is not None:
+        tel = tel_revised_update(tel, refactor=state.status == _RUNNING,
+                                 eta_len=jnp.zeros_like(tel.eta_len))
     return state._replace(Binv=_refactor_binv(state.Abar, state.basis,
-                                              m=m, n=n))
+                                              m=m, n=n), tel=tel)
 
 
 # ---------------------------------------------------------------------------
@@ -178,12 +189,14 @@ def _pad_tile_state(Abar, cvec, ub, thr, xB, basis, onub, phase, status,
 
 def build_revised_tile_state(A, b, c, ub=None, *, m: int, n: int,
                              tile_b: int, feas_tol: float,
-                             warm_basis=None, warm_at_upper=None
-                             ) -> RevisedTileState:
+                             warm_basis=None, warm_at_upper=None,
+                             telemetry: bool = False) -> RevisedTileState:
     """Build (and optionally warm-inject) the engine's ``RevisedState``, then
     pad it onto the tile layout.  The engine's own builder and
     ``inject_revised_warm`` are reused verbatim so cold/skip/repair/cold-fallback
-    decisions are identical to the pure-JAX path."""
+    decisions are identical to the pure-JAX path.  ``telemetry=True`` seeds
+    zero counter lanes over the padded batch (padding slots stay zero — the
+    scheduler's flush only reads real original indices)."""
     B = A.shape[0]
     st = build_revised_state(A, b, c, ub, feas_tol=feas_tol,
                              refactor_period=1)
@@ -193,9 +206,12 @@ def build_revised_tile_state(A, b, c, ub=None, *, m: int, n: int,
         st = inject_revised_warm(
             st, jnp.asarray(np.asarray(warm_basis), jnp.int32), wonub,
             m=m, n=n, feas_tol=feas_tol)
-    return _pad_tile_state(st.Abar, st.cvec, st.ub, st.thr, st.xB, st.basis,
-                           st.onub, st.phase, st.status, st.iters,
-                           m=m, n=n, tile_b=tile_b)
+    state = _pad_tile_state(st.Abar, st.cvec, st.ub, st.thr, st.xB, st.basis,
+                            st.onub, st.phase, st.status, st.iters,
+                            m=m, n=n, tile_b=tile_b)
+    if telemetry:
+        state = state._replace(tel=init_telemetry(state.status.shape[0]))
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -204,17 +220,29 @@ def build_revised_tile_state(A, b, c, ub=None, *, m: int, n: int,
 
 def _revised_segment_kernel(steps_ref, Abar_ref, cvec_ref, ub_ref, thr_ref,
                             Binv_ref, xB_ref, basis_ref, onub_ref, phase_ref,
-                            status_ref, iters_ref,
-                            xB_out, basis_out, onub_out, phase_out,
-                            status_out, iters_out, it_out,
-                            *, stage: str, m: int, n: int, tol: float,
-                            K: int, rule: str):
+                            status_ref, iters_ref, *refs,
+                            stage: str, m: int, n: int, tol: float,
+                            K: int, rule: str, telemetry: bool = False):
     """Up to ``steps`` bounded revised pivots on one (tile_b, ...) slab.
 
     Mirrors ``core.revised.revised_step`` with the basis inverse applied as
     broadcast matvecs and the eta file kept kernel-internal: the loop exits
     when the stage's pending set empties, the step budget runs out, or the
-    eta file fills (the host refactorizes between segments)."""
+    eta file fills (the host refactorizes between segments).
+
+    With ``telemetry=True`` a packed (tile_b, INT_ROW_WIDTH) counter row
+    rides the carry (extra input after ``iters``, extra output after ``it``)
+    and every pivot bumps its lanes with the same masks the engine feeds
+    ``tel_simplex_update`` / ``tel_revised_update``; the disabled trace is
+    byte-identical to the pre-telemetry kernel."""
+    if telemetry:
+        ti_ref = refs[0]
+        (xB_out, basis_out, onub_out, phase_out, status_out, iters_out,
+         it_out, ti_out) = refs[1:]
+    else:
+        ti_ref = ti_out = None
+        (xB_out, basis_out, onub_out, phase_out, status_out, iters_out,
+         it_out) = refs
     steps = steps_ref[0, 0]
     Abar = Abar_ref[...]
     cvec = cvec_ref[...]
@@ -257,7 +285,8 @@ def _revised_segment_kernel(steps_ref, Abar_ref, cvec_ref, ub_ref, thr_ref,
         return lax.fori_loop(0, cnt, body, u)
 
     def pivot(carry):
-        it, xB, basis, onub, phase, status, iters, etaR, etaV, cnt = carry
+        (it, xB, basis, onub, phase, status, iters, etaR, etaV, cnt,
+         ti) = carry
         active = status == _RUNNING
         in_p1 = phase == 1
         in_p2 = phase == 2
@@ -364,25 +393,45 @@ def _revised_segment_kernel(steps_ref, Abar_ref, cvec_ref, ub_ref, thr_ref,
         status = jnp.where(unbounded, UNBOUNDED, status)
         status = jnp.where(stuck, ITERATION_LIMIT, status)
         status = jnp.where(p2_done, OPTIMAL, status)
+        inc = active & ~p2_done & ~infeasible
+        if ti is not None:
+            # same masks core.revised.revised_step feeds tel_simplex_update;
+            # attribution is on the pre-update phase (in_p1 captured above)
+            ti = lane_add(ti, INT_LANE["phase1_iters"], inc & in_p1)
+            ti = lane_add(ti, INT_LANE["phase2_iters"], inc & ~in_p1)
+            ti = lane_add(ti, INT_LANE["phase1_pivots"], do_pivot & in_p1)
+            ti = lane_add(ti, INT_LANE["phase2_pivots"], do_pivot & ~in_p1)
+            ti = lane_add(ti, INT_LANE["bound_flips"], do_flip)
+            ti = lane_add(ti, INT_LANE["degenerate_pivots"],
+                          do_pivot & (min_ratio <= 0.0))
+            # eta-file length is absolute (overwritten; the boundary
+            # refactor zeroes it host-side in refactor_tile)
+            ti = lane_set(ti, INT_LANE["eta_len"],
+                          jnp.broadcast_to(cnt, (tile_b, 1)))
+            if rule == "partial":
+                ti = lane_add(ti, INT_LANE["block_rotations"],
+                              active & ~blk_improving)
         phase = jnp.where(to_phase2, 2, phase)
-        iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
+        iters = iters + inc.astype(jnp.int32)
         return (it + 1, xB, basis, onub, phase, status, iters,
-                etaR, etaV, cnt)
+                etaR, etaV, cnt, ti)
 
     def cond(carry):
-        it, xB, basis, onub, phase, status, iters, etaR, etaV, cnt = carry
+        (it, xB, basis, onub, phase, status, iters, etaR, etaV, cnt,
+         ti) = carry
         if stage == "p1":
             pending = (status == _RUNNING) & (phase == 1)
         else:
             pending = status == _RUNNING
         return jnp.any(pending) & (it < steps) & (cnt < K)
 
+    ti0 = ti_ref[...] if telemetry else None
     init = (jnp.int32(0), xB_ref[...], basis_ref[...], onub_ref[...],
             phase_ref[...], status_ref[...], iters_ref[...],
             jnp.zeros((tile_b, K), jnp.int32),
-            jnp.zeros((tile_b, K, MC), dtype), jnp.int32(0))
-    (it, xB, basis, onub, phase, status, iters, _, _, _) = lax.while_loop(
-        cond, pivot, init)
+            jnp.zeros((tile_b, K, MC), dtype), jnp.int32(0), ti0)
+    (it, xB, basis, onub, phase, status, iters, _, _, _,
+     ti) = lax.while_loop(cond, pivot, init)
 
     xB_out[...] = xB
     basis_out[...] = basis
@@ -391,6 +440,8 @@ def _revised_segment_kernel(steps_ref, Abar_ref, cvec_ref, ub_ref, thr_ref,
     status_out[...] = status
     iters_out[...] = iters
     it_out[...] = jnp.full((tile_b, 1), it, jnp.int32)
+    if telemetry:
+        ti_out[...] = ti
 
 
 @functools.partial(
@@ -398,23 +449,26 @@ def _revised_segment_kernel(steps_ref, Abar_ref, cvec_ref, ub_ref, thr_ref,
     static_argnames=("stage", "m", "n", "tile_b", "tol", "K", "interpret",
                      "pricing"))
 def revised_segment_pallas(steps, Abar, cvec, ub, thr, Binv, xB, basis, onub,
-                           phase, status, iters, *, stage: str, m: int,
-                           n: int, tile_b: int, tol: float, K: int,
+                           phase, status, iters, tel_int=None, *, stage: str,
+                           m: int, n: int, tile_b: int, tol: float, K: int,
                            interpret: bool = True,
                            pricing: str = "dantzig"):
     """Run up to ``steps`` revised pivots per tile (stage-aware early exit,
     eta-file boundary at ``K`` pivots).  Returns the mutated state leaves
     plus the per-LP executed-step count; call `refactor_tile` before the
-    next segment."""
+    next segment.  ``tel_int`` is an optional (B, INT_ROW_WIDTH) packed
+    telemetry row, carried through the kernel and returned as an eighth
+    element when given."""
     B, MC, NC2 = Abar.shape
     NCP = cvec.shape[1]
     grid = (B // tile_b,)
     dtype = Abar.dtype
+    telemetry = tel_int is not None
     vec = lambda i: (i, 0)
     cube = lambda i: (i, 0, 0)
     kernel = functools.partial(_revised_segment_kernel, stage=stage, m=m,
                                n=n, tol=float(tol), K=int(K),
-                               rule=pricing)
+                               rule=pricing, telemetry=telemetry)
     out_shape = [
         jax.ShapeDtypeStruct((B, MC), dtype),         # xB
         jax.ShapeDtypeStruct((B, MC), jnp.int32),     # basis
@@ -447,12 +501,17 @@ def revised_segment_pallas(steps, Abar, cvec, ub, thr, Binv, xB, basis, onub,
         pl.BlockSpec((tile_b, 1), vec),
         pl.BlockSpec((tile_b, 1), vec),
     ]
+    operands = (Abar, cvec, ub, thr, Binv, xB, basis, onub, phase,
+                status, iters)
+    if telemetry:
+        in_specs.append(pl.BlockSpec((tile_b, INT_ROW_WIDTH), vec))
+        out_specs.append(pl.BlockSpec((tile_b, INT_ROW_WIDTH), vec))
+        out_shape.append(jax.ShapeDtypeStruct((B, INT_ROW_WIDTH), jnp.int32))
+        operands = operands + (tel_int,)
     steps_arr = jnp.full((1, 1), steps, jnp.int32)
     return pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
                           out_specs=out_specs, out_shape=out_shape,
-                          interpret=interpret)(
-        steps_arr, Abar, cvec, ub, thr, Binv, xB, basis, onub, phase,
-        status, iters)
+                          interpret=interpret)(steps_arr, *operands)
 
 
 # ---------------------------------------------------------------------------

@@ -65,6 +65,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.lp import BIG, INFEASIBLE, ITERATION_LIMIT, OPTIMAL, UNBOUNDED
 from repro.core.pricing import DEVEX_RESET
+from repro.obs.telemetry import INT_LANE, INT_ROW_WIDTH, lane_add
 
 _RUNNING = -1
 
@@ -223,11 +224,16 @@ def _tile_pivot(T, basis, w, flip, ub, col_full, row_ids, lane, e, l,
     return T, basis, w, flip
 
 
-def _tile_step(T, basis, w, flip, ub, phase, status, iters, *, m: int, n: int,
-               tol: float, thr, rule: str = "dantzig"):
+def _tile_step(T, basis, w, flip, ub, phase, status, iters, ti=None, *,
+               m: int, n: int, tol: float, thr, rule: str = "dantzig"):
     """One combined two-phase pivot across the (tile_b, R, C) tile.
     Broadcast/reduce formulation (no einsum) so every op lowers to
-    VPU-friendly elementwise + lane reductions inside Pallas."""
+    VPU-friendly elementwise + lane reductions inside Pallas.
+
+    ``ti`` is an optional (tile_b, INT_ROW_WIDTH) packed telemetry row
+    (obs.telemetry.tel_to_rows); when present the step's counter lanes are
+    bumped in-kernel and the row is returned as an eighth element — the
+    ``ti=None`` trace is unchanged."""
     tile_b, R, C = T.shape
     dtype = T.dtype
     active = status == _RUNNING
@@ -269,15 +275,30 @@ def _tile_step(T, basis, w, flip, ub, phase, status, iters, *, m: int, n: int,
     status = jnp.where(unbounded, UNBOUNDED, status)
     status = jnp.where(stuck, ITERATION_LIMIT, status)
     status = jnp.where(p2_done, OPTIMAL, status)
+    inc = active & ~p2_done & ~infeasible
+    if ti is not None:
+        # same masks the engine feeds tel_simplex_update; attribution is on
+        # the pre-update phase (captured before the to_phase2 write below)
+        in_p1 = phase == 1
+        ti = lane_add(ti, INT_LANE["phase1_iters"], inc & in_p1)
+        ti = lane_add(ti, INT_LANE["phase2_iters"], inc & ~in_p1)
+        ti = lane_add(ti, INT_LANE["phase1_pivots"], do_pivot & in_p1)
+        ti = lane_add(ti, INT_LANE["phase2_pivots"], do_pivot & ~in_p1)
+        ti = lane_add(ti, INT_LANE["bound_flips"], do_flip)
+        ti = lane_add(ti, INT_LANE["degenerate_pivots"],
+                      do_pivot & (min_ratio <= 0.0))
     phase = jnp.where(to_phase2, 2, phase)
-    iters = iters + (active & ~p2_done & ~infeasible).astype(jnp.int32)
+    iters = iters + inc.astype(jnp.int32)
+    if ti is not None:
+        return T, basis, w, flip, phase, status, iters, ti
     return T, basis, w, flip, phase, status, iters
 
 
-def _tile_step_p2(T, basis, w, flip, ub, phase, status, iters, *, m: int,
-                  n: int, tol: float, rule: str = "dantzig"):
+def _tile_step_p2(T, basis, w, flip, ub, phase, status, iters, ti=None, *,
+                  m: int, n: int, tol: float, rule: str = "dantzig"):
     """One phase-2 pivot on the **compacted** (tile_b, R2, C2) tile: no
-    artificial columns, no phase-1 row, no phase bookkeeping."""
+    artificial columns, no phase-1 row, no phase bookkeeping.  ``ti`` is the
+    same optional packed telemetry row as `_tile_step`."""
     tile_b, R2, C2 = T.shape
     dtype = T.dtype
     active = (status == _RUNNING) & (phase == 2)
@@ -311,7 +332,17 @@ def _tile_step_p2(T, basis, w, flip, ub, phase, status, iters, *, m: int,
 
     status = jnp.where(unbounded, UNBOUNDED, status)
     status = jnp.where(p2_done, OPTIMAL, status)
-    iters = iters + (active & ~p2_done).astype(jnp.int32)
+    inc = active & ~p2_done
+    if ti is not None:
+        # every LP on the compacted tile is phase 2
+        ti = lane_add(ti, INT_LANE["phase2_iters"], inc)
+        ti = lane_add(ti, INT_LANE["phase2_pivots"], do_pivot)
+        ti = lane_add(ti, INT_LANE["bound_flips"], do_flip)
+        ti = lane_add(ti, INT_LANE["degenerate_pivots"],
+                      do_pivot & (min_ratio <= 0.0))
+    iters = iters + inc.astype(jnp.int32)
+    if ti is not None:
+        return T, basis, w, flip, phase, status, iters, ti
     return T, basis, w, flip, phase, status, iters
 
 
@@ -461,15 +492,27 @@ def _simplex_kernel(T_ref, basis_ref, phase_ref, thr_ref, ub_ref,
 
 
 def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, flip_ref, ub_ref,
-                    phase_ref, thr_ref, status_ref, iters_ref,
-                    T_out, basis_out, w_out, flip_out, phase_out, status_out,
-                    iters_out, it_out, *, stage: str, m: int, n: int,
-                    tol: float, rule: str = "dantzig"):
+                    phase_ref, thr_ref, status_ref, iters_ref, *refs,
+                    stage: str, m: int, n: int, tol: float,
+                    rule: str = "dantzig", telemetry: bool = False):
     """Resumable K-pivot segment for the compaction scheduler: state in,
     state out (pricing weights and the bound-flip parity row included, so
     bucket gathers between segments preserve the rule's recurrence and the
     complement bookkeeping), step bound read from a scalar input (no
-    recompile per K).  The bound lane row is read-only (input, no output)."""
+    recompile per K).  The bound lane row is read-only (input, no output).
+
+    With ``telemetry=True`` one extra (tile_b, INT_ROW_WIDTH) packed counter
+    row rides the carry (input after ``iters``, output after ``it``) and the
+    pivot steps bump its lanes in VMEM; the default trace is byte-identical
+    to the pre-telemetry kernel."""
+    if telemetry:
+        ti_ref = refs[0]
+        (T_out, basis_out, w_out, flip_out, phase_out, status_out,
+         iters_out, it_out, ti_out) = refs[1:]
+    else:
+        ti_ref = ti_out = None
+        (T_out, basis_out, w_out, flip_out, phase_out, status_out,
+         iters_out, it_out) = refs
     steps = steps_ref[0, 0]
     T = T_ref[...]
     basis = basis_ref[...]
@@ -480,34 +523,42 @@ def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, flip_ref, ub_ref,
     thr = thr_ref[...]
     status = status_ref[...]
     iters = iters_ref[...]
+    ti0 = ti_ref[...] if telemetry else None
     tile_b = T.shape[0]
 
+    # the telemetry row rides the carry as a pytree leaf; ``None`` is an
+    # empty subtree, so the disabled loop carries exactly today's state
     if stage == "p1":
         def cond(state):
-            T, basis, w, flip, phase, status, iters, it = state
+            T, basis, w, flip, phase, status, iters, ti, it = state
             pending = (status == _RUNNING) & (phase == 1)
             return jnp.any(pending) & (it < steps)
 
         def body(state):
-            T, basis, w, flip, phase, status, iters, it = state
-            T, basis, w, flip, phase, status, iters = _tile_step(
-                T, basis, w, flip, ub, phase, status, iters, m=m, n=n,
+            T, basis, w, flip, phase, status, iters, ti, it = state
+            out = _tile_step(
+                T, basis, w, flip, ub, phase, status, iters, ti, m=m, n=n,
                 tol=tol, thr=thr, rule=rule)
-            return T, basis, w, flip, phase, status, iters, it + 1
+            T, basis, w, flip, phase, status, iters = out[:7]
+            ti = out[7] if telemetry else None
+            return T, basis, w, flip, phase, status, iters, ti, it + 1
     else:
         def cond(state):
-            T, basis, w, flip, phase, status, iters, it = state
+            T, basis, w, flip, phase, status, iters, ti, it = state
             return jnp.any(status == _RUNNING) & (it < steps)
 
         def body(state):
-            T, basis, w, flip, phase, status, iters, it = state
-            T, basis, w, flip, phase, status, iters = _tile_step_p2(
-                T, basis, w, flip, ub, phase, status, iters, m=m, n=n,
+            T, basis, w, flip, phase, status, iters, ti, it = state
+            out = _tile_step_p2(
+                T, basis, w, flip, ub, phase, status, iters, ti, m=m, n=n,
                 tol=tol, rule=rule)
-            return T, basis, w, flip, phase, status, iters, it + 1
+            T, basis, w, flip, phase, status, iters = out[:7]
+            ti = out[7] if telemetry else None
+            return T, basis, w, flip, phase, status, iters, ti, it + 1
 
-    T, basis, w, flip, phase, status, iters, it = jax.lax.while_loop(
-        cond, body, (T, basis, w, flip, phase, status, iters, jnp.int32(0)))
+    T, basis, w, flip, phase, status, iters, ti, it = jax.lax.while_loop(
+        cond, body,
+        (T, basis, w, flip, phase, status, iters, ti0, jnp.int32(0)))
 
     T_out[...] = T
     basis_out[...] = basis
@@ -517,66 +568,84 @@ def _segment_kernel(steps_ref, T_ref, basis_ref, w_ref, flip_ref, ub_ref,
     status_out[...] = status
     iters_out[...] = iters
     it_out[...] = jnp.full((tile_b, 1), it, jnp.int32)
+    if telemetry:
+        ti_out[...] = ti
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("stage", "m", "n", "tile_b", "tol", "interpret",
                      "pricing"))
-def segment_pallas(steps, T, basis, w, flip, ub, phase, thr, status, iters, *,
-                   stage: str, m: int, n: int, tile_b: int, tol: float,
-                   interpret: bool = True, pricing: str = "dantzig"):
+def segment_pallas(steps, T, basis, w, flip, ub, phase, thr, status, iters,
+                   tel_int=None, *, stage: str, m: int, n: int, tile_b: int,
+                   tol: float, interpret: bool = True,
+                   pricing: str = "dantzig"):
     """Run one scheduler segment (<= ``steps`` pivots) over all tiles.
     Returns (T, basis, w, flip, phase, status, iters, it) with ``it`` the
     per-tile executed step count broadcast over the tile's rows.  ``ub`` is
     carried by the scheduler's state (gathered across bucket shrinks) but is
-    read-only inside the kernel."""
+    read-only inside the kernel.
+
+    ``tel_int`` is an optional (B, INT_ROW_WIDTH) packed telemetry row
+    (obs.telemetry.tel_to_rows); when given it is carried through the kernel,
+    its counter lanes bumped per pivot, and returned as a ninth element."""
     B, R_, C_ = T.shape
     grid = (B // tile_b,)
     Rb = basis.shape[1]
     Cw = w.shape[1]
     Cl = flip.shape[1]
+    telemetry = tel_int is not None
     steps_arr = jnp.full((1, 1), steps, jnp.int32)
     kernel = functools.partial(_segment_kernel, stage=stage, m=m, n=n,
-                               tol=float(tol), rule=pricing)
+                               tol=float(tol), rule=pricing,
+                               telemetry=telemetry)
     vec = lambda i: (i, 0)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
+        pl.BlockSpec((tile_b, Rb), vec),
+        pl.BlockSpec((tile_b, Cw), vec),
+        pl.BlockSpec((tile_b, Cl), vec),
+        pl.BlockSpec((tile_b, Cl), vec),
+        pl.BlockSpec((tile_b, 1), vec),
+        pl.BlockSpec((tile_b, 1), vec),
+        pl.BlockSpec((tile_b, 1), vec),
+        pl.BlockSpec((tile_b, 1), vec),
+    ]
+    out_specs = [
+        pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
+        pl.BlockSpec((tile_b, Rb), vec),
+        pl.BlockSpec((tile_b, Cw), vec),
+        pl.BlockSpec((tile_b, Cl), vec),
+        pl.BlockSpec((tile_b, 1), vec),
+        pl.BlockSpec((tile_b, 1), vec),
+        pl.BlockSpec((tile_b, 1), vec),
+        pl.BlockSpec((tile_b, 1), vec),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, R_, C_), T.dtype),
+        jax.ShapeDtypeStruct((B, Rb), jnp.int32),
+        jax.ShapeDtypeStruct((B, Cw), T.dtype),
+        jax.ShapeDtypeStruct((B, Cl), jnp.int32),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+    ]
+    operands = (steps_arr, T, basis, w, flip, ub, phase, thr, status, iters)
+    if telemetry:
+        in_specs.append(pl.BlockSpec((tile_b, INT_ROW_WIDTH), vec))
+        out_specs.append(pl.BlockSpec((tile_b, INT_ROW_WIDTH), vec))
+        out_shape.append(jax.ShapeDtypeStruct((B, INT_ROW_WIDTH), jnp.int32))
+        operands = operands + (tel_int,)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
-            pl.BlockSpec((tile_b, Rb), vec),
-            pl.BlockSpec((tile_b, Cw), vec),
-            pl.BlockSpec((tile_b, Cl), vec),
-            pl.BlockSpec((tile_b, Cl), vec),
-            pl.BlockSpec((tile_b, 1), vec),
-            pl.BlockSpec((tile_b, 1), vec),
-            pl.BlockSpec((tile_b, 1), vec),
-            pl.BlockSpec((tile_b, 1), vec),
-        ],
-        out_specs=[
-            pl.BlockSpec((tile_b, R_, C_), lambda i: (i, 0, 0)),
-            pl.BlockSpec((tile_b, Rb), vec),
-            pl.BlockSpec((tile_b, Cw), vec),
-            pl.BlockSpec((tile_b, Cl), vec),
-            pl.BlockSpec((tile_b, 1), vec),
-            pl.BlockSpec((tile_b, 1), vec),
-            pl.BlockSpec((tile_b, 1), vec),
-            pl.BlockSpec((tile_b, 1), vec),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, R_, C_), T.dtype),
-            jax.ShapeDtypeStruct((B, Rb), jnp.int32),
-            jax.ShapeDtypeStruct((B, Cw), T.dtype),
-            jax.ShapeDtypeStruct((B, Cl), jnp.int32),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(steps_arr, T, basis, w, flip, ub, phase, thr, status, iters)
+    )(*operands)
 
 
 def pick_tile_b(m: int, n: int, vmem_budget: int = 8 * 2 ** 20,

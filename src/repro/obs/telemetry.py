@@ -1,0 +1,232 @@
+"""On-device telemetry counter plane: per-LP solver counters as a pytree.
+
+``TelemetryState`` is a NamedTuple of per-LP ``(B,)`` lanes that rides as a
+trailing ``tel`` field on every engine state (``SimplexState`` /
+``RevisedState`` / ``PdhgState``, the compaction scheduler's
+``CompactionState`` and the padded tile-kernel carriers).  The trick that
+makes it zero-cost when disabled: JAX treats ``None`` as an *empty pytree
+subtree*, so a state whose ``tel`` leaf is ``None`` has exactly the same
+flattened structure — and therefore exactly the same traced jaxpr — as a
+state without the field at all.  Engines only touch the counters behind a
+Python-level ``if state.tel is not None:`` branch, so ``telemetry=False``
+(the default) traces today's program bit-for-bit, while ``telemetry=True``
+retraces with the counter lanes woven into the while-loop carries, the
+compaction gathers (``tree_map`` over the state handles them for free), the
+chunked driver's permutes and the shard_map specs.
+
+Lane semantics (every lane is per-LP, shape ``(B,)``):
+
+int32 lanes
+    ``phase1_iters`` / ``phase2_iters`` — the engine's ``iterations``
+      counter split by the *pre-update* phase of each counted step.  By
+      construction ``phase1_iters + phase2_iters == LPResult.iterations``
+      exactly: the increment mask is the same one the engines apply to
+      ``iters`` (it includes phase-transition and terminal-check steps, so
+      pivots + flips alone would *not* reproduce it).
+    ``phase1_pivots`` / ``phase2_pivots`` — executed basis-changing pivots
+      per phase (excludes bound flips and transition steps).
+    ``bound_flips`` — bounded-ratio-test flips (an entering column hit its
+      own upper bound; O(1) bookkeeping instead of a pivot).
+    ``degenerate_pivots`` — pivots whose min-ratio was exactly zero (the
+      step changed the basis but not the iterate).
+    ``refactorizations`` — revised engine: LU refactorizations (eta file
+      reset); counted host-side at segment boundaries on the Pallas path.
+    ``eta_len`` — revised engine: eta-file length at termination.
+    ``block_rotations`` — revised engine partial pricing: steps where the
+      LP's rotating block priced out and the full fallback pass (which
+      also carries the optimality test) was consulted.
+    ``restarts`` — PDHG: adopted restarts (average or current iterate).
+
+float32 lanes
+    ``kkt_primal`` / ``kkt_dual`` / ``kkt_gap`` — PDHG: the last KKT
+      residual triple measured at a check round (the components whose max
+      is the convergence test).
+    ``omega`` — PDHG: primal weight at termination.
+
+Lanes an engine does not own stay zero — a ``SolveReport`` keyed off these
+counters is backend-uniform by construction.
+
+This module deliberately imports nothing from ``repro.core`` (the engine
+modules import *it*), keeping the dependency edge one-way.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Lane registries: the packing order used when telemetry rides through a
+# Pallas kernel as dense (tile_b, LANES) rows (see ``tel_to_rows``).
+INT_LANES = (
+    "phase1_iters", "phase2_iters", "phase1_pivots", "phase2_pivots",
+    "bound_flips", "degenerate_pivots", "refactorizations", "eta_len",
+    "block_rotations", "restarts",
+)
+F32_LANES = ("kkt_primal", "kkt_dual", "kkt_gap", "omega")
+ALL_LANES = INT_LANES + F32_LANES
+
+# name -> column index inside the packed kernel rows
+INT_LANE = {name: i for i, name in enumerate(INT_LANES)}
+F32_LANE = {name: i for i, name in enumerate(F32_LANES)}
+# packed-row widths (padded to a power of two so the tile layouts stay
+# simple; the extra columns are dead)
+INT_ROW_WIDTH = 16
+F32_ROW_WIDTH = 8
+
+
+class TelemetryState(NamedTuple):
+    """Per-LP counter lanes; every leaf is shape (B,).  See module doc."""
+
+    phase1_iters: Any
+    phase2_iters: Any
+    phase1_pivots: Any
+    phase2_pivots: Any
+    bound_flips: Any
+    degenerate_pivots: Any
+    refactorizations: Any
+    eta_len: Any
+    block_rotations: Any
+    restarts: Any
+    kkt_primal: Any
+    kkt_dual: Any
+    kkt_gap: Any
+    omega: Any
+
+
+def init_telemetry(B: int) -> TelemetryState:
+    """All-zero counter lanes for a batch of ``B`` LPs."""
+    zi = jnp.zeros((B,), jnp.int32)
+    zf = jnp.zeros((B,), jnp.float32)
+    return TelemetryState(*([zi] * len(INT_LANES) + [zf] * len(F32_LANES)))
+
+
+def _count(mask):
+    """bool mask of shape (B,) or (B, 1) -> int32 increment of shape (B,)."""
+    m = mask.astype(jnp.int32)
+    return m[:, 0] if m.ndim == 2 else m
+
+
+def _flat(v):
+    """(B,) or (B, 1) float -> (B,) float32."""
+    v = v.astype(jnp.float32)
+    return v[:, 0] if v.ndim == 2 else v
+
+
+def tel_simplex_update(tel: TelemetryState, *, inc, in_phase1, do_pivot,
+                       do_flip, degenerate) -> TelemetryState:
+    """One simplex step (tableau or revised): ``inc`` is the exact mask the
+    engine adds to ``iters`` this step, ``in_phase1`` the pre-update phase,
+    ``do_pivot``/``do_flip``/``degenerate`` the step-kind masks.  All masks
+    may be (B,) or (B, 1) bool."""
+    inc, p1 = _count(inc).astype(bool), _count(in_phase1).astype(bool)
+    piv = _count(do_pivot).astype(bool)
+    return tel._replace(
+        phase1_iters=tel.phase1_iters + _count(inc & p1),
+        phase2_iters=tel.phase2_iters + _count(inc & ~p1),
+        phase1_pivots=tel.phase1_pivots + _count(piv & p1),
+        phase2_pivots=tel.phase2_pivots + _count(piv & ~p1),
+        bound_flips=tel.bound_flips + _count(do_flip),
+        degenerate_pivots=tel.degenerate_pivots + _count(piv & _count(
+            degenerate).astype(bool)))
+
+
+def tel_revised_update(tel: TelemetryState, *, refactor=None, eta_len=None,
+                       block_rotation=None) -> TelemetryState:
+    """Revised-engine extras: ``refactor`` (bool mask or scalar bool) bumps
+    the refactorization count, ``eta_len`` overwrites the eta-file length
+    lane (absolute, not incremental), ``block_rotation`` bumps the partial
+    pricing rotation count."""
+    kw = {}
+    if refactor is not None:
+        r = refactor if hasattr(refactor, "astype") else jnp.asarray(refactor)
+        r = r.astype(jnp.int32)
+        if r.ndim == 0:
+            r = jnp.broadcast_to(r, tel.refactorizations.shape)
+        kw["refactorizations"] = tel.refactorizations + _count(r)
+    if eta_len is not None:
+        e = eta_len.astype(jnp.int32)
+        if e.ndim == 0:
+            e = jnp.broadcast_to(e, tel.eta_len.shape)
+        kw["eta_len"] = _count(e)
+    if block_rotation is not None:
+        kw["block_rotations"] = tel.block_rotations + _count(block_rotation)
+    return tel._replace(**kw) if kw else tel
+
+
+def tel_pdhg_update(tel: TelemetryState, *, inc_iters=None, restart=None,
+                    kkt=None, omega=None) -> TelemetryState:
+    """One PDHG check round: ``inc_iters`` adds to ``phase2_iters`` (the
+    engine has no phase 1), ``restart`` counts adopted restarts, ``kkt`` is
+    the (rp, rd, gap) residual triple of this round (overwrites — "last
+    measured"), ``omega`` the current primal weight (overwrites)."""
+    kw = {}
+    if inc_iters is not None:
+        kw["phase2_iters"] = tel.phase2_iters + _count(inc_iters)
+    if restart is not None:
+        kw["restarts"] = tel.restarts + _count(restart)
+    if kkt is not None:
+        rp, rd, gap = kkt
+        kw["kkt_primal"] = _flat(rp)
+        kw["kkt_dual"] = _flat(rd)
+        kw["kkt_gap"] = _flat(gap)
+    if omega is not None:
+        kw["omega"] = _flat(omega)
+    return tel._replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Packed-row conversion for the Pallas segment kernels: a TelemetryState
+# becomes one (B, INT_ROW_WIDTH) int32 row plus one (B, F32_ROW_WIDTH)
+# float32 row, updated in-kernel via the INT_LANE/F32_LANE column indices.
+# ---------------------------------------------------------------------------
+
+def tel_to_rows(tel: TelemetryState):
+    """Pack counter lanes into the dense (B, W) rows the tile kernels carry
+    through VMEM.  Returns (int_rows, f32_rows)."""
+    B = tel.phase1_iters.shape[0]
+    ints = jnp.zeros((B, INT_ROW_WIDTH), jnp.int32)
+    for name in INT_LANES:
+        ints = ints.at[:, INT_LANE[name]].set(
+            getattr(tel, name).astype(jnp.int32))
+    f32s = jnp.zeros((B, F32_ROW_WIDTH), jnp.float32)
+    for name in F32_LANES:
+        f32s = f32s.at[:, F32_LANE[name]].set(
+            getattr(tel, name).astype(jnp.float32))
+    return ints, f32s
+
+
+def rows_to_tel(int_rows, f32_rows) -> TelemetryState:
+    """Inverse of ``tel_to_rows``."""
+    kw = {name: int_rows[:, INT_LANE[name]] for name in INT_LANES}
+    kw.update({name: f32_rows[:, F32_LANE[name]] for name in F32_LANES})
+    return TelemetryState(**kw)
+
+
+def lane_add(row, lane: int, mask):
+    """In-kernel helper: add a (tile_b, 1) bool/int mask into column
+    ``lane`` of a packed (tile_b, W) counter row (branch-free one-hot)."""
+    width = row.shape[1]
+    onehot = (jnp.arange(width)[None, :] == lane).astype(row.dtype)
+    return row + mask.astype(row.dtype) * onehot
+
+
+def lane_set(row, lane: int, value):
+    """In-kernel helper: overwrite column ``lane`` of a packed counter row
+    with a (tile_b, 1) value (branch-free select)."""
+    width = row.shape[1]
+    onehot = jnp.arange(width)[None, :] == lane
+    return jnp.where(onehot, value.astype(row.dtype), row)
+
+
+def tel_to_numpy(tel: TelemetryState) -> dict:
+    """Counter lanes as a {lane: np.ndarray} dict (device -> host)."""
+    return {name: np.asarray(getattr(tel, name)) for name in ALL_LANES}
+
+
+def zeros_numpy(B: int) -> dict:
+    """Host-side all-zero counters dict (the flush target for scheduled
+    solves, filled per original LP index as LPs retire)."""
+    out = {name: np.zeros(B, np.int32) for name in INT_LANES}
+    out.update({name: np.zeros(B, np.float32) for name in F32_LANES})
+    return out

@@ -104,6 +104,33 @@ def test_architecture_mentions_interpret_only_kernel_status():
         "(interpret=True-only validation)"
 
 
+def test_architecture_observability_documents_every_lane():
+    # the Observability section's lane table must name every counter the
+    # telemetry plane actually collects — a new lane fails until documented
+    from repro.obs.telemetry import ALL_LANES
+    text = ARCHITECTURE.read_text()
+    assert "## Observability" in text, \
+        "docs/architecture.md lost its Observability section"
+    obs = text.split("## Observability", 1)[1]
+    ghosts = [lane for lane in ALL_LANES if f"`{lane}`" not in obs]
+    assert not ghosts, \
+        f"telemetry lanes missing from the docs/architecture.md " \
+        f"Observability section: {ghosts}"
+
+
+def test_readme_telemetry_quickstart_is_real():
+    # README's telemetry snippet must reflect the actual API surface
+    text = README.read_text()
+    for needle in ("telemetry=True", "res.stats", "SolveReport",
+                   "examples/serve_batched.py"):
+        assert needle in text, \
+            f"README.md telemetry quickstart lost: {needle!r}"
+    from repro.obs import SolveReport
+    for method in ("render", "summary"):
+        assert hasattr(SolveReport, method), \
+            f"README documents SolveReport.{method}() but it is gone"
+
+
 @pytest.mark.skipif(not BENCH_JSON.exists(),
                     reason="no committed benchmark baseline")
 def test_bench_readme_sections_match_json():
